@@ -1,0 +1,66 @@
+//! Figs. 16–17 — single-workload settings (Appendix A.4): rerun the
+//! comparison with MNIST-only, FashionMNIST-only and CIFAR100-only
+//! arrivals, plus the response-time decomposition per workload.
+//!
+//!     cargo bench --bench fig16_workloads
+
+use splitplace::benchlib::scenarios;
+use splitplace::config::PolicyKind;
+use splitplace::util::table::{fnum, Table};
+
+const POLICIES: [PolicyKind; 5] = [
+    PolicyKind::ModelCompression,
+    PolicyKind::Gillis,
+    PolicyKind::SemanticGobi,
+    PolicyKind::MabGobi,
+    PolicyKind::MabDaso,
+];
+
+fn main() {
+    let Some(rt) = scenarios::runtime_or_skip("fig16") else { return };
+
+    let mut fig16 = Table::new(
+        "Fig. 16 — single-workload settings",
+        &["workload", "model", "accuracy", "response", "SLA viol", "reward"],
+    );
+    let mut fig17 = Table::new(
+        "Fig. 17 — response decomposition per workload (MAB+DASO)",
+        &["workload", "wait", "exec", "transfer", "migrate"],
+    );
+
+    for (wi, wname) in ["mnist", "fashionmnist", "cifar100"].iter().enumerate() {
+        for policy in POLICIES {
+            let mut cfg = scenarios::base_config();
+            cfg.policy = policy;
+            cfg.workload.app_weights = [0.0; 3];
+            cfg.workload.app_weights[wi] = 1.0;
+            let Some(out) = scenarios::run(cfg, Some(&rt)) else { continue };
+            let s = &out.summary;
+            fig16.row(vec![
+                (*wname).into(),
+                s.policy.clone(),
+                fnum(s.accuracy),
+                fnum(s.response.0),
+                fnum(s.sla_violations),
+                fnum(s.avg_reward),
+            ]);
+            if policy == PolicyKind::MabDaso {
+                let d = out.metrics.decomposition();
+                fig17.row(vec![
+                    (*wname).into(),
+                    fnum(d[0]),
+                    fnum(d[1]),
+                    fnum(d[2]),
+                    fnum(d[3]),
+                ]);
+            }
+            eprintln!("[fig16] {wname} {} done", s.policy);
+        }
+    }
+    fig16.print();
+    fig17.print();
+    println!(
+        "expected shape (paper A.4): MNIST-only highest accuracy & lowest response; \
+         CIFAR100-only the opposite; MAB+DASO best reward in every setting."
+    );
+}

@@ -1,0 +1,55 @@
+//! Fig. 2 — layer vs semantic splitting trade-off per application:
+//! accuracy (REAL PJRT execution of the AOT fragments on held-out data)
+//! and response time (single-policy simulator runs), reproducing the
+//! motivating figure of §2.
+//!
+//!     cargo bench --bench fig2_split_tradeoff
+
+use splitplace::benchlib::scenarios;
+use splitplace::config::PolicyKind;
+use splitplace::runtime::InferenceEngine;
+use splitplace::splits::{SplitDecision, APPS};
+use splitplace::util::table::{fnum, Table};
+
+fn main() {
+    let Some(rt) = scenarios::runtime_or_skip("fig2") else { return };
+
+    // accuracy panel: measured by executing the fragments
+    let eng = InferenceEngine::new(&rt).expect("inference engine");
+    let mut acc = Table::new(
+        "Fig. 2(a) — inference accuracy (measured via PJRT)",
+        &["app", "layer", "semantic", "compressed"],
+    );
+    for app in APPS {
+        let l = eng.run(app, SplitDecision::Layer).unwrap().accuracy;
+        let s = eng.run(app, SplitDecision::Semantic).unwrap().accuracy;
+        let c = eng.run(app, SplitDecision::Compressed).unwrap().accuracy;
+        acc.row(vec![app.name().into(), fnum(l), fnum(s), fnum(c)]);
+        assert!(l >= s - 0.02, "{app:?}: layer must beat semantic");
+    }
+    acc.print();
+
+    // response-time panel: L+G vs S+G per app
+    let mut rtm = Table::new(
+        "Fig. 2(b) — average response time (intervals)",
+        &["app", "layer (L+G)", "semantic (S+G)"],
+    );
+    let run_app = |policy: PolicyKind, app_idx: usize| -> Option<f64> {
+        let mut cfg = scenarios::base_config();
+        cfg.policy = policy;
+        cfg.workload.app_weights = [0.0; 3];
+        cfg.workload.app_weights[app_idx] = 1.0;
+        let out = scenarios::run(cfg, Some(&rt))?;
+        Some(out.summary.response.0)
+    };
+    for (i, app) in APPS.iter().enumerate() {
+        let l = run_app(PolicyKind::LayerGobi, i).unwrap_or(f64::NAN);
+        let s = run_app(PolicyKind::SemanticGobi, i).unwrap_or(f64::NAN);
+        rtm.row(vec![app.name().into(), fnum(l), fnum(s)]);
+        if l.is_finite() && s.is_finite() {
+            assert!(s < l, "{app:?}: semantic ({s}) must respond faster than layer ({l})");
+        }
+    }
+    rtm.print();
+    println!("(paper: layer splits higher accuracy AND higher response time per app)");
+}

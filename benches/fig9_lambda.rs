@@ -1,0 +1,69 @@
+//! Fig. 9 + Fig. 11 — sensitivity to the arrival rate λ (Appendix A.1):
+//! accuracy / response / violations / reward / energy for λ ∈ {2, 6, 20,
+//! 50} per policy, plus the fraction of layer decisions the MAB takes as
+//! load grows (it should fall — semantic splits relieve congestion).
+//!
+//!     cargo bench --bench fig9_lambda
+
+use splitplace::benchlib::scenarios;
+use splitplace::config::PolicyKind;
+use splitplace::util::stats;
+use splitplace::util::table::{fnum, Table};
+
+const LAMBDAS: [f64; 4] = [2.0, 6.0, 20.0, 50.0];
+
+fn main() {
+    let Some(rt) = scenarios::runtime_or_skip("fig9") else { return };
+
+    let mut fig9 = Table::new(
+        "Fig. 9 — λ sensitivity",
+        &["model", "λ", "accuracy", "response", "SLA viol", "reward", "energy MWh"],
+    );
+    let mut fig11 = Table::new(
+        "Fig. 11 — fraction of layer decisions (MAB+DASO)",
+        &["λ", "layer fraction"],
+    );
+
+    for policy in [
+        PolicyKind::ModelCompression,
+        PolicyKind::Gillis,
+        PolicyKind::SemanticGobi,
+        PolicyKind::LayerGobi,
+        PolicyKind::MabGobi,
+        PolicyKind::MabDaso,
+    ] {
+        for lambda in LAMBDAS {
+            let mut cfg = scenarios::base_config();
+            cfg.policy = policy;
+            cfg.workload.lambda = lambda;
+            let Some(out) = scenarios::run(cfg, Some(&rt)) else { continue };
+            let s = &out.summary;
+            fig9.row(vec![
+                s.policy.clone(),
+                fnum(lambda),
+                fnum(s.accuracy),
+                fnum(s.response.0),
+                fnum(s.sla_violations),
+                fnum(s.avg_reward),
+                fnum(s.energy_mwh),
+            ]);
+            if policy == PolicyKind::MabDaso {
+                let fracs: Vec<f64> = out
+                    .metrics
+                    .layer_fraction
+                    .iter()
+                    .copied()
+                    .filter(|f| f.is_finite())
+                    .collect();
+                fig11.row(vec![fnum(lambda), fnum(stats::mean(&fracs))]);
+            }
+            eprintln!("[fig9] {} λ={lambda} done", s.policy);
+        }
+    }
+    fig9.print();
+    fig11.print();
+    println!(
+        "expected shape (paper Fig. 9/11): response & violations grow with λ for all \
+         models, most slowly for MAB+DASO; the MAB's layer fraction falls as λ grows."
+    );
+}

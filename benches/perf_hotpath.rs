@@ -1,0 +1,134 @@
+//! §Perf — hot-path microbenchmarks (EXPERIMENTS.md §Perf): the request
+//! path's building blocks measured in isolation so regressions are
+//! attributable per layer.
+//!
+//!   L3: simulator interval step, featurization, MAB decision, best-fit
+//!   L2/runtime: surrogate fwd / grad / train-step PJRT calls
+//!   L1-derived: fragment-chain inference (the Pallas-kernel HLOs)
+//!
+//!     cargo bench --bench perf_hotpath
+
+use splitplace::benchlib::{bench, black_box, report};
+use splitplace::cluster::build_fleet;
+use splitplace::config::{ClusterConfig, MabConfig, SimConfig, WorkloadConfig};
+use splitplace::coordinator::runner::try_runtime;
+use splitplace::mab::{MabPolicy, Mode};
+use splitplace::placement::{BestFitPlacer, FeatureLayout, Placer, PlacementInput, SlotInfo};
+use splitplace::runtime::{InferenceEngine, Surrogate};
+use splitplace::sim::{Engine, WorkerSnapshot};
+use splitplace::splits::{App, SplitDecision};
+use splitplace::workload::generator::Generator;
+use splitplace::workload::Task;
+
+fn main() {
+    let mut results = Vec::new();
+
+    // ---- L3: pure-rust hot paths ----------------------------------------
+    let cluster = build_fleet(&ClusterConfig::default());
+    let mut engine = Engine::new(cluster, SimConfig::default(), 1);
+    let mut generator = Generator::new(WorkloadConfig::default());
+    // steady-state load
+    for _ in 0..10 {
+        for task in generator.arrivals(engine.now_s) {
+            engine.admit(task, SplitDecision::Layer);
+        }
+        let assigns: Vec<(usize, usize)> = engine
+            .placeable()
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| (c, i % engine.workers()))
+            .collect();
+        engine.apply_placement(&assigns);
+        engine.step_interval();
+    }
+    results.push(bench("L3 sim interval step (50 workers, steady load)", 3, 30, || {
+        for task in generator.arrivals(engine.now_s) {
+            engine.admit(task, SplitDecision::Semantic);
+        }
+        let assigns: Vec<(usize, usize)> = engine
+            .placeable()
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| (c, i % engine.workers()))
+            .collect();
+        engine.apply_placement(&assigns);
+        black_box(engine.step_interval());
+    }));
+
+    let layout = FeatureLayout::new(50, 64);
+    let snaps = vec![WorkerSnapshot { cpu: 0.4, ram: 0.5, net: 0.1, disk: 0.1, containers: 2 }; 50];
+    let slots: Vec<SlotInfo> = (0..48)
+        .map(|i| SlotInfo {
+            cid: i,
+            prev_worker: (i % 3 == 0).then_some(i % 50),
+            decision: SplitDecision::Layer,
+            mi_remaining: 2e6,
+            ram_mb: 700.0,
+            input_mb: 80.0,
+            remaining_frac: 0.8,
+        })
+        .collect();
+    let p = vec![0.01f32; layout.placement_dim()];
+    results.push(bench("L3 featurize (H=50, M=64)", 10, 200, || {
+        black_box(layout.featurize(&snaps, &slots, &p, true));
+    }));
+
+    let mut mab = MabPolicy::new(MabConfig::default(), Mode::Test);
+    let task = Task { id: 0, app: App::Cifar100, batch: 40_000, sla: 8.0, arrival_s: 0.0, decision: None };
+    results.push(bench("L3 MAB UCB decision", 100, 1000, || {
+        black_box(mab.decide(&task));
+    }));
+
+    let input = PlacementInput {
+        snapshots: &snaps,
+        slots: slots.clone(),
+        ram_capacity: vec![8000.0; 50],
+        resident_ram: vec![1000.0; 50],
+        overcommit: 2.0,
+    };
+    results.push(bench("L3 best-fit placement (48 slots, 50 workers)", 10, 200, || {
+        black_box(BestFitPlacer.place(&input));
+    }));
+
+    // ---- runtime: PJRT calls ---------------------------------------------
+    if let Some(rt) = try_runtime() {
+        let mut surrogate = Surrogate::for_workers(&rt, 50).expect("surrogate");
+        let f = surrogate.feature_dim();
+        let x = vec![0.1f32; f];
+        // warm compile
+        surrogate.fwd(&x).unwrap();
+        surrogate.grad(&x).unwrap();
+        results.push(bench("L2 surrogate fwd (h50_m64, PJRT)", 3, 50, || {
+            black_box(surrogate.fwd(&x).unwrap());
+        }));
+        results.push(bench("L2 surrogate grad (eq.12 step)", 3, 50, || {
+            black_box(surrogate.grad(&x).unwrap());
+        }));
+        let b = surrogate.spec.train_batch;
+        let xb = vec![0.1f32; b * f];
+        let yb = vec![0.5f32; b];
+        surrogate.train_step(&xb, &yb).unwrap();
+        results.push(bench("L2 surrogate AdamW train step", 2, 20, || {
+            black_box(surrogate.train_step(&xb, &yb).unwrap());
+        }));
+
+        let eng = InferenceEngine::new(&rt).expect("engine");
+        for d in [SplitDecision::Layer, SplitDecision::Semantic] {
+            eng.warm(App::Mnist, d).unwrap();
+        }
+        results.push(bench("L1 mnist layer-chain inference (256 rows, 3 HLOs)", 2, 20, || {
+            black_box(eng.run(App::Mnist, SplitDecision::Layer).unwrap());
+        }));
+        results.push(bench("L1 mnist semantic fan-out inference (256 rows)", 2, 20, || {
+            black_box(eng.run(App::Mnist, SplitDecision::Semantic).unwrap());
+        }));
+        eng.warm(App::Cifar100, SplitDecision::Layer).unwrap();
+        results.push(bench("L1 cifar100 layer-chain inference (256 rows)", 2, 20, || {
+            black_box(eng.run(App::Cifar100, SplitDecision::Layer).unwrap());
+        }));
+    } else {
+        println!("[perf] PJRT benches skipped — artifacts not built");
+    }
+
+    report("§Perf — hot-path microbenchmarks", &results);
+}

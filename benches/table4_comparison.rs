@@ -1,0 +1,78 @@
+//! Table 4 + Fig. 7 + Fig. 8: the headline policy comparison — all seven
+//! models on the 50-worker fleet, every §6.4 metric, per-application
+//! panels and the auxiliary metrics (energy, execution time, fairness,
+//! cost).
+//!
+//!     cargo bench --bench table4_comparison
+//!     SPLITPLACE_BENCH_INTERVALS=100 cargo bench --bench table4_comparison
+
+use splitplace::benchlib::scenarios;
+use splitplace::util::table::{fnum, fpm, Table};
+
+fn main() {
+    let Some(rt) = scenarios::runtime_or_skip("table4") else { return };
+    let intervals = scenarios::bench_intervals();
+
+    let mut table4 = Table::new(
+        &format!("Table 4 — comparison with baselines and ablations ({intervals} intervals)"),
+        &[
+            "model", "energy MWh", "sched s", "fairness", "wait", "response",
+            "SLA viol", "accuracy", "reward",
+        ],
+    );
+    let mut fig7 = Table::new(
+        "Fig. 7 — per-application breakdown",
+        &["model", "app", "accuracy", "response", "SLA viol"],
+    );
+    let mut fig8 = Table::new(
+        "Fig. 8 — auxiliary metrics",
+        &["model", "exec time", "transfer", "migrate", "cost $/ctr", "queue len", "tasks"],
+    );
+
+    for policy in scenarios::all_policies() {
+        let mut cfg = scenarios::base_config();
+        cfg.policy = policy;
+        let Some(out) = scenarios::run(cfg, Some(&rt)) else { continue };
+        let s = &out.summary;
+        table4.row(vec![
+            s.policy.clone(),
+            fnum(s.energy_mwh),
+            fpm(s.sched_time_s.0, s.sched_time_s.1),
+            fnum(s.fairness),
+            fpm(s.wait.0, s.wait.1),
+            fpm(s.response.0, s.response.1),
+            fnum(s.sla_violations),
+            fnum(s.accuracy),
+            fnum(s.avg_reward),
+        ]);
+        let per = out.metrics.per_app();
+        for app in splitplace::splits::APPS {
+            if let Some((acc, resp, viol)) = per.get(&app) {
+                fig7.row(vec![
+                    s.policy.clone(),
+                    app.name().into(),
+                    fnum(*acc),
+                    fnum(*resp),
+                    fnum(*viol),
+                ]);
+            }
+        }
+        fig8.row(vec![
+            s.policy.clone(),
+            fpm(s.exec.0, s.exec.1),
+            fnum(s.transfer_mean),
+            fnum(s.migrate_mean),
+            fnum(s.cost_per_container),
+            fnum(out.metrics.mean_queue()),
+            s.tasks.to_string(),
+        ]);
+        eprintln!("[table4] {} done", s.policy);
+    }
+    table4.print();
+    fig7.print();
+    fig8.print();
+    println!(
+        "expected shape (paper Table 4): MAB+DASO best reward & lowest SLA violations; \
+         Layer+GOBI best accuracy & worst response; Semantic+GOBI fastest."
+    );
+}

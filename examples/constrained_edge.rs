@@ -1,0 +1,52 @@
+//! Constrained-environment walkthrough (Appendix A.3, Figs. 13–14 in
+//! miniature): runs SplitPlace in the normal and the three constrained
+//! variants of the edge testbed and shows where the time goes — compute
+//! constraints inflate execution, network constraints inflate transfers,
+//! memory constraints trigger the swap-thrash path.
+//!
+//!     make artifacts && cargo run --release --example constrained_edge
+
+use splitplace::config::{EnvConstraint, ExperimentConfig, PolicyKind};
+use splitplace::coordinator::runner::{run_experiment, try_runtime};
+use splitplace::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let rt = try_runtime().ok_or_else(|| {
+        anyhow::anyhow!("artifacts not found — run `make artifacts` first")
+    })?;
+
+    let mut results = Table::new(
+        "SplitPlace across constrained environments",
+        &["environment", "response", "SLA viol", "reward", "wait", "exec", "transfer"],
+    );
+    for constraint in [
+        EnvConstraint::None,
+        EnvConstraint::Compute,
+        EnvConstraint::Network,
+        EnvConstraint::Memory,
+    ] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = PolicyKind::MabDaso;
+        cfg.sim.intervals = 20;
+        cfg.cluster.constraint = constraint;
+        let out = run_experiment(cfg, Some(&rt))?;
+        let s = &out.summary;
+        let d = out.metrics.decomposition();
+        results.row(vec![
+            constraint.name().into(),
+            fnum(s.response.0),
+            fnum(s.sla_violations),
+            fnum(s.avg_reward),
+            fnum(d[0]),
+            fnum(d[1]),
+            fnum(d[2]),
+        ]);
+        eprintln!("[constrained_edge] {} done", constraint.name());
+    }
+    results.print();
+    println!(
+        "(paper A.3: constraints degrade every model, but the MAB adapts by \
+         shifting the split mix toward semantic, limiting the reward drop)"
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Full Table-4 experiment: all seven policies on the 50-worker Table-3
+//! fleet, Γ=100 intervals of 300 s, Poisson(λ=6) arrivals — the paper's
+//! headline configuration. Prints Table 4 plus the per-application panels
+//! of Fig. 7 and the response-time decomposition of Fig. 8/14.
+//!
+//! This is a long run (seven policies × 100 intervals with PJRT-backed
+//! placement). Pass `--quick` for a 25-interval smoke version.
+//!
+//!     make artifacts && cargo run --release --example full_experiment
+
+use splitplace::config::{ExperimentConfig, PolicyKind};
+use splitplace::coordinator::runner::{run_experiment, try_runtime};
+use splitplace::util::table::{fnum, fpm, Table};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let intervals = if quick { 25 } else { 100 };
+    let rt = try_runtime().ok_or_else(|| {
+        anyhow::anyhow!("artifacts not found — run `make artifacts` first")
+    })?;
+
+    let mut table4 = Table::new(
+        &format!("Table 4 — policy comparison ({intervals} intervals, 50 workers, λ=6)"),
+        &[
+            "model", "energy MWh", "sched s", "fairness", "wait", "response",
+            "SLA viol", "accuracy", "reward", "cost $/ctr",
+        ],
+    );
+    let mut fig7 = Table::new(
+        "Fig. 7 — per-application accuracy / response / violations",
+        &["model", "app", "accuracy", "response", "SLA viol"],
+    );
+    let mut fig14 = Table::new(
+        "Fig. 8/14 — response-time decomposition (intervals)",
+        &["model", "wait", "exec", "transfer", "migrate", "sched"],
+    );
+
+    for policy in PolicyKind::all() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = policy;
+        cfg.sim.intervals = intervals;
+        let out = run_experiment(cfg, Some(&rt))?;
+        let s = &out.summary;
+        table4.row(vec![
+            s.policy.clone(),
+            fnum(s.energy_mwh),
+            fpm(s.sched_time_s.0, s.sched_time_s.1),
+            fnum(s.fairness),
+            fpm(s.wait.0, s.wait.1),
+            fpm(s.response.0, s.response.1),
+            fnum(s.sla_violations),
+            fnum(s.accuracy),
+            fnum(s.avg_reward),
+            fnum(s.cost_per_container),
+        ]);
+        let per = out.metrics.per_app();
+        for app in splitplace::splits::APPS {
+            if let Some((acc, resp, viol)) = per.get(&app) {
+                fig7.row(vec![
+                    s.policy.clone(),
+                    app.name().into(),
+                    fnum(*acc),
+                    fnum(*resp),
+                    fnum(*viol),
+                ]);
+            }
+        }
+        let d = out.metrics.decomposition();
+        fig14.row(vec![
+            s.policy.clone(),
+            fnum(d[0]),
+            fnum(d[1]),
+            fnum(d[2]),
+            fnum(d[3]),
+            fnum(d[4]),
+        ]);
+        eprintln!("[done] {}", s.policy);
+    }
+
+    table4.print();
+    fig7.print();
+    fig14.print();
+    println!("(paper shape: MAB+DASO highest reward & lowest SLA violations; \
+              Layer+GOBI highest accuracy & response; Semantic+GOBI fastest)");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: run SplitPlace (MAB split decider + DASO placement) on a
+//! small 10-worker edge cluster for 15 scheduling intervals and print the
+//! paper's headline metrics.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use splitplace::config::{ExperimentConfig, PolicyKind};
+use splitplace::coordinator::runner::{run_experiment, try_runtime};
+use splitplace::util::table::{fnum, fpm, Table};
+
+fn main() -> anyhow::Result<()> {
+    let rt = try_runtime().ok_or_else(|| {
+        anyhow::anyhow!("artifacts not found — run `make artifacts` first")
+    })?;
+
+    let mut cfg = ExperimentConfig::small();
+    cfg.policy = PolicyKind::MabDaso;
+    cfg.sim.intervals = 15;
+    cfg.workload.lambda = 2.0;
+
+    println!(
+        "SplitPlace quickstart: {} workers, {} intervals, Poisson(λ={}) arrivals",
+        cfg.cluster.total_workers(),
+        cfg.sim.intervals,
+        cfg.workload.lambda
+    );
+    let out = run_experiment(cfg, Some(&rt))?;
+    let s = &out.summary;
+
+    let mut t = Table::new("Results (paper §6.4 metrics)", &["metric", "value"]);
+    t.row(vec!["tasks completed".into(), s.tasks.to_string()]);
+    t.row(vec!["average reward (eq. 15)".into(), fnum(s.avg_reward)]);
+    t.row(vec!["average accuracy (eq. 13)".into(), fnum(s.accuracy)]);
+    t.row(vec!["SLA violation rate (eq. 14)".into(), fnum(s.sla_violations)]);
+    t.row(vec!["response time (intervals)".into(), fpm(s.response.0, s.response.1)]);
+    t.row(vec!["wait time (intervals)".into(), fpm(s.wait.0, s.wait.1)]);
+    t.row(vec!["energy (MW-hr)".into(), fnum(s.energy_mwh)]);
+    t.row(vec!["fairness (Jain)".into(), fnum(s.fairness)]);
+    t.row(vec!["execution cost (USD)".into(), fnum(s.cost_usd)]);
+    t.print();
+
+    let mut t = Table::new("Per-application", &["app", "accuracy", "response", "SLA violations"]);
+    let per = out.metrics.per_app();
+    for app in splitplace::splits::APPS {
+        if let Some((acc, resp, viol)) = per.get(&app) {
+            t.row(vec![app.name().into(), fnum(*acc), fnum(*resp), fnum(*viol)]);
+        }
+    }
+    t.print();
+    Ok(())
+}

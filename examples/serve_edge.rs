@@ -1,0 +1,112 @@
+//! End-to-end serving driver (the DESIGN.md §validation workload):
+//!
+//!   * starts the SplitPlace serving front-end (thread-pool TCP server,
+//!     one PJRT runtime per worker thread — Python nowhere in sight);
+//!   * fires a batched request mix from concurrent clients with
+//!     paper-style SLAs (tight deadlines → the MAB picks semantic splits,
+//!     loose deadlines → layer splits);
+//!   * every request executes the REAL AOT-compiled split-fragment HLOs
+//!     on the 256-row held-out batch and reports measured accuracy;
+//!   * prints latency percentiles, throughput, and the decision mix.
+//!
+//!     make artifacts && cargo run --release --example serve_edge
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use splitplace::coordinator::runner::{artifacts_dir, try_runtime};
+use splitplace::server::{Client, Server};
+use splitplace::util::rng::Rng;
+use splitplace::util::stats;
+use splitplace::util::table::{fnum, Table};
+
+const CLIENTS: usize = 4;
+const REQUESTS_PER_CLIENT: usize = 25;
+const SERVER_THREADS: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    if try_runtime().is_none() {
+        anyhow::bail!("artifacts not found — run `make artifacts` first");
+    }
+    let dir = artifacts_dir();
+    println!("starting server ({SERVER_THREADS} worker threads, artifacts: {dir})");
+    let server = Server::start(&dir, "127.0.0.1:0", SERVER_THREADS)?;
+    let addr = server.addr;
+
+    #[derive(Clone, Default)]
+    struct Stats {
+        latencies_ms: Vec<f64>,
+        accuracies: Vec<f64>,
+        decisions: std::collections::HashMap<String, usize>,
+        rows: usize,
+        errors: usize,
+    }
+    let stats = Arc::new(Mutex::new(Stats::default()));
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let stats = stats.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + c as u64);
+            let mut client = Client::connect(addr).expect("connect");
+            for _ in 0..REQUESTS_PER_CLIENT {
+                let app = *rng.choice(&["mnist", "fashionmnist", "cifar100"]);
+                let batch = rng.int_range(16_000, 64_000) as u64;
+                // tight or loose SLA with equal probability: exercises
+                // both MAB contexts
+                let sla = if rng.chance(0.5) {
+                    rng.range(0.5, 0.9)
+                } else {
+                    rng.range(8.0, 14.0)
+                };
+                let t = Instant::now();
+                match client.request(app, batch, sla) {
+                    Ok(v) if v.get("ok").and_then(|b| b.as_bool().ok()) == Some(true) => {
+                        let mut s = stats.lock().unwrap();
+                        s.latencies_ms.push(t.elapsed().as_secs_f64() * 1000.0);
+                        s.accuracies
+                            .push(v.get("accuracy").unwrap().as_f64().unwrap());
+                        let d = v.get("decision").unwrap().as_str().unwrap().to_string();
+                        *s.decisions.entry(d).or_insert(0) += 1;
+                        s.rows += v.get("rows").unwrap().as_f64().unwrap() as usize;
+                    }
+                    _ => stats.lock().unwrap().errors += 1,
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = stats.lock().unwrap().clone();
+    let n = s.latencies_ms.len();
+
+    let mut t = Table::new("Serving results", &["metric", "value"]);
+    t.row(vec!["requests ok / errors".into(), format!("{n} / {}", s.errors)]);
+    t.row(vec!["wall time (s)".into(), fnum(wall)]);
+    t.row(vec!["throughput (req/s)".into(), fnum(n as f64 / wall)]);
+    t.row(vec![
+        "inference rows/s".into(),
+        fnum(s.rows as f64 / wall),
+    ]);
+    t.row(vec!["latency p50 (ms)".into(), fnum(stats::percentile(&s.latencies_ms, 50.0))]);
+    t.row(vec!["latency p95 (ms)".into(), fnum(stats::percentile(&s.latencies_ms, 95.0))]);
+    t.row(vec!["latency p99 (ms)".into(), fnum(stats::percentile(&s.latencies_ms, 99.0))]);
+    t.row(vec!["mean accuracy (measured)".into(), fnum(stats::mean(&s.accuracies))]);
+    for (d, count) in &s.decisions {
+        t.row(vec![format!("decision: {d}"), count.to_string()]);
+    }
+    t.print();
+
+    assert_eq!(s.errors, 0, "all requests must succeed");
+    assert!(
+        s.decisions.len() >= 2,
+        "mixed SLAs must produce both layer and semantic decisions: {:?}",
+        s.decisions
+    );
+    println!("serve_edge OK — {} requests via real PJRT split-inference", n);
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,201 @@
+"""AOT entry point: train every network variant, lower every program to HLO
+*text*, and write artifacts/ + manifest.json for the rust runtime.
+
+Run via `make artifacts` (build-time only; Python never runs on the request
+path). Interchange is HLO text, NOT `.serialize()`: the image's
+xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id protos; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model, nets, train
+
+EVAL_BATCH = 256       # rows per inference call from the rust runtime
+FWD_BATCH = 16         # candidate placements scored per PJRT call
+TRAIN_BATCH = 32       # surrogate fine-tune minibatch
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: fragment weights are baked into the HLO as
+    # constants; the default printer elides them as `constant({...})`, which
+    # parses back as garbage on the rust side.
+    return comp.as_hlo_text(True)
+
+
+def lower_fragment(frag: nets.Fragment, batch: int) -> str:
+    """Lower one split fragment to HLO text. Weights are baked in as
+    constants; the only runtime input is the activation batch."""
+
+    def f(x):
+        return (frag.apply(x, use_pallas=True),)
+
+    spec = jax.ShapeDtypeStruct((batch, frag.in_dim), jnp.float32)
+    return to_hlo_text(jax.jit(f).lower(spec))
+
+
+def write(path: str, text: str) -> int:
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def write_bin_f32(path: str, arrays) -> None:
+    with open(path, "wb") as f:
+        for a in arrays:
+            f.write(np.asarray(a, dtype="<f4").tobytes())
+
+
+def write_bin_i32(path: str, a) -> None:
+    with open(path, "wb") as f:
+        f.write(np.asarray(a, dtype="<i4").tobytes())
+
+
+def frag_entry(frag: nets.Fragment, hlo_name: str) -> dict:
+    return {
+        "name": frag.name,
+        "hlo": hlo_name,
+        "in_dim": frag.in_dim,
+        "out_dim": frag.out_dim,
+        "param_bytes": frag.param_bytes(),
+    }
+
+
+def emit_app(out_dir: str, name: str, seed: int, manifest: dict, log) -> None:
+    spec = datasets.APPS[name]
+    t0 = time.time()
+    result = train.train_app(spec, seed=seed)
+    acc = result["accuracy"]
+    log(f"[{name}] trained: layer={acc['layer']:.3f} semantic={acc['semantic']:.3f} "
+        f"compressed={acc['compressed']:.3f} ({time.time()-t0:.1f}s)")
+
+    entry = {
+        "input_dim": spec.dim,
+        "classes": spec.classes,
+        "semantic_groups": spec.semantic_groups,
+        "accuracy": acc,
+        "layer": [],
+        "semantic": [],
+    }
+
+    for frag in result["layer"]:
+        hlo_name = f"{frag.name}.hlo.txt"
+        write(os.path.join(out_dir, hlo_name), lower_fragment(frag, EVAL_BATCH))
+        entry["layer"].append(frag_entry(frag, hlo_name))
+    for frag in result["semantic"]:
+        hlo_name = f"{frag.name}.hlo.txt"
+        write(os.path.join(out_dir, hlo_name), lower_fragment(frag, EVAL_BATCH))
+        entry["semantic"].append(frag_entry(frag, hlo_name))
+    for kind in ("full", "compressed"):
+        frag = result[kind]
+        hlo_name = f"{frag.name}.hlo.txt"
+        write(os.path.join(out_dir, hlo_name), lower_fragment(frag, EVAL_BATCH))
+        entry[kind] = frag_entry(frag, hlo_name)
+
+    x_test, y_test = result["test"]
+    entry["data_x"] = f"data_{name}_x.bin"
+    entry["data_y"] = f"data_{name}_y.bin"
+    entry["data_rows"] = int(x_test.shape[0])
+    write_bin_f32(os.path.join(out_dir, entry["data_x"]), [x_test])
+    write_bin_i32(os.path.join(out_dir, entry["data_y"]), y_test)
+
+    manifest["apps"][name] = entry
+    log(f"[{name}] emitted {3 + spec.semantic_groups + 2} HLO modules")
+
+
+def emit_surrogate(out_dir: str, dims: model.SurrogateDims, manifest: dict, log) -> None:
+    t0 = time.time()
+    params = model.init_params(dims, seed=7)
+    flat = model.flatten_params(params)
+
+    fwd = jax.jit(model.fwd_program(dims))
+    fwd_hlo = to_hlo_text(fwd.lower(*[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flat],
+                                     jax.ShapeDtypeStruct((dims.feature_dim,), jnp.float32)))
+
+    fwdb = jax.jit(model.fwd_batch_program(dims, FWD_BATCH))
+    fwdb_hlo = to_hlo_text(fwdb.lower(
+        *[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flat],
+        jax.ShapeDtypeStruct((FWD_BATCH, dims.feature_dim), jnp.float32)))
+
+    grad = jax.jit(model.grad_program(dims))
+    grad_hlo = to_hlo_text(grad.lower(
+        *[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flat],
+        jax.ShapeDtypeStruct((dims.feature_dim,), jnp.float32)))
+
+    tr = jax.jit(model.train_program(dims, TRAIN_BATCH))
+    ex = model.example_args_train(dims, params, TRAIN_BATCH)
+    tr_hlo = to_hlo_text(tr.lower(*[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in ex]))
+
+    base = f"surrogate_{dims.name}"
+    write(os.path.join(out_dir, f"{base}_fwd.hlo.txt"), fwd_hlo)
+    write(os.path.join(out_dir, f"{base}_fwd_batch.hlo.txt"), fwdb_hlo)
+    write(os.path.join(out_dir, f"{base}_grad.hlo.txt"), grad_hlo)
+    write(os.path.join(out_dir, f"{base}_train.hlo.txt"), tr_hlo)
+    write_bin_f32(os.path.join(out_dir, f"{base}_init.bin"), flat)
+
+    manifest["surrogates"][dims.name] = {
+        "workers": dims.workers,
+        "slots": dims.slots,
+        "feature_dim": dims.feature_dim,
+        "hidden": model.HIDDEN,
+        "fwd": f"{base}_fwd.hlo.txt",
+        "fwd_batch": f"{base}_fwd_batch.hlo.txt",
+        "fwd_batch_size": FWD_BATCH,
+        "grad": f"{base}_grad.hlo.txt",
+        "train": f"{base}_train.hlo.txt",
+        "train_batch": TRAIN_BATCH,
+        "init": f"{base}_init.bin",
+        "param_shapes": [list(p.shape) for p in flat],
+    }
+    log(f"[surrogate {dims.name}] F={dims.feature_dim} emitted 4 HLO modules "
+        f"({time.time()-t0:.1f}s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--apps", default="mnist,fashionmnist,cifar100")
+    ap.add_argument("--small-only", action="store_true",
+                    help="only emit the h10_m16 surrogate (fast CI path)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    log = lambda msg: print(f"[aot] {msg}", flush=True)
+    manifest = {
+        "version": 1,
+        "eval_batch": EVAL_BATCH,
+        "apps": {},
+        "surrogates": {},
+    }
+
+    t0 = time.time()
+    for name in args.apps.split(","):
+        emit_app(args.out_dir, name.strip(), args.seed, manifest, log)
+
+    variants = model.VARIANTS
+    if args.small_only:
+        variants = [v for v in variants if v.workers <= 10]
+    for dims in variants:
+        emit_surrogate(args.out_dir, dims, manifest, log)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    log(f"done in {time.time()-t0:.1f}s -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""L1 Pallas kernel: fused tiled dense layer (matmul + bias + activation).
+
+This is the compute hot-spot of the whole stack: every split-network
+fragment and every DASO surrogate layer is a dense layer, so the entire
+request path lowers to repeated invocations of this kernel.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the kernel tiles the
+`[m,k] @ [k,n]` product into `(bm, bk) x (bk, bn)` VMEM-resident blocks via
+`BlockSpec`, accumulates over the k-grid axis in the f32 output block (MXU
+accumulation dtype), and fuses the bias-add + activation into the epilogue
+of the last k-step so activations never round-trip through HBM between the
+matmul and the nonlinearity.
+
+On this image Pallas MUST run with `interpret=True`: real-TPU lowering
+emits a Mosaic custom-call that the CPU PJRT plugin cannot execute. The
+interpret path produces identical numerics and lowers to plain HLO, which
+is what `aot.py` exports for the rust runtime.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default block shapes: multiples of the TPU MXU tile (128x128) and the
+# VPU lane width (128). 128^2 f32 = 64 KiB per block; three live blocks
+# (x, w, o) plus double-buffering stay well under the ~16 MiB VMEM budget.
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+# Adaptive caps (§Perf iteration 2): for the shapes this stack actually
+# runs (batch ≤ 256, dims ≤ 1024) larger blocks cut the grid-step count —
+# the dominant cost under interpret=True and still a VMEM win on TPU
+# (fewer HBM round-trips per output tile). Block bytes stay ≤ ~3.5 MiB.
+ADAPT_BM = 256
+ADAPT_BK = 512
+ADAPT_BN = 512
+
+
+def pick_blocks(m: int, k: int, n: int):
+    """Choose block shape for a problem: prefer the biggest block that
+    covers the (padded) dim, capped by the adaptive limits."""
+    bm = min(ADAPT_BM, _round_up(m, 8))
+    bk = min(ADAPT_BK, _round_up(k, 8))
+    bn = min(ADAPT_BN, _round_up(n, 8))
+    return bm, bk, bn
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str, k_steps: int):
+    """Grid = (m/bm, n/bn, k/bk); k is the innermost (sequential) axis.
+
+    o_ref is revisited for every k-step of a given (i, j) tile, acting as
+    the f32 accumulator. Bias + activation are fused into the final k-step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...]
+        o_ref[...] = ref.apply_activation(acc, activation)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bk", "bn", "interpret")
+)
+def fused_dense(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    activation: str = "relu",
+    bm: int = None,
+    bk: int = None,
+    bn: int = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused activation(x @ w + b) as a tiled Pallas kernel.
+
+    Shapes need not be multiples of the block sizes; inputs are zero-padded
+    to the block grid and the result is sliced back. Zero-padding is exact
+    for the matmul (extra k contributes 0) and for the epilogue (padded
+    rows/cols are discarded before any consumer sees them).
+
+    Args:
+      x: [m, k] f32 input.
+      w: [k, n] f32 weights.
+      b: [n] f32 bias.
+      activation: "none" | "relu" | "tanh" | "gelu".
+      bm, bk, bn: block shape (defaults match the 128x128 MXU tile).
+      interpret: keep True on CPU (see module docstring).
+
+    Returns:
+      [m, n] f32 output.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch: x[{m},{k}] @ w[{k2},{n}]"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    # Adaptive defaults, clamped to the (padded) problem so tiny layers
+    # don't blow up the padding ratio.
+    abm, abk, abn = pick_blocks(m, k, n)
+    bm = min(bm, _round_up(m, 8)) if bm else abm
+    bk = min(bk, _round_up(k, 8)) if bk else abk
+    bn = min(bn, _round_up(n, 8)) if bn else abn
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(b, 0, bn)
+
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    k_steps = kp // bk
+    grid = (mp // bm, np_ // bn, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_dense_kernel, activation=activation, k_steps=k_steps
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _round_up(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+def mlp_forward(
+    x: jnp.ndarray,
+    params,
+    activations,
+    bm: int = None,
+    bk: int = None,
+    bn: int = None,
+) -> jnp.ndarray:
+    """MLP forward built entirely from the fused Pallas kernel.
+
+    Args mirror `ref.mlp_ref`; this is what the L2 model graphs call so the
+    whole network lowers into repeated fused-dense kernels in one HLO module.
+    """
+    h = x
+    for (w, b), act in zip(params, activations):
+        h = fused_dense(h, w, b, activation=act, bm=bm, bk=bk, bn=bn)
+    return h
+
+
+def vmem_bytes_per_block(bm: int, bk: int, bn: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (used by the perf
+    analysis in EXPERIMENTS.md §Perf): x-block + w-block + bias-block +
+    out-accumulator, times 2 for double buffering of the streamed inputs."""
+    x_blk = bm * bk * dtype_bytes
+    w_blk = bk * bn * dtype_bytes
+    b_blk = bn * dtype_bytes
+    o_blk = bm * bn * 4  # accumulator always f32
+    return 2 * (x_blk + w_blk + b_blk) + o_blk
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, bm: int, bk: int, bn: int) -> float:
+    """Fraction of MXU issue slots doing useful work, from tile alignment:
+    padding waste on each axis lowers utilization multiplicatively."""
+    def eff(size: int, block: int) -> float:
+        padded = _round_up(size, block)
+        return size / padded
+
+    return eff(m, bm) * eff(k, bk) * eff(n, bn)

@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth implementations used by pytest to validate the
+Pallas kernels in `fused_mlp.py` under `interpret=True`, and by the model
+layer when a shape is too small to be worth tiling.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def apply_activation(y: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "none":
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "gelu":
+        # tanh approximation of GELU (matches jax.nn.gelu(approximate=True))
+        c = jnp.sqrt(2.0 / jnp.pi).astype(y.dtype)
+        return 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y**3)))
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str = "none") -> jnp.ndarray:
+    """Reference fused dense layer: activation(x @ w + b).
+
+    Args:
+      x: [m, k] input activations.
+      w: [k, n] weights.
+      b: [n] bias.
+      activation: one of "none", "relu", "tanh", "gelu".
+    """
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    return apply_activation(y, activation)
+
+
+def mlp_ref(x: jnp.ndarray, params, activations) -> jnp.ndarray:
+    """Reference MLP forward: sequence of dense layers.
+
+    Args:
+      x: [m, d0] input.
+      params: list of (w_i [d_i, d_{i+1}], b_i [d_{i+1}]).
+      activations: list of activation names, same length as params.
+    """
+    h = x
+    for (w, b), act in zip(params, activations):
+        h = dense_ref(h, w, b, act)
+    return h

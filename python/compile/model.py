@@ -1,0 +1,206 @@
+"""L2: the DASO surrogate model f([S_t, P_t, D_t]; theta) -> O_t estimate.
+
+Three programs are AOT-lowered for the rust coordinator (per cluster-size
+variant):
+
+  fwd    (params, x[F])              -> y                 scalar QoS estimate
+  grad   (params, x[F])              -> (y, dy/dx[F])     for eq. (12):
+                                         P_t <- P_t + eta * df/dP
+  train  (params, m, v, step, xb, yb)-> (loss, params', m', v')
+                                         one AdamW step on MSE (eq. 11)
+
+Feature layout (MUST match rust/src/placement/features.rs exactly):
+
+  [ 0 .. H*4 )        per-worker utilization: cpu, ram, net, disk   in [0,1]
+  [ H*4 .. +M*H )     placement matrix P, slot-major (slot m, worker h)
+  [ +M*H .. +M*2 )    split decision one-hot per slot: [layer, semantic]
+  [ +M*2 .. +M*4 )    per-slot container demands: cpu, ram, net, remaining
+
+  F = H*4 + M*H + M*2 + M*4
+
+The surrogate forward used for the *fwd* artifact routes through the L1
+Pallas fused-dense kernel; grad/train use the numerically-identical pure-jnp
+reference (AD through the interpret-mode in-place accumulator is not
+supported), which pytest validates against the kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nets
+from .kernels import fused_mlp, ref
+
+HIDDEN = [512, 256]
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateDims:
+    """Cluster-size variant of the surrogate."""
+
+    workers: int      # H
+    slots: int        # M: max containers considered per interval
+
+    @property
+    def state_dim(self) -> int:
+        return self.workers * 4
+
+    @property
+    def placement_dim(self) -> int:
+        return self.slots * self.workers
+
+    @property
+    def decision_dim(self) -> int:
+        return self.slots * 2
+
+    @property
+    def demand_dim(self) -> int:
+        return self.slots * 4
+
+    @property
+    def feature_dim(self) -> int:
+        return self.state_dim + self.placement_dim + self.decision_dim + self.demand_dim
+
+    @property
+    def name(self) -> str:
+        return f"h{self.workers}_m{self.slots}"
+
+    def layer_dims(self) -> List[int]:
+        return [self.feature_dim] + HIDDEN + [1]
+
+
+# The two variants shipped in artifacts/: the paper's 50-worker testbed and
+# a small variant for quickstart/tests.
+VARIANTS = [SurrogateDims(workers=50, slots=64), SurrogateDims(workers=10, slots=16)]
+
+
+def init_params(dims: SurrogateDims, seed: int = 0) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    return nets.init_mlp(jax.random.PRNGKey(seed), dims.layer_dims())
+
+
+def _acts(dims: SurrogateDims) -> List[str]:
+    return nets.activations_for(dims.layer_dims())
+
+
+def flatten_params(params) -> List[jnp.ndarray]:
+    flat = []
+    for w, b in params:
+        flat += [w, b]
+    return flat
+
+
+def unflatten_params(flat) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    return [(flat[i], flat[i + 1]) for i in range(0, len(flat), 2)]
+
+
+# ---------------------------------------------------------------------------
+# Programs
+# ---------------------------------------------------------------------------
+
+def fwd_program(dims: SurrogateDims):
+    """fwd(params..., x) -> (y,), Pallas-kernel forward."""
+    acts = _acts(dims)
+
+    def fwd(*args):
+        x = args[-1][None, :]  # [1, F]
+        params = unflatten_params(list(args[:-1]))
+        y = fused_mlp.mlp_forward(x, params, acts)
+        return (y[0, 0],)
+
+    return fwd
+
+
+def fwd_batch_program(dims: SurrogateDims, batch: int):
+    """Batched scoring: fwd(params..., xb[B,F]) -> (y[B],). Used by the
+    coordinator to score many candidate placements in one PJRT call."""
+    acts = _acts(dims)
+
+    def fwd(*args):
+        xb = args[-1]
+        params = unflatten_params(list(args[:-1]))
+        y = fused_mlp.mlp_forward(xb, params, acts)
+        return (y[:, 0],)
+
+    return fwd
+
+
+def grad_program(dims: SurrogateDims):
+    """grad(params..., x) -> (y, dy/dx). Pure-jnp forward for AD."""
+    acts = _acts(dims)
+
+    def f(params, x):
+        y = ref.mlp_ref(x[None, :], params, acts)
+        return y[0, 0]
+
+    def grad(*args):
+        x = args[-1]
+        params = unflatten_params(list(args[:-1]))
+        y, dx = jax.value_and_grad(f, argnums=1)(params, x)
+        return (y, dx)
+
+    return grad
+
+
+def train_program(dims: SurrogateDims, batch: int, lr: float = 1e-3, wd: float = 1e-4,
+                  b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    """One AdamW step on MSE over a [batch, F] minibatch.
+
+    train(params(2L)..., m(2L)..., v(2L)..., step, xb, yb)
+      -> (loss, params'(2L)..., m'(2L)..., v'(2L)...)
+    """
+    acts = _acts(dims)
+    nl = len(dims.layer_dims()) - 1  # number of dense layers
+    np_flat = 2 * nl
+
+    def train(*args):
+        p_flat = list(args[:np_flat])
+        m_flat = list(args[np_flat:2 * np_flat])
+        v_flat = list(args[2 * np_flat:3 * np_flat])
+        step = args[3 * np_flat]
+        xb = args[3 * np_flat + 1]
+        yb = args[3 * np_flat + 2]
+        params = unflatten_params(p_flat)
+
+        def loss_fn(p):
+            pred = ref.mlp_ref(xb, p, acts)[:, 0]
+            return jnp.mean((pred - yb) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        g_flat = flatten_params(grads)
+
+        new_p, new_m, new_v = [], [], []
+        for p, g, m, v in zip(p_flat, g_flat, m_flat, v_flat):
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / (1 - b1**step)
+            vhat = v2 / (1 - b2**step)
+            # AdamW: decoupled weight decay
+            p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+            new_p.append(p2)
+            new_m.append(m2)
+            new_v.append(v2)
+        return tuple([loss] + new_p + new_m + new_v)
+
+    return train
+
+
+def example_args_fwd(dims: SurrogateDims, params):
+    return flatten_params(params) + [jnp.zeros((dims.feature_dim,), jnp.float32)]
+
+
+def example_args_fwd_batch(dims: SurrogateDims, params, batch: int):
+    return flatten_params(params) + [jnp.zeros((batch, dims.feature_dim), jnp.float32)]
+
+
+def example_args_train(dims: SurrogateDims, params, batch: int):
+    flat = flatten_params(params)
+    zeros = [jnp.zeros_like(p) for p in flat]
+    return (
+        flat + zeros + zeros
+        + [jnp.float32(1.0),
+           jnp.zeros((batch, dims.feature_dim), jnp.float32),
+           jnp.zeros((batch,), jnp.float32)]
+    )

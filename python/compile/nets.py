@@ -1,0 +1,161 @@
+"""Split-network definitions (L2) built on the L1 Pallas fused-dense kernel.
+
+Four variants per app, mirroring the paper's strategy space:
+
+  full        — the unsplit reference MLP (used for the cloud baseline,
+                Fig. 18, and as the source of layer fragments)
+  layer       — the full net partitioned into sequential layer groups
+                (exact: composing the fragments reproduces `full` bit-for-bit)
+  semantic    — G parallel subnets, one per class group, each trained only
+                on its group (SplitNet-style); prediction = argmax over the
+                concatenated group logits
+  compressed  — a single small net (BottleNet++-style MC baseline)
+
+Architecture per app (hidden widths scale with difficulty):
+  mnist / fashionmnist : 784-256-128-10   (3 dense layers -> 3 layer frags)
+  cifar100             : 1024-512-256-100
+Semantic subnets use width/g hidden layers and |group| outputs.
+Compressed nets use a single 64-wide hidden layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .datasets import AppSpec, class_groups
+from .kernels import fused_mlp, ref
+
+Params = List[Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def hidden_widths(spec: AppSpec) -> List[int]:
+    if spec.dim >= 1024:
+        return [512, 256]
+    return [256, 128]
+
+
+def layer_dims(spec: AppSpec) -> List[int]:
+    return [spec.dim] + hidden_widths(spec) + [spec.classes]
+
+
+def activations_for(dims: Sequence[int]) -> List[str]:
+    """ReLU on hidden layers, linear logits."""
+    return ["relu"] * (len(dims) - 2) + ["none"]
+
+
+def init_mlp(key, dims: Sequence[int]) -> Params:
+    """He-init MLP parameters."""
+    params = []
+    for i in range(len(dims) - 1):
+        key, k1 = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / dims[i])
+        w = jax.random.normal(k1, (dims[i], dims[i + 1]), jnp.float32) * scale
+        b = jnp.zeros((dims[i + 1],), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def forward(x: jnp.ndarray, params: Params, acts: Sequence[str], use_pallas: bool = True) -> jnp.ndarray:
+    """Forward pass; `use_pallas=True` routes through the L1 kernel so the
+    AOT-lowered HLO contains the kernel's tiled program."""
+    if use_pallas:
+        return fused_mlp.mlp_forward(x, params, acts)
+    return ref.mlp_ref(x, params, acts)
+
+
+# ---------------------------------------------------------------------------
+# Fragmentation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Fragment:
+    """One deployable split fragment: a contiguous stack of dense layers.
+
+    `subtract_other=True` marks a semantic fragment trained with an extra
+    trailing "other" logit (one-vs-rest calibration): the exported output is
+    `logits[:, :-1] - logits[:, -1:]`, which keeps cross-group argmax merges
+    calibrated while the fragment still never sees other groups' classes.
+    """
+
+    name: str
+    params: Params
+    acts: List[str]
+    in_dim: int
+    out_dim: int
+    subtract_other: bool = False
+
+    def apply(self, x: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+        h = forward(x, self.params, self.acts, use_pallas)
+        if self.subtract_other:
+            h = h[:, :-1] - h[:, -1:]
+        return h
+
+    def param_bytes(self) -> int:
+        return sum(int(w.size + b.size) * 4 for w, b in self.params)
+
+
+def layer_fragments(spec: AppSpec, params: Params) -> List[Fragment]:
+    """Partition the full net layer-wise: one fragment per dense layer
+    (preliminary / intermediate / final, paper §3.1)."""
+    dims = layer_dims(spec)
+    acts = activations_for(dims)
+    frags = []
+    for i, ((w, b), act) in enumerate(zip(params, acts)):
+        frags.append(
+            Fragment(
+                name=f"{spec.name}_layer{i}",
+                params=[(w, b)],
+                acts=[act],
+                in_dim=dims[i],
+                out_dim=dims[i + 1],
+            )
+        )
+    return frags
+
+
+def semantic_subnet_dims(spec: AppSpec, group_size: int) -> List[int]:
+    """Subnet layer dims; output has one extra slot for the "other" logit.
+
+    Width is h/(2g): the g parallel subnets together hold ~half the full
+    net's capacity, which reproduces the paper's ~4-point layer>semantic
+    accuracy gap (Fig. 2 / Table 4)."""
+    g = spec.semantic_groups
+    hw = [max(12, h // (2 * g)) for h in hidden_widths(spec)]
+    return [spec.dim] + hw + [group_size + 1]
+
+
+def init_semantic_fragments(key, spec: AppSpec) -> List[Fragment]:
+    """One parallel subnet per class group. Each subnet sees the full input
+    but only emits logits for its own classes (plus the "other" calibration
+    logit) — the tree-structured SplitNet layout with no cross-branch
+    connections."""
+    frags = []
+    for gi, group in enumerate(class_groups(spec)):
+        key, k = jax.random.split(key)
+        dims = semantic_subnet_dims(spec, len(group))
+        frags.append(
+            Fragment(
+                name=f"{spec.name}_sem{gi}",
+                params=init_mlp(k, dims),
+                acts=activations_for(dims),
+                in_dim=spec.dim,
+                out_dim=len(group),
+                subtract_other=True,
+            )
+        )
+    return frags
+
+
+def compressed_dims(spec: AppSpec) -> List[int]:
+    return [spec.dim, 128, spec.classes]
+
+
+def semantic_concat(frags: List[Fragment], x: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+    """Concatenate group logits in class order (the broker-side merge the
+    paper implements with rsync + torch.cat)."""
+    outs = [f.apply(x, use_pallas) for f in frags]
+    return jnp.concatenate(outs, axis=1)

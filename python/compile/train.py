@@ -1,0 +1,200 @@
+"""Build-time training of all split-network variants (runs once, in
+`make artifacts`). Hand-rolled Adam — the host image has no optax.
+
+Training uses the pure-jnp forward (`use_pallas=False`): the Pallas
+interpret path is numerically identical (validated by pytest) but orders of
+magnitude slower to trace inside a training loop. The *exported* inference
+HLOs route through the Pallas kernel (see aot.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, nets
+from .datasets import AppSpec
+
+
+# ---------------------------------------------------------------------------
+# Optimizer (Adam)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return jax.tree_util.tree_map(zeros, params), jax.tree_util.tree_map(zeros, params)
+
+
+def adam_update(params, grads, m, v, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree_util.tree_map(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree_util.tree_map(lambda mm: mm / (1 - b1**step), m)
+    vhat = jax.tree_util.tree_map(lambda vv: vv / (1 - b2**step), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return params, m, v
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.logsumexp(logits, axis=1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def accuracy(logits: np.ndarray, labels: np.ndarray) -> float:
+    return float(np.mean(np.argmax(logits, axis=1) == labels))
+
+
+# ---------------------------------------------------------------------------
+# Full / compressed nets
+# ---------------------------------------------------------------------------
+
+def train_mlp(key, dims, acts, x, y, steps: int, batch: int = 128, lr: float = 1e-3):
+    params = nets.init_mlp(key, dims)
+    m, v = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, m, v, step, xb, yb):
+        def loss_fn(p):
+            logits = nets.forward(xb, p, acts, use_pallas=False)
+            return softmax_xent(logits, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, m, v = adam_update(params, grads, m, v, step, lr=lr)
+        return params, m, v, loss
+
+    n = x.shape[0]
+    rng = np.random.default_rng(0)
+    for s in range(1, steps + 1):
+        idx = rng.integers(0, n, size=batch)
+        params, m, v, _ = step_fn(params, m, v, jnp.float32(s), x[idx], y[idx])
+    return params
+
+
+def eval_full(params, acts, x_test, y_test) -> float:
+    logits = np.asarray(nets.forward(jnp.asarray(x_test), params, acts, use_pallas=False))
+    return accuracy(logits, y_test)
+
+
+# ---------------------------------------------------------------------------
+# Semantic subnets
+# ---------------------------------------------------------------------------
+
+def train_semantic(key, spec: AppSpec, x, y, steps: int, batch: int = 128):
+    """Train each class-group subnet one-vs-rest: cross-entropy over the
+    group's classes plus a trailing "other" class that absorbs out-of-group
+    samples. The "other" logit calibrates the cross-group argmax merge (the
+    exported fragment emits `logits[:, :-1] - logits[:, -1:]`), while the
+    subnets still share no cross-group information — preserving the paper's
+    layer > semantic accuracy gap."""
+    groups = datasets.class_groups(spec)
+    frags = nets.init_semantic_fragments(key, spec)
+    rng = np.random.default_rng(1)
+    n = x.shape[0]
+
+    for frag, group in zip(frags, groups):
+        lo = group[0]
+        g = len(group)
+        acts = frag.acts
+
+        @jax.jit
+        def step_fn(params, m, v, step, xb, yb_local, w):
+            def loss_fn(p):
+                logits = nets.forward(xb, p, acts, use_pallas=False)
+                logz = jax.nn.logsumexp(logits, axis=1)
+                picked = jnp.take_along_axis(logits, yb_local[:, None], axis=1)[:, 0]
+                return jnp.mean((logz - picked) * w)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, m, v = adam_update(params, grads, m, v, step)
+            return params, m, v, loss
+
+        params = frag.params
+        m, v = adam_init(params)
+        for s in range(1, steps + 1):
+            idx = rng.integers(0, n, size=batch)
+            xb, yb = x[idx], y[idx]
+            in_g = np.isin(yb, group)
+            # in-group -> local index; out-of-group -> the "other" class g
+            yb_local = np.where(in_g, yb - lo, g).astype(np.int32)
+            # down-weight "other" so it doesn't swamp small groups
+            w = np.where(in_g, 1.0, 0.5).astype(np.float32)
+            params, m, v, _ = step_fn(params, m, v, jnp.float32(s), xb, yb_local, w)
+        frag.params = params
+    return frags
+
+
+def eval_semantic(frags: List[nets.Fragment], x_test, y_test) -> float:
+    logits = np.asarray(nets.semantic_concat(frags, jnp.asarray(x_test), use_pallas=False))
+    return accuracy(logits, y_test)
+
+
+def magnitude_prune(params, frac: float):
+    """BottleNet++-style lossy compression: zero the `frac` smallest-magnitude
+    weights per tensor (the paper implements its MC baseline with the
+    PyTorch Prune library; this is the same structural operation)."""
+    out = []
+    for w, b in params:
+        wn = np.asarray(w)
+        thr = np.quantile(np.abs(wn), frac)
+        out.append((jnp.asarray(np.where(np.abs(wn) >= thr, wn, 0.0)), b))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Top-level: train every variant for one app
+# ---------------------------------------------------------------------------
+
+def train_app(spec: AppSpec, seed: int = 0, full_steps: int | None = None,
+              sem_steps: int | None = None, comp_steps: int | None = None) -> Dict:
+    """Returns dict with trained params + measured test accuracies."""
+    full_steps = full_steps or spec.train_steps
+    sem_steps = sem_steps or spec.train_steps
+    comp_steps = comp_steps or max(120, spec.train_steps // 2)
+
+    x_train, y_train, x_test, y_test = datasets.make_dataset(spec, seed)
+    key = jax.random.PRNGKey(seed)
+    k_full, k_sem, k_comp = jax.random.split(key, 3)
+
+    dims = nets.layer_dims(spec)
+    acts = nets.activations_for(dims)
+    full_params = train_mlp(k_full, dims, acts, x_train, y_train, steps=full_steps, batch=256)
+    acc_full = eval_full(full_params, acts, x_test, y_test)
+
+    layer_frags = nets.layer_fragments(spec, full_params)
+
+    sem_frags = train_semantic(k_sem, spec, x_train, y_train, steps=sem_steps)
+    acc_sem = eval_semantic(sem_frags, x_test, y_test)
+
+    cdims = nets.compressed_dims(spec)
+    cacts = nets.activations_for(cdims)
+    comp_params = train_mlp(k_comp, cdims, cacts, x_train, y_train, steps=comp_steps)
+    comp_params = magnitude_prune(comp_params, spec.prune_frac)
+    acc_comp = eval_full(comp_params, cacts, x_test, y_test)
+
+    full_frag = nets.Fragment(
+        name=f"{spec.name}_full", params=full_params, acts=acts,
+        in_dim=spec.dim, out_dim=spec.classes,
+    )
+    comp_frag = nets.Fragment(
+        name=f"{spec.name}_comp", params=comp_params, acts=cacts,
+        in_dim=spec.dim, out_dim=spec.classes,
+    )
+
+    return {
+        "spec": spec,
+        "full": full_frag,
+        "layer": layer_frags,
+        "semantic": sem_frags,
+        "compressed": comp_frag,
+        "accuracy": {"layer": acc_full, "semantic": acc_sem, "compressed": acc_comp},
+        "test": (x_test, y_test),
+    }

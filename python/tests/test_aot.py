@@ -1,0 +1,120 @@
+"""AOT path: HLO text emission + manifest consistency.
+
+Lowers a small fragment and a small surrogate end-to-end (the exact code
+path `make artifacts` uses) and sanity-checks the emitted HLO text. If the
+full artifacts/ directory already exists, also cross-checks the manifest.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, datasets, model, nets
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrippable():
+    def f(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+def test_lower_fragment_contains_dot():
+    spec = datasets.APPS["mnist"]
+    frag = nets.Fragment(
+        name="t",
+        params=nets.init_mlp(jax.random.PRNGKey(0), [spec.dim, 32, 10]),
+        acts=["relu", "none"],
+        in_dim=spec.dim,
+        out_dim=10,
+    )
+    text = aot.lower_fragment(frag, batch=8)
+    assert "HloModule" in text
+    assert "dot(" in text or "dot " in text, "fused-dense matmul must lower to HLO dot"
+    assert f"f32[8,{spec.dim}]" in text, "entry parameter must be the activation batch"
+
+
+def test_surrogate_fwd_lowers():
+    dims = model.SurrogateDims(workers=4, slots=4)
+    params = model.init_params(dims, seed=0)
+    flat = model.flatten_params(params)
+    fwd = jax.jit(model.fwd_program(dims))
+    lowered = fwd.lower(
+        *[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flat],
+        jax.ShapeDtypeStruct((dims.feature_dim,), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+def test_write_bin_f32(tmp_path):
+    p = tmp_path / "x.bin"
+    a = np.arange(6, dtype=np.float32).reshape(2, 3)
+    b = np.array([7.0], dtype=np.float32)
+    aot.write_bin_f32(str(p), [a, b])
+    raw = np.fromfile(str(p), dtype="<f4")
+    np.testing.assert_array_equal(raw, np.array([0, 1, 2, 3, 4, 5, 7], dtype=np.float32))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_apps_present(self, manifest):
+        assert set(manifest["apps"]) == {"mnist", "fashionmnist", "cifar100"}
+
+    def test_all_hlo_files_exist(self, manifest):
+        for app in manifest["apps"].values():
+            for frag in app["layer"] + app["semantic"] + [app["full"], app["compressed"]]:
+                path = os.path.join(ARTIFACTS, frag["hlo"])
+                assert os.path.exists(path), frag["hlo"]
+                assert os.path.getsize(path) > 100
+
+    def test_accuracy_ladder(self, manifest):
+        """Paper §2: layer accuracy > semantic accuracy for every app."""
+        for name, app in manifest["apps"].items():
+            acc = app["accuracy"]
+            assert acc["layer"] > acc["semantic"] - 1e-9, name
+            assert acc["layer"] > acc["compressed"], name
+
+    def test_fragment_chains(self, manifest):
+        for name, app in manifest["apps"].items():
+            frags = app["layer"]
+            assert frags[0]["in_dim"] == app["input_dim"]
+            assert frags[-1]["out_dim"] == app["classes"]
+            for a, b in zip(frags, frags[1:]):
+                assert a["out_dim"] == b["in_dim"]
+            sem_out = sum(f["out_dim"] for f in app["semantic"])
+            assert sem_out == app["classes"]
+
+    def test_data_files(self, manifest):
+        for name, app in manifest["apps"].items():
+            x = np.fromfile(os.path.join(ARTIFACTS, app["data_x"]), dtype="<f4")
+            y = np.fromfile(os.path.join(ARTIFACTS, app["data_y"]), dtype="<i4")
+            assert x.size == app["data_rows"] * app["input_dim"]
+            assert y.size == app["data_rows"]
+            assert y.min() >= 0 and y.max() < app["classes"]
+
+    def test_surrogate_entries(self, manifest):
+        for name, s in manifest["surrogates"].items():
+            f_dim = s["workers"] * 4 + s["slots"] * s["workers"] + s["slots"] * 2 + s["slots"] * 4
+            assert s["feature_dim"] == f_dim
+            init = np.fromfile(os.path.join(ARTIFACTS, s["init"]), dtype="<f4")
+            n_params = sum(int(np.prod(sh)) for sh in s["param_shapes"])
+            assert init.size == n_params
+            for key in ("fwd", "fwd_batch", "grad", "train"):
+                assert os.path.exists(os.path.join(ARTIFACTS, s[key]))

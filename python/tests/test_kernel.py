@@ -1,0 +1,151 @@
+"""L1 correctness: the Pallas fused-dense kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the stack — every exported HLO
+routes its compute through this kernel. Hypothesis sweeps shapes, block
+sizes and activations; explicit cases pin the MXU-aligned and degenerate
+shapes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_mlp, ref
+
+ACTIVATIONS = ["none", "relu", "tanh", "gelu"]
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _check(m, k, n, act, bm=128, bk=128, bn=128, seed=0, rtol=2e-5, atol=2e-5):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k0, (m, k))
+    w = _rand(k1, (k, n), scale=1.0 / np.sqrt(k))
+    b = _rand(k2, (n,))
+    got = fused_mlp.fused_dense(x, w, b, activation=act, bm=bm, bk=bk, bn=bn)
+    want = ref.dense_ref(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Pinned shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_mxu_aligned(act):
+    _check(128, 128, 128, act)
+
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_multi_block(act):
+    _check(256, 384, 256, act)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (1, 784, 10), (3, 5, 7), (257, 129, 100)])
+def test_unaligned_shapes(m, k, n):
+    _check(m, k, n, "relu")
+
+
+def test_exported_fragment_shapes():
+    """The exact shapes the AOT path exports (batch 256 fragments)."""
+    for (m, k, n) in [(256, 784, 256), (256, 256, 128), (256, 128, 10),
+                      (256, 1024, 512), (256, 512, 256), (256, 256, 100)]:
+        _check(m, k, n, "relu")
+
+
+def test_zero_input():
+    x = jnp.zeros((16, 32))
+    w = jnp.zeros((32, 8))
+    b = jnp.full((8,), -1.0)
+    out = fused_mlp.fused_dense(x, w, b, activation="relu")
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((16, 8)))
+
+
+def test_bias_only():
+    x = jnp.zeros((4, 4))
+    w = jnp.zeros((4, 6))
+    b = jnp.arange(6, dtype=jnp.float32)
+    out = fused_mlp.fused_dense(x, w, b, activation="none")
+    np.testing.assert_allclose(np.asarray(out), np.tile(np.arange(6, dtype=np.float32), (4, 1)))
+
+
+def test_small_blocks():
+    _check(64, 64, 64, "relu", bm=16, bk=16, bn=16)
+
+
+def test_rectangular_blocks():
+    _check(100, 200, 50, "tanh", bm=32, bk=64, bn=16)
+
+
+def test_mlp_forward_matches_ref():
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 6)
+    params = [
+        (_rand(ks[0], (784, 256), 0.03), _rand(ks[1], (256,))),
+        (_rand(ks[2], (256, 128), 0.06), _rand(ks[3], (128,))),
+        (_rand(ks[4], (128, 10), 0.09), _rand(ks[5], (10,))),
+    ]
+    acts = ["relu", "relu", "none"]
+    x = _rand(jax.random.PRNGKey(4), (32, 784))
+    got = fused_mlp.mlp_forward(x, params, acts)
+    want = ref.mlp_ref(x, params, acts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 300),
+    n=st.integers(1, 150),
+    act=st.sampled_from(ACTIVATIONS),
+)
+def test_hypothesis_shapes(m, k, n, act):
+    _check(m, k, n, act, seed=(m * 7 + k * 3 + n) & 0x7FFF)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32, 64, 128]),
+    bk=st.sampled_from([8, 16, 32, 64, 128]),
+    bn=st.sampled_from([8, 16, 32, 64, 128]),
+)
+def test_hypothesis_blocks(bm, bk, bn):
+    _check(96, 112, 80, "relu", bm=bm, bk=bk, bn=bn)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), m=st.integers(1, 64))
+def test_hypothesis_scales(scale, m):
+    """Numerical robustness across input magnitudes."""
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(11), 3)
+    x = _rand(k0, (m, 48)) * scale
+    w = _rand(k1, (48, 24)) / np.sqrt(48)
+    b = _rand(k2, (24,))
+    got = fused_mlp.fused_dense(x, w, b, activation="none")
+    want = ref.dense_ref(x, w, b, "none")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4 * scale)
+
+
+# ---------------------------------------------------------------------------
+# Static perf-analysis helpers (used by EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+def test_vmem_budget_default_blocks():
+    bytes_per_block = fused_mlp.vmem_bytes_per_block(128, 128, 128)
+    assert bytes_per_block < 16 * 1024 * 1024, "default blocks must fit VMEM"
+
+
+def test_mxu_utilization_bounds():
+    u = fused_mlp.mxu_utilization_estimate(256, 784, 256, 128, 128, 128)
+    assert 0.0 < u <= 1.0
+    # perfectly aligned => 1.0
+    assert fused_mlp.mxu_utilization_estimate(128, 128, 128, 128, 128, 128) == 1.0
+    # pathological padding => low utilization
+    assert fused_mlp.mxu_utilization_estimate(1, 1, 1, 128, 128, 128) < 1e-4

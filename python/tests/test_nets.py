@@ -1,0 +1,111 @@
+"""L2 correctness: split-network semantics.
+
+Key invariants from the paper (§2, §3.1):
+  - layer splitting is EXACT: composing the layer fragments reproduces the
+    full network output bit-for-bit (pre-trained model divided layer-wise
+    "without affecting output semantics");
+  - semantic fragments are disjoint parallel subnets whose concatenated
+    logits cover the class space in order;
+  - fragment metadata (in/out dims, param bytes) is consistent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets, nets
+
+
+@pytest.fixture(scope="module", params=["mnist", "cifar100"])
+def spec(request):
+    return datasets.APPS[request.param]
+
+
+@pytest.fixture(scope="module")
+def full_params(spec):
+    return nets.init_mlp(jax.random.PRNGKey(0), nets.layer_dims(spec))
+
+
+def test_layer_fragment_composition_exact(spec, full_params):
+    dims = nets.layer_dims(spec)
+    acts = nets.activations_for(dims)
+    frags = nets.layer_fragments(spec, full_params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, spec.dim), jnp.float32)
+    want = nets.forward(x, full_params, acts, use_pallas=False)
+    h = x
+    for frag in frags:
+        h = frag.apply(h, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(want))
+
+
+def test_layer_fragments_chain_dims(spec, full_params):
+    frags = nets.layer_fragments(spec, full_params)
+    dims = nets.layer_dims(spec)
+    assert len(frags) == len(dims) - 1
+    assert frags[0].in_dim == spec.dim
+    assert frags[-1].out_dim == spec.classes
+    for a, b in zip(frags, frags[1:]):
+        assert a.out_dim == b.in_dim
+
+
+def test_semantic_covers_classes(spec):
+    frags = nets.init_semantic_fragments(jax.random.PRNGKey(2), spec)
+    assert len(frags) == spec.semantic_groups
+    assert sum(f.out_dim for f in frags) == spec.classes
+    groups = datasets.class_groups(spec)
+    flat = [c for g in groups for c in g]
+    assert flat == list(range(spec.classes)), "groups must tile the class space in order"
+
+
+def test_semantic_concat_shape(spec):
+    frags = nets.init_semantic_fragments(jax.random.PRNGKey(2), spec)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, spec.dim), jnp.float32)
+    out = nets.semantic_concat(frags, x, use_pallas=False)
+    assert out.shape == (4, spec.classes)
+
+
+def test_semantic_fragments_independent(spec):
+    """No cross-branch connections: perturbing one subnet's input slice of
+    parameters must not change other groups' logits."""
+    frags = nets.init_semantic_fragments(jax.random.PRNGKey(2), spec)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, spec.dim), jnp.float32)
+    base = np.asarray(nets.semantic_concat(frags, x, use_pallas=False))
+    # perturb fragment 0
+    w0, b0 = frags[0].params[0]
+    frags[0].params[0] = (w0 + 1.0, b0)
+    out = np.asarray(nets.semantic_concat(frags, x, use_pallas=False))
+    g0 = frags[0].out_dim
+    assert not np.allclose(out[:, :g0], base[:, :g0])
+    np.testing.assert_array_equal(out[:, g0:], base[:, g0:])
+
+
+def test_param_bytes(spec, full_params):
+    frags = nets.layer_fragments(spec, full_params)
+    total = sum(f.param_bytes() for f in frags)
+    want = sum(int(w.size + b.size) * 4 for w, b in full_params)
+    assert total == want
+
+
+def test_compressed_smaller_than_full(spec):
+    dims = nets.layer_dims(spec)
+    cdims = nets.compressed_dims(spec)
+    full_sz = sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+    comp_sz = sum(cdims[i] * cdims[i + 1] + cdims[i + 1] for i in range(len(cdims) - 1))
+    assert comp_sz < full_sz / 2
+
+
+def test_dataset_determinism():
+    s = datasets.APPS["mnist"]
+    a = datasets.make_dataset(s, seed=5)
+    b = datasets.make_dataset(s, seed=5)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_dataset_ranges():
+    s = datasets.APPS["fashionmnist"]
+    x_train, y_train, x_test, y_test = datasets.make_dataset(s, seed=0)
+    assert x_train.shape == (s.n_train, s.dim)
+    assert x_test.shape == (s.n_test, s.dim)
+    assert x_train.min() >= -1.0 and x_train.max() <= 1.0
+    assert y_train.min() >= 0 and y_train.max() < s.classes

@@ -1,0 +1,170 @@
+//! Gillis baseline (Yu et al., ICDCS'21, as characterized in §2.1/§6.5):
+//! a reinforcement-learning model-serving policy that chooses between
+//! layer-partitioned execution and model compression per request, adapting
+//! online. It cannot use semantic splits (those need retraining per
+//! partitioning scheme), which is exactly the capability gap SplitPlace
+//! exploits.
+//!
+//! Implementation: tabular Q-learning over (app, SLA band) states with
+//! actions {Layer, Compressed}, ε-greedy with multiplicative decay.
+
+use crate::sim::CompletedTask;
+use crate::splits::{App, SplitDecision};
+use crate::util::rng::Rng;
+use crate::workload::Task;
+
+const ACTIONS: [SplitDecision; 2] = [SplitDecision::Layer, SplitDecision::Compressed];
+/// SLA bands relative to the app's nominal layer response time.
+const BANDS: usize = 3;
+
+#[derive(Clone, Debug)]
+pub struct GillisPolicy {
+    /// Q[app][band][action]
+    q: [[[f64; 2]; BANDS]; 3],
+    n: [[[u64; 2]; BANDS]; 3],
+    epsilon: f64,
+    alpha: f64,
+    rng: Rng,
+    /// task id -> (app, band, action) for delayed reward assignment
+    pending: std::collections::HashMap<u64, (usize, usize, usize)>,
+}
+
+fn band_of(task_sla: f64, app: App) -> usize {
+    let rel = task_sla / app.nominal_layer_rt();
+    if rel < 0.9 {
+        0
+    } else if rel < 1.3 {
+        1
+    } else {
+        2
+    }
+}
+
+impl GillisPolicy {
+    pub fn new(seed: u64) -> Self {
+        GillisPolicy {
+            // optimistic init so both actions get explored
+            q: [[[0.6; 2]; BANDS]; 3],
+            n: [[[0; 2]; BANDS]; 3],
+            epsilon: 0.3,
+            alpha: 0.15,
+            rng: Rng::new(seed),
+            pending: std::collections::HashMap::new(),
+        }
+    }
+
+    pub fn decide(&mut self, task: &Task) -> SplitDecision {
+        let a = task.app.index();
+        let b = band_of(task.sla, task.app);
+        let act = if self.rng.chance(self.epsilon) {
+            self.rng.below(2) as usize
+        } else if self.q[a][b][0] >= self.q[a][b][1] {
+            0
+        } else {
+            1
+        };
+        self.n[a][b][act] += 1;
+        self.pending.insert(task.id, (a, b, act));
+        ACTIONS[act]
+    }
+
+    /// Online Q update from leaving tasks (same reward as eq. 15's term).
+    pub fn observe(&mut self, leaving: &[CompletedTask]) {
+        for t in leaving {
+            if let Some((a, b, act)) = self.pending.remove(&t.task_id) {
+                let sla_ok = if t.response <= t.sla { 1.0 } else { 0.0 };
+                let p = if t.accuracy.is_finite() { t.accuracy } else { 0.0 };
+                let r = (sla_ok + p) / 2.0;
+                self.q[a][b][act] += self.alpha * (r - self.q[a][b][act]);
+            }
+        }
+        // slow exploration decay, floor at 5% (Gillis "continuously adapts")
+        self.epsilon = (self.epsilon * 0.995).max(0.05);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::splits::App;
+
+    fn task(id: u64, app: App, sla: f64) -> Task {
+        Task { id, app, batch: 32_000, sla, arrival_s: 0.0, decision: None }
+    }
+
+    fn done(id: u64, d: SplitDecision, response: f64, sla: f64, acc: f64) -> CompletedTask {
+        CompletedTask {
+            task_id: id,
+            app: App::Mnist,
+            decision: d,
+            batch: 32_000,
+            sla,
+            response,
+            wait: 0.0,
+            exec: response,
+            transfer: 0.0,
+            migrate: 0.0,
+            workers: vec![0],
+            accuracy: acc,
+        }
+    }
+
+    #[test]
+    fn decisions_are_layer_or_compressed_only() {
+        let mut g = GillisPolicy::new(1);
+        for i in 0..100 {
+            let d = g.decide(&task(i, App::Cifar100, 5.0));
+            assert!(matches!(d, SplitDecision::Layer | SplitDecision::Compressed));
+        }
+    }
+
+    #[test]
+    fn learns_compression_for_tight_slas() {
+        let mut g = GillisPolicy::new(2);
+        // tight SLA: layer always violates, compressed always meets
+        for round in 0..300 {
+            let t = task(round, App::Mnist, 2.0); // band 0 (< 0.9 * 4.5)
+            let d = g.decide(&t);
+            let (resp, acc) = match d {
+                SplitDecision::Layer => (5.0, 0.99),
+                SplitDecision::Compressed => (1.0, 0.9),
+                _ => unreachable!(),
+            };
+            g.observe(&[done(round, d, resp, 2.0, acc)]);
+        }
+        assert!(
+            g.q[0][0][1] > g.q[0][0][0],
+            "compressed must win the tight band: {:?}",
+            g.q[0][0]
+        );
+    }
+
+    #[test]
+    fn learns_layer_for_loose_slas() {
+        let mut g = GillisPolicy::new(3);
+        for round in 0..300 {
+            let t = task(round, App::Mnist, 9.0); // band 2
+            let d = g.decide(&t);
+            let (resp, acc) = match d {
+                SplitDecision::Layer => (5.0, 0.99),
+                SplitDecision::Compressed => (1.0, 0.80),
+                _ => unreachable!(),
+            };
+            g.observe(&[done(round, d, resp, 9.0, acc)]);
+        }
+        assert!(
+            g.q[0][2][0] > g.q[0][2][1],
+            "layer must win the loose band: {:?}",
+            g.q[0][2]
+        );
+    }
+
+    #[test]
+    fn epsilon_decays_to_floor() {
+        let mut g = GillisPolicy::new(4);
+        for i in 0..2000 {
+            g.observe(&[done(i, SplitDecision::Layer, 1.0, 5.0, 1.0)]);
+        }
+        assert!((g.epsilon - 0.05).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,41 @@
+//! Model-Compression baseline (BottleNet++-flavored, §6.5): every task runs
+//! the magnitude-pruned single-container model. Fast-ish and memory-light,
+//! but pays a permanent accuracy penalty — the trade-off Table 4 shows.
+
+use crate::splits::SplitDecision;
+use crate::workload::Task;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct McPolicy;
+
+impl McPolicy {
+    pub fn new() -> Self {
+        McPolicy
+    }
+
+    pub fn decide(&mut self, _task: &Task) -> SplitDecision {
+        SplitDecision::Compressed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::splits::App;
+
+    #[test]
+    fn always_compressed() {
+        let mut p = McPolicy::new();
+        for i in 0..10 {
+            let t = Task {
+                id: i,
+                app: App::FashionMnist,
+                batch: 20_000,
+                sla: 3.0,
+                arrival_s: 0.0,
+                decision: None,
+            };
+            assert_eq!(p.decide(&t), SplitDecision::Compressed);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Baseline policies from the paper's evaluation (§6.5): Gillis (RL over
+//! layer-partitioning + compression, no semantic arm) and BottleNet++-style
+//! Model Compression.
+
+pub mod gillis;
+pub mod mc;
+
+pub use gillis::GillisPolicy;
+pub use mc::McPolicy;

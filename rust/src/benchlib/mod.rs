@@ -1,0 +1,108 @@
+//! Micro-benchmark harness (offline substitute for criterion): warmup,
+//! timed iterations, mean/p50/p99 reporting. Used by all `benches/*.rs`
+//! (registered with `harness = false`).
+
+pub mod scenarios;
+
+use std::time::Instant;
+
+use crate::util::stats;
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    fn fmt_ns(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.0} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            self.iters.to_string(),
+            Self::fmt_ns(self.mean_ns),
+            Self::fmt_ns(self.p50_ns),
+            Self::fmt_ns(self.p99_ns),
+            Self::fmt_ns(self.std_ns),
+        ]
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(min_iters);
+    for _ in 0..min_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: stats::mean(&samples),
+        p50_ns: stats::percentile(&samples, 50.0),
+        p99_ns: stats::percentile(&samples, 99.0),
+        std_ns: stats::std(&samples),
+    }
+}
+
+/// Render a group of results as a table.
+pub fn report(title: &str, results: &[BenchResult]) {
+    let mut t = Table::new(title, &["bench", "iters", "mean", "p50", "p99", "std"]);
+    for r in results {
+        t.row(r.row());
+    }
+    t.print();
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept here so benches don't import nightly-looking paths).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 20, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn formatting_scales() {
+        assert!(BenchResult::fmt_ns(500.0).contains("ns"));
+        assert!(BenchResult::fmt_ns(5.0e4).contains("µs"));
+        assert!(BenchResult::fmt_ns(5.0e7).contains("ms"));
+        assert!(BenchResult::fmt_ns(5.0e9).contains(" s"));
+    }
+}

@@ -1,0 +1,64 @@
+//! Shared scenario plumbing for the paper-reproduction benches: every
+//! `benches/fig*.rs` builds configs through here so the knobs (interval
+//! count, policy set) stay consistent and env-tunable.
+//!
+//! `SPLITPLACE_BENCH_INTERVALS` overrides the per-run interval count
+//! (default 25 — enough for the orderings to emerge; the paper's Γ=100 is
+//! what `examples/full_experiment.rs` runs).
+
+use crate::config::{ExperimentConfig, PolicyKind};
+use crate::coordinator::runner::{run_experiment, try_runtime, ExperimentOutput};
+use crate::runtime::Runtime;
+
+pub fn bench_intervals() -> usize {
+    std::env::var("SPLITPLACE_BENCH_INTERVALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(25)
+}
+
+/// Policies in Table-4 row order.
+pub fn all_policies() -> [PolicyKind; 7] {
+    PolicyKind::all()
+}
+
+/// The ablation subset used by the sensitivity appendices.
+pub fn ablation_policies() -> [PolicyKind; 5] {
+    [
+        PolicyKind::SemanticGobi,
+        PolicyKind::LayerGobi,
+        PolicyKind::RandomDaso,
+        PolicyKind::MabGobi,
+        PolicyKind::MabDaso,
+    ]
+}
+
+/// Base config for bench scenarios (paper defaults + bench interval count).
+pub fn base_config() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sim.intervals = bench_intervals();
+    cfg
+}
+
+/// Runtime handle or a loud skip (benches print and exit 0 when artifacts
+/// are missing, so `cargo bench` stays runnable pre-`make artifacts`).
+pub fn runtime_or_skip(bench_name: &str) -> Option<Runtime> {
+    match try_runtime() {
+        Some(rt) => Some(rt),
+        None => {
+            println!("[{bench_name}] SKIPPED — artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// Run one scenario, tolerating per-policy failures (reported, not fatal).
+pub fn run(cfg: ExperimentConfig, rt: Option<&Runtime>) -> Option<ExperimentOutput> {
+    match run_experiment(cfg, rt) {
+        Ok(out) => Some(out),
+        Err(e) => {
+            eprintln!("[bench] run failed: {e:#}");
+            None
+        }
+    }
+}

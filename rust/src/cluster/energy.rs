@@ -1,0 +1,100 @@
+//! SPEC-benchmark-style energy model (paper §6.1 takes power curves from
+//! the SPEC repository; we encode the standard ssj linear-interpolation
+//! shape: power grows monotonically, slightly super-linearly at low load).
+
+use super::node::NodeType;
+
+/// Instantaneous power draw (watts) at CPU utilization `util` ∈ [0, 1].
+///
+/// Piecewise-linear through the SPEC ssj anchor points: idle, 50%, 100%.
+/// The 50% point sits at idle + 0.65·(peak−idle), matching the concave
+/// shape of published SPEC curves for small x86 servers.
+pub fn power_watts(spec: &NodeType, util: f64) -> f64 {
+    let u = util.clamp(0.0, 1.0);
+    let idle = spec.idle_watts;
+    let peak = spec.peak_watts;
+    let mid = idle + 0.65 * (peak - idle);
+    if u <= 0.5 {
+        idle + (mid - idle) * (u / 0.5)
+    } else {
+        mid + (peak - mid) * ((u - 0.5) / 0.5)
+    }
+}
+
+/// Energy (watt-hours) consumed over `seconds` at constant `util`.
+pub fn energy_wh(spec: &NodeType, util: f64, seconds: f64) -> f64 {
+    power_watts(spec, util) * seconds / 3600.0
+}
+
+/// Interval energy for a whole fleet given per-worker utilizations.
+pub fn fleet_energy_wh(specs: &[&NodeType], utils: &[f64], seconds: f64) -> f64 {
+    specs
+        .iter()
+        .zip(utils)
+        .map(|(s, &u)| energy_wh(s, u, seconds))
+        .sum()
+}
+
+/// Normalized average energy consumption (AEC ∈ [0,1]) for the reward in
+/// eq. 10: actual energy over the maximum possible (all workers at peak).
+pub fn normalized_aec(specs: &[&NodeType], utils: &[f64], seconds: f64) -> f64 {
+    let actual = fleet_energy_wh(specs, utils, seconds);
+    let max: f64 = specs.iter().map(|s| s.peak_watts * seconds / 3600.0).sum();
+    if max == 0.0 {
+        0.0
+    } else {
+        actual / max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::NODE_TYPES;
+
+    #[test]
+    fn power_monotone_in_util() {
+        let s = &NODE_TYPES[0];
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let p = power_watts(s, i as f64 / 20.0);
+            assert!(p >= prev, "power must be monotone");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn power_endpoints() {
+        let s = &NODE_TYPES[1];
+        assert_eq!(power_watts(s, 0.0), s.idle_watts);
+        assert_eq!(power_watts(s, 1.0), s.peak_watts);
+        // out-of-range clamped
+        assert_eq!(power_watts(s, -1.0), s.idle_watts);
+        assert_eq!(power_watts(s, 2.0), s.peak_watts);
+    }
+
+    #[test]
+    fn concave_shape() {
+        // 50% load should draw more than the linear midpoint
+        let s = &NODE_TYPES[2];
+        let half = power_watts(s, 0.5);
+        let linear_mid = (s.idle_watts + s.peak_watts) / 2.0;
+        assert!(half > linear_mid);
+    }
+
+    #[test]
+    fn energy_integrates_power() {
+        let s = &NODE_TYPES[0];
+        let e = energy_wh(s, 1.0, 3600.0);
+        assert!((e - s.peak_watts).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normalized_aec_bounds() {
+        let specs: Vec<&NodeType> = NODE_TYPES.iter().collect();
+        let idle = normalized_aec(&specs, &[0.0; 4], 300.0);
+        let full = normalized_aec(&specs, &[1.0; 4], 300.0);
+        assert!(idle > 0.0 && idle < full);
+        assert!((full - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,132 @@
+//! Urban-mobility channel model (SUMO/NetLimiter substitute, DESIGN.md §3).
+//!
+//! The paper feeds SUMO-generated per-worker ping/bandwidth time-series into
+//! NetLimiter. The decision problem only ever observes those two series, so
+//! we generate statistically similar ones: each mobile worker follows a
+//! mean-reverting random walk in "signal quality" q ∈ [0, 1] (an
+//! Ornstein–Uhlenbeck discretization — vehicles drift toward/away from
+//! access points smoothly), mapped to
+//!
+//!   ping multiplier  = 1 / q      (clamped to [1, ping_max])
+//!   bandwidth factor = q          (clamped to [bw_min, 1])
+//!
+//! Static workers keep multiplier 1. Series are seeded and reproducible.
+
+use crate::util::rng::Rng;
+
+/// Per-interval channel state of one worker.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChannelState {
+    /// ≥ 1: multiplies the node's base ping.
+    pub ping_mult: f64,
+    /// ∈ (0, 1]: scales the node's base bandwidth.
+    pub bw_factor: f64,
+}
+
+impl ChannelState {
+    pub const STATIC: ChannelState = ChannelState { ping_mult: 1.0, bw_factor: 1.0 };
+}
+
+/// Mobility trace generator for a fleet.
+#[derive(Clone, Debug)]
+pub struct MobilityModel {
+    /// Current signal quality per worker (1.0 for static workers).
+    q: Vec<f64>,
+    mobile: Vec<bool>,
+    rng: Rng,
+    /// OU mean-reversion rate per interval.
+    theta: f64,
+    /// OU noise std per interval.
+    sigma: f64,
+    /// Long-run mean quality.
+    mu: f64,
+    ping_max: f64,
+    bw_min: f64,
+}
+
+impl MobilityModel {
+    pub fn new(mobile_flags: &[bool], seed: u64) -> Self {
+        MobilityModel {
+            q: vec![1.0; mobile_flags.len()],
+            mobile: mobile_flags.to_vec(),
+            rng: Rng::new(seed),
+            theta: 0.25,
+            sigma: 0.18,
+            mu: 0.75,
+            ping_max: 6.0,
+            bw_min: 0.25,
+        }
+    }
+
+    /// Advance one scheduling interval; returns the channel state per worker.
+    pub fn step(&mut self) -> Vec<ChannelState> {
+        let mut out = Vec::with_capacity(self.q.len());
+        for i in 0..self.q.len() {
+            if !self.mobile[i] {
+                out.push(ChannelState::STATIC);
+                continue;
+            }
+            // OU update toward mu
+            let noise = self.rng.normal() * self.sigma;
+            self.q[i] += self.theta * (self.mu - self.q[i]) + noise;
+            self.q[i] = self.q[i].clamp(0.05, 1.0);
+            let ping_mult = (1.0 / self.q[i]).clamp(1.0, self.ping_max);
+            let bw_factor = self.q[i].clamp(self.bw_min, 1.0);
+            out.push(ChannelState { ping_mult, bw_factor });
+        }
+        out
+    }
+
+    /// Generate a whole trace of `n` intervals up front (used by benches
+    /// for reproducible scenario replay).
+    pub fn trace(&mut self, n: usize) -> Vec<Vec<ChannelState>> {
+        (0..n).map(|_| self.step()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_workers_unaffected() {
+        let mut m = MobilityModel::new(&[false, true, false], 1);
+        for _ in 0..50 {
+            let s = m.step();
+            assert_eq!(s[0], ChannelState::STATIC);
+            assert_eq!(s[2], ChannelState::STATIC);
+        }
+    }
+
+    #[test]
+    fn mobile_workers_vary_within_bounds() {
+        let mut m = MobilityModel::new(&[true], 2);
+        let tr = m.trace(200);
+        let pings: Vec<f64> = tr.iter().map(|s| s[0].ping_mult).collect();
+        let bws: Vec<f64> = tr.iter().map(|s| s[0].bw_factor).collect();
+        assert!(pings.iter().all(|p| (1.0..=6.0).contains(p)));
+        assert!(bws.iter().all(|b| (0.25..=1.0).contains(b)));
+        // actually varies
+        let pmin = pings.iter().cloned().fold(f64::INFINITY, f64::min);
+        let pmax = pings.iter().cloned().fold(0.0, f64::max);
+        assert!(pmax - pmin > 0.2, "trace too flat: {pmin}..{pmax}");
+    }
+
+    #[test]
+    fn seeded_reproducible() {
+        let t1 = MobilityModel::new(&[true, true], 7).trace(20);
+        let t2 = MobilityModel::new(&[true, true], 7).trace(20);
+        assert_eq!(t1, t2);
+        let t3 = MobilityModel::new(&[true, true], 8).trace(20);
+        assert_ne!(t1, t3);
+    }
+
+    #[test]
+    fn mean_reverts() {
+        // long-run average quality should sit near mu, i.e. bw_factor ~0.7
+        let mut m = MobilityModel::new(&[true], 3);
+        let tr = m.trace(2000);
+        let avg_bw: f64 = tr.iter().map(|s| s[0].bw_factor).sum::<f64>() / 2000.0;
+        assert!((0.55..=0.9).contains(&avg_bw), "avg_bw={avg_bw}");
+    }
+}

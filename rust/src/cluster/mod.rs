@@ -1,0 +1,9 @@
+//! Mobile-edge cluster substrate: node fleet (Table 3), mobility model,
+//! energy/cost models, LAN/WAN topology.
+
+pub mod energy;
+pub mod mobility;
+pub mod node;
+pub mod topology;
+
+pub use node::{build_fleet, Cluster, NodeType, Worker};

@@ -1,0 +1,232 @@
+//! Worker-node fleet: the paper's Azure testbed (Table 3) encoded as typed
+//! node specs, with the constrained-environment variants of Appendix A.3.
+
+use crate::config::{ClusterConfig, EnvConstraint, Tier};
+use crate::util::rng::Rng;
+
+/// Static node specification — columns of Table 3 plus a SPEC-style power
+/// model (idle/peak watts; see `cluster::energy`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeType {
+    pub name: &'static str,
+    pub cores: u32,
+    /// Aggregate compute throughput, Million Instructions Per Second.
+    pub mips: f64,
+    pub ram_mb: f64,
+    pub ram_bw_mbps: f64,
+    /// Base one-way latency to the broker, milliseconds.
+    pub ping_ms: f64,
+    pub net_bw_mbps: f64,
+    pub disk_bw_mbps: f64,
+    pub cost_per_hr: f64,
+    pub idle_watts: f64,
+    pub peak_watts: f64,
+}
+
+/// Table 3 worker types. Power numbers follow the SPEC ssj-style linear
+/// model (idle ≈ 55–60% of peak for small VMs), scaled by core count.
+pub const NODE_TYPES: [NodeType; 4] = [
+    NodeType {
+        name: "B2ms",
+        cores: 2,
+        mips: 4029.0,
+        ram_mb: 4295.0,
+        ram_bw_mbps: 372.0,
+        ping_ms: 2.0,
+        net_bw_mbps: 1000.0,
+        disk_bw_mbps: 13.4,
+        cost_per_hr: 0.0944,
+        idle_watts: 62.0,
+        peak_watts: 108.0,
+    },
+    NodeType {
+        name: "E2asv4",
+        cores: 2,
+        mips: 4019.0,
+        ram_mb: 4172.0,
+        ram_bw_mbps: 412.0,
+        ping_ms: 2.0,
+        net_bw_mbps: 1000.0,
+        disk_bw_mbps: 10.3,
+        cost_per_hr: 0.148,
+        idle_watts: 60.0,
+        peak_watts: 104.0,
+    },
+    NodeType {
+        name: "B4ms",
+        cores: 4,
+        mips: 8102.0,
+        ram_mb: 7962.0,
+        ram_bw_mbps: 360.0,
+        ping_ms: 3.0,
+        net_bw_mbps: 2500.0,
+        disk_bw_mbps: 10.6,
+        cost_per_hr: 0.189,
+        idle_watts: 78.0,
+        peak_watts: 146.0,
+    },
+    NodeType {
+        name: "E4asv4",
+        cores: 4,
+        mips: 7962.0,
+        ram_mb: 7962.0,
+        ram_bw_mbps: 476.0,
+        ping_ms: 3.0,
+        net_bw_mbps: 2500.0,
+        disk_bw_mbps: 11.64,
+        cost_per_hr: 0.296,
+        idle_watts: 76.0,
+        peak_watts: 142.0,
+    },
+];
+
+/// The broker (L8sv2 in Table 3); only its network spec matters to workers.
+pub const BROKER: NodeType = NodeType {
+    name: "L8sv2",
+    cores: 8,
+    mips: 16182.0,
+    ram_mb: 17012.0,
+    ram_bw_mbps: 945.0,
+    ping_ms: 1.0,
+    net_bw_mbps: 4000.0,
+    disk_bw_mbps: 17.6,
+    cost_per_hr: 0.724,
+    idle_watts: 110.0,
+    peak_watts: 210.0,
+};
+
+/// One concrete worker instance.
+#[derive(Clone, Debug)]
+pub struct Worker {
+    pub id: usize,
+    pub spec: NodeType,
+    /// Mobile workers get time-varying ping/bandwidth (see `mobility`).
+    pub mobile: bool,
+}
+
+/// The whole edge layer.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub workers: Vec<Worker>,
+    pub tier: Tier,
+    pub constraint: EnvConstraint,
+}
+
+impl Cluster {
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    pub fn total_mips(&self) -> f64 {
+        self.workers.iter().map(|w| w.spec.mips).sum()
+    }
+
+    pub fn total_ram_mb(&self) -> f64 {
+        self.workers.iter().map(|w| w.spec.ram_mb).sum()
+    }
+}
+
+fn apply_constraint(mut spec: NodeType, c: EnvConstraint) -> NodeType {
+    match c {
+        EnvConstraint::None => {}
+        EnvConstraint::Compute => {
+            // grub-config core limiting in the paper: half the cores.
+            spec.cores = (spec.cores / 2).max(1);
+            spec.mips /= 2.0;
+        }
+        EnvConstraint::Network => {
+            spec.net_bw_mbps /= 2.0;
+        }
+        EnvConstraint::Memory => {
+            spec.ram_mb /= 2.0;
+        }
+    }
+    spec
+}
+
+/// Build the worker fleet from a [`ClusterConfig`]: Table 3 quantities,
+/// constraint variant, and a seeded mobile/static assignment.
+pub fn build_fleet(cfg: &ClusterConfig) -> Cluster {
+    let mut rng = Rng::new(cfg.seed);
+    let mut workers = Vec::new();
+    for (ti, &count) in cfg.counts.iter().enumerate() {
+        for _ in 0..count {
+            let spec = apply_constraint(NODE_TYPES[ti].clone(), cfg.constraint);
+            workers.push(Worker {
+                id: workers.len(),
+                spec,
+                mobile: rng.chance(cfg.mobile_fraction),
+            });
+        }
+    }
+    Cluster { workers, tier: cfg.tier, constraint: cfg.constraint }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    #[test]
+    fn default_fleet_is_fifty() {
+        let c = build_fleet(&ClusterConfig::default());
+        assert_eq!(c.len(), 50);
+        assert_eq!(c.workers.iter().filter(|w| w.spec.name == "B2ms").count(), 20);
+        assert_eq!(c.workers.iter().filter(|w| w.spec.name == "E4asv4").count(), 10);
+        // ids are dense
+        for (i, w) in c.workers.iter().enumerate() {
+            assert_eq!(w.id, i);
+        }
+    }
+
+    #[test]
+    fn table3_values() {
+        assert_eq!(NODE_TYPES[0].mips, 4029.0);
+        assert_eq!(NODE_TYPES[2].ram_mb, 7962.0);
+        assert_eq!(NODE_TYPES[3].cost_per_hr, 0.296);
+        assert_eq!(BROKER.ram_mb, 17012.0);
+    }
+
+    #[test]
+    fn compute_constraint_halves_mips() {
+        let cfg = ClusterConfig { constraint: EnvConstraint::Compute, ..Default::default() };
+        let c = build_fleet(&cfg);
+        let b2 = c.workers.iter().find(|w| w.spec.name == "B2ms").unwrap();
+        assert_eq!(b2.spec.mips, 4029.0 / 2.0);
+        assert_eq!(b2.spec.cores, 1);
+        // other resources untouched
+        assert_eq!(b2.spec.ram_mb, 4295.0);
+    }
+
+    #[test]
+    fn memory_constraint_halves_ram() {
+        let cfg = ClusterConfig { constraint: EnvConstraint::Memory, ..Default::default() };
+        let c = build_fleet(&cfg);
+        assert_eq!(c.workers[0].spec.ram_mb, 4295.0 / 2.0);
+        assert_eq!(c.workers[0].spec.mips, 4029.0);
+    }
+
+    #[test]
+    fn network_constraint_halves_bw() {
+        let cfg = ClusterConfig { constraint: EnvConstraint::Network, ..Default::default() };
+        let c = build_fleet(&cfg);
+        assert_eq!(c.workers[0].spec.net_bw_mbps, 500.0);
+    }
+
+    #[test]
+    fn mobility_fraction_respected_statistically() {
+        let cfg = ClusterConfig { mobile_fraction: 0.5, seed: 3, ..Default::default() };
+        let c = build_fleet(&cfg);
+        let mobile = c.workers.iter().filter(|w| w.mobile).count();
+        assert!((10..=40).contains(&mobile), "mobile={mobile}");
+        // deterministic across builds with same seed
+        let c2 = build_fleet(&cfg);
+        let flags: Vec<bool> = c.workers.iter().map(|w| w.mobile).collect();
+        let flags2: Vec<bool> = c2.workers.iter().map(|w| w.mobile).collect();
+        assert_eq!(flags, flags2);
+    }
+}

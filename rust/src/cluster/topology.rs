@@ -1,0 +1,161 @@
+//! Network topology: single-hop LAN among edge workers + broker (paper
+//! default), or WAN to a remote cloud datacenter (Fig. 18's "Cloud" setup).
+//!
+//! Transfer times combine base ping (mobility-modulated), payload size and
+//! the bottleneck bandwidth of the two endpoints.
+
+use super::mobility::ChannelState;
+use super::node::{Cluster, BROKER};
+use crate::config::Tier;
+
+/// WAN penalty for the cloud setup (UK-South broker → East-US workers):
+/// multi-hop RTT and shared-backbone bandwidth cap.
+const WAN_EXTRA_PING_MS: f64 = 75.0;
+const WAN_BW_CAP_MBPS: f64 = 120.0;
+
+/// Effective one-way latency (seconds) between the broker and worker `w`.
+pub fn broker_latency_s(cluster: &Cluster, w: usize, ch: &ChannelState) -> f64 {
+    let base = cluster.workers[w].spec.ping_ms * ch.ping_mult + BROKER.ping_ms;
+    let extra = match cluster.tier {
+        Tier::Edge => 0.0,
+        Tier::Cloud => WAN_EXTRA_PING_MS,
+    };
+    (base + extra) / 1000.0
+}
+
+/// Effective bandwidth (MB/s) between the broker and worker `w`.
+/// Note Table 3 lists NIC speeds in Mbps; we convert to MB/s here.
+pub fn broker_bw_mbytes(cluster: &Cluster, w: usize, ch: &ChannelState) -> f64 {
+    let node_mbps = cluster.workers[w].spec.net_bw_mbps * ch.bw_factor;
+    let mbps = match cluster.tier {
+        Tier::Edge => node_mbps.min(BROKER.net_bw_mbps),
+        Tier::Cloud => node_mbps.min(WAN_BW_CAP_MBPS),
+    };
+    mbps / 8.0
+}
+
+/// Transfer time (seconds) of `payload_mb` from the broker to worker `w`
+/// (or back — symmetric).
+pub fn broker_transfer_s(cluster: &Cluster, w: usize, ch: &ChannelState, payload_mb: f64) -> f64 {
+    broker_latency_s(cluster, w, ch) + payload_mb / broker_bw_mbytes(cluster, w, ch)
+}
+
+/// Transfer time (seconds) of `payload_mb` between two workers (layer-split
+/// intermediate-result forwarding; single hop inside the LAN, two hops —
+/// via the backbone — in the cloud tier).
+pub fn worker_transfer_s(
+    cluster: &Cluster,
+    src: usize,
+    dst: usize,
+    ch_src: &ChannelState,
+    ch_dst: &ChannelState,
+    payload_mb: f64,
+) -> f64 {
+    if src == dst {
+        // same node: memcpy at RAM bandwidth
+        return payload_mb / (cluster.workers[src].spec.ram_bw_mbps).max(1.0);
+    }
+    let lat = (cluster.workers[src].spec.ping_ms * ch_src.ping_mult
+        + cluster.workers[dst].spec.ping_ms * ch_dst.ping_mult)
+        / 1000.0
+        + match cluster.tier {
+            Tier::Edge => 0.0,
+            Tier::Cloud => WAN_EXTRA_PING_MS / 1000.0,
+        };
+    let bw_mbps = (cluster.workers[src].spec.net_bw_mbps * ch_src.bw_factor)
+        .min(cluster.workers[dst].spec.net_bw_mbps * ch_dst.bw_factor);
+    let bw_mbps = match cluster.tier {
+        Tier::Edge => bw_mbps,
+        Tier::Cloud => bw_mbps.min(WAN_BW_CAP_MBPS),
+    };
+    lat + payload_mb / (bw_mbps / 8.0)
+}
+
+/// Container-image distribution time at experiment start (paper §6.6: one
+/// 30 s one-time broadcast for SplitPlace): total image MB over the
+/// broker's NIC, fanned out to every worker.
+pub fn image_broadcast_s(cluster: &Cluster, total_image_mb: f64) -> f64 {
+    let broker_bw = BROKER.net_bw_mbps / 8.0;
+    let slowest = cluster
+        .workers
+        .iter()
+        .map(|w| w.spec.net_bw_mbps / 8.0)
+        .fold(f64::INFINITY, f64::min);
+    let extra = match cluster.tier {
+        Tier::Edge => 0.0,
+        Tier::Cloud => total_image_mb / (WAN_BW_CAP_MBPS / 8.0),
+    };
+    total_image_mb / broker_bw.min(slowest) + extra
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::build_fleet;
+    use crate::config::{ClusterConfig, Tier};
+
+    fn edge() -> Cluster {
+        build_fleet(&ClusterConfig::default())
+    }
+
+    fn cloud() -> Cluster {
+        build_fleet(&ClusterConfig { tier: Tier::Cloud, ..Default::default() })
+    }
+
+    #[test]
+    fn cloud_latency_dominates_edge() {
+        let e = edge();
+        let c = cloud();
+        let ch = ChannelState::STATIC;
+        assert!(broker_latency_s(&c, 0, &ch) > 20.0 * broker_latency_s(&e, 0, &ch));
+    }
+
+    #[test]
+    fn cloud_bandwidth_capped() {
+        let c = cloud();
+        let ch = ChannelState::STATIC;
+        assert!(broker_bw_mbytes(&c, 0, &ch) <= WAN_BW_CAP_MBPS / 8.0 + 1e-9);
+    }
+
+    #[test]
+    fn mobility_slows_transfers() {
+        let e = edge();
+        let good = ChannelState::STATIC;
+        let bad = ChannelState { ping_mult: 4.0, bw_factor: 0.3 };
+        let t_good = broker_transfer_s(&e, 0, &good, 100.0);
+        let t_bad = broker_transfer_s(&e, 0, &bad, 100.0);
+        assert!(t_bad > 2.0 * t_good);
+    }
+
+    #[test]
+    fn same_node_transfer_is_memcpy() {
+        let e = edge();
+        let ch = ChannelState::STATIC;
+        let t_same = worker_transfer_s(&e, 3, 3, &ch, &ch, 100.0);
+        let t_diff = worker_transfer_s(&e, 3, 4, &ch, &ch, 100.0);
+        assert!(t_same < t_diff);
+    }
+
+    #[test]
+    fn transfer_scales_with_payload() {
+        let e = edge();
+        let ch = ChannelState::STATIC;
+        let t1 = worker_transfer_s(&e, 0, 1, &ch, &ch, 10.0);
+        let t2 = worker_transfer_s(&e, 0, 1, &ch, &ch, 20.0);
+        assert!(t2 > t1);
+        // latency-dominated floor: tiny payloads still cost the ping
+        let t0 = worker_transfer_s(&e, 0, 1, &ch, &ch, 0.0);
+        assert!(t0 > 0.0);
+    }
+
+    #[test]
+    fn broadcast_time_reasonable() {
+        // ~1.2 GB of images over a 125 MB/s LAN ≈ 10 s-scale, the paper
+        // reports 30 s including orchestration overheads.
+        let e = edge();
+        let t = image_broadcast_s(&e, 1200.0);
+        assert!(t > 1.0 && t < 120.0, "t={t}");
+        let c = cloud();
+        assert!(image_broadcast_s(&c, 1200.0) > t);
+    }
+}

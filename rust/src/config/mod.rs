@@ -1,0 +1,538 @@
+//! Typed configuration for experiments, with the paper's defaults baked in.
+//!
+//! Every knob the evaluation sweeps (λ, α/β, Γ, constrained environments,
+//! workload mix, cluster size) lives here so benches and examples build
+//! scenario configs declaratively. JSON round-trip uses [`crate::util::json`].
+
+use crate::util::json::{self, Value};
+
+/// Which of the paper's policies drives the broker (Table 4 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// MAB split decider + DASO placement (the full SplitPlace model, M+D).
+    MabDaso,
+    /// MAB split decider + decision-blind GOBI placement (M+G).
+    MabGobi,
+    /// Random split decision + DASO placement (R+D).
+    RandomDaso,
+    /// Always layer splits + GOBI (L+G).
+    LayerGobi,
+    /// Always semantic splits + GOBI (S+G).
+    SemanticGobi,
+    /// Gillis baseline: RL over layer-partition/compression, no semantic arm.
+    Gillis,
+    /// BottleNet++-style model compression baseline.
+    ModelCompression,
+}
+
+impl PolicyKind {
+    pub fn all() -> [PolicyKind; 7] {
+        [
+            PolicyKind::ModelCompression,
+            PolicyKind::Gillis,
+            PolicyKind::SemanticGobi,
+            PolicyKind::LayerGobi,
+            PolicyKind::RandomDaso,
+            PolicyKind::MabGobi,
+            PolicyKind::MabDaso,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::MabDaso => "MAB+DASO",
+            PolicyKind::MabGobi => "MAB+GOBI",
+            PolicyKind::RandomDaso => "Random+DASO",
+            PolicyKind::LayerGobi => "Layer+GOBI",
+            PolicyKind::SemanticGobi => "Semantic+GOBI",
+            PolicyKind::Gillis => "Gillis",
+            PolicyKind::ModelCompression => "ModelCompression",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "mab+daso" | "m+d" | "splitplace" | "mabdaso" => PolicyKind::MabDaso,
+            "mab+gobi" | "m+g" | "mabgobi" => PolicyKind::MabGobi,
+            "random+daso" | "r+d" | "randomdaso" => PolicyKind::RandomDaso,
+            "layer+gobi" | "l+g" | "layergobi" => PolicyKind::LayerGobi,
+            "semantic+gobi" | "s+g" | "semanticgobi" => PolicyKind::SemanticGobi,
+            "gillis" => PolicyKind::Gillis,
+            "mc" | "modelcompression" | "model-compression" => PolicyKind::ModelCompression,
+            _ => return None,
+        })
+    }
+}
+
+/// Resource-constrained environment variants (paper Appendix A.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnvConstraint {
+    None,
+    /// Core count / MIPS halved.
+    Compute,
+    /// Network bandwidth halved.
+    Network,
+    /// RAM halved.
+    Memory,
+}
+
+impl EnvConstraint {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EnvConstraint::None => "normal",
+            EnvConstraint::Compute => "compute-constrained",
+            EnvConstraint::Network => "network-constrained",
+            EnvConstraint::Memory => "memory-constrained",
+        }
+    }
+}
+
+/// Cluster topology: LAN edge (paper default) or WAN cloud (Fig. 18).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Edge,
+    Cloud,
+}
+
+/// Cluster-level settings.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Worker counts per Azure type, in Table 3 order
+    /// [B2ms, E2asv4, B4ms, E4asv4]. Default sums to the paper's 50.
+    pub counts: [usize; 4],
+    pub constraint: EnvConstraint,
+    pub tier: Tier,
+    /// Fraction of workers that are mobile (mobility modulates ping/bw).
+    pub mobile_fraction: f64,
+    /// Worker churn (paper §7 future work: "non-stationary number of
+    /// active edge nodes"): per-interval probability that a mobile worker
+    /// toggles offline/online. Containers on a failing worker are
+    /// checkpointed and requeued.
+    pub churn_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            counts: [20, 10, 10, 10],
+            constraint: EnvConstraint::None,
+            tier: Tier::Edge,
+            mobile_fraction: 0.5,
+            churn_rate: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn small() -> Self {
+        // 10-worker variant matching the h10_m16 surrogate artifact.
+        ClusterConfig { counts: [4, 2, 2, 2], ..Default::default() }
+    }
+
+    pub fn total_workers(&self) -> usize {
+        self.counts.iter().sum()
+    }
+}
+
+/// Workload generation settings (paper §6.2).
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Poisson arrival rate per interval (paper default 6).
+    pub lambda: f64,
+    /// Batch size range, inclusive (paper: 16k–64k samples).
+    pub batch_min: u64,
+    pub batch_max: u64,
+    /// Per-app sampling weights over [mnist, fashionmnist, cifar100];
+    /// uniform by default. Single-workload settings (Fig. 16) zero two.
+    pub app_weights: [f64; 3],
+    /// SLA deadline = U(sla_lo, sla_hi) × nominal layer response time.
+    pub sla_lo: f64,
+    pub sla_hi: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            lambda: 6.0,
+            batch_min: 16_000,
+            batch_max: 64_000,
+            app_weights: [1.0, 1.0, 1.0],
+            sla_lo: 0.6,
+            sla_hi: 2.4,
+            seed: 7,
+        }
+    }
+}
+
+/// MAB split-decider hyper-parameters (paper §4.1, §6.1).
+#[derive(Clone, Debug)]
+pub struct MabConfig {
+    /// EMA multiplier for layer response-time estimates (eq. 2), φ = 0.9.
+    pub phi: f64,
+    /// UCB exploration factor (eq. 9), c = 0.5.
+    pub ucb_c: f64,
+    /// Q-estimate decay (eq. 5).
+    pub gamma: f64,
+    /// Convergence-rate constant k in decay/increment (eqs. 7–8), k = 0.1.
+    pub k: f64,
+    /// Initial reward threshold ρ (small positive constant < 1).
+    pub rho0: f64,
+    /// Ablation (DESIGN.md §7): collapse the two SLA contexts into one
+    /// bandit — isolates the value of the context split.
+    pub single_context: bool,
+    pub seed: u64,
+}
+
+impl Default for MabConfig {
+    fn default() -> Self {
+        MabConfig { phi: 0.9, ucb_c: 0.5, gamma: 0.3, k: 0.1, rho0: 0.1, single_context: false, seed: 11 }
+    }
+}
+
+/// DASO / GOBI placement hyper-parameters (paper §4.2).
+#[derive(Clone, Debug)]
+pub struct PlacementConfig {
+    /// Energy weight α in eq. 10 (α + β = 1); paper default 0.5.
+    pub alpha: f64,
+    /// Gradient-ascent learning rate η on the placement matrix (eq. 12).
+    pub eta: f64,
+    /// Max gradient iterations per interval.
+    pub max_iters: usize,
+    /// L2 convergence threshold between consecutive placement matrices.
+    pub converge_eps: f64,
+    /// Online fine-tune: surrogate train steps per interval (0 disables).
+    pub finetune_steps: usize,
+    pub seed: u64,
+}
+
+impl PlacementConfig {
+    pub fn beta(&self) -> f64 {
+        1.0 - self.alpha
+    }
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        PlacementConfig {
+            alpha: 0.5,
+            eta: 0.05,
+            max_iters: 12,
+            converge_eps: 1e-3,
+            finetune_steps: 1,
+            seed: 13,
+        }
+    }
+}
+
+/// Simulation timing.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Γ: number of scheduling intervals per run (paper: 100).
+    pub intervals: usize,
+    /// Interval length in seconds (paper: 300).
+    pub interval_seconds: f64,
+    /// Sub-steps per interval for the progress integrator.
+    pub sub_steps: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { intervals: 100, interval_seconds: 300.0, sub_steps: 10 }
+    }
+}
+
+/// How task inference accuracy `p_i` is obtained.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AccuracyMode {
+    /// Real PJRT execution of the split-fragment HLOs on a held-out
+    /// subsample (the end-to-end path).
+    Measured,
+    /// Manifest lookup + small seeded jitter (fast path for large sweeps).
+    Manifest,
+}
+
+/// Top-level experiment config.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub policy: PolicyKind,
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadConfig,
+    pub mab: MabConfig,
+    pub placement: PlacementConfig,
+    pub sim: SimConfig,
+    pub accuracy: AccuracyMode,
+    /// Artifacts directory (HLO modules + manifest).
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            policy: PolicyKind::MabDaso,
+            cluster: ClusterConfig::default(),
+            workload: WorkloadConfig::default(),
+            mab: MabConfig::default(),
+            placement: PlacementConfig::default(),
+            sim: SimConfig::default(),
+            accuracy: AccuracyMode::Manifest,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Small/fast config for tests and the quickstart example.
+    pub fn small() -> Self {
+        ExperimentConfig {
+            cluster: ClusterConfig::small(),
+            sim: SimConfig { intervals: 20, ..Default::default() },
+            workload: WorkloadConfig { lambda: 2.0, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("policy", Value::Str(self.policy.name().into())),
+            (
+                "cluster",
+                Value::obj(vec![
+                    ("counts", Value::num_arr(&self.cluster.counts.map(|c| c as f64))),
+                    ("constraint", Value::Str(self.cluster.constraint.name().into())),
+                    (
+                        "tier",
+                        Value::Str(
+                            match self.cluster.tier {
+                                Tier::Edge => "edge",
+                                Tier::Cloud => "cloud",
+                            }
+                            .into(),
+                        ),
+                    ),
+                    ("mobile_fraction", Value::Num(self.cluster.mobile_fraction)),
+                    ("seed", Value::Num(self.cluster.seed as f64)),
+                ]),
+            ),
+            (
+                "workload",
+                Value::obj(vec![
+                    ("lambda", Value::Num(self.workload.lambda)),
+                    ("batch_min", Value::Num(self.workload.batch_min as f64)),
+                    ("batch_max", Value::Num(self.workload.batch_max as f64)),
+                    ("app_weights", Value::num_arr(&self.workload.app_weights)),
+                    ("sla_lo", Value::Num(self.workload.sla_lo)),
+                    ("sla_hi", Value::Num(self.workload.sla_hi)),
+                    ("seed", Value::Num(self.workload.seed as f64)),
+                ]),
+            ),
+            (
+                "mab",
+                Value::obj(vec![
+                    ("phi", Value::Num(self.mab.phi)),
+                    ("ucb_c", Value::Num(self.mab.ucb_c)),
+                    ("gamma", Value::Num(self.mab.gamma)),
+                    ("k", Value::Num(self.mab.k)),
+                    ("rho0", Value::Num(self.mab.rho0)),
+                ]),
+            ),
+            (
+                "placement",
+                Value::obj(vec![
+                    ("alpha", Value::Num(self.placement.alpha)),
+                    ("eta", Value::Num(self.placement.eta)),
+                    ("max_iters", Value::Num(self.placement.max_iters as f64)),
+                    ("finetune_steps", Value::Num(self.placement.finetune_steps as f64)),
+                ]),
+            ),
+            (
+                "sim",
+                Value::obj(vec![
+                    ("intervals", Value::Num(self.sim.intervals as f64)),
+                    ("interval_seconds", Value::Num(self.sim.interval_seconds)),
+                    ("sub_steps", Value::Num(self.sim.sub_steps as f64)),
+                ]),
+            ),
+            (
+                "accuracy",
+                Value::Str(
+                    match self.accuracy {
+                        AccuracyMode::Measured => "measured",
+                        AccuracyMode::Manifest => "manifest",
+                    }
+                    .into(),
+                ),
+            ),
+            ("artifacts_dir", Value::Str(self.artifacts_dir.clone())),
+        ])
+    }
+
+    /// Parse from JSON; unknown keys ignored, missing keys take defaults.
+    pub fn from_json(v: &Value) -> Result<Self, json::JsonError> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(p) = v.get("policy") {
+            if let Some(k) = PolicyKind::parse(p.as_str()?) {
+                cfg.policy = k;
+            }
+        }
+        if let Some(c) = v.get("cluster") {
+            if let Some(counts) = c.get("counts") {
+                let a = counts.as_arr()?;
+                for (i, x) in a.iter().take(4).enumerate() {
+                    cfg.cluster.counts[i] = x.as_usize()?;
+                }
+            }
+            if let Some(x) = c.get("constraint") {
+                cfg.cluster.constraint = match x.as_str()? {
+                    "compute-constrained" | "compute" => EnvConstraint::Compute,
+                    "network-constrained" | "network" => EnvConstraint::Network,
+                    "memory-constrained" | "memory" => EnvConstraint::Memory,
+                    _ => EnvConstraint::None,
+                };
+            }
+            if let Some(x) = c.get("tier") {
+                cfg.cluster.tier = if x.as_str()? == "cloud" { Tier::Cloud } else { Tier::Edge };
+            }
+            if let Some(x) = c.get("mobile_fraction") {
+                cfg.cluster.mobile_fraction = x.as_f64()?;
+            }
+            if let Some(x) = c.get("seed") {
+                cfg.cluster.seed = x.as_f64()? as u64;
+            }
+        }
+        if let Some(w) = v.get("workload") {
+            if let Some(x) = w.get("lambda") {
+                cfg.workload.lambda = x.as_f64()?;
+            }
+            if let Some(x) = w.get("batch_min") {
+                cfg.workload.batch_min = x.as_f64()? as u64;
+            }
+            if let Some(x) = w.get("batch_max") {
+                cfg.workload.batch_max = x.as_f64()? as u64;
+            }
+            if let Some(x) = w.get("app_weights") {
+                let a = x.as_arr()?;
+                for (i, x) in a.iter().take(3).enumerate() {
+                    cfg.workload.app_weights[i] = x.as_f64()?;
+                }
+            }
+            if let Some(x) = w.get("sla_lo") {
+                cfg.workload.sla_lo = x.as_f64()?;
+            }
+            if let Some(x) = w.get("sla_hi") {
+                cfg.workload.sla_hi = x.as_f64()?;
+            }
+            if let Some(x) = w.get("seed") {
+                cfg.workload.seed = x.as_f64()? as u64;
+            }
+        }
+        if let Some(m) = v.get("mab") {
+            if let Some(x) = m.get("phi") {
+                cfg.mab.phi = x.as_f64()?;
+            }
+            if let Some(x) = m.get("ucb_c") {
+                cfg.mab.ucb_c = x.as_f64()?;
+            }
+            if let Some(x) = m.get("gamma") {
+                cfg.mab.gamma = x.as_f64()?;
+            }
+            if let Some(x) = m.get("k") {
+                cfg.mab.k = x.as_f64()?;
+            }
+            if let Some(x) = m.get("rho0") {
+                cfg.mab.rho0 = x.as_f64()?;
+            }
+        }
+        if let Some(p) = v.get("placement") {
+            if let Some(x) = p.get("alpha") {
+                cfg.placement.alpha = x.as_f64()?;
+            }
+            if let Some(x) = p.get("eta") {
+                cfg.placement.eta = x.as_f64()?;
+            }
+            if let Some(x) = p.get("max_iters") {
+                cfg.placement.max_iters = x.as_usize()?;
+            }
+            if let Some(x) = p.get("finetune_steps") {
+                cfg.placement.finetune_steps = x.as_usize()?;
+            }
+        }
+        if let Some(s) = v.get("sim") {
+            if let Some(x) = s.get("intervals") {
+                cfg.sim.intervals = x.as_usize()?;
+            }
+            if let Some(x) = s.get("interval_seconds") {
+                cfg.sim.interval_seconds = x.as_f64()?;
+            }
+            if let Some(x) = s.get("sub_steps") {
+                cfg.sim.sub_steps = x.as_usize()?;
+            }
+        }
+        if let Some(x) = v.get("accuracy") {
+            cfg.accuracy = if x.as_str()? == "measured" {
+                AccuracyMode::Measured
+            } else {
+                AccuracyMode::Manifest
+            };
+        }
+        if let Some(x) = v.get("artifacts_dir") {
+            cfg.artifacts_dir = x.as_str()?.to_string();
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.cluster.total_workers(), 50);
+        assert_eq!(c.workload.lambda, 6.0);
+        assert_eq!(c.mab.phi, 0.9);
+        assert_eq!(c.mab.ucb_c, 0.5);
+        assert_eq!(c.mab.k, 0.1);
+        assert_eq!(c.placement.alpha, 0.5);
+        assert!((c.placement.alpha + c.placement.beta() - 1.0).abs() < 1e-12);
+        assert_eq!(c.sim.intervals, 100);
+        assert_eq!(c.sim.interval_seconds, 300.0);
+        assert_eq!(c.workload.batch_min, 16_000);
+        assert_eq!(c.workload.batch_max, 64_000);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ExperimentConfig::default();
+        c.policy = PolicyKind::Gillis;
+        c.workload.lambda = 30.0;
+        c.cluster.constraint = EnvConstraint::Memory;
+        c.placement.alpha = 0.8;
+        let j = c.to_json();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.policy, PolicyKind::Gillis);
+        assert_eq!(c2.workload.lambda, 30.0);
+        assert_eq!(c2.cluster.constraint, EnvConstraint::Memory);
+        assert!((c2.placement.alpha - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_parse_aliases() {
+        assert_eq!(PolicyKind::parse("splitplace"), Some(PolicyKind::MabDaso));
+        assert_eq!(PolicyKind::parse("M+G"), Some(PolicyKind::MabGobi));
+        assert_eq!(PolicyKind::parse("mc"), Some(PolicyKind::ModelCompression));
+        assert_eq!(PolicyKind::parse("nope"), None);
+        for p in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(p.name()), Some(p));
+        }
+    }
+
+    #[test]
+    fn small_config_matches_small_surrogate() {
+        let c = ExperimentConfig::small();
+        assert_eq!(c.cluster.total_workers(), 10);
+    }
+}

@@ -1,0 +1,371 @@
+//! The broker loop — paper Algorithm 1, generalized over all evaluated
+//! policies.
+//!
+//! Per interval: admit Poisson arrivals, take split decisions (MAB / fixed
+//! / baseline RL), place containers (DASO / GOBI / best-fit), simulate the
+//! interval, update the MAB with the leaving tasks E_t, compute
+//! `O^P = O^MAB − α·AEC − β·ART` (eq. 10), and fine-tune the surrogate
+//! online (line 14).
+
+use std::time::Instant;
+
+use crate::baselines::{GillisPolicy, McPolicy};
+use crate::cluster::build_fleet;
+use crate::config::{AccuracyMode, ExperimentConfig, PolicyKind};
+use crate::mab::{MabPolicy, Mode};
+use crate::metrics::Metrics;
+use crate::placement::{
+    BestFitPlacer, GradientPlacer, PlacementInput, Placer, SlotInfo,
+};
+use crate::runtime::{Runtime, Surrogate};
+use crate::sim::{engine::RAM_OVERCOMMIT, Engine, WorkerSnapshot};
+use crate::splits::SplitDecision;
+use crate::util::rng::Rng;
+use crate::workload::generator::Generator;
+use crate::workload::trace::{TraceBuffer, TraceSample};
+
+use super::oracle::AccuracyOracle;
+
+/// Cap used to normalize ART into [0,1] for eq. 10.
+const ART_NORM: f64 = 12.0;
+
+enum PlacerImpl<'rt> {
+    Gradient(GradientPlacer<'rt>),
+    Heuristic(BestFitPlacer),
+}
+
+pub struct Broker<'rt> {
+    pub cfg: ExperimentConfig,
+    pub engine: Engine,
+    generator: Generator,
+    pub mab: Option<MabPolicy>,
+    gillis: Option<GillisPolicy>,
+    mc: Option<McPolicy>,
+    placer: PlacerImpl<'rt>,
+    pub metrics: Metrics,
+    oracle: AccuracyOracle<'rt>,
+    trace: TraceBuffer,
+    rng: Rng,
+    last_snapshots: Vec<WorkerSnapshot>,
+}
+
+impl<'rt> Broker<'rt> {
+    /// Build a broker. `runtime` is required for the surrogate-based
+    /// policies (M+D, M+G, R+D, L+G, S+G); Gillis/MC run without it.
+    pub fn new(
+        cfg: ExperimentConfig,
+        runtime: Option<&'rt Runtime>,
+        mab_mode: Mode,
+    ) -> anyhow::Result<Self> {
+        let cluster = build_fleet(&cfg.cluster);
+        let n_workers = cluster.len();
+        let cost_per_hour: f64 = cluster.workers.iter().map(|w| w.spec.cost_per_hr).sum();
+        let mut engine = Engine::new(cluster, cfg.sim.clone(), cfg.cluster.seed ^ 0xE);
+        engine.set_churn(cfg.cluster.churn_rate);
+        let generator = Generator::new(cfg.workload.clone());
+
+        let uses_gradient = matches!(
+            cfg.policy,
+            PolicyKind::MabDaso
+                | PolicyKind::MabGobi
+                | PolicyKind::RandomDaso
+                | PolicyKind::LayerGobi
+                | PolicyKind::SemanticGobi
+        );
+        let placer = if uses_gradient {
+            let rt = runtime.ok_or_else(|| {
+                anyhow::anyhow!("policy {:?} needs the PJRT runtime (artifacts)", cfg.policy)
+            })?;
+            let surrogate = Surrogate::for_workers(rt, n_workers)?;
+            let decision_aware =
+                matches!(cfg.policy, PolicyKind::MabDaso | PolicyKind::RandomDaso);
+            PlacerImpl::Gradient(GradientPlacer::new(
+                surrogate,
+                cfg.placement.clone(),
+                decision_aware,
+            ))
+        } else {
+            PlacerImpl::Heuristic(BestFitPlacer)
+        };
+
+        let mab = matches!(cfg.policy, PolicyKind::MabDaso | PolicyKind::MabGobi)
+            .then(|| MabPolicy::new(cfg.mab.clone(), mab_mode));
+        let gillis = matches!(cfg.policy, PolicyKind::Gillis)
+            .then(|| GillisPolicy::new(cfg.mab.seed ^ 0x61));
+        let mc = matches!(cfg.policy, PolicyKind::ModelCompression).then(McPolicy::new);
+
+        let oracle = match (&cfg.accuracy, runtime) {
+            (AccuracyMode::Measured, Some(rt)) => AccuracyOracle::measured(rt, 77)?,
+            (_, Some(rt)) => AccuracyOracle::manifest(rt, 77),
+            (_, None) => AccuracyOracle::synthetic(77),
+        };
+
+        let metrics = Metrics::new(n_workers, cost_per_hour, cfg.sim.interval_seconds);
+        let seed = cfg.workload.seed ^ 0xB0B;
+        Ok(Broker {
+            cfg,
+            engine,
+            generator,
+            mab,
+            gillis,
+            mc,
+            placer,
+            metrics,
+            oracle,
+            trace: TraceBuffer::new(512),
+            rng: Rng::new(seed),
+            last_snapshots: vec![WorkerSnapshot::default(); n_workers],
+        })
+    }
+
+    fn decide(&mut self, task: &crate::workload::Task) -> SplitDecision {
+        match self.cfg.policy {
+            PolicyKind::MabDaso | PolicyKind::MabGobi => {
+                self.mab.as_mut().unwrap().decide(task)
+            }
+            PolicyKind::RandomDaso => *self.rng.choice(&SplitDecision::ARMS),
+            PolicyKind::LayerGobi => SplitDecision::Layer,
+            PolicyKind::SemanticGobi => SplitDecision::Semantic,
+            PolicyKind::Gillis => self.gillis.as_mut().unwrap().decide(task),
+            PolicyKind::ModelCompression => self.mc.as_mut().unwrap().decide(task),
+        }
+    }
+
+    fn placement_input<'s>(
+        engine: &Engine,
+        snapshots: &'s [WorkerSnapshot],
+    ) -> PlacementInput<'s> {
+        let slots: Vec<SlotInfo> = engine
+            .placeable()
+            .into_iter()
+            .map(|cid| {
+                let c = &engine.containers[cid];
+                SlotInfo {
+                    cid,
+                    prev_worker: c.worker,
+                    decision: c.decision,
+                    mi_remaining: c.mi_total - c.mi_done,
+                    ram_mb: c.ram_mb,
+                    input_mb: c.input_mb,
+                    remaining_frac: c.remaining_fraction(),
+                }
+            })
+            .collect();
+        PlacementInput {
+            snapshots,
+            slots,
+            ram_capacity: engine.cluster.workers.iter().map(|w| w.spec.ram_mb).collect(),
+            resident_ram: engine.resident_ram(),
+            overcommit: RAM_OVERCOMMIT,
+        }
+    }
+
+    /// One scheduling interval (Algorithm 1 body). Returns the interval's
+    /// O^P objective.
+    pub fn step(&mut self) -> f64 {
+        let t0 = Instant::now();
+
+        // 1. new tasks + split decisions
+        let tasks = self.generator.arrivals(self.engine.now_s);
+        let mut decisions = Vec::with_capacity(tasks.len());
+        for task in tasks {
+            let d = self.decide(&task);
+            decisions.push(d);
+            self.engine.admit(task, d);
+        }
+        self.metrics.record_decisions(&decisions);
+
+        // 2. placement
+        let snapshots = std::mem::take(&mut self.last_snapshots);
+        let input = Self::placement_input(&self.engine, &snapshots);
+        let assignment = match &mut self.placer {
+            PlacerImpl::Gradient(g) => g.place(&input),
+            PlacerImpl::Heuristic(h) => h.place(&input),
+        };
+        drop(input);
+        self.last_snapshots = snapshots;
+        self.engine.apply_placement(&assignment);
+        let sched_s = t0.elapsed().as_secs_f64();
+
+        // 3. simulate the interval
+        let mut report = self.engine.step_interval();
+        self.last_snapshots = report.snapshots.clone();
+
+        // 4. accuracies for leaving tasks
+        for t in &mut report.completed {
+            t.accuracy = self.oracle.accuracy(t.app, t.decision);
+        }
+
+        // 5. learning updates
+        let o_mab = match &mut self.mab {
+            Some(mab) => mab.observe_interval(&report.completed),
+            None => {
+                // reward signal still defined for non-MAB policies (eq. 15 term)
+                if report.completed.is_empty() {
+                    0.0
+                } else {
+                    report
+                        .completed
+                        .iter()
+                        .map(crate::mab::Bandit::task_reward)
+                        .sum::<f64>()
+                        / report.completed.len() as f64
+                }
+            }
+        };
+        if let Some(g) = &mut self.gillis {
+            g.observe(&report.completed);
+        }
+
+        // 6. eq. 10 objective + surrogate fine-tune (line 14)
+        let art = crate::util::stats::mean(
+            &report.completed.iter().map(|t| t.response).collect::<Vec<_>>(),
+        );
+        let art_norm = (art / ART_NORM).clamp(0.0, 1.0);
+        let alpha = self.cfg.placement.alpha;
+        let beta = self.cfg.placement.beta();
+        let o_p = o_mab - alpha * report.aec - beta * art_norm;
+
+        if let PlacerImpl::Gradient(g) = &mut self.placer {
+            if !g.last_features.is_empty() {
+                self.trace.push(TraceSample {
+                    features: g.last_features.clone(),
+                    objective: o_p as f32,
+                });
+            }
+            for _ in 0..self.cfg.placement.finetune_steps {
+                if let Some((xb, yb)) = self.trace.minibatch(
+                    g.surrogate.spec.train_batch,
+                    |n| self.rng.below(n as u64) as usize,
+                ) {
+                    let _ = g.surrogate.train_step(&xb, &yb);
+                }
+            }
+        }
+
+        // 7. metrics
+        self.metrics.record_interval(&report, sched_s, o_mab);
+        o_p
+    }
+
+    /// Run the configured number of intervals.
+    pub fn run(&mut self) -> &Metrics {
+        for _ in 0..self.cfg.sim.intervals {
+            self.step();
+        }
+        &self.metrics
+    }
+
+    /// Surrogate pre-training (paper: GOBI/DASO trained on an execution
+    /// trace dataset before deployment): run `intervals` with best-fit
+    /// placement to collect traces, then fit the surrogate, then reset
+    /// metrics. No-op for heuristic policies.
+    pub fn pretrain(&mut self, intervals: usize, steps: usize) -> anyhow::Result<()> {
+        if !matches!(self.placer, PlacerImpl::Gradient(_)) {
+            return Ok(());
+        }
+        // temporarily swap in best-fit
+        for _ in 0..intervals {
+            // admit + simulate a lightweight interval
+            let tasks = self.generator.arrivals(self.engine.now_s);
+            for task in tasks {
+                let d = self.decide(&task);
+                self.engine.admit(task, d);
+            }
+            let snapshots = std::mem::take(&mut self.last_snapshots);
+            let input = Self::placement_input(&self.engine, &snapshots);
+            let assignment = BestFitPlacer.place(&input);
+            drop(input);
+            self.last_snapshots = snapshots;
+            self.engine.apply_placement(&assignment);
+            let mut report = self.engine.step_interval();
+            for t in &mut report.completed {
+                t.accuracy = self.oracle.accuracy(t.app, t.decision);
+            }
+            let o_mab = if report.completed.is_empty() {
+                0.0
+            } else {
+                report
+                    .completed
+                    .iter()
+                    .map(crate::mab::Bandit::task_reward)
+                    .sum::<f64>()
+                    / report.completed.len() as f64
+            };
+            let art = crate::util::stats::mean(
+                &report.completed.iter().map(|t| t.response).collect::<Vec<_>>(),
+            );
+            let o_p = o_mab
+                - self.cfg.placement.alpha * report.aec
+                - self.cfg.placement.beta() * (art / ART_NORM).clamp(0.0, 1.0);
+            // featurize the realized state for the trace
+            if let PlacerImpl::Gradient(g) = &mut self.placer {
+                let slots: Vec<SlotInfo> = Vec::new();
+                let p = vec![0.0f32; g.layout.placement_dim()];
+                let x = g
+                    .layout
+                    .featurize(&report.snapshots, &slots, &p, g.decision_aware);
+                self.trace.push(TraceSample { features: x, objective: o_p as f32 });
+            }
+            self.last_snapshots = report.snapshots;
+        }
+        if let PlacerImpl::Gradient(g) = &mut self.placer {
+            g.surrogate.pretrain(&self.trace, steps, &mut self.rng)?;
+        }
+        Ok(())
+    }
+
+    /// Telemetry from the gradient placer (perf + Fig. 6-style debugging).
+    pub fn placer_stats(&self) -> Option<(usize, f32)> {
+        match &self.placer {
+            PlacerImpl::Gradient(g) => Some((g.last_iters, g.last_score)),
+            PlacerImpl::Heuristic(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    /// Policies that need no artifacts can run anywhere.
+    #[test]
+    fn mc_policy_runs_without_runtime() {
+        let mut cfg = ExperimentConfig::small();
+        cfg.policy = PolicyKind::ModelCompression;
+        cfg.sim.intervals = 10;
+        let mut b = Broker::new(cfg, None, Mode::Test).unwrap();
+        b.run();
+        let s = b.metrics.summary("MC");
+        assert!(s.tasks > 0, "tasks must complete");
+        assert!(s.accuracy > 0.3 && s.accuracy < 1.0);
+        assert!(s.energy_mwh > 0.0);
+    }
+
+    #[test]
+    fn gillis_policy_runs_without_runtime() {
+        let mut cfg = ExperimentConfig::small();
+        cfg.policy = PolicyKind::Gillis;
+        cfg.sim.intervals = 10;
+        let mut b = Broker::new(cfg, None, Mode::Test).unwrap();
+        b.run();
+        assert!(b.metrics.summary("Gillis").tasks > 0);
+    }
+
+    #[test]
+    fn gradient_policy_requires_runtime() {
+        let cfg = ExperimentConfig::small();
+        assert!(Broker::new(cfg, None, Mode::Test).is_err());
+    }
+
+    #[test]
+    fn decisions_recorded_per_interval() {
+        let mut cfg = ExperimentConfig::small();
+        cfg.policy = PolicyKind::ModelCompression;
+        cfg.sim.intervals = 5;
+        let mut b = Broker::new(cfg, None, Mode::Test).unwrap();
+        b.run();
+        assert_eq!(b.metrics.layer_fraction.len(), 5);
+    }
+}

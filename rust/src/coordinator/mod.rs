@@ -1,0 +1,9 @@
+//! The broker: SplitPlace's Algorithm 1 plus the baseline policy loops.
+
+pub mod broker;
+pub mod oracle;
+pub mod runner;
+
+pub use broker::Broker;
+pub use oracle::AccuracyOracle;
+pub use runner::{run_experiment, ExperimentOutput};

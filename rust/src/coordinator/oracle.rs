@@ -1,0 +1,114 @@
+//! Accuracy oracle: supplies the per-task inference accuracy p_i.
+//!
+//! `Measured` executes the real AOT fragment HLOs through PJRT (end-to-end
+//! path; results cached per (app, decision) since the held-out batch is
+//! fixed). `Manifest` reads the build-time accuracies from the manifest.
+//! `Synthetic` supplies nominal values for artifact-free unit tests.
+//! All modes add small seeded jitter so per-task accuracies vary like the
+//! paper's per-batch measurements.
+
+use std::collections::HashMap;
+
+use crate::runtime::{InferenceEngine, Runtime};
+use crate::splits::{App, SplitDecision, APPS};
+use crate::util::rng::Rng;
+
+pub struct AccuracyOracle<'rt> {
+    base: HashMap<(App, SplitDecision), f64>,
+    engine: Option<InferenceEngine<'rt>>,
+    rng: Rng,
+    jitter: f64,
+}
+
+const DECISIONS: [SplitDecision; 4] = [
+    SplitDecision::Layer,
+    SplitDecision::Semantic,
+    SplitDecision::Compressed,
+    SplitDecision::Full,
+];
+
+impl<'rt> AccuracyOracle<'rt> {
+    /// Build-time accuracies from the manifest (fast sweep mode).
+    pub fn manifest(rt: &'rt Runtime, seed: u64) -> Self {
+        let mut base = HashMap::new();
+        for (&app, a) in &rt.manifest.apps {
+            for d in DECISIONS {
+                base.insert((app, d), a.accuracy(d));
+            }
+        }
+        AccuracyOracle { base, engine: None, rng: Rng::new(seed), jitter: 0.01 }
+    }
+
+    /// Really execute the fragment HLOs once per (app, decision) and use
+    /// the measured accuracy (end-to-end mode).
+    pub fn measured(rt: &'rt Runtime, seed: u64) -> anyhow::Result<Self> {
+        let engine = InferenceEngine::new(rt)?;
+        let mut base = HashMap::new();
+        for app in APPS {
+            for d in DECISIONS {
+                let r = engine.run(app, d)?;
+                base.insert((app, d), r.accuracy);
+            }
+        }
+        Ok(AccuracyOracle { base, engine: Some(engine), rng: Rng::new(seed), jitter: 0.01 })
+    }
+
+    /// Nominal constants for artifact-free tests: the paper's Fig. 2 ladder.
+    pub fn synthetic(seed: u64) -> Self {
+        let mut base = HashMap::new();
+        let table = [
+            (App::Mnist, [0.99, 0.97, 0.93, 0.99]),
+            (App::FashionMnist, [0.91, 0.87, 0.82, 0.91]),
+            (App::Cifar100, [0.65, 0.58, 0.50, 0.65]),
+        ];
+        for (app, accs) in table {
+            for (d, &a) in DECISIONS.iter().zip(accs.iter()) {
+                base.insert((app, *d), a);
+            }
+        }
+        AccuracyOracle { base, engine: None, rng: Rng::new(seed), jitter: 0.015 }
+    }
+
+    /// Accuracy for one finished task.
+    pub fn accuracy(&mut self, app: App, d: SplitDecision) -> f64 {
+        let base = *self.base.get(&(app, d)).unwrap_or(&0.5);
+        (base + self.rng.normal() * self.jitter).clamp(0.0, 1.0)
+    }
+
+    /// Whether real PJRT inference backs this oracle.
+    pub fn is_measured(&self) -> bool {
+        self.engine.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_ladder() {
+        let mut o = AccuracyOracle::synthetic(1);
+        for app in APPS {
+            let l = o.accuracy(app, SplitDecision::Layer);
+            let c = o.accuracy(app, SplitDecision::Compressed);
+            assert!(l > c, "{app:?}");
+        }
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_seeded() {
+        let sample = |seed| {
+            let mut o = AccuracyOracle::synthetic(seed);
+            (0..20)
+                .map(|_| o.accuracy(App::Mnist, SplitDecision::Layer))
+                .collect::<Vec<_>>()
+        };
+        let a = sample(3);
+        let b = sample(3);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| (0.9..=1.0).contains(&x)));
+        let spread = a.iter().cloned().fold(0.0f64, f64::max)
+            - a.iter().cloned().fold(1.0f64, f64::min);
+        assert!(spread > 0.0, "jitter must vary per task");
+    }
+}

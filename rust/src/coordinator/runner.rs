@@ -1,0 +1,116 @@
+//! Experiment runner: builds a broker for a config, optionally pre-trains
+//! the surrogate, runs Γ intervals and returns metrics + summary.
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, PolicyKind};
+use crate::mab::Mode;
+use crate::metrics::{Metrics, Summary};
+use crate::runtime::Runtime;
+
+use super::broker::Broker;
+
+/// Everything a bench needs from one run.
+pub struct ExperimentOutput {
+    pub metrics: Metrics,
+    pub summary: Summary,
+}
+
+/// Surrogate pre-training budget for gradient policies (intervals of
+/// trace collection, Adam steps).
+const PRETRAIN_INTERVALS: usize = 10;
+const PRETRAIN_STEPS: usize = 30;
+
+/// Run one experiment. `runtime` may be None only for Gillis/MC.
+pub fn run_experiment(
+    cfg: ExperimentConfig,
+    runtime: Option<&Runtime>,
+) -> Result<ExperimentOutput> {
+    let policy_name = cfg.policy.name().to_string();
+    let needs_pretrain = matches!(
+        cfg.policy,
+        PolicyKind::MabDaso
+            | PolicyKind::MabGobi
+            | PolicyKind::RandomDaso
+            | PolicyKind::LayerGobi
+            | PolicyKind::SemanticGobi
+    );
+    let mut broker = Broker::new(cfg, runtime, Mode::Test)?;
+    if needs_pretrain {
+        broker.pretrain(PRETRAIN_INTERVALS, PRETRAIN_STEPS)?;
+    }
+    broker.run();
+    let summary = broker.metrics.summary(&policy_name);
+    Ok(ExperimentOutput { metrics: broker.metrics, summary })
+}
+
+/// Locate the artifacts directory: `$SPLITPLACE_ARTIFACTS`, else
+/// `<manifest dir>/artifacts`, else `./artifacts`.
+pub fn artifacts_dir() -> String {
+    if let Ok(d) = std::env::var("SPLITPLACE_ARTIFACTS") {
+        return d;
+    }
+    let repo = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(repo).join("manifest.json").exists() {
+        return repo.to_string();
+    }
+    "artifacts".to_string()
+}
+
+/// Load the runtime if artifacts exist (shared helper for benches/examples).
+pub fn try_runtime() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        return None;
+    }
+    Runtime::load(&dir).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AccuracyMode, ExperimentConfig};
+
+    #[test]
+    fn full_splitplace_run_with_artifacts() {
+        let Some(rt) = try_runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut cfg = ExperimentConfig::small();
+        cfg.policy = PolicyKind::MabDaso;
+        cfg.sim.intervals = 12;
+        cfg.accuracy = AccuracyMode::Manifest;
+        let out = run_experiment(cfg, Some(&rt)).unwrap();
+        assert!(out.summary.tasks > 0);
+        assert!(out.summary.avg_reward > 0.2, "reward {}", out.summary.avg_reward);
+        assert!(out.summary.accuracy > 0.5);
+        assert!(out.summary.response.0 > 0.0);
+    }
+
+    #[test]
+    fn splitplace_beats_always_layer_on_tight_slas() {
+        let Some(rt) = try_runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let run = |policy| {
+            let mut cfg = ExperimentConfig::small();
+            cfg.policy = policy;
+            cfg.sim.intervals = 25;
+            cfg.workload.lambda = 3.0;
+            // bias toward tight SLAs so layer-only violates a lot
+            cfg.workload.sla_lo = 0.4;
+            cfg.workload.sla_hi = 1.2;
+            run_experiment(cfg, Some(&rt)).unwrap().summary
+        };
+        let md = run(PolicyKind::MabDaso);
+        let lg = run(PolicyKind::LayerGobi);
+        assert!(
+            md.sla_violations <= lg.sla_violations + 0.05,
+            "M+D {} vs L+G {}",
+            md.sla_violations,
+            lg.sla_violations
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! # SplitPlace — AI-augmented splitting and placement of split neural
+//! # networks in mobile edge environments
+//!
+//! Reproduction of Tuli, Casale & Jennings (2022). Three-layer architecture:
+//!
+//! * **Layer 3 (this crate)** — the rust coordinator: Multi-Armed-Bandit
+//!   split decider ([`mab`]), decision-aware surrogate placement
+//!   ([`placement::daso`]), the broker loop implementing the paper's
+//!   Algorithm 1 ([`coordinator`]), a discrete-interval mobile-edge cluster
+//!   engine ([`sim`], [`cluster`]), baselines ([`baselines`]) and a
+//!   thread-pool serving front-end ([`server`]).
+//! * **Layer 2 (python/compile, build-time only)** — JAX split-network and
+//!   surrogate graphs, AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 1 (python/compile/kernels)** — the Pallas fused-dense kernel
+//!   every graph lowers through.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) — Python never runs on the request path.
+
+pub mod baselines;
+pub mod benchlib;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod mab;
+pub mod metrics;
+pub mod placement;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod splits;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,223 @@
+//! Context-conditioned bandit state: Q-estimates and decision counts per
+//! (context, arm), with the paper's reward metrics and update rules.
+
+use crate::sim::CompletedTask;
+use crate::splits::SplitDecision;
+
+/// SLA context (paper: MAB^h vs MAB^l).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Context {
+    /// sla_i ≥ R^{a_i}: layer split likely meets the deadline.
+    High = 0,
+    /// sla_i < R^{a_i}: layer split likely violates it.
+    Low = 1,
+}
+
+impl Context {
+    pub fn of(sla: f64, layer_estimate: f64) -> Context {
+        if sla >= layer_estimate {
+            Context::High
+        } else {
+            Context::Low
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// Q/N state for both contexts and both arms.
+#[derive(Clone, Debug)]
+pub struct Bandit {
+    /// Q-estimates, `[context][arm]`.
+    pub q: [[f64; 2]; 2],
+    /// Decision counts, `[context][arm]`.
+    pub n: [[u64; 2]; 2],
+    /// Decay γ in eq. 5.
+    gamma: f64,
+}
+
+impl Bandit {
+    pub fn new(gamma: f64) -> Self {
+        Bandit { q: [[0.0; 2]; 2], n: [[0; 2]; 2], gamma }
+    }
+
+    /// Warm-start Q values (test-time initialization from training).
+    pub fn with_q(gamma: f64, q: [[f64; 2]; 2], n: [[u64; 2]; 2]) -> Self {
+        Bandit { q, n, gamma }
+    }
+
+    pub fn record_decision(&mut self, ctx: Context, d: SplitDecision) {
+        self.n[ctx.index()][d.arm_index()] += 1;
+    }
+
+    /// Per-task reward term: (1(r ≤ sla) + p) / 2 — numerator of eqs. 3–4.
+    pub fn task_reward(t: &CompletedTask) -> f64 {
+        let sla_ok = if t.response <= t.sla { 1.0 } else { 0.0 };
+        let p = if t.accuracy.is_finite() { t.accuracy } else { 0.0 };
+        (sla_ok + p) / 2.0
+    }
+
+    /// Compute the interval reward metrics O^{c,d} (eqs. 3–4) over the
+    /// leaving tasks E_t, given each task's context, and apply eq. 5.
+    /// Returns O^MAB = mean over the four cells (missing cells fall back
+    /// to the current Q estimate so the average stays defined).
+    pub fn update(&mut self, leaving: &[(Context, &CompletedTask)]) -> f64 {
+        let mut o_sum = 0.0;
+        for c in 0..2 {
+            for a in 0..2 {
+                let cell: Vec<f64> = leaving
+                    .iter()
+                    .filter(|(ctx, t)| {
+                        ctx.index() == c
+                            && matches!(
+                                t.decision,
+                                SplitDecision::Layer | SplitDecision::Semantic
+                            )
+                            && t.decision.arm_index() == a
+                    })
+                    .map(|(_, t)| Self::task_reward(t))
+                    .collect();
+                let o = if cell.is_empty() {
+                    self.q[c][a]
+                } else {
+                    let o = cell.iter().sum::<f64>() / cell.len() as f64;
+                    // eq. 5: Q ← Q + γ (O − Q)
+                    self.q[c][a] += self.gamma * (o - self.q[c][a]);
+                    o
+                };
+                o_sum += o;
+            }
+        }
+        o_sum / 4.0
+    }
+
+    /// Greedy arm for a context.
+    pub fn greedy(&self, ctx: Context) -> SplitDecision {
+        if self.q[ctx.index()][0] >= self.q[ctx.index()][1] {
+            SplitDecision::Layer
+        } else {
+            SplitDecision::Semantic
+        }
+    }
+
+    /// UCB arm (eq. 9): argmax_d Q^{c,d} + c·sqrt(ln t / N^{c,d}).
+    /// Unvisited arms get an infinite bonus.
+    pub fn ucb(&self, ctx: Context, c: f64, t: u64) -> SplitDecision {
+        let ci = ctx.index();
+        let score = |a: usize| -> f64 {
+            if self.n[ci][a] == 0 {
+                return f64::INFINITY;
+            }
+            self.q[ci][a] + c * ((t.max(2) as f64).ln() / self.n[ci][a] as f64).sqrt()
+        };
+        if score(0) >= score(1) {
+            SplitDecision::Layer
+        } else {
+            SplitDecision::Semantic
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::splits::App;
+
+    fn done(decision: SplitDecision, response: f64, sla: f64, acc: f64) -> CompletedTask {
+        CompletedTask {
+            task_id: 0,
+            app: App::Mnist,
+            decision,
+            batch: 16_000,
+            sla,
+            response,
+            wait: 0.0,
+            exec: response,
+            transfer: 0.0,
+            migrate: 0.0,
+            workers: vec![0],
+            accuracy: acc,
+        }
+    }
+
+    #[test]
+    fn context_boundary() {
+        assert_eq!(Context::of(5.0, 5.0), Context::High);
+        assert_eq!(Context::of(4.9, 5.0), Context::Low);
+    }
+
+    #[test]
+    fn task_reward_combines_sla_and_accuracy() {
+        let hit = done(SplitDecision::Layer, 3.0, 5.0, 0.9);
+        assert!((Bandit::task_reward(&hit) - 0.95).abs() < 1e-12);
+        let miss = done(SplitDecision::Layer, 6.0, 5.0, 0.9);
+        assert!((Bandit::task_reward(&miss) - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn update_moves_q_toward_observation() {
+        let mut b = Bandit::new(0.5);
+        let t = done(SplitDecision::Layer, 3.0, 5.0, 1.0); // reward 1.0
+        let o = b.update(&[(Context::High, &t)]);
+        assert!((b.q[0][0] - 0.5).abs() < 1e-12, "Q += 0.5*(1-0)");
+        assert!(o > 0.0);
+        // unobserved cells unchanged
+        assert_eq!(b.q[1][0], 0.0);
+        assert_eq!(b.q[0][1], 0.0);
+    }
+
+    #[test]
+    fn low_context_learns_layer_is_bad() {
+        // In the Low context layer violates SLA (reward ~0.5·acc), semantic
+        // hits it — Q should separate (paper Fig. 6(f)).
+        let mut b = Bandit::new(0.3);
+        for _ in 0..50 {
+            let l = done(SplitDecision::Layer, 8.0, 4.0, 0.95);
+            let s = done(SplitDecision::Semantic, 2.0, 4.0, 0.85);
+            b.update(&[(Context::Low, &l), (Context::Low, &s)]);
+        }
+        assert!(b.q[1][1] > b.q[1][0] + 0.2, "q={:?}", b.q);
+        assert_eq!(b.greedy(Context::Low), SplitDecision::Semantic);
+    }
+
+    #[test]
+    fn ucb_prefers_unvisited() {
+        let mut b = Bandit::new(0.3);
+        b.q[0][0] = 0.9;
+        b.n[0][0] = 100;
+        // arm 1 never tried
+        assert_eq!(b.ucb(Context::High, 0.5, 100), SplitDecision::Semantic);
+        b.n[0][1] = 50;
+        b.q[0][1] = 0.1;
+        assert_eq!(b.ucb(Context::High, 0.5, 100), SplitDecision::Layer);
+    }
+
+    #[test]
+    fn ucb_exploration_bonus_decays_with_count() {
+        let mut b = Bandit::new(0.3);
+        b.q[0][0] = 0.6;
+        b.q[0][1] = 0.5;
+        b.n[0][0] = 1000;
+        b.n[0][1] = 2;
+        // rarely-tried arm 1 wins on bonus at small t... with c=2.0
+        assert_eq!(b.ucb(Context::High, 2.0, 1000), SplitDecision::Semantic);
+        b.n[0][1] = 1000;
+        assert_eq!(b.ucb(Context::High, 2.0, 1000), SplitDecision::Layer);
+    }
+
+    #[test]
+    fn nan_accuracy_treated_as_zero() {
+        let t = done(SplitDecision::Layer, 1.0, 5.0, f64::NAN);
+        assert!((Bandit::task_reward(&t) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_arm_decisions_ignored_in_update() {
+        let mut b = Bandit::new(0.5);
+        let t = done(SplitDecision::Compressed, 1.0, 5.0, 1.0);
+        b.update(&[(Context::High, &t)]);
+        assert_eq!(b.q, [[0.0; 2]; 2]);
+    }
+}

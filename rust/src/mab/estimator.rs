@@ -1,0 +1,79 @@
+//! Layer-split response-time estimates R^a (paper §4.1.1, eq. 2):
+//! per-application EMA over observed layer-decision response times,
+//! `R^a ← φ·r_i + (1−φ)·R^a`, giving recent observations more weight so
+//! the context boundary tracks mobility-induced drift.
+
+use crate::splits::App;
+use crate::util::stats::Ema;
+
+#[derive(Clone, Debug)]
+pub struct ResponseEstimator {
+    emas: [Ema; 3],
+}
+
+impl ResponseEstimator {
+    /// Fresh estimator starting from zero estimates (paper Fig. 6(a)
+    /// "learned starting from zero").
+    pub fn new(phi: f64) -> Self {
+        ResponseEstimator { emas: [Ema::with_initial(phi, 0.0); 3] }
+    }
+
+    /// Warm-start from known nominals (what the paper does at test time:
+    /// "we initialize ... by the values we get from this training").
+    pub fn warm(phi: f64) -> Self {
+        let mut e = ResponseEstimator::new(phi);
+        for app in crate::splits::APPS {
+            e.emas[app.index()] = Ema::with_initial(phi, app.nominal_layer_rt());
+        }
+        e
+    }
+
+    /// Record an observed layer-split response time (intervals).
+    pub fn observe(&mut self, app: App, response: f64) {
+        self.emas[app.index()].push(response);
+    }
+
+    /// Current estimate R^a.
+    pub fn estimate(&self, app: App) -> f64 {
+        self.emas[app.index()].get_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::splits::App;
+
+    #[test]
+    fn ema_update_matches_eq2() {
+        let mut e = ResponseEstimator::warm(0.9);
+        let r0 = e.estimate(App::Mnist);
+        e.observe(App::Mnist, 10.0);
+        assert!((e.estimate(App::Mnist) - (0.9 * 10.0 + 0.1 * r0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cold_start_is_zero() {
+        let e = ResponseEstimator::new(0.9);
+        for app in crate::splits::APPS {
+            assert_eq!(e.estimate(app), 0.0);
+        }
+    }
+
+    #[test]
+    fn apps_independent() {
+        let mut e = ResponseEstimator::new(0.9);
+        e.observe(App::Cifar100, 8.0);
+        assert_eq!(e.estimate(App::Mnist), 0.0);
+        assert!(e.estimate(App::Cifar100) > 0.0);
+    }
+
+    #[test]
+    fn converges_to_stationary_value() {
+        let mut e = ResponseEstimator::new(0.9);
+        for _ in 0..50 {
+            e.observe(App::FashionMnist, 5.5);
+        }
+        assert!((e.estimate(App::FashionMnist) - 5.5).abs() < 1e-3);
+    }
+}

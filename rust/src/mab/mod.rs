@@ -1,0 +1,15 @@
+//! Multi-Armed-Bandit split decider (paper §4.1).
+//!
+//! Two stateless bandits, one per SLA context: `High` (sla ≥ R^a estimate)
+//! and `Low` (sla < R^a). Arms are {Layer, Semantic}. Rewards combine SLA
+//! compliance and inference accuracy (eqs. 3–4); Q-estimates update with a
+//! decay step (eq. 5); training explores with feedback-decayed ε-greedy
+//! (eqs. 6–8); test time uses UCB (eq. 9).
+
+pub mod bandit;
+pub mod estimator;
+pub mod policy;
+
+pub use bandit::{Bandit, Context};
+pub use estimator::ResponseEstimator;
+pub use policy::{MabPolicy, Mode};

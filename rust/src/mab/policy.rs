@@ -1,0 +1,280 @@
+//! The complete MAB split-decision policy: ε-greedy feedback training
+//! (eqs. 6–8) and UCB deployment (eq. 9), wired to the response estimator.
+
+use super::bandit::{Bandit, Context};
+use super::estimator::ResponseEstimator;
+use crate::config::MabConfig;
+use crate::sim::CompletedTask;
+use crate::splits::{App, SplitDecision};
+use crate::util::rng::Rng;
+use crate::workload::Task;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// ε-greedy with reward-feedback decay (training, paper §6.3).
+    Train,
+    /// Deterministic UCB (test, eq. 9).
+    Test,
+}
+
+#[derive(Clone, Debug)]
+pub struct MabPolicy {
+    pub bandit: Bandit,
+    pub estimator: ResponseEstimator,
+    pub mode: Mode,
+    /// Exploration probability ε (starts at 1, decays on feedback).
+    pub epsilon: f64,
+    /// Reward threshold ρ.
+    pub rho: f64,
+    cfg: MabConfig,
+    rng: Rng,
+    /// Scheduling-interval counter t for the UCB bonus.
+    pub t: u64,
+    /// Last interval's O^MAB (exposed for eq. 10).
+    pub last_o_mab: f64,
+}
+
+impl MabPolicy {
+    pub fn new(cfg: MabConfig, mode: Mode) -> Self {
+        let (bandit, estimator, epsilon) = match mode {
+            Mode::Train => (
+                Bandit::new(cfg.gamma),
+                ResponseEstimator::new(cfg.phi),
+                1.0,
+            ),
+            // Test mode starts from trained estimates (paper §6.3: "we
+            // initialize the expected reward (Q) and layer-split response
+            // time (R) estimates by the values we get from training").
+            Mode::Test => (
+                Bandit::with_q(
+                    cfg.gamma,
+                    // High ctx: layer slightly better (accuracy edge);
+                    // Low ctx: semantic clearly better (SLA edge) — the
+                    // dichotomy of Fig. 6(e)/(f).
+                    [[0.93, 0.90], [0.55, 0.88]],
+                    [[50, 50], [50, 50]],
+                ),
+                ResponseEstimator::warm(cfg.phi),
+                0.0,
+            ),
+        };
+        let rho = cfg.rho0;
+        let seed = cfg.seed;
+        MabPolicy {
+            bandit,
+            estimator,
+            mode,
+            epsilon,
+            rho,
+            cfg,
+            rng: Rng::new(seed),
+            t: 1,
+            last_o_mab: 0.0,
+        }
+    }
+
+    /// Batch-size factor: R^a estimates are normalized to a 40k batch
+    /// (response times scale with work; see workload::generator).
+    fn size_factor(batch: u64) -> f64 {
+        batch as f64 / 40_000.0
+    }
+
+    pub fn context_of(&self, task: &Task) -> Context {
+        if self.cfg.single_context {
+            return Context::High; // ablation: one undifferentiated bandit
+        }
+        Context::of(
+            task.sla,
+            self.estimator.estimate(task.app) * Self::size_factor(task.batch),
+        )
+    }
+
+    /// Take the split decision for an incoming task (Algorithm 1 line 9).
+    pub fn decide(&mut self, task: &Task) -> SplitDecision {
+        let ctx = self.context_of(task);
+        let d = match self.mode {
+            Mode::Train => {
+                if self.rng.chance(self.epsilon) {
+                    *self.rng.choice(&SplitDecision::ARMS)
+                } else {
+                    self.bandit.greedy(ctx)
+                }
+            }
+            Mode::Test => self.bandit.ucb(ctx, self.cfg.ucb_c, self.t),
+        };
+        self.bandit.record_decision(ctx, d);
+        d
+    }
+
+    /// Interval bookkeeping with the leaving tasks E_t (Algorithm 1 lines
+    /// 3–6): update R^a estimates, Q-estimates, and the ε/ρ feedback pair.
+    /// Returns O^MAB.
+    pub fn observe_interval(&mut self, leaving: &[CompletedTask]) -> f64 {
+        // context evaluated against the *current* estimates, per eqs. 3–4
+        let tagged: Vec<(Context, &CompletedTask)> = leaving
+            .iter()
+            .map(|t| {
+                let ctx = if self.cfg.single_context {
+                    Context::High
+                } else {
+                    Context::of(
+                        t.sla,
+                        self.estimator.estimate_app(t.app) * Self::size_factor(t.batch),
+                    )
+                };
+                (ctx, t)
+            })
+            .collect();
+        let o_mab = self.bandit.update(&tagged);
+
+        // eq. 2: EMA update from layer-decision tasks (batch-normalized)
+        for t in leaving {
+            if t.decision == SplitDecision::Layer {
+                self.estimator
+                    .observe(t.app, t.response / Self::size_factor(t.batch));
+            }
+        }
+
+        // eqs. 7–8: feedback-based ε decay / ρ increment (train mode)
+        if self.mode == Mode::Train && o_mab > self.rho {
+            self.epsilon *= 1.0 - self.cfg.k;
+            self.rho *= 1.0 + self.cfg.k;
+        }
+
+        self.t += 1;
+        self.last_o_mab = o_mab;
+        o_mab
+    }
+}
+
+impl ResponseEstimator {
+    /// Alias used above (kept on the estimator for discoverability).
+    pub fn estimate_app(&self, app: App) -> f64 {
+        self.estimate(app)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MabConfig;
+    use crate::splits::App;
+
+    fn task(app: App, sla: f64) -> Task {
+        Task { id: 0, app, batch: 32_000, sla, arrival_s: 0.0, decision: None }
+    }
+
+    fn done(app: App, d: SplitDecision, response: f64, sla: f64, acc: f64) -> CompletedTask {
+        CompletedTask {
+            task_id: 0,
+            app,
+            decision: d,
+            batch: 32_000,
+            sla,
+            response,
+            wait: 0.0,
+            exec: response,
+            transfer: 0.0,
+            migrate: 0.0,
+            workers: vec![0],
+            accuracy: acc,
+        }
+    }
+
+    #[test]
+    fn train_starts_fully_exploring() {
+        let p = MabPolicy::new(MabConfig::default(), Mode::Train);
+        assert_eq!(p.epsilon, 1.0);
+        assert_eq!(p.estimator.estimate(App::Mnist), 0.0);
+    }
+
+    #[test]
+    fn epsilon_decays_only_on_good_feedback() {
+        let mut p = MabPolicy::new(MabConfig::default(), Mode::Train);
+        let eps0 = p.epsilon;
+        // all-violating interval: reward 0 < rho -> no decay
+        let bad = done(App::Mnist, SplitDecision::Layer, 9.0, 1.0, 0.0);
+        p.observe_interval(&[bad]);
+        assert_eq!(p.epsilon, eps0);
+        // strong interval: reward > rho -> decay and rho increment
+        let good = done(App::Mnist, SplitDecision::Layer, 1.0, 5.0, 1.0);
+        let rho0 = p.rho;
+        p.observe_interval(std::slice::from_ref(&good));
+        assert!(p.epsilon < eps0);
+        assert!(p.rho > rho0);
+    }
+
+    #[test]
+    fn training_learns_the_dichotomy() {
+        // Simulate the paper's training loop: layer RT ~5 intervals,
+        // semantic ~2; SLAs mixed. After enough intervals the Low-context
+        // bandit must prefer Semantic and the High-context prefer Layer.
+        let mut p = MabPolicy::new(MabConfig::default(), Mode::Train);
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..200 {
+            let mut leaving = Vec::new();
+            for _ in 0..6 {
+                let sla = rng.range(2.0, 9.0);
+                let t = task(App::Mnist, sla);
+                let d = p.decide(&t);
+                let (resp, acc) = match d {
+                    SplitDecision::Layer => (rng.range(4.0, 6.0), 0.99),
+                    SplitDecision::Semantic => (rng.range(1.5, 2.5), 0.93),
+                    _ => unreachable!(),
+                };
+                leaving.push(done(App::Mnist, d, resp, sla, acc));
+            }
+            p.observe_interval(&leaving);
+        }
+        assert!(p.epsilon < 0.5, "epsilon={} should have decayed", p.epsilon);
+        // R^mnist should approach the true batch-normalized layer RT:
+        // responses 4–6 at batch 32k (size factor 0.8) → R ≈ 5–7.5
+        let r = p.estimator.estimate(App::Mnist);
+        assert!((3.5..=8.0).contains(&r), "R={r}");
+        // dichotomy in Q
+        assert!(
+            p.bandit.q[1][1] > p.bandit.q[1][0],
+            "low ctx must favor semantic: {:?}",
+            p.bandit.q
+        );
+        assert!(
+            p.bandit.q[0][0] >= p.bandit.q[0][1] - 0.05,
+            "high ctx should not strongly favor semantic: {:?}",
+            p.bandit.q
+        );
+    }
+
+    #[test]
+    fn test_mode_is_deterministic() {
+        let mut a = MabPolicy::new(MabConfig::default(), Mode::Test);
+        let mut b = MabPolicy::new(MabConfig::default(), Mode::Test);
+        for sla in [1.0, 3.0, 5.0, 9.0] {
+            let t = task(App::Cifar100, sla);
+            assert_eq!(a.decide(&t), b.decide(&t));
+        }
+    }
+
+    #[test]
+    fn test_mode_respects_contexts() {
+        let mut p = MabPolicy::new(MabConfig::default(), Mode::Test);
+        // far above the estimate: High ctx -> layer (warm Q favors layer)
+        let high = task(App::Mnist, 20.0);
+        assert_eq!(p.decide(&high), SplitDecision::Layer);
+        // far below: Low ctx -> semantic
+        let low = task(App::Mnist, 0.5);
+        assert_eq!(p.decide(&low), SplitDecision::Semantic);
+    }
+
+    #[test]
+    fn estimator_adapts_at_test_time() {
+        // non-stationarity: if layer RTs double, R^a follows and the
+        // context boundary moves (paper's volatile-environment adaptation)
+        let mut p = MabPolicy::new(MabConfig::default(), Mode::Test);
+        let r0 = p.estimator.estimate(App::Mnist);
+        for _ in 0..30 {
+            let t = done(App::Mnist, SplitDecision::Layer, r0 * 2.0, 10.0, 0.99);
+            p.observe_interval(&[t]);
+        }
+        assert!(p.estimator.estimate(App::Mnist) > 1.8 * r0);
+    }
+}

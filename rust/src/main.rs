@@ -1,0 +1,216 @@
+//! SplitPlace CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   run [--policy P] [--intervals N] [--lambda L] [--workers small|full]
+//!       [--alpha A] [--constraint c] [--accuracy measured|manifest]
+//!   compare [--intervals N]        all 7 policies, Table-4 style
+//!   serve [--addr A] [--threads N] serving front-end
+//!   info                           artifact + cluster inventory
+//!
+//! (Hand-rolled arg parsing: clap is not in the offline crate set.)
+
+use anyhow::{bail, Result};
+
+use splitplace::config::{
+    AccuracyMode, ClusterConfig, EnvConstraint, ExperimentConfig, PolicyKind,
+};
+use splitplace::coordinator::runner::{artifacts_dir, run_experiment, try_runtime};
+use splitplace::util::table::{fnum, fpm, Table};
+
+fn parse_flags(args: &[String]) -> std::collections::HashMap<String, String> {
+    let mut map = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn build_config(flags: &std::collections::HashMap<String, String>) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(p) = flags.get("policy") {
+        cfg.policy = PolicyKind::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy '{p}'"))?;
+    }
+    if let Some(n) = flags.get("intervals") {
+        cfg.sim.intervals = n.parse()?;
+    }
+    if let Some(l) = flags.get("lambda") {
+        cfg.workload.lambda = l.parse()?;
+    }
+    if let Some(a) = flags.get("alpha") {
+        cfg.placement.alpha = a.parse()?;
+    }
+    if let Some(w) = flags.get("workers") {
+        cfg.cluster = match w.as_str() {
+            "small" => ClusterConfig::small(),
+            "full" => ClusterConfig::default(),
+            other => bail!("--workers must be small|full, got {other}"),
+        };
+    }
+    if let Some(c) = flags.get("constraint") {
+        cfg.cluster.constraint = match c.as_str() {
+            "compute" => EnvConstraint::Compute,
+            "network" => EnvConstraint::Network,
+            "memory" => EnvConstraint::Memory,
+            "none" => EnvConstraint::None,
+            other => bail!("unknown constraint {other}"),
+        };
+    }
+    if let Some(a) = flags.get("accuracy") {
+        cfg.accuracy = match a.as_str() {
+            "measured" => AccuracyMode::Measured,
+            _ => AccuracyMode::Manifest,
+        };
+    }
+    cfg.artifacts_dir = artifacts_dir();
+    Ok(cfg)
+}
+
+fn cmd_run(flags: std::collections::HashMap<String, String>) -> Result<()> {
+    let cfg = build_config(&flags)?;
+    let rt = try_runtime();
+    let out = run_experiment(cfg.clone(), rt.as_ref())?;
+    if let Some(dir) = flags.get("csv") {
+        splitplace::metrics::export::write_csv(&out.metrics, dir)?;
+        eprintln!("telemetry written to {dir}/intervals.csv and {dir}/tasks.csv");
+    }
+    let s = &out.summary;
+    let mut t = Table::new(
+        &format!("{} — {} intervals, λ={}", s.policy, cfg.sim.intervals, cfg.workload.lambda),
+        &["metric", "value"],
+    );
+    t.row(vec!["tasks completed".into(), s.tasks.to_string()]);
+    t.row(vec!["avg reward (eq.15)".into(), fnum(s.avg_reward)]);
+    t.row(vec!["accuracy (eq.13)".into(), fnum(s.accuracy)]);
+    t.row(vec!["SLA violations (eq.14)".into(), fnum(s.sla_violations)]);
+    t.row(vec!["response (intervals)".into(), fpm(s.response.0, s.response.1)]);
+    t.row(vec!["wait (intervals)".into(), fpm(s.wait.0, s.wait.1)]);
+    t.row(vec!["energy (MW-hr)".into(), fnum(s.energy_mwh)]);
+    t.row(vec!["fairness (Jain)".into(), fnum(s.fairness)]);
+    t.row(vec!["scheduling time (s)".into(), fpm(s.sched_time_s.0, s.sched_time_s.1)]);
+    t.row(vec!["cost (USD)".into(), fnum(s.cost_usd)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_compare(flags: std::collections::HashMap<String, String>) -> Result<()> {
+    let rt = try_runtime();
+    let mut t = Table::new(
+        "Policy comparison (Table 4)",
+        &["policy", "energy MWh", "sched s", "fairness", "wait", "response", "SLA viol", "accuracy", "reward"],
+    );
+    for policy in PolicyKind::all() {
+        let mut cfg = build_config(&flags)?;
+        cfg.policy = policy;
+        match run_experiment(cfg, rt.as_ref()) {
+            Ok(out) => {
+                let s = out.summary;
+                t.row(vec![
+                    s.policy.clone(),
+                    fnum(s.energy_mwh),
+                    fnum(s.sched_time_s.0),
+                    fnum(s.fairness),
+                    fnum(s.wait.0),
+                    fpm(s.response.0, s.response.1),
+                    fnum(s.sla_violations),
+                    fnum(s.accuracy),
+                    fnum(s.avg_reward),
+                ]);
+            }
+            Err(e) => {
+                t.row(vec![
+                    policy.name().into(),
+                    format!("error: {e:#}"),
+                    "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(),
+                ]);
+            }
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(flags: std::collections::HashMap<String, String>) -> Result<()> {
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7077".into());
+    let threads: usize = flags.get("threads").map(|t| t.parse()).transpose()?.unwrap_or(4);
+    if try_runtime().is_none() {
+        bail!("artifacts not found — run `make artifacts`");
+    }
+    let server = splitplace::server::Server::start(&artifacts_dir(), &addr, threads)?;
+    println!("splitplace serving on {} with {threads} worker threads", server.addr);
+    println!("protocol: one JSON per line, e.g. {{\"app\":\"mnist\",\"batch\":32000,\"sla\":4.0}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("splitplace {}", splitplace::version());
+    let client = xla::PjRtClient::cpu()?;
+    println!("PJRT: platform={} devices={}", client.platform_name(), client.device_count());
+    let dir = artifacts_dir();
+    println!("artifacts: {dir}");
+    match try_runtime() {
+        Some(rt) => {
+            let mut t = Table::new("Apps", &["app", "dim", "classes", "layer acc", "semantic acc", "compressed acc"]);
+            for app in splitplace::splits::APPS {
+                let a = &rt.manifest.apps[&app];
+                t.row(vec![
+                    app.name().into(),
+                    a.input_dim.to_string(),
+                    a.classes.to_string(),
+                    fnum(a.accuracy_layer),
+                    fnum(a.accuracy_semantic),
+                    fnum(a.accuracy_compressed),
+                ]);
+            }
+            t.print();
+            let mut t = Table::new("Surrogates", &["variant", "workers", "slots", "feature dim"]);
+            for (name, s) in &rt.manifest.surrogates {
+                t.row(vec![
+                    name.clone(),
+                    s.workers.to_string(),
+                    s.slots.to_string(),
+                    s.feature_dim.to_string(),
+                ]);
+            }
+            t.print();
+        }
+        None => println!("  (not built — run `make artifacts`)"),
+    }
+    let cluster = splitplace::cluster::build_fleet(&ClusterConfig::default());
+    println!(
+        "default fleet: {} workers, {:.0} total MIPS, {:.0} GB RAM",
+        cluster.len(),
+        cluster.total_mips(),
+        cluster.total_ram_mb() / 1024.0
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("info");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    match cmd {
+        "run" => cmd_run(flags),
+        "compare" => cmd_compare(flags),
+        "serve" => cmd_serve(flags),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown command '{other}'; try: run, compare, serve, info");
+            std::process::exit(2);
+        }
+    }
+}

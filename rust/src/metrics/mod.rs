@@ -1,0 +1,385 @@
+//! Experiment metrics: the paper's evaluation quantities (§6.4, eqs.
+//! 13–16) plus the per-interval series the figures plot.
+
+pub mod export;
+
+use std::collections::HashMap;
+
+use crate::sim::{CompletedTask, IntervalReport};
+use crate::splits::{App, SplitDecision};
+use crate::util::stats::{self, Welford};
+
+/// Aggregated results of one experiment run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// All leaving tasks, in completion order.
+    pub completed: Vec<CompletedTask>,
+    /// Per-interval total energy (watt-hours).
+    pub energy_wh: Vec<f64>,
+    /// Per-interval normalized AEC.
+    pub aec: Vec<f64>,
+    /// Per-interval normalized ART (response of that interval's leavers).
+    pub art: Vec<f64>,
+    /// Per-interval scheduling overhead (seconds of broker decision time).
+    pub sched_s: Vec<f64>,
+    /// Per-interval queue length at interval end.
+    pub queued: Vec<usize>,
+    /// Per-interval O^MAB (reward signal trace, Fig. 6).
+    pub o_mab: Vec<f64>,
+    /// Containers executed per worker (fairness input).
+    pub per_worker_containers: Vec<f64>,
+    /// Per-interval fraction of layer decisions among new tasks (Figs. 11–12).
+    pub layer_fraction: Vec<f64>,
+    /// Cluster cost rate, $/hour (constant for a static fleet).
+    pub cost_per_hour: f64,
+    /// Interval length (seconds), for cost/energy integration.
+    pub interval_seconds: f64,
+}
+
+/// Scalar summary = one row of Table 4.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub policy: String,
+    pub energy_mwh: f64,
+    pub sched_time_s: (f64, f64),
+    pub fairness: f64,
+    pub wait: (f64, f64),
+    pub response: (f64, f64),
+    pub sla_violations: f64,
+    pub accuracy: f64,
+    pub avg_reward: f64,
+    pub exec: (f64, f64),
+    pub transfer_mean: f64,
+    pub migrate_mean: f64,
+    pub cost_usd: f64,
+    pub cost_per_container: f64,
+    pub tasks: usize,
+}
+
+impl Metrics {
+    pub fn new(workers: usize, cost_per_hour: f64, interval_seconds: f64) -> Self {
+        Metrics {
+            per_worker_containers: vec![0.0; workers],
+            cost_per_hour,
+            interval_seconds,
+            ..Default::default()
+        }
+    }
+
+    /// Record one simulated interval (tasks must already carry accuracy).
+    pub fn record_interval(&mut self, report: &IntervalReport, sched_s: f64, o_mab: f64) {
+        self.energy_wh.push(report.energy_wh);
+        self.aec.push(report.aec);
+        self.sched_s.push(sched_s);
+        self.queued.push(report.queued);
+        self.o_mab.push(o_mab);
+        let art = stats::mean(
+            &report
+                .completed
+                .iter()
+                .map(|t| t.response)
+                .collect::<Vec<_>>(),
+        );
+        self.art.push(art);
+        for t in &report.completed {
+            for &w in &t.workers {
+                if w < self.per_worker_containers.len() {
+                    self.per_worker_containers[w] += 1.0;
+                }
+            }
+        }
+        self.completed.extend(report.completed.iter().cloned());
+    }
+
+    pub fn record_decisions(&mut self, decisions: &[SplitDecision]) {
+        if decisions.is_empty() {
+            self.layer_fraction.push(f64::NAN);
+            return;
+        }
+        let layer = decisions
+            .iter()
+            .filter(|d| matches!(d, SplitDecision::Layer))
+            .count();
+        self.layer_fraction.push(layer as f64 / decisions.len() as f64);
+    }
+
+    // ---- paper metrics -----------------------------------------------
+
+    /// Eq. 13: mean task accuracy.
+    pub fn accuracy(&self) -> f64 {
+        stats::mean(
+            &self
+                .completed
+                .iter()
+                .filter(|t| t.accuracy.is_finite())
+                .map(|t| t.accuracy)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Eq. 14: fraction of tasks with response > SLA.
+    pub fn sla_violations(&self) -> f64 {
+        if self.completed.is_empty() {
+            return 0.0;
+        }
+        self.completed
+            .iter()
+            .filter(|t| t.response > t.sla)
+            .count() as f64
+            / self.completed.len() as f64
+    }
+
+    /// Eq. 15: mean of (1(r≤sla) + p)/2.
+    pub fn avg_reward(&self) -> f64 {
+        stats::mean(
+            &self
+                .completed
+                .iter()
+                .map(|t| {
+                    let ok = if t.response <= t.sla { 1.0 } else { 0.0 };
+                    let p = if t.accuracy.is_finite() { t.accuracy } else { 0.0 };
+                    (ok + p) / 2.0
+                })
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Eq. 16: fleet cost over the run (static fleet ⇒ rate × wall time).
+    pub fn cost_usd(&self) -> f64 {
+        let hours = self.energy_wh.len() as f64 * self.interval_seconds / 3600.0;
+        self.cost_per_hour * hours
+    }
+
+    /// Jain fairness over per-worker executed-container counts.
+    pub fn fairness(&self) -> f64 {
+        stats::jain_fairness(&self.per_worker_containers)
+    }
+
+    fn dist(&self, f: impl Fn(&CompletedTask) -> f64) -> (f64, f64) {
+        let xs: Vec<f64> = self.completed.iter().map(f).collect();
+        (stats::mean(&xs), stats::std(&xs))
+    }
+
+    pub fn summary(&self, policy: &str) -> Summary {
+        let (resp_m, resp_s) = self.dist(|t| t.response);
+        let (wait_m, wait_s) = self.dist(|t| t.wait);
+        let (exec_m, exec_s) = self.dist(|t| t.exec);
+        let n = self.completed.len().max(1);
+        Summary {
+            policy: policy.to_string(),
+            energy_mwh: self.energy_wh.iter().sum::<f64>() / 1e6,
+            sched_time_s: (stats::mean(&self.sched_s), stats::std(&self.sched_s)),
+            fairness: self.fairness(),
+            wait: (wait_m, wait_s),
+            response: (resp_m, resp_s),
+            sla_violations: self.sla_violations(),
+            accuracy: self.accuracy(),
+            avg_reward: self.avg_reward(),
+            exec: (exec_m, exec_s),
+            transfer_mean: self.dist(|t| t.transfer).0,
+            migrate_mean: self.dist(|t| t.migrate).0,
+            cost_usd: self.cost_usd(),
+            cost_per_container: self.cost_usd() / n as f64,
+            tasks: self.completed.len(),
+        }
+    }
+
+    /// Per-app breakdown: (accuracy, response mean, violations) — Fig. 7's
+    /// per-application panels and Fig. 15.
+    pub fn per_app(&self) -> HashMap<App, (f64, f64, f64)> {
+        let mut out = HashMap::new();
+        for app in crate::splits::APPS {
+            let ts: Vec<&CompletedTask> =
+                self.completed.iter().filter(|t| t.app == app).collect();
+            if ts.is_empty() {
+                continue;
+            }
+            let acc = stats::mean(&ts.iter().map(|t| t.accuracy).collect::<Vec<_>>());
+            let resp = stats::mean(&ts.iter().map(|t| t.response).collect::<Vec<_>>());
+            let viol = ts.iter().filter(|t| t.response > t.sla).count() as f64
+                / ts.len() as f64;
+            out.insert(app, (acc, resp, viol));
+        }
+        out
+    }
+
+    /// Response-time decomposition means (Fig. 14): wait, exec, transfer,
+    /// migrate, scheduling (per-task amortized).
+    pub fn decomposition(&self) -> [f64; 5] {
+        let n = self.completed.len().max(1) as f64;
+        let sched_per_task =
+            self.sched_s.iter().sum::<f64>() / n / self.interval_seconds;
+        [
+            self.dist(|t| t.wait).0,
+            self.dist(|t| t.exec).0,
+            self.dist(|t| t.transfer).0,
+            self.dist(|t| t.migrate).0,
+            sched_per_task,
+        ]
+    }
+
+    /// Response-time stats per decision (Fig. 2 / Fig. 19).
+    pub fn per_decision_response(&self) -> HashMap<SplitDecision, (f64, f64)> {
+        let mut out = HashMap::new();
+        for d in [
+            SplitDecision::Layer,
+            SplitDecision::Semantic,
+            SplitDecision::Compressed,
+            SplitDecision::Full,
+        ] {
+            let xs: Vec<f64> = self
+                .completed
+                .iter()
+                .filter(|t| t.decision == d)
+                .map(|t| t.response)
+                .collect();
+            if !xs.is_empty() {
+                out.insert(d, (stats::mean(&xs), stats::std(&xs)));
+            }
+        }
+        out
+    }
+
+    /// Mean RAM-pressure proxy: upper-bound utilization indicator used for
+    /// the "32% lower RAM utilization" claim — mean queued containers.
+    pub fn mean_queue(&self) -> f64 {
+        stats::mean(&self.queued.iter().map(|&q| q as f64).collect::<Vec<_>>())
+    }
+}
+
+/// Running aggregate over several seeded runs of the same scenario.
+#[derive(Clone, Debug, Default)]
+pub struct MultiRun {
+    pub reward: Welford,
+    pub accuracy: Welford,
+    pub response: Welford,
+    pub violations: Welford,
+    pub energy: Welford,
+}
+
+impl MultiRun {
+    pub fn push(&mut self, s: &Summary) {
+        self.reward.push(s.avg_reward);
+        self.accuracy.push(s.accuracy);
+        self.response.push(s.response.0);
+        self.violations.push(s.sla_violations);
+        self.energy.push(s.energy_mwh);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::WorkerSnapshot;
+
+    fn done(app: App, d: SplitDecision, response: f64, sla: f64, acc: f64) -> CompletedTask {
+        CompletedTask {
+            task_id: 0,
+            app,
+            decision: d,
+            batch: 1000,
+            sla,
+            response,
+            wait: 0.5,
+            exec: response - 0.5,
+            transfer: 0.1,
+            migrate: 0.0,
+            workers: vec![0, 1],
+            accuracy: acc,
+        }
+    }
+
+    fn report(completed: Vec<CompletedTask>) -> IntervalReport {
+        IntervalReport {
+            interval: 0,
+            completed,
+            energy_wh: 1000.0,
+            aec: 0.5,
+            snapshots: vec![WorkerSnapshot::default(); 4],
+            queued: 2,
+            offline: 0,
+        }
+    }
+
+    fn metrics_with(tasks: Vec<CompletedTask>) -> Metrics {
+        let mut m = Metrics::new(4, 10.0, 300.0);
+        m.record_interval(&report(tasks), 0.1, 0.9);
+        m
+    }
+
+    #[test]
+    fn eq13_accuracy() {
+        let m = metrics_with(vec![
+            done(App::Mnist, SplitDecision::Layer, 2.0, 5.0, 0.9),
+            done(App::Mnist, SplitDecision::Semantic, 1.0, 5.0, 0.8),
+        ]);
+        assert!((m.accuracy() - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq14_sla_violations() {
+        let m = metrics_with(vec![
+            done(App::Mnist, SplitDecision::Layer, 6.0, 5.0, 0.9), // violated
+            done(App::Mnist, SplitDecision::Layer, 2.0, 5.0, 0.9),
+        ]);
+        assert!((m.sla_violations() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq15_reward() {
+        let m = metrics_with(vec![
+            done(App::Mnist, SplitDecision::Layer, 2.0, 5.0, 1.0), // (1+1)/2
+            done(App::Mnist, SplitDecision::Layer, 9.0, 5.0, 0.5), // (0+.5)/2
+        ]);
+        assert!((m.avg_reward() - (1.0 + 0.25) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq16_cost_scales_with_time() {
+        let mut m = Metrics::new(4, 7.2, 300.0);
+        for _ in 0..12 {
+            m.record_interval(&report(vec![]), 0.0, 0.0);
+        }
+        // 12 intervals × 300 s = 1 h at $7.2/h
+        assert!((m.cost_usd() - 7.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fairness_counts_workers() {
+        let m = metrics_with(vec![done(App::Mnist, SplitDecision::Layer, 1.0, 5.0, 1.0)]);
+        // workers 0 and 1 each executed once; 2 and 3 idle
+        assert!((m.fairness() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_app_and_per_decision() {
+        let m = metrics_with(vec![
+            done(App::Mnist, SplitDecision::Layer, 4.0, 5.0, 0.99),
+            done(App::Cifar100, SplitDecision::Semantic, 2.0, 5.0, 0.55),
+        ]);
+        let per = m.per_app();
+        assert_eq!(per.len(), 2);
+        assert!((per[&App::Mnist].0 - 0.99).abs() < 1e-12);
+        let pd = m.per_decision_response();
+        assert!((pd[&SplitDecision::Semantic].0 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layer_fraction_series() {
+        let mut m = Metrics::new(2, 1.0, 300.0);
+        m.record_decisions(&[SplitDecision::Layer, SplitDecision::Semantic]);
+        m.record_decisions(&[]);
+        assert!((m.layer_fraction[0] - 0.5).abs() < 1e-12);
+        assert!(m.layer_fraction[1].is_nan());
+    }
+
+    #[test]
+    fn summary_assembles() {
+        let m = metrics_with(vec![done(App::Mnist, SplitDecision::Layer, 2.0, 5.0, 0.9)]);
+        let s = m.summary("Test");
+        assert_eq!(s.tasks, 1);
+        assert!(s.energy_mwh > 0.0);
+        assert!((s.response.0 - 2.0).abs() < 1e-12);
+        assert!(s.cost_per_container > 0.0);
+    }
+}

@@ -1,0 +1,343 @@
+//! DASO: decision-aware surrogate optimization (paper §4.2).
+//!
+//! Starting from the previous placement, iterate eq. 12
+//! `P ← P + η ∇_P f([S, P, D]; θ)` through the AOT-compiled gradient HLO,
+//! then project the continuous matrix onto a feasible discrete assignment.
+//! With `decision_aware = false` the D block is zeroed and this becomes the
+//! vanilla-GOBI ablation (M+G / L+G / S+G rows of Table 4).
+
+use super::features::{FeatureLayout, SlotInfo};
+use super::heuristics::BestFitPlacer;
+use super::{PlacementInput, Placer};
+use crate::config::PlacementConfig;
+use crate::runtime::Surrogate;
+use crate::sim::ContainerId;
+
+/// Minimum advantage of the new worker's P-mass over the current one
+/// before a running container is migrated (hysteresis against churn).
+const MIGRATION_MARGIN: f32 = 0.2;
+
+pub struct GradientPlacer<'rt> {
+    pub surrogate: Surrogate<'rt>,
+    pub layout: FeatureLayout,
+    cfg: PlacementConfig,
+    pub decision_aware: bool,
+    fallback: BestFitPlacer,
+    /// Telemetry: gradient iterations and surrogate score of the last call.
+    pub last_iters: usize,
+    pub last_score: f32,
+    /// Feature vector of the final (chosen) placement — the coordinator
+    /// pairs it with the observed objective to fine-tune the surrogate.
+    pub last_features: Vec<f32>,
+}
+
+impl<'rt> GradientPlacer<'rt> {
+    pub fn new(surrogate: Surrogate<'rt>, cfg: PlacementConfig, decision_aware: bool) -> Self {
+        let layout = FeatureLayout::new(surrogate.workers(), surrogate.slots());
+        GradientPlacer {
+            surrogate,
+            layout,
+            cfg,
+            decision_aware,
+            fallback: BestFitPlacer,
+            last_iters: 0,
+            last_score: 0.0,
+            last_features: Vec::new(),
+        }
+    }
+
+    /// Continuous init: previous worker one-hot, uniform for new slots.
+    fn init_placement(&self, slots: &[SlotInfo]) -> Vec<f32> {
+        let h = self.layout.workers;
+        let mut p = vec![0.0f32; self.layout.placement_dim()];
+        for (m, slot) in slots.iter().enumerate() {
+            match slot.prev_worker {
+                Some(w) if w < h => p[m * h + w] = 1.0,
+                _ => {
+                    let u = 1.0 / h as f32;
+                    for w in 0..h {
+                        p[m * h + w] = u;
+                    }
+                }
+            }
+        }
+        p
+    }
+
+    /// Project each slot row to the simplex-ish box: clamp ≥ 0, renorm.
+    fn project(&self, p: &mut [f32], n_slots: usize) {
+        let h = self.layout.workers;
+        for m in 0..n_slots {
+            let row = &mut p[m * h..(m + 1) * h];
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = v.max(0.0);
+                sum += *v;
+            }
+            if sum > 1e-9 {
+                for v in row.iter_mut() {
+                    *v /= sum;
+                }
+            } else {
+                let u = 1.0 / h as f32;
+                row.iter_mut().for_each(|v| *v = u);
+            }
+        }
+    }
+}
+
+impl<'rt> Placer for GradientPlacer<'rt> {
+    fn place(&mut self, input: &PlacementInput) -> Vec<(ContainerId, usize)> {
+        let h = self.layout.workers;
+        let m_cap = self.layout.slots;
+        assert_eq!(input.workers(), h, "cluster/surrogate worker mismatch");
+
+        // Slot window: running containers first (their position matters
+        // most), then queued by arrival; overflow goes to the fallback.
+        let mut ordered: Vec<&SlotInfo> = input.slots.iter().collect();
+        ordered.sort_by_key(|s| (s.prev_worker.is_none() as u8, s.cid));
+        let (window, overflow): (Vec<&SlotInfo>, Vec<&SlotInfo>) = if ordered.len() > m_cap {
+            let (a, b) = ordered.split_at(m_cap);
+            (a.to_vec(), b.to_vec())
+        } else {
+            (ordered, Vec::new())
+        };
+        let win_slots: Vec<SlotInfo> = window.iter().map(|s| (*s).clone()).collect();
+
+        // --- eq. 12 gradient loop on the continuous P ---
+        let mut p = self.init_placement(&win_slots);
+        let eta = self.cfg.eta as f32;
+        self.last_iters = 0;
+        for _ in 0..self.cfg.max_iters {
+            let x = self
+                .layout
+                .featurize(input.snapshots, &win_slots, &p, self.decision_aware);
+            let Ok((score, dx)) = self.surrogate.grad(&x) else { break };
+            self.last_score = score;
+            let off = self.layout.placement_off();
+            let mut delta2 = 0.0f32;
+            for i in 0..p.len() {
+                let step = eta * dx[off + i];
+                p[i] += step;
+                delta2 += step * step;
+            }
+            self.project(&mut p, win_slots.len());
+            self.last_iters += 1;
+            if (delta2.sqrt() as f64) < self.cfg.converge_eps {
+                break;
+            }
+        }
+
+        // --- discretize with feasibility + migration hysteresis ---
+        let mut extra = vec![0.0f64; h];
+        let mut out = Vec::new();
+        let mut final_assign: Vec<Option<usize>> = vec![None; win_slots.len()];
+        for (m, slot) in win_slots.iter().enumerate() {
+            let row = &p[m * h..(m + 1) * h];
+            // workers by descending mass
+            let mut order: Vec<usize> = (0..h).collect();
+            order.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+            match slot.prev_worker {
+                Some(prev) => {
+                    let best = order[0];
+                    if best != prev
+                        && row[best] - row[prev] > MIGRATION_MARGIN
+                        && input.fits(slot, best, extra[best])
+                    {
+                        extra[best] += slot.ram_mb;
+                        out.push((slot.cid, best));
+                        final_assign[m] = Some(best);
+                    } else {
+                        final_assign[m] = Some(prev);
+                    }
+                }
+                None => {
+                    for &w in &order {
+                        if input.fits(slot, w, extra[w]) {
+                            extra[w] += slot.ram_mb;
+                            out.push((slot.cid, w));
+                            final_assign[m] = Some(w);
+                            break;
+                        }
+                    }
+                    // none feasible -> stays queued (paper's wait queue)
+                }
+            }
+        }
+
+        // record features of the realized placement for fine-tuning
+        let p_final = self.layout.one_hot(&final_assign);
+        self.last_features =
+            self.layout
+                .featurize(input.snapshots, &win_slots, &p_final, self.decision_aware);
+
+        // overflow containers: best-fit
+        if !overflow.is_empty() {
+            let fb_input = PlacementInput {
+                snapshots: input.snapshots,
+                slots: overflow.into_iter().cloned().collect(),
+                ram_capacity: input.ram_capacity.clone(),
+                resident_ram: input
+                    .resident_ram
+                    .iter()
+                    .zip(&extra)
+                    .map(|(a, b)| a + b)
+                    .collect(),
+                overcommit: input.overcommit,
+            };
+            out.extend(self.fallback.place(&fb_input));
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        if self.decision_aware {
+            "daso"
+        } else {
+            "gobi"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlacementConfig;
+    use crate::runtime::Runtime;
+    use crate::sim::WorkerSnapshot;
+    use crate::splits::SplitDecision;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(d.to_str().unwrap()).unwrap())
+    }
+
+    fn slots(n: usize) -> Vec<SlotInfo> {
+        (0..n)
+            .map(|i| SlotInfo {
+                cid: i,
+                prev_worker: None,
+                decision: if i % 2 == 0 { SplitDecision::Layer } else { SplitDecision::Semantic },
+                mi_remaining: 1e6,
+                ram_mb: 600.0,
+                input_mb: 50.0,
+                remaining_frac: 1.0,
+            })
+            .collect()
+    }
+
+    fn snaps(n: usize) -> Vec<WorkerSnapshot> {
+        (0..n)
+            .map(|i| WorkerSnapshot {
+                cpu: (i as f64) / n as f64,
+                ram: 0.2,
+                net: 0.0,
+                disk: 0.0,
+                containers: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn places_all_feasible_slots() {
+        let Some(rt) = runtime() else { return };
+        let s = Surrogate::for_workers(&rt, 10).unwrap();
+        let mut placer = GradientPlacer::new(s, PlacementConfig::default(), true);
+        let sn = snaps(10);
+        let input = PlacementInput {
+            snapshots: &sn,
+            slots: slots(6),
+            ram_capacity: vec![4000.0; 10],
+            resident_ram: vec![0.0; 10],
+            overcommit: 2.0,
+        };
+        let a = placer.place(&input);
+        assert_eq!(a.len(), 6, "all queued slots must be placed");
+        assert!(placer.last_iters >= 1);
+        assert_eq!(placer.last_features.len(), placer.layout.feature_dim());
+        let ws: std::collections::HashSet<usize> = a.iter().map(|&(_, w)| w).collect();
+        assert!(!ws.is_empty());
+        for &(_, w) in &a {
+            assert!(w < 10);
+        }
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let Some(rt) = runtime() else { return };
+        let s = Surrogate::for_workers(&rt, 10).unwrap();
+        let mut placer = GradientPlacer::new(s, PlacementConfig::default(), true);
+        let sn = snaps(10);
+        // only worker 7 can take a 5 GB container (others are full)
+        let mut resident = vec![7900.0; 10];
+        resident[7] = 0.0;
+        let mut sl = slots(1);
+        sl[0].ram_mb = 5000.0;
+        let input = PlacementInput {
+            snapshots: &sn,
+            slots: sl,
+            ram_capacity: vec![4000.0; 10],
+            resident_ram: resident,
+            overcommit: 2.0,
+        };
+        let a = placer.place(&input);
+        assert_eq!(a, vec![(0, 7)]);
+    }
+
+    #[test]
+    fn running_containers_keep_place_without_strong_signal() {
+        let Some(rt) = runtime() else { return };
+        let s = Surrogate::for_workers(&rt, 10).unwrap();
+        let mut placer = GradientPlacer::new(s, PlacementConfig::default(), true);
+        let sn = snaps(10);
+        let mut sl = slots(3);
+        for (i, s) in sl.iter_mut().enumerate() {
+            s.prev_worker = Some(i);
+            s.remaining_frac = 0.5;
+        }
+        let input = PlacementInput {
+            snapshots: &sn,
+            slots: sl,
+            ram_capacity: vec![4000.0; 10],
+            resident_ram: vec![600.0; 3]
+                .into_iter()
+                .chain(vec![0.0; 7])
+                .collect(),
+            overcommit: 2.0,
+        };
+        let a = placer.place(&input);
+        // an untrained surrogate shouldn't exceed the migration margin often
+        assert!(a.len() <= 1, "spurious migrations: {a:?}");
+    }
+
+    #[test]
+    fn overflow_goes_to_fallback() {
+        let Some(rt) = runtime() else { return };
+        let s = Surrogate::for_workers(&rt, 10).unwrap();
+        let cap = s.slots();
+        let mut placer = GradientPlacer::new(s, PlacementConfig::default(), true);
+        let sn = snaps(10);
+        let input = PlacementInput {
+            snapshots: &sn,
+            slots: slots(cap + 4),
+            ram_capacity: vec![8000.0; 10],
+            resident_ram: vec![0.0; 10],
+            overcommit: 2.0,
+        };
+        let a = placer.place(&input);
+        assert_eq!(a.len(), cap + 4, "overflow slots must still be placed");
+    }
+
+    #[test]
+    fn gobi_variant_reports_name() {
+        let Some(rt) = runtime() else { return };
+        let s = Surrogate::for_workers(&rt, 10).unwrap();
+        let placer = GradientPlacer::new(s, PlacementConfig::default(), false);
+        assert_eq!(placer.name(), "gobi");
+    }
+}

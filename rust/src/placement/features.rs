@@ -1,0 +1,216 @@
+//! State featurization: the [S_t | P_t | D_t | demands] layout shared with
+//! `python/compile/model.py` (they MUST stay in sync — the surrogate HLO
+//! is compiled against this exact layout).
+//!
+//! ```text
+//! [ 0 .. H*4 )        per-worker: cpu, ram, net, disk utilization
+//! [ H*4 .. +M*H )     placement matrix P, slot-major
+//! [ +M*H .. +M*2 )    decision one-hot per slot [layer, semantic]
+//! [ +M*2 .. +M*4 )    per-slot demands: cpu, ram, net, remaining
+//! ```
+
+use crate::sim::{ContainerId, WorkerSnapshot};
+use crate::splits::SplitDecision;
+
+/// Per-slot (container) view the featurizer consumes.
+#[derive(Clone, Debug)]
+pub struct SlotInfo {
+    pub cid: ContainerId,
+    pub prev_worker: Option<usize>,
+    pub decision: SplitDecision,
+    /// Remaining compute, million instructions.
+    pub mi_remaining: f64,
+    pub ram_mb: f64,
+    /// Pending input payload (MB).
+    pub input_mb: f64,
+    /// Remaining fraction of the container's total work.
+    pub remaining_frac: f64,
+}
+
+/// Dimension bookkeeping for a surrogate variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FeatureLayout {
+    pub workers: usize,
+    pub slots: usize,
+}
+
+impl FeatureLayout {
+    pub fn new(workers: usize, slots: usize) -> Self {
+        FeatureLayout { workers, slots }
+    }
+
+    pub fn state_dim(&self) -> usize {
+        self.workers * 4
+    }
+
+    pub fn placement_off(&self) -> usize {
+        self.state_dim()
+    }
+
+    pub fn placement_dim(&self) -> usize {
+        self.slots * self.workers
+    }
+
+    pub fn decision_off(&self) -> usize {
+        self.placement_off() + self.placement_dim()
+    }
+
+    pub fn demand_off(&self) -> usize {
+        self.decision_off() + self.slots * 2
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.demand_off() + self.slots * 4
+    }
+
+    /// Assemble the full feature vector.
+    ///
+    /// `placement` is the continuous P matrix, slot-major, length M×H.
+    /// `decision_aware=false` zeroes the D block (the GOBI ablation).
+    pub fn featurize(
+        &self,
+        snapshots: &[WorkerSnapshot],
+        slots: &[SlotInfo],
+        placement: &[f32],
+        decision_aware: bool,
+    ) -> Vec<f32> {
+        assert_eq!(snapshots.len(), self.workers, "snapshot count");
+        assert_eq!(placement.len(), self.placement_dim(), "placement dim");
+        assert!(slots.len() <= self.slots, "too many slots");
+        let mut x = vec![0.0f32; self.feature_dim()];
+
+        for (w, s) in snapshots.iter().enumerate() {
+            x[w * 4] = s.cpu.clamp(0.0, 1.0) as f32;
+            x[w * 4 + 1] = s.ram.clamp(0.0, 2.0) as f32;
+            x[w * 4 + 2] = s.net.clamp(0.0, 1.0) as f32;
+            x[w * 4 + 3] = s.disk.clamp(0.0, 1.0) as f32;
+        }
+
+        x[self.placement_off()..self.placement_off() + self.placement_dim()]
+            .copy_from_slice(placement);
+
+        for (m, slot) in slots.iter().enumerate() {
+            if decision_aware {
+                match slot.decision {
+                    SplitDecision::Layer | SplitDecision::Full => {
+                        x[self.decision_off() + m * 2] = 1.0
+                    }
+                    SplitDecision::Semantic => x[self.decision_off() + m * 2 + 1] = 1.0,
+                    SplitDecision::Compressed => {
+                        // compression sits between the two regimes
+                        x[self.decision_off() + m * 2] = 0.5;
+                        x[self.decision_off() + m * 2 + 1] = 0.5;
+                    }
+                }
+            }
+            let d = self.demand_off() + m * 4;
+            // normalizations: ~4 node-intervals of the largest node
+            x[d] = (slot.mi_remaining / 1.0e7).clamp(0.0, 1.0) as f32;
+            x[d + 1] = (slot.ram_mb / 8000.0).clamp(0.0, 1.0) as f32;
+            x[d + 2] = (slot.input_mb / 1000.0).clamp(0.0, 1.0) as f32;
+            x[d + 3] = slot.remaining_frac.clamp(0.0, 1.0) as f32;
+        }
+        x
+    }
+
+    /// One-hot placement vector from an assignment (None → all-zero row).
+    pub fn one_hot(&self, assignment: &[Option<usize>]) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.placement_dim()];
+        for (m, w) in assignment.iter().enumerate().take(self.slots) {
+            if let Some(w) = w {
+                p[m * self.workers + w] = 1.0;
+            }
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(cpu: f64) -> WorkerSnapshot {
+        WorkerSnapshot { cpu, ram: 0.5, net: 0.1, disk: 0.1, containers: 1 }
+    }
+
+    fn slot(cid: usize, d: SplitDecision) -> SlotInfo {
+        SlotInfo {
+            cid,
+            prev_worker: None,
+            decision: d,
+            mi_remaining: 1.2e6,
+            ram_mb: 4000.0,
+            input_mb: 500.0,
+            remaining_frac: 1.0,
+        }
+    }
+
+    #[test]
+    fn layout_matches_python() {
+        // python test asserts h10_m16 -> 296; mirror it here
+        let l = FeatureLayout::new(10, 16);
+        assert_eq!(l.feature_dim(), 296);
+        let big = FeatureLayout::new(50, 64);
+        assert_eq!(big.feature_dim(), 50 * 4 + 64 * 50 + 64 * 2 + 64 * 4);
+    }
+
+    #[test]
+    fn featurize_blocks() {
+        let l = FeatureLayout::new(2, 2);
+        let snaps = vec![snap(1.0), snap(0.0)];
+        let slots = vec![slot(0, SplitDecision::Layer), slot(1, SplitDecision::Semantic)];
+        let p = l.one_hot(&[Some(1), None]);
+        let x = l.featurize(&snaps, &slots, &p, true);
+        assert_eq!(x.len(), l.feature_dim());
+        // S block
+        assert_eq!(x[0], 1.0);
+        assert_eq!(x[4], 0.0);
+        // P block: slot 0 on worker 1
+        assert_eq!(x[l.placement_off() + 1], 1.0);
+        assert_eq!(x[l.placement_off()], 0.0);
+        // D block: slot0 layer, slot1 semantic
+        assert_eq!(x[l.decision_off()], 1.0);
+        assert_eq!(x[l.decision_off() + 1], 0.0);
+        assert_eq!(x[l.decision_off() + 3], 1.0);
+        // demands normalized into [0,1]
+        let d = l.demand_off();
+        assert!((x[d] - 0.12).abs() < 1e-6); // 1.2e6 MI / 1e7
+        assert!((x[d + 1] - 0.5).abs() < 1e-6);
+        assert!((x[d + 2] - 0.5).abs() < 1e-6);
+        assert_eq!(x[d + 3], 1.0);
+    }
+
+    #[test]
+    fn decision_blind_zeroes_d_block() {
+        let l = FeatureLayout::new(2, 2);
+        let snaps = vec![snap(0.2), snap(0.3)];
+        let slots = vec![slot(0, SplitDecision::Layer)];
+        let p = l.one_hot(&[Some(0)]);
+        let x = l.featurize(&snaps, &slots, &p, false);
+        for i in l.decision_off()..l.demand_off() {
+            assert_eq!(x[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn fewer_slots_than_capacity_padded_with_zeros() {
+        let l = FeatureLayout::new(3, 4);
+        let snaps = vec![snap(0.1); 3];
+        let slots = vec![slot(0, SplitDecision::Layer)];
+        let p = l.one_hot(&[Some(2)]);
+        let x = l.featurize(&snaps, &slots, &p, true);
+        // slot 3's demand block must be zero
+        let d = l.demand_off() + 3 * 4;
+        assert!(x[d..d + 4].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "too many slots")]
+    fn overflow_slots_rejected() {
+        let l = FeatureLayout::new(2, 1);
+        let snaps = vec![snap(0.0); 2];
+        let slots = vec![slot(0, SplitDecision::Layer), slot(1, SplitDecision::Layer)];
+        let p = vec![0.0; l.placement_dim()];
+        l.featurize(&snaps, &slots, &p, true);
+    }
+}

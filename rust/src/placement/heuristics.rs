@@ -1,0 +1,251 @@
+//! Classic placement heuristics: random, round-robin, best-fit. These are
+//! the baselines' schedulers and the fallback path when gradient placement
+//! leaves a container unassigned.
+
+use super::{PlacementInput, Placer};
+use crate::sim::ContainerId;
+use crate::util::rng::Rng;
+
+/// Uniform random feasible worker.
+pub struct RandomPlacer {
+    rng: Rng,
+}
+
+impl RandomPlacer {
+    pub fn new(seed: u64) -> Self {
+        RandomPlacer { rng: Rng::new(seed) }
+    }
+}
+
+impl Placer for RandomPlacer {
+    fn place(&mut self, input: &PlacementInput) -> Vec<(ContainerId, usize)> {
+        let n = input.workers();
+        let mut extra = vec![0.0f64; n];
+        let mut out = Vec::new();
+        for slot in &input.slots {
+            if slot.prev_worker.is_some() {
+                continue; // never migrate randomly
+            }
+            // up to n probes for a feasible worker
+            for _ in 0..n {
+                let w = self.rng.below(n as u64) as usize;
+                if input.fits(slot, w, extra[w]) {
+                    extra[w] += slot.ram_mb;
+                    out.push((slot.cid, w));
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Cycling round-robin over workers, skipping infeasible ones.
+pub struct RoundRobinPlacer {
+    next: usize,
+}
+
+impl RoundRobinPlacer {
+    pub fn new() -> Self {
+        RoundRobinPlacer { next: 0 }
+    }
+}
+
+impl Default for RoundRobinPlacer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Placer for RoundRobinPlacer {
+    fn place(&mut self, input: &PlacementInput) -> Vec<(ContainerId, usize)> {
+        let n = input.workers();
+        let mut extra = vec![0.0f64; n];
+        let mut out = Vec::new();
+        for slot in &input.slots {
+            if slot.prev_worker.is_some() {
+                continue;
+            }
+            for probe in 0..n {
+                let w = (self.next + probe) % n;
+                if input.fits(slot, w, extra[w]) {
+                    extra[w] += slot.ram_mb;
+                    out.push((slot.cid, w));
+                    self.next = (w + 1) % n;
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Best-fit-decreasing: biggest containers first, each to the feasible
+/// worker with the most free RAM and lowest CPU (weighted score). This is
+/// the scheduler the Gillis/MC baselines use.
+pub struct BestFitPlacer;
+
+impl Placer for BestFitPlacer {
+    fn place(&mut self, input: &PlacementInput) -> Vec<(ContainerId, usize)> {
+        let n = input.workers();
+        let mut extra = vec![0.0f64; n];
+        let mut order: Vec<usize> = (0..input.slots.len()).collect();
+        order.sort_by(|&a, &b| {
+            input.slots[b]
+                .ram_mb
+                .partial_cmp(&input.slots[a].ram_mb)
+                .unwrap()
+        });
+        let mut out = Vec::new();
+        for i in order {
+            let slot = &input.slots[i];
+            if slot.prev_worker.is_some() {
+                continue;
+            }
+            let mut best: Option<(usize, f64)> = None;
+            for w in 0..n {
+                if !input.fits(slot, w, extra[w]) {
+                    continue;
+                }
+                let free_ram = (input.ram_capacity[w] - input.resident_ram[w] - extra[w])
+                    / input.ram_capacity[w].max(1.0);
+                let score = free_ram - 0.5 * input.snapshots[w].cpu;
+                if best.map(|(_, s)| score > s).unwrap_or(true) {
+                    best = Some((w, score));
+                }
+            }
+            if let Some((w, _)) = best {
+                extra[w] += slot.ram_mb;
+                out.push((slot.cid, w));
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "best-fit"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::features::SlotInfo;
+    use crate::sim::WorkerSnapshot;
+    use crate::splits::SplitDecision;
+
+    fn slot(cid: usize, ram: f64) -> SlotInfo {
+        SlotInfo {
+            cid,
+            prev_worker: None,
+            decision: SplitDecision::Layer,
+            mi_remaining: 1e6,
+            ram_mb: ram,
+            input_mb: 10.0,
+            remaining_frac: 1.0,
+        }
+    }
+
+    fn input(slots: Vec<SlotInfo>, caps: Vec<f64>, resident: Vec<f64>) -> PlacementInput<'static> {
+        // leak snapshots for the 'static test lifetime; fine in tests
+        let snaps: &'static [WorkerSnapshot] = Box::leak(
+            vec![
+                WorkerSnapshot { cpu: 0.1, ram: 0.1, net: 0.0, disk: 0.0, containers: 0 };
+                caps.len()
+            ]
+            .into_boxed_slice(),
+        );
+        PlacementInput {
+            snapshots: snaps,
+            slots,
+            ram_capacity: caps,
+            resident_ram: resident,
+            overcommit: 2.0,
+        }
+    }
+
+    #[test]
+    fn random_respects_capacity() {
+        let mut p = RandomPlacer::new(1);
+        // one tiny worker, one big: the 5000 MB container only fits on w1
+        let inp = input(vec![slot(0, 5000.0)], vec![1000.0, 8000.0], vec![0.0, 0.0]);
+        for _ in 0..20 {
+            let a = p.place(&inp);
+            for &(_, w) in &a {
+                assert_eq!(w, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads() {
+        let mut p = RoundRobinPlacer::new();
+        let inp = input(
+            (0..4).map(|i| slot(i, 100.0)).collect(),
+            vec![8000.0; 4],
+            vec![0.0; 4],
+        );
+        let a = p.place(&inp);
+        assert_eq!(a.len(), 4);
+        let mut ws: Vec<usize> = a.iter().map(|&(_, w)| w).collect();
+        ws.sort_unstable();
+        assert_eq!(ws, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn best_fit_prefers_free_ram() {
+        let mut p = BestFitPlacer;
+        let inp = input(
+            vec![slot(0, 1000.0)],
+            vec![8000.0, 8000.0],
+            vec![7000.0, 0.0],
+        );
+        let a = p.place(&inp);
+        assert_eq!(a, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn best_fit_packs_decreasing() {
+        let mut p = BestFitPlacer;
+        // two big (6000) and two small (100); caps allow one big each
+        let inp = input(
+            vec![slot(0, 100.0), slot(1, 6000.0), slot(2, 6000.0), slot(3, 100.0)],
+            vec![4000.0, 4000.0],
+            vec![0.0, 0.0],
+        );
+        let a = p.place(&inp);
+        // bigs fit under 2x overcommit (8000), one per worker
+        let big_ws: Vec<usize> = a
+            .iter()
+            .filter(|&&(c, _)| c == 1 || c == 2)
+            .map(|&(_, w)| w)
+            .collect();
+        assert_eq!(big_ws.len(), 2);
+        assert_ne!(big_ws[0], big_ws[1], "bigs must not stack on one worker");
+    }
+
+    #[test]
+    fn running_containers_not_reassigned_by_heuristics() {
+        let mut s = slot(0, 100.0);
+        s.prev_worker = Some(3);
+        let inp = input(vec![s], vec![8000.0; 4], vec![0.0; 4]);
+        assert!(RandomPlacer::new(2).place(&inp).is_empty());
+        assert!(RoundRobinPlacer::new().place(&inp).is_empty());
+        assert!(BestFitPlacer.place(&inp).is_empty());
+    }
+
+    #[test]
+    fn oversized_container_left_queued() {
+        let inp = input(vec![slot(0, 50_000.0)], vec![8000.0; 2], vec![0.0; 2]);
+        assert!(BestFitPlacer.place(&inp).is_empty());
+        assert!(RandomPlacer::new(3).place(&inp).is_empty());
+    }
+}

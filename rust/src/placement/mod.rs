@@ -1,0 +1,52 @@
+//! Container-placement engines.
+//!
+//! The paper's contribution is [`daso`]: gradient-based optimization of the
+//! placement matrix through a decision-aware neural surrogate (GOBI-style,
+//! eq. 12), executed via the AOT-compiled gradient HLO. Decision-blind
+//! GOBI and classic heuristics (random, round-robin, best-fit) serve as
+//! ablations/baselines.
+
+pub mod daso;
+pub mod features;
+pub mod heuristics;
+
+pub use daso::GradientPlacer;
+pub use features::{FeatureLayout, SlotInfo};
+pub use heuristics::{BestFitPlacer, RandomPlacer, RoundRobinPlacer};
+
+use crate::sim::{ContainerId, WorkerSnapshot};
+
+/// Everything a placer sees at the start of an interval.
+pub struct PlacementInput<'a> {
+    /// Last interval's per-worker utilization (S_t).
+    pub snapshots: &'a [WorkerSnapshot],
+    /// Placeable containers in slot order.
+    pub slots: Vec<SlotInfo>,
+    /// Per-worker RAM capacity (MB) and currently-resident demand (MB).
+    pub ram_capacity: Vec<f64>,
+    pub resident_ram: Vec<f64>,
+    /// Allowed RAM overcommit factor (matches the engine's).
+    pub overcommit: f64,
+}
+
+impl<'a> PlacementInput<'a> {
+    pub fn workers(&self) -> usize {
+        self.ram_capacity.len()
+    }
+
+    /// Greedy feasibility: can `slot` go to `w` given what this placement
+    /// round has already committed (`extra` = MB added to w this round)?
+    pub fn fits(&self, slot: &SlotInfo, w: usize, extra: f64) -> bool {
+        if slot.prev_worker == Some(w) {
+            return true; // already resident there
+        }
+        self.resident_ram[w] + extra + slot.ram_mb <= self.ram_capacity[w] * self.overcommit
+    }
+}
+
+/// A placement engine: returns (container, worker) assignments. Containers
+/// omitted from the result stay in the wait queue.
+pub trait Placer {
+    fn place(&mut self, input: &PlacementInput) -> Vec<(ContainerId, usize)>;
+    fn name(&self) -> &'static str;
+}

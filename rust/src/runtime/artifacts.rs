@@ -1,0 +1,292 @@
+//! Artifact manifest: typed view over `artifacts/manifest.json` plus raw
+//! binary readers for parameter/dataset blobs.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::splits::{App, SplitDecision};
+use crate::util::json::{self, Value};
+
+/// One exported HLO fragment.
+#[derive(Clone, Debug)]
+pub struct FragmentArtifact {
+    pub name: String,
+    pub hlo: String,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub param_bytes: usize,
+}
+
+/// Per-app artifact bundle.
+#[derive(Clone, Debug)]
+pub struct AppArtifacts {
+    pub input_dim: usize,
+    pub classes: usize,
+    pub layer: Vec<FragmentArtifact>,
+    pub semantic: Vec<FragmentArtifact>,
+    pub full: FragmentArtifact,
+    pub compressed: FragmentArtifact,
+    /// Held-out accuracies measured at build time.
+    pub accuracy_layer: f64,
+    pub accuracy_semantic: f64,
+    pub accuracy_compressed: f64,
+    pub data_x: String,
+    pub data_y: String,
+    pub data_rows: usize,
+}
+
+impl AppArtifacts {
+    pub fn accuracy(&self, d: SplitDecision) -> f64 {
+        match d {
+            SplitDecision::Layer | SplitDecision::Full => self.accuracy_layer,
+            SplitDecision::Semantic => self.accuracy_semantic,
+            SplitDecision::Compressed => self.accuracy_compressed,
+        }
+    }
+
+    pub fn fragments(&self, d: SplitDecision) -> Vec<&FragmentArtifact> {
+        match d {
+            SplitDecision::Layer => self.layer.iter().collect(),
+            SplitDecision::Semantic => self.semantic.iter().collect(),
+            SplitDecision::Compressed => vec![&self.compressed],
+            SplitDecision::Full => vec![&self.full],
+        }
+    }
+}
+
+/// A surrogate variant entry.
+#[derive(Clone, Debug)]
+pub struct SurrogateArtifacts {
+    pub workers: usize,
+    pub slots: usize,
+    pub feature_dim: usize,
+    pub fwd: String,
+    pub fwd_batch: String,
+    pub fwd_batch_size: usize,
+    pub grad: String,
+    pub train: String,
+    pub train_batch: usize,
+    pub init: String,
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub eval_batch: usize,
+    pub apps: HashMap<App, AppArtifacts>,
+    pub surrogates: HashMap<String, SurrogateArtifacts>,
+}
+
+fn frag(v: &Value) -> Result<FragmentArtifact> {
+    Ok(FragmentArtifact {
+        name: v.req("name")?.as_str()?.to_string(),
+        hlo: v.req("hlo")?.as_str()?.to_string(),
+        in_dim: v.req("in_dim")?.as_usize()?,
+        out_dim: v.req("out_dim")?.as_usize()?,
+        param_bytes: v.req("param_bytes")?.as_usize()?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+
+        let mut apps = HashMap::new();
+        for (name, entry) in v.req("apps")?.as_obj()? {
+            let app = App::from_name(name)
+                .with_context(|| format!("unknown app '{name}' in manifest"))?;
+            let acc = entry.req("accuracy")?;
+            apps.insert(
+                app,
+                AppArtifacts {
+                    input_dim: entry.req("input_dim")?.as_usize()?,
+                    classes: entry.req("classes")?.as_usize()?,
+                    layer: entry
+                        .req("layer")?
+                        .as_arr()?
+                        .iter()
+                        .map(frag)
+                        .collect::<Result<_>>()?,
+                    semantic: entry
+                        .req("semantic")?
+                        .as_arr()?
+                        .iter()
+                        .map(frag)
+                        .collect::<Result<_>>()?,
+                    full: frag(entry.req("full")?)?,
+                    compressed: frag(entry.req("compressed")?)?,
+                    accuracy_layer: acc.req("layer")?.as_f64()?,
+                    accuracy_semantic: acc.req("semantic")?.as_f64()?,
+                    accuracy_compressed: acc.req("compressed")?.as_f64()?,
+                    data_x: entry.req("data_x")?.as_str()?.to_string(),
+                    data_y: entry.req("data_y")?.as_str()?.to_string(),
+                    data_rows: entry.req("data_rows")?.as_usize()?,
+                },
+            );
+        }
+
+        let mut surrogates = HashMap::new();
+        for (name, entry) in v.req("surrogates")?.as_obj()? {
+            surrogates.insert(
+                name.clone(),
+                SurrogateArtifacts {
+                    workers: entry.req("workers")?.as_usize()?,
+                    slots: entry.req("slots")?.as_usize()?,
+                    feature_dim: entry.req("feature_dim")?.as_usize()?,
+                    fwd: entry.req("fwd")?.as_str()?.to_string(),
+                    fwd_batch: entry.req("fwd_batch")?.as_str()?.to_string(),
+                    fwd_batch_size: entry.req("fwd_batch_size")?.as_usize()?,
+                    grad: entry.req("grad")?.as_str()?.to_string(),
+                    train: entry.req("train")?.as_str()?.to_string(),
+                    train_batch: entry.req("train_batch")?.as_usize()?,
+                    init: entry.req("init")?.as_str()?.to_string(),
+                    param_shapes: entry
+                        .req("param_shapes")?
+                        .as_arr()?
+                        .iter()
+                        .map(|s| {
+                            s.as_arr().map(|a| {
+                                a.iter().map(|d| d.as_usize().unwrap_or(0)).collect()
+                            })
+                        })
+                        .collect::<Result<_, _>>()?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            eval_batch: v.req("eval_batch")?.as_usize()?,
+            apps,
+            surrogates,
+        })
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Pick the surrogate variant matching a worker count (exact match or
+    /// smallest variant that fits).
+    pub fn surrogate_for(&self, workers: usize) -> Result<&SurrogateArtifacts> {
+        if let Some(s) = self.surrogates.values().find(|s| s.workers == workers) {
+            return Ok(s);
+        }
+        let mut best: Option<&SurrogateArtifacts> = None;
+        for s in self.surrogates.values() {
+            if s.workers >= workers {
+                best = match best {
+                    Some(b) if b.workers <= s.workers => Some(b),
+                    _ => Some(s),
+                };
+            }
+        }
+        best.ok_or_else(|| {
+            anyhow::anyhow!("no surrogate variant supports {workers} workers")
+        })
+    }
+
+    /// Read a little-endian f32 blob.
+    pub fn read_f32(&self, file: &str) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.path(file))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{file}: size {} not a multiple of 4", bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Read a little-endian i32 blob.
+    pub fn read_i32(&self, file: &str) -> Result<Vec<i32>> {
+        let bytes = std::fs::read(self.path(file))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{file}: size {} not a multiple of 4", bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn load_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.apps.len(), 3);
+        let mnist = &m.apps[&App::Mnist];
+        assert_eq!(mnist.input_dim, 784);
+        assert_eq!(mnist.layer.len(), 3);
+        assert_eq!(mnist.semantic.len(), 2);
+        assert!(mnist.accuracy_layer > 0.9);
+        // chain dims compose
+        assert_eq!(mnist.layer[0].out_dim, mnist.layer[1].in_dim);
+        let cifar = &m.apps[&App::Cifar100];
+        assert_eq!(cifar.semantic.len(), 4);
+        assert_eq!(
+            cifar.semantic.iter().map(|f| f.out_dim).sum::<usize>(),
+            100
+        );
+    }
+
+    #[test]
+    fn accuracy_ladder_in_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        for app in m.apps.values() {
+            assert!(app.accuracy_layer >= app.accuracy_semantic - 1e-9);
+            assert!(app.accuracy_layer > app.accuracy_compressed);
+        }
+    }
+
+    #[test]
+    fn surrogate_selection() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.surrogate_for(50).unwrap().workers, 50);
+        assert_eq!(m.surrogate_for(10).unwrap().workers, 10);
+        assert_eq!(m.surrogate_for(8).unwrap().workers, 10);
+        assert!(m.surrogate_for(500).is_err());
+    }
+
+    #[test]
+    fn binary_blobs_parse() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let app = &m.apps[&App::Mnist];
+        let x = m.read_f32(&app.data_x).unwrap();
+        let y = m.read_i32(&app.data_y).unwrap();
+        assert_eq!(x.len(), app.data_rows * app.input_dim);
+        assert_eq!(y.len(), app.data_rows);
+        assert!(y.iter().all(|&v| v >= 0 && (v as usize) < app.classes));
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}

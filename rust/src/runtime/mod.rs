@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text + binary blobs) emitted
+//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the only place the `xla` crate is touched; Python never runs at
+//! request time.
+
+pub mod artifacts;
+pub mod client;
+pub mod infer;
+pub mod surrogate;
+
+pub use artifacts::Manifest;
+pub use client::Runtime;
+pub use infer::InferenceEngine;
+pub use surrogate::Surrogate;

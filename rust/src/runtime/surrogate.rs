@@ -1,0 +1,257 @@
+//! DASO surrogate bindings: forward / gradient / AdamW-train-step HLOs with
+//! host-side parameter state (fine-tuned online, Algorithm 1 line 14).
+
+use anyhow::{ensure, Context as _, Result};
+
+use super::artifacts::SurrogateArtifacts;
+use super::client::{literal_f32, literal_scalar, Runtime};
+
+/// Runtime surrogate instance: compiled executables + current parameters.
+pub struct Surrogate<'rt> {
+    rt: &'rt Runtime,
+    pub spec: SurrogateArtifacts,
+    /// Flat parameter tensors (w1, b1, w2, b2, w3, b3) as host vectors.
+    params: Vec<Vec<f32>>,
+    /// Device-resident parameter buffers (§Perf iterations 1+4: rebuilding
+    /// host literals copied ~8 MB per gradient call, and the crate's
+    /// `execute` leaked its implicit input buffers; staging once and
+    /// executing with `execute_b` fixes both). Invalidated by train_step.
+    params_buf: Option<Vec<xla::PjRtBuffer>>,
+    /// AdamW moments.
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// AdamW step counter (bias correction).
+    step: f32,
+}
+
+impl<'rt> Surrogate<'rt> {
+    /// Load the variant for a worker count and its initial parameters.
+    pub fn for_workers(rt: &'rt Runtime, workers: usize) -> Result<Self> {
+        let spec = rt.manifest.surrogate_for(workers)?.clone();
+        let init = rt.manifest.read_f32(&spec.init)?;
+        let mut params = Vec::new();
+        let mut off = 0;
+        for shape in &spec.param_shapes {
+            let n: usize = shape.iter().product();
+            ensure!(off + n <= init.len(), "init blob too small");
+            params.push(init[off..off + n].to_vec());
+            off += n;
+        }
+        ensure!(off == init.len(), "init blob has trailing data");
+        let m = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let v = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        // pre-compile all three programs
+        rt.executable(&spec.fwd)?;
+        rt.executable(&spec.grad)?;
+        rt.executable(&spec.train)?;
+        Ok(Surrogate { rt, spec, params, params_buf: None, m, v, step: 0.0 })
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.spec.feature_dim
+    }
+
+    pub fn slots(&self) -> usize {
+        self.spec.slots
+    }
+
+    pub fn workers(&self) -> usize {
+        self.spec.workers
+    }
+
+    fn build_param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params
+            .iter()
+            .zip(&self.spec.param_shapes)
+            .map(|(p, s)| {
+                let dims: Vec<i64> = s.iter().map(|&d| d as i64).collect();
+                literal_f32(p, &dims)
+            })
+            .collect()
+    }
+
+    /// Device-resident parameter buffers; re-staged only after a train step.
+    fn param_buffers(&mut self) -> Result<&[xla::PjRtBuffer]> {
+        if self.params_buf.is_none() {
+            let bufs = self
+                .params
+                .iter()
+                .zip(&self.spec.param_shapes)
+                .map(|(p, s)| self.rt.buffer_f32(p, s))
+                .collect::<Result<Vec<_>>>()?;
+            self.params_buf = Some(bufs);
+        }
+        Ok(self.params_buf.as_deref().unwrap())
+    }
+
+    /// f([S,P,D]; θ) → scalar objective estimate.
+    pub fn fwd(&mut self, x: &[f32]) -> Result<f32> {
+        ensure!(x.len() == self.spec.feature_dim, "feature dim mismatch");
+        let x_buf = self.rt.buffer_f32(x, &[x.len()])?;
+        let hlo = self.spec.fwd.clone();
+        let rt = self.rt;
+        let params = self.param_buffers()?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        inputs.push(&x_buf);
+        let out = rt.run_b(&hlo, &inputs)?;
+        Ok(out[0].to_vec::<f32>()?[0])
+    }
+
+    /// Batched scoring of `fwd_batch_size` candidate feature vectors.
+    pub fn fwd_batch(&mut self, xb: &[f32]) -> Result<Vec<f32>> {
+        let b = self.spec.fwd_batch_size;
+        ensure!(xb.len() == b * self.spec.feature_dim, "batch shape mismatch");
+        let x_buf = self.rt.buffer_f32(xb, &[b, self.spec.feature_dim])?;
+        let hlo = self.spec.fwd_batch.clone();
+        let rt = self.rt;
+        let params = self.param_buffers()?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        inputs.push(&x_buf);
+        let out = rt.run_b(&hlo, &inputs)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// (f, ∂f/∂x) — the placement loop reads the P-segment of the gradient.
+    pub fn grad(&mut self, x: &[f32]) -> Result<(f32, Vec<f32>)> {
+        ensure!(x.len() == self.spec.feature_dim, "feature dim mismatch");
+        let x_buf = self.rt.buffer_f32(x, &[x.len()])?;
+        let hlo = self.spec.grad.clone();
+        let rt = self.rt;
+        let params = self.param_buffers()?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        inputs.push(&x_buf);
+        let out = rt.run_b(&hlo, &inputs)?;
+        let y = out[0].to_vec::<f32>()?[0];
+        let dx = out[1].to_vec::<f32>()?;
+        Ok((y, dx))
+    }
+
+    /// One AdamW step on MSE over a minibatch (xb row-major [B,F], yb [B]).
+    /// Returns the pre-step loss.
+    pub fn train_step(&mut self, xb: &[f32], yb: &[f32]) -> Result<f32> {
+        let b = self.spec.train_batch;
+        ensure!(xb.len() == b * self.spec.feature_dim, "xb shape mismatch");
+        ensure!(yb.len() == b, "yb shape mismatch");
+        self.step += 1.0;
+
+        let mut inputs = self.build_param_literals()?;
+        for (mm, s) in self.m.iter().zip(&self.spec.param_shapes) {
+            let dims: Vec<i64> = s.iter().map(|&d| d as i64).collect();
+            inputs.push(literal_f32(mm, &dims)?);
+        }
+        for (vv, s) in self.v.iter().zip(&self.spec.param_shapes) {
+            let dims: Vec<i64> = s.iter().map(|&d| d as i64).collect();
+            inputs.push(literal_f32(vv, &dims)?);
+        }
+        inputs.push(literal_scalar(self.step));
+        inputs.push(literal_f32(xb, &[b as i64, self.spec.feature_dim as i64])?);
+        inputs.push(literal_f32(yb, &[b as i64])?);
+
+        let out = self.rt.run(&self.spec.train, &inputs)?;
+        let np = self.params.len();
+        ensure!(out.len() == 1 + 3 * np, "train output arity");
+        let loss = out[0].to_vec::<f32>()?[0];
+        for i in 0..np {
+            self.params[i] = out[1 + i].to_vec::<f32>()?;
+            self.m[i] = out[1 + np + i].to_vec::<f32>()?;
+            self.v[i] = out[1 + 2 * np + i].to_vec::<f32>()?;
+        }
+        self.params_buf = None; // invalidate the device-buffer cache
+        Ok(loss)
+    }
+
+    /// Pre-train on a trace buffer until the loss plateaus (used by the
+    /// experiment runner to reproduce the paper's offline GOBI training).
+    pub fn pretrain(
+        &mut self,
+        buf: &crate::workload::trace::TraceBuffer,
+        steps: usize,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Result<f32> {
+        let mut last = f32::NAN;
+        for _ in 0..steps {
+            if let Some((xb, yb)) =
+                buf.minibatch(self.spec.train_batch, |n| rng.below(n as u64) as usize)
+            {
+                last = self.train_step(&xb, &yb).context("pretrain step")?;
+            }
+        }
+        Ok(last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(d.to_str().unwrap()).unwrap())
+    }
+
+    #[test]
+    fn fwd_and_grad_consistent() {
+        let Some(rt) = runtime() else { return };
+        let mut s = Surrogate::for_workers(&rt, 10).unwrap();
+        let f = s.feature_dim();
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..f).map(|_| rng.f64() as f32).collect();
+        let y0 = s.fwd(&x).unwrap();
+        let (y1, dx) = s.grad(&x).unwrap();
+        assert!((y0 - y1).abs() < 1e-3, "fwd {y0} vs grad-value {y1}");
+        assert_eq!(dx.len(), f);
+        // gradient should predict a small step's effect (directional check)
+        let eps = 1e-3f32;
+        let gnorm2: f32 = dx.iter().map(|g| g * g).sum();
+        if gnorm2 > 1e-12 {
+            let x2: Vec<f32> = x.iter().zip(&dx).map(|(xi, gi)| xi + eps * gi).collect();
+            let y2 = s.fwd(&x2).unwrap();
+            assert!(
+                y2 > y0 - 1e-4,
+                "ascent along gradient must not decrease f: {y0} -> {y2}"
+            );
+        }
+    }
+
+    #[test]
+    fn train_reduces_loss_on_fixed_batch() {
+        let Some(rt) = runtime() else { return };
+        let mut s = Surrogate::for_workers(&rt, 10).unwrap();
+        let b = s.spec.train_batch;
+        let f = s.feature_dim();
+        let mut rng = Rng::new(4);
+        let xb: Vec<f32> = (0..b * f).map(|_| rng.f64() as f32).collect();
+        let yb: Vec<f32> = (0..b).map(|_| rng.f64() as f32).collect();
+        let first = s.train_step(&xb, &yb).unwrap();
+        let mut last = first;
+        for _ in 0..25 {
+            last = s.train_step(&xb, &yb).unwrap();
+        }
+        assert!(
+            last < first * 0.6,
+            "loss should drop on a fixed batch: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn batched_fwd_matches_scalar() {
+        let Some(rt) = runtime() else { return };
+        let mut s = Surrogate::for_workers(&rt, 10).unwrap();
+        let f = s.feature_dim();
+        let b = s.spec.fwd_batch_size;
+        let mut rng = Rng::new(5);
+        let xb: Vec<f32> = (0..b * f).map(|_| rng.f64() as f32).collect();
+        let ys = s.fwd_batch(&xb).unwrap();
+        assert_eq!(ys.len(), b);
+        for i in [0usize, b - 1] {
+            let yi = s.fwd(&xb[i * f..(i + 1) * f]).unwrap();
+            assert!((ys[i] - yi).abs() < 1e-3, "row {i}: {} vs {yi}", ys[i]);
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Serving front-end: a thread-pool TCP server that exposes the SplitPlace
+//! broker as a JSON-lines inference service (offline substitute for the
+//! paper's Flask/HTTP COSCO front-end; no tokio in the offline crate set).
+//!
+//! Protocol (one JSON object per line):
+//!   request:  {"app": "mnist", "batch": 32000, "sla": 4.0}
+//!   response: {"ok": true, "decision": "layer", "accuracy": 0.98,
+//!              "latency_ms": 12.3, "rows": 256, "queue_ms": 0.4}
+//!
+//! The handler path is fully rust + PJRT: split decision via the MAB (UCB),
+//! real fragment execution via the runtime, no Python anywhere.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context as _, Result};
+
+use crate::config::MabConfig;
+use crate::mab::{MabPolicy, Mode};
+use crate::runtime::{InferenceEngine, Runtime};
+use crate::splits::App;
+use crate::util::json::{self, Value};
+use crate::workload::Task;
+
+/// Shared server state. The PJRT client is NOT thread-safe (Rc inside the
+/// xla crate), so each handler thread owns a full Runtime — exactly like
+/// the paper's edge workers, each of which runs its own container engine.
+struct Shared {
+    artifacts_dir: String,
+    mab: Mutex<MabPolicy>,
+    requests: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// Handle for a running server.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve on `addr` (e.g. "127.0.0.1:0") with `workers`
+    /// handler threads, emulating the paper's worker fleet: each handler
+    /// thread owns a PJRT-executing "edge worker".
+    pub fn start(artifacts_dir: &str, addr: &str, workers: usize) -> Result<Server> {
+        let listener = TcpListener::bind(addr).context("binding server socket")?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            artifacts_dir: artifacts_dir.to_string(),
+            mab: Mutex::new(MabPolicy::new(MabConfig::default(), Mode::Test)),
+            requests: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+
+        // bounded handoff queue: accept thread -> worker pool
+        let queue: Arc<(Mutex<Vec<TcpStream>>, std::sync::Condvar)> =
+            Arc::new((Mutex::new(Vec::new()), std::sync::Condvar::new()));
+
+        let mut threads = Vec::new();
+        for _ in 0..workers.max(1) {
+            let q = queue.clone();
+            let sh = shared.clone();
+            threads.push(std::thread::spawn(move || {
+                // per-thread PJRT runtime (see Shared docs)
+                let Ok(runtime) = Runtime::load(&sh.artifacts_dir) else {
+                    return;
+                };
+                loop {
+                let stream = {
+                    let (lock, cv) = &*q;
+                    let mut guard = lock.lock().unwrap();
+                    while guard.is_empty() {
+                        if sh.stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let (g, _timeout) = cv
+                            .wait_timeout(guard, std::time::Duration::from_millis(50))
+                            .unwrap();
+                        guard = g;
+                    }
+                    guard.pop()
+                };
+                if let Some(stream) = stream {
+                    let _ = handle_conn(stream, &sh, &runtime);
+                }
+                }
+            }));
+        }
+
+        let q2 = queue.clone();
+        let sh2 = shared.clone();
+        let accept_thread = std::thread::spawn(move || loop {
+            if sh2.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let (lock, cv) = &*q2;
+                    lock.lock().unwrap().push(stream);
+                    cv.notify_one();
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(_) => return,
+            }
+        });
+
+        Ok(Server { addr: local, shared, threads, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn requests_served(&self) -> u64 {
+        self.shared.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, sh: &Shared, runtime: &Runtime) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // Bounded reads so shutdown() can join workers while clients hold
+    // their connections open.
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(200)))
+        .ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let engine = InferenceEngine::new(runtime)?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if sh.stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        let reply = match serve_one(&line, sh, &engine) {
+            Ok(mut v) => {
+                if let Value::Obj(kv) = &mut v {
+                    kv.push((
+                        "latency_ms".into(),
+                        Value::Num(t0.elapsed().as_secs_f64() * 1000.0),
+                    ));
+                }
+                v
+            }
+            Err(e) => Value::obj(vec![
+                ("ok", Value::Bool(false)),
+                ("error", Value::Str(format!("{e:#}"))),
+            ]),
+        };
+        sh.requests.fetch_add(1, Ordering::Relaxed);
+        out.write_all(reply.to_string().as_bytes())?;
+        out.write_all(b"\n")?;
+    }
+}
+
+fn serve_one(line: &str, sh: &Shared, engine: &InferenceEngine) -> Result<Value> {
+    let req = json::parse(line.trim()).context("bad request json")?;
+    let app = App::from_name(req.req("app")?.as_str()?)
+        .ok_or_else(|| anyhow::anyhow!("unknown app"))?;
+    let batch = req.get("batch").and_then(|v| v.as_f64().ok()).unwrap_or(16_000.0) as u64;
+    let sla = req.get("sla").and_then(|v| v.as_f64().ok()).unwrap_or(5.0);
+
+    // MAB split decision (UCB), then real PJRT execution of the plan.
+    let task = Task { id: 0, app, batch, sla, arrival_s: 0.0, decision: None };
+    let decision = sh.mab.lock().unwrap().decide(&task);
+    let result = engine.run(app, decision)?;
+
+    Ok(Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("app", Value::Str(app.name().into())),
+        ("decision", Value::Str(decision.name().into())),
+        ("accuracy", Value::Num(result.accuracy)),
+        ("rows", Value::Num(result.rows as f64)),
+        ("compute_ms", Value::Num(result.compute_s * 1000.0)),
+    ]))
+}
+
+/// Minimal client for examples/tests.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    pub fn request(&mut self, app: &str, batch: u64, sla: f64) -> Result<Value> {
+        let req = Value::obj(vec![
+            ("app", Value::Str(app.into())),
+            ("batch", Value::Num(batch as f64)),
+            ("sla", Value::Num(sla)),
+        ]);
+        self.stream.write_all(req.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(json::parse(line.trim())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runner::try_runtime;
+
+    #[test]
+    fn serve_and_query() {
+        if try_runtime().is_none() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let dir = crate::coordinator::runner::artifacts_dir();
+        let server = Server::start(&dir, "127.0.0.1:0", 2).unwrap();
+        let mut client = Client::connect(server.addr).unwrap();
+        for (app, sla) in [("mnist", 9.0), ("cifar100", 1.0), ("fashionmnist", 5.0)] {
+            let r = client.request(app, 20_000, sla).unwrap();
+            assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), true, "{r}");
+            let acc = r.get("accuracy").unwrap().as_f64().unwrap();
+            assert!(acc > 0.3, "{app}: accuracy {acc}");
+            assert!(r.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+            let d = r.get("decision").unwrap().as_str().unwrap().to_string();
+            assert!(d == "layer" || d == "semantic");
+        }
+        assert_eq!(server.requests_served(), 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_request_reports_error() {
+        if try_runtime().is_none() {
+            return;
+        }
+        let dir = crate::coordinator::runner::artifacts_dir();
+        let server = Server::start(&dir, "127.0.0.1:0", 1).unwrap();
+        let mut client = Client::connect(server.addr).unwrap();
+        let r = client.request("not-an-app", 1, 1.0).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,145 @@
+//! Container lifecycle state machine.
+//!
+//! A task is realized as one container per split fragment (paper §3:
+//! C^i from decision d^i). Chain fragments are created `Blocked` and
+//! unblock when their predecessor completes; parallel fragments are
+//! immediately `Queued`. Placement moves `Queued` containers to a worker
+//! (input transfer, then `Running`); re-placement of a `Running` container
+//! triggers a CRIU-style `Migrating` phase.
+
+use crate::splits::{FragmentProfile, Precedence, SplitDecision};
+
+pub type ContainerId = usize;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ContainerState {
+    /// Waiting on a chain predecessor.
+    Blocked,
+    /// Ready for placement; in the broker's wait queue.
+    Queued,
+    /// Input/intermediate payload in flight to the assigned worker.
+    Transferring { until_s: f64 },
+    /// Executing on `worker`.
+    Running,
+    /// CRIU checkpoint/restore to another worker in progress.
+    Migrating { until_s: f64, to: usize },
+    /// Finished at the recorded time.
+    Done { at_s: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct Container {
+    pub id: ContainerId,
+    pub task_id: u64,
+    pub frag_idx: usize,
+    pub decision: SplitDecision,
+    pub precedence: Precedence,
+    pub profile: FragmentProfile,
+    /// Chain predecessor (container id), if any.
+    pub prev: Option<ContainerId>,
+    /// Total / completed work, million instructions.
+    pub mi_total: f64,
+    pub mi_done: f64,
+    /// Resident memory demand while running (MB).
+    pub ram_mb: f64,
+    /// Input payload that must reach the worker before start (MB).
+    pub input_mb: f64,
+    /// Output payload forwarded on completion (MB).
+    pub output_mb: f64,
+    pub state: ContainerState,
+    pub worker: Option<usize>,
+    /// Where the input payload currently lives (broker = None, or the
+    /// predecessor's worker).
+    pub input_src: Option<usize>,
+    pub created_s: f64,
+    // ---- time decomposition (seconds), for Fig. 14 ----
+    pub t_wait: f64,
+    pub t_transfer: f64,
+    pub t_exec: f64,
+    pub t_migrate: f64,
+}
+
+impl Container {
+    pub fn is_active(&self) -> bool {
+        !matches!(self.state, ContainerState::Done { .. })
+    }
+
+    /// Containers the placement engine should consider this interval.
+    /// Blocked chain successors are included: the paper's P_t covers ALL
+    /// active containers, so a chain is pre-placed at admission and each
+    /// stage starts the moment its predecessor finishes (no interval-
+    /// boundary wait).
+    pub fn is_placeable(&self) -> bool {
+        matches!(
+            self.state,
+            ContainerState::Blocked
+                | ContainerState::Queued
+                | ContainerState::Running
+                | ContainerState::Transferring { .. }
+        )
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, ContainerState::Done { .. })
+    }
+
+    pub fn remaining_fraction(&self) -> f64 {
+        if self.mi_total <= 0.0 {
+            0.0
+        } else {
+            ((self.mi_total - self.mi_done) / self.mi_total).clamp(0.0, 1.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::splits::{Registry, SplitDecision};
+
+    fn mk() -> Container {
+        let plan = Registry::plan(crate::splits::App::Mnist, SplitDecision::Layer);
+        Container {
+            id: 0,
+            task_id: 1,
+            frag_idx: 0,
+            decision: SplitDecision::Layer,
+            precedence: plan.precedence,
+            profile: plan.fragments[0].clone(),
+            prev: None,
+            mi_total: 100.0,
+            mi_done: 0.0,
+            ram_mb: 500.0,
+            input_mb: 10.0,
+            output_mb: 5.0,
+            state: ContainerState::Queued,
+            worker: None,
+            input_src: None,
+            created_s: 0.0,
+            t_wait: 0.0,
+            t_transfer: 0.0,
+            t_exec: 0.0,
+            t_migrate: 0.0,
+        }
+    }
+
+    #[test]
+    fn state_predicates() {
+        let mut c = mk();
+        assert!(c.is_active() && c.is_placeable() && !c.is_done());
+        c.state = ContainerState::Blocked;
+        assert!(c.is_active() && c.is_placeable(), "chains are pre-placed");
+        c.state = ContainerState::Done { at_s: 5.0 };
+        assert!(!c.is_active() && c.is_done());
+    }
+
+    #[test]
+    fn remaining_fraction_bounds() {
+        let mut c = mk();
+        assert_eq!(c.remaining_fraction(), 1.0);
+        c.mi_done = 50.0;
+        assert!((c.remaining_fraction() - 0.5).abs() < 1e-12);
+        c.mi_done = 200.0;
+        assert_eq!(c.remaining_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Discrete-interval mobile-edge execution engine.
+//!
+//! Substitutes the paper's physical Azure + Docker + CRIU testbed
+//! (DESIGN.md §3): containers with compute/memory demands run on the
+//! Table-3 fleet under fair-share CPU contention, RAM-pressure (swap)
+//! slowdown, mobility-modulated transfer times, CRIU-style migration, and
+//! SPEC-style energy accounting.
+
+pub mod container;
+pub mod engine;
+
+pub use container::{Container, ContainerId, ContainerState};
+pub use engine::{CompletedTask, Engine, IntervalReport, WorkerSnapshot};

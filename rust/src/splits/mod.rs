@@ -1,0 +1,43 @@
+//! Split-strategy space: layer chains, semantic groups, compressed and full
+//! variants, with per-fragment resource profiles used by the simulator and
+//! artifact names used by the PJRT runtime.
+
+pub mod registry;
+
+pub use registry::{App, FragmentProfile, Precedence, Registry, SplitPlan, APPS};
+
+/// The broker's per-task split decision (paper: d^i ∈ {L, S}; the baselines
+/// extend the space with compression and unsplit execution).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SplitDecision {
+    /// Sequential layer groups (high accuracy, high response time).
+    Layer,
+    /// Parallel semantic class-group subnets (lower accuracy, fast).
+    Semantic,
+    /// Single pruned model (MC baseline).
+    Compressed,
+    /// Unsplit full model (cloud baseline, Fig. 18).
+    Full,
+}
+
+impl SplitDecision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SplitDecision::Layer => "layer",
+            SplitDecision::Semantic => "semantic",
+            SplitDecision::Compressed => "compressed",
+            SplitDecision::Full => "full",
+        }
+    }
+
+    /// The MAB's two arms (paper: d ∈ {L, S}).
+    pub const ARMS: [SplitDecision; 2] = [SplitDecision::Layer, SplitDecision::Semantic];
+
+    pub fn arm_index(&self) -> usize {
+        match self {
+            SplitDecision::Layer => 0,
+            SplitDecision::Semantic => 1,
+            _ => panic!("{self:?} is not a MAB arm"),
+        }
+    }
+}

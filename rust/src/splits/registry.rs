@@ -1,0 +1,338 @@
+//! Per-app fragment profiles: compute (MI), memory, image sizes and
+//! intermediate-payload sizes for every split strategy.
+//!
+//! Calibration (DESIGN.md §3): worker MIPS and 300 s intervals from Table 3
+//! put a layer chain at ~5–9 intervals and a semantic fan-out at ~2–4 for
+//! the paper's 16k–64k batches under typical contention, matching Fig. 2's
+//! response-time ladder. Image sizes are the paper's (§6.2: 8–14 MB MNIST,
+//! 34–56 MB FashionMNIST, 47–76 MB CIFAR100 per fragment).
+
+use super::SplitDecision;
+
+/// One of the three applications (task types).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum App {
+    Mnist = 0,
+    FashionMnist = 1,
+    Cifar100 = 2,
+}
+
+pub const APPS: [App; 3] = [App::Mnist, App::FashionMnist, App::Cifar100];
+
+impl App {
+    pub fn name(&self) -> &'static str {
+        match self {
+            App::Mnist => "mnist",
+            App::FashionMnist => "fashionmnist",
+            App::Cifar100 => "cifar100",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<App> {
+        Some(match s {
+            "mnist" => App::Mnist,
+            "fashionmnist" => App::FashionMnist,
+            "cifar100" => App::Cifar100,
+            _ => return None,
+        })
+    }
+
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+
+    pub fn input_dim(&self) -> usize {
+        match self {
+            App::Cifar100 => 1024,
+            _ => 784,
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        match self {
+            App::Cifar100 => 100,
+            _ => 10,
+        }
+    }
+
+    /// Relative compute weight (CIFAR100 is the paper's "resource hungry"
+    /// app; Appendix A.3).
+    pub fn mi_scale(&self) -> f64 {
+        match self {
+            App::Mnist => 1.0,
+            App::FashionMnist => 1.25,
+            App::Cifar100 => 2.2,
+        }
+    }
+
+    pub fn semantic_groups(&self) -> usize {
+        match self {
+            App::Cifar100 => 4,
+            _ => 2,
+        }
+    }
+
+    /// Nominal layer-split response time (scheduling intervals) under
+    /// typical load — the reference the SLA sampler scales (§6.2 uses
+    /// Gillis' deadlines; this plays that role). Derived from calibration
+    /// runs of the simulator.
+    pub fn nominal_layer_rt(&self) -> f64 {
+        match self {
+            App::Mnist => 5.0,
+            App::FashionMnist => 6.0,
+            App::Cifar100 => 9.5,
+        }
+    }
+}
+
+/// Precedence structure of a split plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precedence {
+    /// Fragments form a linear chain; fragment k+1 may only start after k
+    /// completes and its output is transferred (paper §3.2 constraint 2).
+    Chain,
+    /// Fragments run in parallel; the task completes when ALL finish
+    /// (straggler-bound) and outputs are merged at the broker.
+    Parallel,
+}
+
+/// Resource profile of one deployable fragment.
+#[derive(Clone, Debug)]
+pub struct FragmentProfile {
+    /// Artifact key (`<app>_<kind><idx>`), resolves via the manifest.
+    pub artifact: String,
+    /// Compute demand: million instructions per 1000 batch samples.
+    pub mi_per_ksample: f64,
+    /// Resident memory independent of batch (params, runtime).
+    pub ram_fixed_mb: f64,
+    /// Activation memory per 1000 samples.
+    pub ram_per_ksample_mb: f64,
+    /// Docker-image size (one-time broadcast cost).
+    pub image_mb: f64,
+    /// Output payload per 1000 samples (intermediate forward / result).
+    pub out_mb_per_ksample: f64,
+}
+
+/// A realized split plan for (app, decision).
+#[derive(Clone, Debug)]
+pub struct SplitPlan {
+    pub app: App,
+    pub decision: SplitDecision,
+    pub precedence: Precedence,
+    pub fragments: Vec<FragmentProfile>,
+    /// Input payload per 1000 samples that must reach EVERY fragment at
+    /// start (semantic broadcast) or the FIRST fragment (chain).
+    pub input_mb_per_ksample: f64,
+}
+
+impl SplitPlan {
+    pub fn total_image_mb(&self) -> f64 {
+        self.fragments.iter().map(|f| f.image_mb).sum()
+    }
+
+    pub fn total_mi(&self, batch: u64) -> f64 {
+        let k = batch as f64 / 1000.0;
+        self.fragments.iter().map(|f| f.mi_per_ksample * k).sum()
+    }
+}
+
+/// Static registry of split plans.
+pub struct Registry;
+
+impl Registry {
+    /// Build the plan for a given app and decision.
+    pub fn plan(app: App, decision: SplitDecision) -> SplitPlan {
+        let s = app.mi_scale();
+        let input_mb_per_ksample = app.input_dim() as f64 * 4.0 / 1000.0; // f32 rows
+        let (image_lo, image_hi) = match app {
+            App::Mnist => (8.0, 14.0),
+            App::FashionMnist => (34.0, 56.0),
+            App::Cifar100 => (47.0, 76.0),
+        };
+        match decision {
+            SplitDecision::Layer => {
+                // 3 sequential layer groups; the first is the widest
+                // (input×hidden matmul dominates), the last the narrowest.
+                let weights = [0.45, 0.35, 0.20];
+                let out_dims = match app {
+                    App::Cifar100 => [512.0, 256.0, 100.0],
+                    _ => [256.0, 128.0, 10.0],
+                };
+                let fragments = (0..3)
+                    .map(|i| FragmentProfile {
+                        artifact: format!("{}_layer{}", app.name(), i),
+                        mi_per_ksample: 36_000.0 * s * 3.0 * weights[i],
+                        ram_fixed_mb: 120.0 * s,
+                        ram_per_ksample_mb: 8.0 * s * weights[i] / 0.45,
+                        image_mb: image_lo + (image_hi - image_lo) * (1.0 - i as f64 / 2.0),
+                        out_mb_per_ksample: out_dims[i] * 4.0 / 1000.0,
+                    })
+                    .collect();
+                SplitPlan {
+                    app,
+                    decision,
+                    precedence: Precedence::Chain,
+                    fragments,
+                    input_mb_per_ksample,
+                }
+            }
+            SplitDecision::Semantic => {
+                let g = app.semantic_groups();
+                // Each subnet is ~1/g the width but full depth; parallel
+                // wall-clock is roughly half a layer chain per fragment.
+                let fragments = (0..g)
+                    .map(|i| FragmentProfile {
+                        artifact: format!("{}_sem{}", app.name(), i),
+                        mi_per_ksample: 60_000.0 * s / g as f64 * 1.4,
+                        ram_fixed_mb: 80.0 * s,
+                        ram_per_ksample_mb: 5.0 * s,
+                        image_mb: image_lo + (image_hi - image_lo) * (i as f64 / g as f64),
+                        out_mb_per_ksample: app.classes() as f64 / g as f64 * 4.0 / 1000.0,
+                    })
+                    .collect();
+                SplitPlan {
+                    app,
+                    decision,
+                    precedence: Precedence::Parallel,
+                    fragments,
+                    input_mb_per_ksample,
+                }
+            }
+            SplitDecision::Compressed => SplitPlan {
+                app,
+                decision,
+                precedence: Precedence::Chain,
+                fragments: vec![FragmentProfile {
+                    artifact: format!("{}_comp", app.name()),
+                    mi_per_ksample: 120_000.0 * s,
+                    ram_fixed_mb: 90.0 * s,
+                    ram_per_ksample_mb: 9.0 * s,
+                    image_mb: image_lo * 0.8,
+                    out_mb_per_ksample: app.classes() as f64 * 4.0 / 1000.0,
+                }],
+                input_mb_per_ksample,
+            },
+            SplitDecision::Full => SplitPlan {
+                app,
+                decision,
+                precedence: Precedence::Chain,
+                fragments: vec![FragmentProfile {
+                    artifact: format!("{}_full", app.name()),
+                    mi_per_ksample: 180_000.0 * s,
+                    ram_fixed_mb: 320.0 * s,
+                    ram_per_ksample_mb: 14.0 * s,
+                    image_mb: image_hi * 1.5,
+                    out_mb_per_ksample: app.classes() as f64 * 4.0 / 1000.0,
+                }],
+                input_mb_per_ksample,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_plan_is_chain_of_three() {
+        for app in APPS {
+            let p = Registry::plan(app, SplitDecision::Layer);
+            assert_eq!(p.precedence, Precedence::Chain);
+            assert_eq!(p.fragments.len(), 3);
+            assert!(p.fragments[0].mi_per_ksample > p.fragments[2].mi_per_ksample);
+        }
+    }
+
+    #[test]
+    fn semantic_plan_is_parallel_groups() {
+        let p = Registry::plan(App::Cifar100, SplitDecision::Semantic);
+        assert_eq!(p.precedence, Precedence::Parallel);
+        assert_eq!(p.fragments.len(), 4);
+        let p2 = Registry::plan(App::Mnist, SplitDecision::Semantic);
+        assert_eq!(p2.fragments.len(), 2);
+    }
+
+    #[test]
+    fn semantic_total_compute_comparable_but_parallel() {
+        // total semantic MI is within 2x of layer MI, but per-fragment
+        // (= critical path) it is much smaller.
+        for app in APPS {
+            let l = Registry::plan(app, SplitDecision::Layer);
+            let s = Registry::plan(app, SplitDecision::Semantic);
+            let l_total = l.total_mi(40_000);
+            let s_total = s.total_mi(40_000);
+            assert!(s_total < 1.2 * l_total, "{app:?}");
+            let l_crit = l_total; // chain: sum
+            let s_crit = s.fragments[0].mi_per_ksample * 40.0; // parallel: max
+            assert!(
+                s_crit < 0.4 * l_crit,
+                "{app:?}: semantic critical path must be much shorter"
+            );
+        }
+    }
+
+    #[test]
+    fn cifar_is_heaviest() {
+        let m = Registry::plan(App::Mnist, SplitDecision::Layer).total_mi(40_000);
+        let c = Registry::plan(App::Cifar100, SplitDecision::Layer).total_mi(40_000);
+        assert!(c > 2.0 * m);
+    }
+
+    #[test]
+    fn image_sizes_match_paper_ranges() {
+        let p = Registry::plan(App::Mnist, SplitDecision::Layer);
+        for f in &p.fragments {
+            assert!((8.0..=14.0).contains(&f.image_mb), "{}", f.image_mb);
+        }
+        let p = Registry::plan(App::Cifar100, SplitDecision::Semantic);
+        for f in &p.fragments {
+            assert!((47.0..=76.0).contains(&f.image_mb), "{}", f.image_mb);
+        }
+    }
+
+    #[test]
+    fn artifact_names_match_manifest_convention() {
+        assert_eq!(
+            Registry::plan(App::Mnist, SplitDecision::Layer).fragments[0].artifact,
+            "mnist_layer0"
+        );
+        assert_eq!(
+            Registry::plan(App::Cifar100, SplitDecision::Semantic).fragments[3].artifact,
+            "cifar100_sem3"
+        );
+        assert_eq!(
+            Registry::plan(App::FashionMnist, SplitDecision::Compressed).fragments[0].artifact,
+            "fashionmnist_comp"
+        );
+    }
+
+    #[test]
+    fn chain_dims_shrink_payloads() {
+        let p = Registry::plan(App::Mnist, SplitDecision::Layer);
+        assert!(p.fragments[0].out_mb_per_ksample > p.fragments[2].out_mb_per_ksample);
+        // last fragment emits class logits only
+        assert!((p.fragments[2].out_mb_per_ksample - 10.0 * 4.0 / 1000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compressed_lighter_than_full() {
+        for app in APPS {
+            let c = Registry::plan(app, SplitDecision::Compressed);
+            let f = Registry::plan(app, SplitDecision::Full);
+            assert!(c.total_mi(40_000) < f.total_mi(40_000));
+            assert!(c.fragments[0].ram_fixed_mb < f.fragments[0].ram_fixed_mb);
+        }
+    }
+
+    #[test]
+    fn app_helpers() {
+        assert_eq!(App::from_name("mnist"), Some(App::Mnist));
+        assert_eq!(App::from_name("bogus"), None);
+        assert_eq!(App::Cifar100.input_dim(), 1024);
+        assert_eq!(App::Mnist.classes(), 10);
+        for (i, a) in APPS.iter().enumerate() {
+            assert_eq!(a.index(), i);
+        }
+    }
+}

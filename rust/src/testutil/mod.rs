@@ -1,0 +1,55 @@
+//! Property-testing driver (offline substitute for proptest): seeded case
+//! generation with failure reporting. No shrinking — failures print the
+//! case seed so they can be replayed deterministically.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` property checks. `gen` builds a case from a seeded RNG,
+/// `prop` returns Err(description) on violation. Panics with the seed of
+/// the first failing case.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 50, |r| (r.below(100), r.below(100)), |(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |r| r.below(10), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-built substrates: PRNG, JSON, statistics, tables, logging.
+//!
+//! The build host is fully offline and its crate cache only contains the
+//! `xla` closure, so the usual `rand`/`serde`/`log` dependencies are
+//! re-implemented here (see DESIGN.md §8).
+
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod table;

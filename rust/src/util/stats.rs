@@ -1,0 +1,191 @@
+//! Statistics helpers: running moments, percentiles, EMA, Jain fairness.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Exponential moving average with multiplier `phi` for the newest sample
+/// (paper eq. 2: `R <- phi * r + (1 - phi) * R`).
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    phi: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(phi: f64) -> Self {
+        assert!((0.0..=1.0).contains(&phi));
+        Ema { phi, value: None }
+    }
+
+    pub fn with_initial(phi: f64, init: f64) -> Self {
+        Ema { phi, value: Some(init) }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => self.phi * x + (1.0 - self.phi) * v,
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+}
+
+/// Percentile with linear interpolation (q in [0, 100]); sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Jain's fairness index: `(sum x)^2 / (n * sum x^2)`; 1.0 = perfectly fair.
+pub fn jain_fairness(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 == 0.0 {
+        1.0
+    } else {
+        s * s / (xs.len() as f64 * s2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for x in xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(w.count(), 8);
+    }
+
+    #[test]
+    fn welford_empty() {
+        let w = Welford::new();
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.variance(), 0.0);
+    }
+
+    #[test]
+    fn ema_paper_update_rule() {
+        // R <- phi*r + (1-phi)*R with phi=0.9
+        let mut e = Ema::with_initial(0.9, 10.0);
+        e.push(20.0);
+        assert!((e.get().unwrap() - (0.9 * 20.0 + 0.1 * 10.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_first_sample_initializes() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.get(), None);
+        e.push(3.0);
+        assert_eq!(e.get(), Some(3.0));
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn fairness_bounds() {
+        assert_eq!(jain_fairness(&[5.0, 5.0, 5.0]), 1.0);
+        let skewed = jain_fairness(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((skewed - 0.25).abs() < 1e-12);
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert_eq!(jain_fairness(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn mean_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((std(&[2.0, 4.0]) - std(&[4.0, 2.0])).abs() < 1e-12);
+    }
+}

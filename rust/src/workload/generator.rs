@@ -1,0 +1,148 @@
+//! Poisson(λ) task generator (paper §6.2): at the start of each interval,
+//! Poisson(λ) tasks arrive, app sampled from the (possibly constrained)
+//! app mix, batch ~ U(16k, 64k), SLA ~ U(lo, hi) × nominal layer RT.
+
+use super::Task;
+use crate::config::WorkloadConfig;
+use crate::splits::{App, APPS};
+use crate::util::rng::Rng;
+
+pub struct Generator {
+    cfg: WorkloadConfig,
+    rng: Rng,
+    next_id: u64,
+    cumulative_weights: [f64; 3],
+}
+
+impl Generator {
+    pub fn new(cfg: WorkloadConfig) -> Self {
+        let total: f64 = cfg.app_weights.iter().sum();
+        assert!(total > 0.0, "app weights must not all be zero");
+        let mut acc = 0.0;
+        let mut cw = [0.0; 3];
+        for i in 0..3 {
+            acc += cfg.app_weights[i] / total;
+            cw[i] = acc;
+        }
+        let seed = cfg.seed;
+        Generator { cfg, rng: Rng::new(seed), next_id: 0, cumulative_weights: cw }
+    }
+
+    fn sample_app(&mut self) -> App {
+        let u = self.rng.f64();
+        for (i, &c) in self.cumulative_weights.iter().enumerate() {
+            if u <= c {
+                return APPS[i];
+            }
+        }
+        APPS[2]
+    }
+
+    /// Tasks arriving at the start of one interval (`now_s` = interval start).
+    pub fn arrivals(&mut self, now_s: f64) -> Vec<Task> {
+        let n = self.rng.poisson(self.cfg.lambda);
+        (0..n).map(|_| self.one(now_s)).collect()
+    }
+
+    /// A single task (used by the serving front-end too).
+    pub fn one(&mut self, now_s: f64) -> Task {
+        let app = self.sample_app();
+        let batch = self
+            .rng
+            .int_range(self.cfg.batch_min as i64, self.cfg.batch_max as i64)
+            as u64;
+        // SLA scales with the batch (the paper takes per-request deadlines
+        // from Gillis, which are proportional to the work): nominal layer
+        // RT is calibrated at a 40k batch.
+        let size_factor = batch as f64 / 40_000.0;
+        let sla = self.rng.range(self.cfg.sla_lo, self.cfg.sla_hi)
+            * app.nominal_layer_rt()
+            * size_factor;
+        let id = self.next_id;
+        self.next_id += 1;
+        Task { id, app, batch, sla, arrival_s: now_s, decision: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    #[test]
+    fn poisson_rate_respected() {
+        let mut g = Generator::new(WorkloadConfig { lambda: 6.0, ..Default::default() });
+        let total: usize = (0..500).map(|i| g.arrivals(i as f64 * 300.0).len()).sum();
+        let mean = total as f64 / 500.0;
+        assert!((mean - 6.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn batch_range() {
+        let mut g = Generator::new(WorkloadConfig::default());
+        for _ in 0..200 {
+            let t = g.one(0.0);
+            assert!((16_000..=64_000).contains(&t.batch));
+        }
+    }
+
+    #[test]
+    fn sla_scales_with_app_nominal_and_batch() {
+        let cfg = WorkloadConfig { sla_lo: 1.0, sla_hi: 1.0, ..Default::default() };
+        let mut g = Generator::new(cfg);
+        for _ in 0..100 {
+            let t = g.one(0.0);
+            let want = t.app.nominal_layer_rt() * t.batch as f64 / 40_000.0;
+            assert!((t.sla - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sla_spans_both_mab_contexts() {
+        // defaults must generate both sla < nominal and sla >= nominal
+        let mut g = Generator::new(WorkloadConfig::default());
+        let (mut low, mut high) = (0, 0);
+        for _ in 0..500 {
+            let t = g.one(0.0);
+            if t.sla < t.app.nominal_layer_rt() {
+                low += 1;
+            } else {
+                high += 1;
+            }
+        }
+        assert!(low > 50 && high > 50, "low={low} high={high}");
+    }
+
+    #[test]
+    fn single_app_mix() {
+        let cfg = WorkloadConfig { app_weights: [0.0, 0.0, 1.0], ..Default::default() };
+        let mut g = Generator::new(cfg);
+        for _ in 0..50 {
+            assert_eq!(g.one(0.0).app, crate::splits::App::Cifar100);
+        }
+    }
+
+    #[test]
+    fn ids_unique_and_monotone() {
+        let mut g = Generator::new(WorkloadConfig::default());
+        let ids: Vec<u64> = (0..100).map(|_| g.one(0.0).id).collect();
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(*id, i as u64);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let mut g = Generator::new(WorkloadConfig::default());
+            (0..50).map(|_| g.one(0.0).batch).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    #[should_panic(expected = "app weights")]
+    fn zero_weights_rejected() {
+        Generator::new(WorkloadConfig { app_weights: [0.0; 3], ..Default::default() });
+    }
+}

@@ -1,0 +1,29 @@
+//! Workload model: Poisson task arrivals with app mix, batch sizes and SLA
+//! deadlines (paper §6.2), plus trace record/replay for surrogate training.
+
+pub mod generator;
+pub mod replay;
+pub mod trace;
+
+use crate::splits::{App, SplitDecision};
+
+/// One inference task (paper: i = {b_i, sla_i, a_i}).
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: u64,
+    pub app: App,
+    /// Batch size in samples (paper: uniform 16k–64k).
+    pub batch: u64,
+    /// SLA deadline in scheduling intervals.
+    pub sla: f64,
+    /// Arrival time (simulation seconds).
+    pub arrival_s: f64,
+    /// Split decision once taken (stays fixed for the task's lifetime).
+    pub decision: Option<SplitDecision>,
+}
+
+impl Task {
+    pub fn batch_k(&self) -> f64 {
+        self.batch as f64 / 1000.0
+    }
+}

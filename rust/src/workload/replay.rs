@@ -1,0 +1,153 @@
+//! Workload trace record/replay: serialize a generated arrival sequence to
+//! JSON and replay it verbatim, so different policies can be compared on
+//! the *identical* task stream (used by the figure benches for paired
+//! comparisons, and handy for regression triage).
+
+use anyhow::{Context as _, Result};
+
+use crate::splits::App;
+use crate::util::json::{self, Value};
+
+use super::Task;
+
+/// Serialize tasks (arrival order) to a JSON array.
+pub fn to_json(tasks: &[Task]) -> Value {
+    Value::Arr(
+        tasks
+            .iter()
+            .map(|t| {
+                Value::obj(vec![
+                    ("id", Value::Num(t.id as f64)),
+                    ("app", Value::Str(t.app.name().into())),
+                    ("batch", Value::Num(t.batch as f64)),
+                    ("sla", Value::Num(t.sla)),
+                    ("arrival_s", Value::Num(t.arrival_s)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Parse a recorded trace.
+pub fn from_json(v: &Value) -> Result<Vec<Task>> {
+    v.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(Task {
+                id: t.req("id")?.as_f64()? as u64,
+                app: App::from_name(t.req("app")?.as_str()?)
+                    .context("unknown app in trace")?,
+                batch: t.req("batch")?.as_f64()? as u64,
+                sla: t.req("sla")?.as_f64()?,
+                arrival_s: t.req("arrival_s")?.as_f64()?,
+                decision: None,
+            })
+        })
+        .collect()
+}
+
+/// Write a trace file.
+pub fn save(tasks: &[Task], path: impl AsRef<std::path::Path>) -> Result<()> {
+    std::fs::write(path, to_json(tasks).to_pretty())?;
+    Ok(())
+}
+
+/// Load a trace file.
+pub fn load(path: impl AsRef<std::path::Path>) -> Result<Vec<Task>> {
+    let text = std::fs::read_to_string(path)?;
+    from_json(&json::parse(&text)?)
+}
+
+/// Replay iterator: yields the tasks arriving within each interval.
+pub struct Replay {
+    tasks: Vec<Task>,
+    cursor: usize,
+    interval_seconds: f64,
+    interval: usize,
+}
+
+impl Replay {
+    pub fn new(mut tasks: Vec<Task>, interval_seconds: f64) -> Self {
+        tasks.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        Replay { tasks, cursor: 0, interval_seconds, interval: 0 }
+    }
+
+    /// Tasks arriving in the next interval window.
+    pub fn next_interval(&mut self) -> Vec<Task> {
+        let end = (self.interval + 1) as f64 * self.interval_seconds;
+        let mut out = Vec::new();
+        while self.cursor < self.tasks.len() && self.tasks[self.cursor].arrival_s < end {
+            out.push(self.tasks[self.cursor].clone());
+            self.cursor += 1;
+        }
+        self.interval += 1;
+        out
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.tasks.len() - self.cursor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::generator::Generator;
+
+    fn sample_tasks() -> Vec<Task> {
+        let mut g = Generator::new(WorkloadConfig::default());
+        let mut tasks = Vec::new();
+        for i in 0..5 {
+            tasks.extend(g.arrivals(i as f64 * 300.0));
+        }
+        tasks
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let tasks = sample_tasks();
+        let back = from_json(&to_json(&tasks)).unwrap();
+        assert_eq!(back.len(), tasks.len());
+        for (a, b) in tasks.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.app, b.app);
+            assert_eq!(a.batch, b.batch);
+            assert!((a.sla - b.sla).abs() < 1e-12);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let tasks = sample_tasks();
+        let path = std::env::temp_dir().join("splitplace_trace_test.json");
+        save(&tasks, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), tasks.len());
+    }
+
+    #[test]
+    fn replay_windows_tasks_by_interval() {
+        let tasks = sample_tasks();
+        let total = tasks.len();
+        let mut r = Replay::new(tasks.clone(), 300.0);
+        let mut replayed = 0;
+        for i in 0..5 {
+            let window = r.next_interval();
+            for t in &window {
+                assert!(t.arrival_s < (i + 1) as f64 * 300.0);
+                assert!(t.arrival_s >= i as f64 * 300.0 - 1e-9);
+            }
+            replayed += window.len();
+        }
+        assert_eq!(replayed, total);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn bad_trace_rejected() {
+        assert!(from_json(&json::parse(r#"[{"id":1}]"#).unwrap()).is_err());
+        assert!(from_json(&json::parse(r#"[{"id":1,"app":"bogus","batch":1,"sla":1,"arrival_s":0}]"#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Execution-trace recording: the dataset Λ = {([S_t, P_t, D_t], O_t)}
+//! used to pre-train the DASO/GOBI surrogate (paper §4.2, eq. 11), plus
+//! CSV-ish export for offline analysis.
+
+use crate::util::json::Value;
+
+/// One surrogate training sample.
+#[derive(Clone, Debug)]
+pub struct TraceSample {
+    /// Flattened feature vector [S_t | P_t | D_t | demands] (layout in
+    /// `placement::features`).
+    pub features: Vec<f32>,
+    /// Observed objective O^P for the interval (eq. 10).
+    pub objective: f32,
+}
+
+/// Rolling trace buffer with reservoir-style capping.
+#[derive(Clone, Debug)]
+pub struct TraceBuffer {
+    samples: Vec<TraceSample>,
+    cap: usize,
+    seen: usize,
+}
+
+impl TraceBuffer {
+    pub fn new(cap: usize) -> Self {
+        TraceBuffer { samples: Vec::new(), cap, seen: 0 }
+    }
+
+    pub fn push(&mut self, s: TraceSample) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(s);
+        } else {
+            // overwrite oldest (sliding window keeps recent dynamics,
+            // which matters for non-stationary fine-tuning)
+            let idx = self.seen % self.cap;
+            self.samples[idx] = s;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[TraceSample] {
+        &self.samples
+    }
+
+    /// Assemble a training minibatch (xb flattened row-major, yb) of
+    /// exactly `batch` rows, sampling with replacement via the caller's
+    /// index choice function.
+    pub fn minibatch(
+        &self,
+        batch: usize,
+        mut pick: impl FnMut(usize) -> usize,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let f = self.samples[0].features.len();
+        let mut xb = Vec::with_capacity(batch * f);
+        let mut yb = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let s = &self.samples[pick(self.samples.len())];
+            xb.extend_from_slice(&s.features);
+            yb.push(s.objective);
+        }
+        Some((xb, yb))
+    }
+
+    /// JSON export (for debugging / offline analysis).
+    pub fn to_json(&self) -> Value {
+        Value::Arr(
+            self.samples
+                .iter()
+                .map(|s| {
+                    Value::obj(vec![
+                        ("y", Value::Num(s.objective as f64)),
+                        ("f_dim", Value::Num(s.features.len() as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(y: f32) -> TraceSample {
+        TraceSample { features: vec![y; 4], objective: y }
+    }
+
+    #[test]
+    fn capping_overwrites_oldest() {
+        let mut b = TraceBuffer::new(3);
+        for i in 0..10 {
+            b.push(sample(i as f32));
+        }
+        assert_eq!(b.len(), 3);
+        // newest samples survive
+        let max = b.samples().iter().map(|s| s.objective).fold(0.0, f32::max);
+        assert!(max >= 7.0);
+    }
+
+    #[test]
+    fn minibatch_shapes() {
+        let mut b = TraceBuffer::new(8);
+        for i in 0..5 {
+            b.push(sample(i as f32));
+        }
+        let (xb, yb) = b.minibatch(4, |n| n - 1).unwrap();
+        assert_eq!(xb.len(), 4 * 4);
+        assert_eq!(yb.len(), 4);
+        assert!(yb.iter().all(|&y| y == 4.0));
+    }
+
+    #[test]
+    fn empty_minibatch_none() {
+        let b = TraceBuffer::new(4);
+        assert!(b.minibatch(2, |_| 0).is_none());
+    }
+}

@@ -1,0 +1,473 @@
+//! Property-based tests over coordinator/simulator invariants (proptest is
+//! not in the offline crate set; `splitplace::testutil::check` provides the
+//! seeded-case driver — failures report the case seed for replay).
+
+use splitplace::cluster::build_fleet;
+use splitplace::config::{ClusterConfig, MabConfig, SimConfig, WorkloadConfig};
+use splitplace::mab::{Bandit, Context, MabPolicy, Mode};
+use splitplace::placement::{BestFitPlacer, FeatureLayout, Placer, PlacementInput, SlotInfo};
+use splitplace::sim::{CompletedTask, ContainerState, Engine, WorkerSnapshot};
+use splitplace::splits::{App, Registry, SplitDecision, APPS};
+use splitplace::testutil::check;
+use splitplace::util::rng::Rng;
+use splitplace::workload::generator::Generator;
+use splitplace::workload::Task;
+
+fn rand_app(rng: &mut Rng) -> App {
+    APPS[rng.below(3) as usize]
+}
+
+fn rand_decision(rng: &mut Rng) -> SplitDecision {
+    [
+        SplitDecision::Layer,
+        SplitDecision::Semantic,
+        SplitDecision::Compressed,
+        SplitDecision::Full,
+    ][rng.below(4) as usize]
+}
+
+/// Engine + random admissions + random (feasibility-checked) placements.
+fn random_engine(rng: &mut Rng, intervals: usize) -> (Engine, usize) {
+    let cluster = build_fleet(&ClusterConfig::small());
+    let mut engine = Engine::new(cluster, SimConfig::default(), rng.next_u64());
+    let mut admitted = 0;
+    for i in 0..intervals {
+        let n = rng.below(4);
+        for j in 0..n {
+            let task = Task {
+                id: (i * 10 + j as usize) as u64,
+                app: rand_app(rng),
+                batch: rng.int_range(16_000, 64_000) as u64,
+                sla: rng.range(1.0, 15.0),
+                arrival_s: engine.now_s,
+                decision: None,
+            };
+            engine.admit(task, rand_decision(rng));
+            admitted += 1;
+        }
+        let mut assigns: Vec<(usize, usize)> = Vec::new();
+        for c in engine.placeable() {
+            if rng.chance(0.8) {
+                assigns.push((c, rng.below(10) as usize));
+            }
+        }
+        engine.apply_placement(&assigns);
+        engine.step_interval();
+    }
+    (engine, admitted)
+}
+
+#[test]
+fn prop_no_task_lost_or_duplicated() {
+    check(
+        "task-conservation",
+        20,
+        |rng| random_engine(rng, 12),
+        |(engine, admitted)| {
+            // every admitted task is either active or fully completed;
+            // container states are consistent with task bookkeeping
+            let mut per_task: std::collections::HashMap<u64, (usize, usize)> =
+                std::collections::HashMap::new();
+            for c in &engine.containers {
+                let e = per_task.entry(c.task_id).or_insert((0, 0));
+                e.0 += 1;
+                if c.is_done() {
+                    e.1 += 1;
+                }
+            }
+            if per_task.len() != *admitted {
+                return Err(format!(
+                    "admitted {admitted} tasks but engine tracks {}",
+                    per_task.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_capacity_never_exceeded_at_allocation() {
+    check(
+        "allocation-capacity",
+        20,
+        |rng| {
+            let cluster = build_fleet(&ClusterConfig::small());
+            let mut engine = Engine::new(cluster, SimConfig::default(), rng.next_u64());
+            for j in 0..12 {
+                let task = Task {
+                    id: j,
+                    app: rand_app(rng),
+                    batch: 64_000,
+                    sla: 5.0,
+                    arrival_s: 0.0,
+                    decision: None,
+                };
+                engine.admit(task, rand_decision(rng));
+            }
+            let assigns: Vec<(usize, usize)> = engine
+                .placeable()
+                .into_iter()
+                .map(|c| (c, rng.below(10) as usize))
+                .collect();
+            engine.apply_placement(&assigns);
+            engine
+        },
+        |engine| {
+            let resident = engine.resident_ram();
+            for (w, worker) in engine.cluster.workers.iter().enumerate() {
+                let cap = worker.spec.ram_mb * splitplace::sim::engine::RAM_OVERCOMMIT;
+                // a single container may legitimately exceed cap on its own
+                // only if it was the first (engine admits |c| <= cap slack);
+                // the invariant: resident never exceeds cap + one container
+                if resident[w] > cap + 1e-6 {
+                    // check it's not due to a single oversized container
+                    let on_w: Vec<f64> = engine
+                        .containers
+                        .iter()
+                        .filter(|c| c.worker == Some(w) && c.is_active())
+                        .map(|c| c.ram_mb)
+                        .collect();
+                    let max_single = on_w.iter().cloned().fold(0.0, f64::max);
+                    if resident[w] - max_single > cap {
+                        return Err(format!(
+                            "worker {w}: resident {} > cap {cap}",
+                            resident[w]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_layer_precedence_never_violated() {
+    check(
+        "chain-precedence",
+        20,
+        |rng| random_engine(rng, 10).0,
+        |engine| {
+            for c in &engine.containers {
+                if let Some(prev) = c.prev {
+                    let prev_done = engine.containers[prev].is_done();
+                    let started = !matches!(
+                        c.state,
+                        ContainerState::Blocked | ContainerState::Queued
+                    ) || c.mi_done > 0.0;
+                    // a successor that has started (or moved past Blocked)
+                    // requires its predecessor to be complete
+                    if c.mi_done > 0.0 && !prev_done {
+                        return Err(format!(
+                            "container {} progressed before predecessor {prev} finished",
+                            c.id
+                        ));
+                    }
+                    if matches!(c.state, ContainerState::Running) && !prev_done {
+                        return Err(format!("container {} running before {prev} done", c.id));
+                    }
+                    let _ = started;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_completed_task_times_consistent() {
+    check(
+        "time-decomposition",
+        15,
+        |rng| {
+            let (engine, _) = random_engine(rng, 25);
+            engine
+        },
+        |_engine| Ok(()), // engine state checked during run below
+    );
+    // stronger: responses are positive and decomposition parts are
+    // non-negative on a seeded full run
+    let mut rng = Rng::new(99);
+    let cluster = build_fleet(&ClusterConfig::small());
+    let mut engine = Engine::new(cluster, SimConfig::default(), 5);
+    let mut completed: Vec<CompletedTask> = Vec::new();
+    for i in 0..30 {
+        let task = Task {
+            id: i,
+            app: rand_app(&mut rng),
+            batch: 32_000,
+            sla: 6.0,
+            arrival_s: engine.now_s,
+            decision: None,
+        };
+        engine.admit(task, SplitDecision::Layer);
+        let assigns: Vec<(usize, usize)> = engine
+            .placeable()
+            .into_iter()
+            .map(|c| (c, rng.below(10) as usize))
+            .collect();
+        engine.apply_placement(&assigns);
+        completed.extend(engine.step_interval().completed);
+    }
+    assert!(!completed.is_empty());
+    for t in &completed {
+        assert!(t.response > 0.0, "response must be positive");
+        assert!(t.wait >= 0.0 && t.exec > 0.0 && t.transfer >= 0.0 && t.migrate >= 0.0);
+        assert!(
+            t.response + 1e-6 >= t.exec / 3.0,
+            "response can't be wildly below exec"
+        );
+        assert!(!t.workers.is_empty());
+    }
+}
+
+#[test]
+fn prop_mab_rewards_bounded() {
+    check(
+        "mab-reward-bounds",
+        50,
+        |rng| {
+            let mut tasks = Vec::new();
+            for i in 0..rng.int_range(1, 20) {
+                tasks.push(CompletedTask {
+                    task_id: i as u64,
+                    app: rand_app(rng),
+                    decision: if rng.chance(0.5) {
+                        SplitDecision::Layer
+                    } else {
+                        SplitDecision::Semantic
+                    },
+                    batch: rng.int_range(16_000, 64_000) as u64,
+                    sla: rng.range(0.5, 20.0),
+                    response: rng.range(0.1, 25.0),
+                    wait: rng.range(0.0, 3.0),
+                    exec: rng.range(0.1, 20.0),
+                    transfer: rng.range(0.0, 2.0),
+                    migrate: 0.0,
+                    workers: vec![0],
+                    accuracy: rng.f64(),
+                });
+            }
+            tasks
+        },
+        |tasks| {
+            let mut bandit = Bandit::new(0.3);
+            let tagged: Vec<(Context, &CompletedTask)> = tasks
+                .iter()
+                .map(|t| (Context::of(t.sla, 5.0), t))
+                .collect();
+            let o = bandit.update(&tagged);
+            if !(0.0..=1.0).contains(&o) {
+                return Err(format!("O^MAB {o} out of [0,1]"));
+            }
+            for c in 0..2 {
+                for a in 0..2 {
+                    if !(0.0..=1.0).contains(&bandit.q[c][a]) {
+                        return Err(format!("Q[{c}][{a}] = {} out of [0,1]", bandit.q[c][a]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mab_policy_decisions_are_arms() {
+    check(
+        "mab-decisions-valid",
+        30,
+        |rng| {
+            let mode = if rng.chance(0.5) { Mode::Train } else { Mode::Test };
+            let mut policy = MabPolicy::new(MabConfig::default(), mode);
+            let mut ds = Vec::new();
+            for i in 0..50 {
+                let t = Task {
+                    id: i,
+                    app: rand_app(rng),
+                    batch: rng.int_range(16_000, 64_000) as u64,
+                    sla: rng.range(0.5, 20.0),
+                    arrival_s: 0.0,
+                    decision: None,
+                };
+                ds.push(policy.decide(&t));
+            }
+            ds
+        },
+        |ds| {
+            for d in ds {
+                if !matches!(d, SplitDecision::Layer | SplitDecision::Semantic) {
+                    return Err(format!("MAB produced non-arm decision {d:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_placement_outputs_feasible_and_unique() {
+    check(
+        "placement-feasible",
+        40,
+        |rng| {
+            let n = rng.int_range(2, 20) as usize;
+            let slots: Vec<SlotInfo> = (0..rng.int_range(1, 30) as usize)
+                .map(|i| SlotInfo {
+                    cid: i,
+                    prev_worker: None,
+                    decision: SplitDecision::Layer,
+                    mi_remaining: rng.range(1e5, 5e6),
+                    ram_mb: rng.range(50.0, 6000.0),
+                    input_mb: rng.range(1.0, 300.0),
+                    remaining_frac: rng.f64(),
+                })
+                .collect();
+            let caps: Vec<f64> = (0..n).map(|_| rng.range(2000.0, 8000.0)).collect();
+            let resident: Vec<f64> = caps.iter().map(|c| rng.range(0.0, *c)).collect();
+            (slots, caps, resident, rng.next_u64())
+        },
+        |(slots, caps, resident, seed)| {
+            let snaps =
+                vec![WorkerSnapshot { cpu: 0.5, ram: 0.5, net: 0.0, disk: 0.0, containers: 0 }; caps.len()];
+            let input = PlacementInput {
+                snapshots: &snaps,
+                slots: slots.clone(),
+                ram_capacity: caps.clone(),
+                resident_ram: resident.clone(),
+                overcommit: 2.0,
+            };
+            let mut placer = BestFitPlacer;
+            let out = placer.place(&input);
+            // no duplicate containers
+            let mut seen = std::collections::HashSet::new();
+            for (cid, w) in &out {
+                if !seen.insert(*cid) {
+                    return Err(format!("container {cid} placed twice"));
+                }
+                if *w >= caps.len() {
+                    return Err(format!("invalid worker {w}"));
+                }
+            }
+            // cumulative feasibility
+            let mut extra = vec![0.0; caps.len()];
+            for (cid, w) in &out {
+                let slot = slots.iter().find(|s| s.cid == *cid).unwrap();
+                extra[*w] += slot.ram_mb;
+                if resident[*w] + extra[*w] > caps[*w] * 2.0 + 1e-6 {
+                    return Err(format!(
+                        "worker {w} over capacity (seed {seed:#x})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_feature_vector_always_bounded() {
+    check(
+        "features-bounded",
+        40,
+        |rng| {
+            let h = rng.int_range(2, 12) as usize;
+            let m = rng.int_range(2, 20) as usize;
+            let layout = FeatureLayout::new(h, m);
+            let snaps: Vec<WorkerSnapshot> = (0..h)
+                .map(|_| WorkerSnapshot {
+                    cpu: rng.range(0.0, 1.5),
+                    ram: rng.range(0.0, 3.0),
+                    net: rng.range(0.0, 2.0),
+                    disk: rng.range(0.0, 2.0),
+                    containers: rng.below(5) as usize,
+                })
+                .collect();
+            let n_slots = rng.below(m as u64 + 1) as usize;
+            let slots: Vec<SlotInfo> = (0..n_slots)
+                .map(|i| SlotInfo {
+                    cid: i,
+                    prev_worker: None,
+                    decision: rand_decision(rng),
+                    mi_remaining: rng.range(0.0, 1e9),
+                    ram_mb: rng.range(0.0, 50_000.0),
+                    input_mb: rng.range(0.0, 10_000.0),
+                    remaining_frac: rng.range(-1.0, 2.0),
+                })
+                .collect();
+            let p: Vec<f32> = (0..layout.placement_dim())
+                .map(|_| rng.f64() as f32)
+                .collect();
+            (layout, snaps, slots, p)
+        },
+        |(layout, snaps, slots, p)| {
+            let x = layout.featurize(snaps, slots, p, true);
+            if x.len() != layout.feature_dim() {
+                return Err("wrong feature dim".into());
+            }
+            for (i, v) in x.iter().enumerate() {
+                if !v.is_finite() || *v < -0.001 || *v > 2.001 {
+                    return Err(format!("feature {i} out of range: {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_generator_stays_in_spec() {
+    check(
+        "generator-spec",
+        25,
+        |rng| {
+            let cfg = WorkloadConfig {
+                lambda: rng.range(0.5, 40.0),
+                batch_min: 16_000,
+                batch_max: 64_000,
+                app_weights: [rng.f64() + 0.01, rng.f64() + 0.01, rng.f64() + 0.01],
+                sla_lo: 0.5,
+                sla_hi: 2.0,
+                seed: rng.next_u64(),
+            };
+            let mut g = Generator::new(cfg);
+            (0..200).map(|i| g.one(i as f64)).collect::<Vec<Task>>()
+        },
+        |tasks| {
+            for t in tasks {
+                if !(16_000..=64_000).contains(&t.batch) {
+                    return Err(format!("batch {} out of range", t.batch));
+                }
+                if t.sla <= 0.0 || !t.sla.is_finite() {
+                    return Err(format!("bad sla {}", t.sla));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_registry_plans_internally_consistent() {
+    check(
+        "registry-consistency",
+        20,
+        |rng| (rand_app(rng), rand_decision(rng), rng.int_range(16_000, 64_000) as u64),
+        |(app, decision, batch)| {
+            let plan = Registry::plan(*app, *decision);
+            if plan.fragments.is_empty() {
+                return Err("empty plan".into());
+            }
+            if plan.total_mi(*batch) <= 0.0 {
+                return Err("non-positive MI".into());
+            }
+            for f in &plan.fragments {
+                if f.ram_fixed_mb <= 0.0 || f.image_mb <= 0.0 || f.mi_per_ksample <= 0.0 {
+                    return Err(format!("bad fragment profile {f:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
