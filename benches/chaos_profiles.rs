@@ -1,0 +1,43 @@
+//! Chaos-profile scenarios: the same fixed-seed fault plans run under
+//! several policies, reporting oracle status and the headline metrics.
+//! Artifact-free policies always run (the surrogate policies degrade to
+//! best-fit placement when artifacts are missing), so this bench is the
+//! quickest way to eyeball how a policy behaves under hostile conditions.
+
+use splitplace::benchlib::scenarios;
+use splitplace::chaos::Profile;
+use splitplace::config::PolicyKind;
+use splitplace::coordinator::runner::try_runtime;
+use splitplace::util::table::{fnum, Table};
+
+fn main() {
+    let rt = try_runtime();
+    let mut t = Table::new(
+        "Chaos profiles (fixed seed 7)",
+        &["policy", "profile", "events", "violations", "completed", "failed", "SLA viol", "reward"],
+    );
+    for profile in [Profile::Light, Profile::Heavy] {
+        for policy in [
+            PolicyKind::ModelCompression,
+            PolicyKind::Gillis,
+            PolicyKind::MabDaso,
+        ] {
+            let (mut cfg, plan) = scenarios::chaos_scenario(profile, 7);
+            cfg.policy = policy;
+            let Some(out) = scenarios::run_chaos(cfg, &plan, rt.as_ref()) else {
+                continue;
+            };
+            t.row(vec![
+                policy.name().into(),
+                profile.name().into(),
+                plan.events.len().to_string(),
+                out.violations.len().to_string(),
+                out.completed.to_string(),
+                out.failed.to_string(),
+                fnum(out.summary.sla_violations),
+                fnum(out.summary.avg_reward),
+            ]);
+        }
+    }
+    t.print();
+}

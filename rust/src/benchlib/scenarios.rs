@@ -6,6 +6,7 @@
 //! (default 25 — enough for the orderings to emerge; the paper's Γ=100 is
 //! what `examples/full_experiment.rs` runs).
 
+use crate::chaos::{self, ChaosOptions, ChaosOutcome, FaultPlan, Profile};
 use crate::config::{ExperimentConfig, PolicyKind};
 use crate::coordinator::runner::{run_experiment, try_runtime, ExperimentOutput};
 use crate::runtime::Runtime;
@@ -53,11 +54,54 @@ pub fn runtime_or_skip(bench_name: &str) -> Option<Runtime> {
 }
 
 /// Run one scenario, tolerating per-policy failures (reported, not fatal).
+/// The failure line names the policy and scenario shape so chaos-profile
+/// and sweep benches stay attributable.
 pub fn run(cfg: ExperimentConfig, rt: Option<&Runtime>) -> Option<ExperimentOutput> {
+    let policy = cfg.policy.name();
+    let shape = format!(
+        "{} workers, {} intervals, λ={}",
+        cfg.cluster.total_workers(),
+        cfg.sim.intervals,
+        cfg.workload.lambda
+    );
     match run_experiment(cfg, rt) {
         Ok(out) => Some(out),
         Err(e) => {
-            eprintln!("[bench] run failed: {e:#}");
+            eprintln!("[bench] {policy} ({shape}) run failed: {e:#}");
+            None
+        }
+    }
+}
+
+/// Build a chaos scenario for a bench: base config + the deterministic
+/// fault plan a given profile generates for it.
+pub fn chaos_scenario(profile: Profile, seed: u64) -> (ExperimentConfig, FaultPlan) {
+    let cfg = base_config();
+    let plan = FaultPlan::generate(seed, cfg.sim.intervals, profile, cfg.cluster.total_workers());
+    (cfg, plan)
+}
+
+/// Run a chaos scenario, tolerating failures like [`run`] does. Oracle
+/// violations are reported loudly (they are bugs, not bench noise).
+pub fn run_chaos(
+    cfg: ExperimentConfig,
+    plan: &FaultPlan,
+    rt: Option<&Runtime>,
+) -> Option<ChaosOutcome> {
+    let policy = cfg.policy.name();
+    match chaos::run_chaos(&cfg, plan, &ChaosOptions::default(), rt) {
+        Ok(out) => {
+            if !out.violations.is_empty() {
+                eprintln!(
+                    "[bench] {policy} chaos run VIOLATED {:?} — first: {}",
+                    out.violated_oracles(),
+                    out.violations[0]
+                );
+            }
+            Some(out)
+        }
+        Err(e) => {
+            eprintln!("[bench] {policy} chaos run failed: {e:#}");
             None
         }
     }

@@ -1,0 +1,152 @@
+//! Fault-event vocabulary for the chaos engine.
+//!
+//! Every event is an *instantaneous* state change applied at the start of a
+//! scheduling interval, before the broker takes its decisions. Durational
+//! faults (a straggler episode, a blackout, a flash crowd) are expressed as
+//! start/end event pairs at plan-generation time, which keeps plans flat —
+//! the shrinker can delete any single event and still have a valid plan.
+
+use crate::util::json::{JsonError, Value};
+
+/// One injectable fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChaosEvent {
+    /// Hard worker crash: offline, resident containers requeued with
+    /// progress lost (no checkpoint window).
+    Crash { worker: usize },
+    /// Crashed/offline worker rejoins the fleet.
+    Recover { worker: usize },
+    /// Straggler episode: scale the worker's MIPS by `factor`
+    /// (thermal throttling / co-tenant interference); 1.0 ends the episode.
+    Straggler { worker: usize, factor: f64 },
+    /// Memory squeeze: scale the worker's effective RAM by `factor`
+    /// (co-tenant balloon); 1.0 ends the episode.
+    RamSqueeze { worker: usize, factor: f64 },
+    /// Network blackout: pin the worker's channel at the worst state.
+    Blackout { worker: usize },
+    /// End of a blackout: the mobility model resumes.
+    BlackoutEnd { worker: usize },
+    /// Flash crowd: multiply the Poisson arrival rate λ.
+    FlashCrowd { lambda_mult: f64 },
+    /// End of a flash crowd: the configured λ resumes.
+    FlashCrowdEnd,
+}
+
+impl ChaosEvent {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChaosEvent::Crash { .. } => "crash",
+            ChaosEvent::Recover { .. } => "recover",
+            ChaosEvent::Straggler { .. } => "straggler",
+            ChaosEvent::RamSqueeze { .. } => "ram-squeeze",
+            ChaosEvent::Blackout { .. } => "blackout",
+            ChaosEvent::BlackoutEnd { .. } => "blackout-end",
+            ChaosEvent::FlashCrowd { .. } => "flash-crowd",
+            ChaosEvent::FlashCrowdEnd => "flash-crowd-end",
+        }
+    }
+
+    /// Target worker, if the event is worker-scoped.
+    pub fn worker(&self) -> Option<usize> {
+        match self {
+            ChaosEvent::Crash { worker }
+            | ChaosEvent::Recover { worker }
+            | ChaosEvent::Straggler { worker, .. }
+            | ChaosEvent::RamSqueeze { worker, .. }
+            | ChaosEvent::Blackout { worker }
+            | ChaosEvent::BlackoutEnd { worker } => Some(*worker),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut kv = vec![("kind", Value::Str(self.name().into()))];
+        if let Some(w) = self.worker() {
+            kv.push(("worker", Value::Num(w as f64)));
+        }
+        match self {
+            ChaosEvent::Straggler { factor, .. } | ChaosEvent::RamSqueeze { factor, .. } => {
+                kv.push(("factor", Value::Num(*factor)));
+            }
+            ChaosEvent::FlashCrowd { lambda_mult } => {
+                kv.push(("lambda_mult", Value::Num(*lambda_mult)));
+            }
+            _ => {}
+        }
+        Value::obj(kv)
+    }
+
+    pub fn from_json(v: &Value) -> Result<ChaosEvent, JsonError> {
+        let kind = v.req("kind")?.as_str()?;
+        let worker = || -> Result<usize, JsonError> { v.req("worker")?.as_usize() };
+        let factor = || -> Result<f64, JsonError> { v.req("factor")?.as_f64() };
+        Ok(match kind {
+            "crash" => ChaosEvent::Crash { worker: worker()? },
+            "recover" => ChaosEvent::Recover { worker: worker()? },
+            "straggler" => ChaosEvent::Straggler { worker: worker()?, factor: factor()? },
+            "ram-squeeze" => ChaosEvent::RamSqueeze { worker: worker()?, factor: factor()? },
+            "blackout" => ChaosEvent::Blackout { worker: worker()? },
+            "blackout-end" => ChaosEvent::BlackoutEnd { worker: worker()? },
+            "flash-crowd" => {
+                ChaosEvent::FlashCrowd { lambda_mult: v.req("lambda_mult")?.as_f64()? }
+            }
+            "flash-crowd-end" => ChaosEvent::FlashCrowdEnd,
+            _ => return Err(JsonError::Type("known chaos event kind")),
+        })
+    }
+}
+
+/// An event scheduled at the start of interval `t`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimedEvent {
+    pub t: usize,
+    pub event: ChaosEvent,
+}
+
+impl TimedEvent {
+    pub fn to_json(&self) -> Value {
+        let mut kv = vec![("t".to_string(), Value::Num(self.t as f64))];
+        if let Value::Obj(ev) = self.event.to_json() {
+            kv.extend(ev);
+        }
+        Value::Obj(kv)
+    }
+
+    pub fn from_json(v: &Value) -> Result<TimedEvent, JsonError> {
+        Ok(TimedEvent { t: v.req("t")?.as_usize()?, event: ChaosEvent::from_json(v)? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn event_json_roundtrip() {
+        let events = [
+            ChaosEvent::Crash { worker: 3 },
+            ChaosEvent::Recover { worker: 3 },
+            ChaosEvent::Straggler { worker: 1, factor: 0.25 },
+            ChaosEvent::RamSqueeze { worker: 0, factor: 0.5 },
+            ChaosEvent::Blackout { worker: 7 },
+            ChaosEvent::BlackoutEnd { worker: 7 },
+            ChaosEvent::FlashCrowd { lambda_mult: 4.0 },
+            ChaosEvent::FlashCrowdEnd,
+        ];
+        for (i, e) in events.iter().enumerate() {
+            let te = TimedEvent { t: i, event: *e };
+            let j = te.to_json().to_string();
+            let back = TimedEvent::from_json(&json::parse(&j).unwrap()).unwrap();
+            assert_eq!(back, te, "roundtrip of {j}");
+        }
+    }
+
+    #[test]
+    fn bad_event_rejected() {
+        let v = json::parse(r#"{"t":0,"kind":"meteor-strike"}"#).unwrap();
+        assert!(TimedEvent::from_json(&v).is_err());
+        let v = json::parse(r#"{"t":0,"kind":"crash"}"#).unwrap();
+        assert!(TimedEvent::from_json(&v).is_err(), "crash needs a worker");
+    }
+}

@@ -1,0 +1,362 @@
+//! Deterministic chaos engine: seeded fault-injection plans, interval
+//! invariant oracles, and shrink-to-minimal failing scenarios.
+//!
+//! The paper evaluates SplitPlace in *volatile* mobile-edge environments
+//! and leaves non-stationary fleets as future work (§7); this subsystem
+//! turns the simulator into a property-driven adversarial harness:
+//!
+//! 1. [`plan::FaultPlan`] — a seeded, serializable per-interval schedule of
+//!    [`events::ChaosEvent`]s: worker crash/recover, stragglers, network
+//!    blackouts, RAM squeezes, flash-crowd arrival bursts.
+//! 2. [`run_chaos`] threads the plan through [`crate::coordinator::Broker`]
+//!    and [`crate::sim::Engine`] — crashed workers drop their containers,
+//!    which the broker re-admits and re-places.
+//! 3. [`oracle`] checks named invariants after every interval.
+//! 4. On a violation, [`shrink`] bisects the plan down to a minimal failing
+//!    counterexample; the printed `seed + plan` JSON reproduces it exactly.
+
+pub mod events;
+pub mod oracle;
+pub mod plan;
+pub mod shrink;
+
+use std::collections::HashSet;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::Broker;
+use crate::cluster::mobility::ChannelState;
+use crate::mab::Mode;
+use crate::metrics::Summary;
+use crate::runtime::Runtime;
+use crate::sim::IntervalReport;
+
+pub use events::{ChaosEvent, TimedEvent};
+pub use oracle::{check_interval, OracleCtx, Violation, ORACLES};
+pub use plan::{FaultPlan, Profile};
+pub use shrink::{shrink_plan, ShrinkResult};
+
+/// Deliberate invariant bugs, used to validate that the oracles catch real
+/// defects and that shrinking produces minimal reproductions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BugKind {
+    /// Crashes take the worker offline but "forget" to drop its
+    /// containers — progress continues on a dead machine.
+    SkipCrashRequeue,
+}
+
+impl BugKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BugKind::SkipCrashRequeue => "skip-crash-requeue",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BugKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "skip-crash-requeue" => Some(BugKind::SkipCrashRequeue),
+            _ => None,
+        }
+    }
+}
+
+/// Harness knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosOptions {
+    /// Inject a deliberate invariant bug (oracle validation).
+    pub bug: Option<BugKind>,
+    /// Fail tasks older than this many intervals (starvation guard under
+    /// crash storms); 0 disables the guard.
+    pub task_timeout_intervals: usize,
+}
+
+impl Default for ChaosOptions {
+    fn default() -> Self {
+        ChaosOptions { bug: None, task_timeout_intervals: 40 }
+    }
+}
+
+/// Cheap structural fingerprint of one interval — two runs of the same
+/// seed + plan must produce identical signature streams.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IntervalSig {
+    pub interval: usize,
+    pub completed: Vec<u64>,
+    pub failed: Vec<u64>,
+    pub queued: usize,
+    pub offline: usize,
+    pub energy_bits: u64,
+}
+
+impl IntervalSig {
+    fn of(report: &IntervalReport) -> IntervalSig {
+        let mut completed: Vec<u64> = report.completed.iter().map(|t| t.task_id).collect();
+        completed.sort_unstable();
+        let mut failed: Vec<u64> = report.failed.iter().map(|t| t.task_id).collect();
+        failed.sort_unstable();
+        IntervalSig {
+            interval: report.interval,
+            completed,
+            failed,
+            queued: report.queued,
+            offline: report.offline,
+            energy_bits: report.energy_wh.to_bits(),
+        }
+    }
+}
+
+/// Everything one chaos run produced.
+#[derive(Clone, Debug)]
+pub struct ChaosOutcome {
+    /// All invariant violations, in detection order.
+    pub violations: Vec<Violation>,
+    /// Per-interval fingerprints (determinism audits).
+    pub signatures: Vec<IntervalSig>,
+    pub admitted: u64,
+    pub completed: usize,
+    pub failed: usize,
+    /// Standard experiment summary (Table-4 quantities) for the run.
+    pub summary: Summary,
+}
+
+impl ChaosOutcome {
+    pub fn violated_oracles(&self) -> Vec<&'static str> {
+        let mut seen = Vec::new();
+        for v in &self.violations {
+            if !seen.contains(&v.oracle) {
+                seen.push(v.oracle);
+            }
+        }
+        seen
+    }
+}
+
+fn mab_decision_count(broker: &Broker) -> Option<u64> {
+    broker.mab.as_ref().map(|m| m.bandit.n.iter().flatten().sum::<u64>())
+}
+
+fn apply_event(broker: &mut Broker, event: &ChaosEvent, opts: &ChaosOptions, base_lambda: f64) {
+    let n = broker.engine.workers();
+    if let Some(w) = event.worker() {
+        if w >= n {
+            return; // plan generated for a bigger fleet; ignore
+        }
+    }
+    match *event {
+        ChaosEvent::Crash { worker } => {
+            if opts.bug == Some(BugKind::SkipCrashRequeue) {
+                broker.engine.force_offline_no_evict(worker);
+            } else {
+                broker.engine.crash_worker(worker);
+            }
+        }
+        ChaosEvent::Recover { worker } => broker.engine.recover_worker(worker),
+        ChaosEvent::Straggler { worker, factor } => broker.engine.set_mips_factor(worker, factor),
+        ChaosEvent::RamSqueeze { worker, factor } => broker.engine.set_ram_factor(worker, factor),
+        ChaosEvent::Blackout { worker } => {
+            broker.engine.set_channel_override(worker, Some(ChannelState::BLACKOUT));
+        }
+        ChaosEvent::BlackoutEnd { worker } => broker.engine.set_channel_override(worker, None),
+        ChaosEvent::FlashCrowd { lambda_mult } => {
+            broker.set_lambda_override(Some(base_lambda * lambda_mult));
+        }
+        ChaosEvent::FlashCrowdEnd => broker.set_lambda_override(None),
+    }
+}
+
+/// Run `cfg.sim.intervals` broker intervals under `plan`, checking every
+/// oracle each interval. Fully deterministic: equal (cfg, plan, opts)
+/// yield equal [`ChaosOutcome::signatures`].
+///
+/// Surrogate-based policies degrade to best-fit placement when `runtime`
+/// is `None` (see [`Broker::new_with_fallback`]), so chaos runs work in
+/// artifact-less environments such as CI.
+pub fn run_chaos(
+    cfg: &ExperimentConfig,
+    plan: &FaultPlan,
+    opts: &ChaosOptions,
+    runtime: Option<&Runtime>,
+) -> Result<ChaosOutcome> {
+    let mut broker = Broker::new_with_fallback(cfg.clone(), runtime, Mode::Test)?;
+    let mab_baseline = mab_decision_count(&broker).unwrap_or(0);
+    let base_lambda = cfg.workload.lambda;
+    let mut seen_completed: HashSet<u64> = HashSet::new();
+    let mut violations = Vec::new();
+    let mut signatures = Vec::with_capacity(cfg.sim.intervals);
+
+    for t in 0..cfg.sim.intervals {
+        let fired: Vec<ChaosEvent> = plan.events_at(t).map(|e| e.event).collect();
+        for event in &fired {
+            apply_event(&mut broker, event, opts, base_lambda);
+        }
+        if opts.task_timeout_intervals > 0 {
+            broker
+                .engine
+                .fail_tasks_older_than(opts.task_timeout_intervals as f64 * cfg.sim.interval_seconds);
+        }
+        let (_o_p, report) = broker.step_report();
+        let mab_decisions = mab_decision_count(&broker).map(|c| c - mab_baseline);
+        let mut ctx = OracleCtx {
+            engine: &broker.engine,
+            report: &report,
+            admitted: broker.admitted,
+            mab_decisions,
+            seen_completed: &mut seen_completed,
+        };
+        violations.extend(check_interval(&mut ctx));
+        signatures.push(IntervalSig::of(&report));
+    }
+
+    let summary = broker.metrics.summary(cfg.policy.name());
+    Ok(ChaosOutcome {
+        violations,
+        signatures,
+        admitted: broker.admitted,
+        completed: broker.engine.completed_task_count(),
+        failed: broker.engine.failed_task_count(),
+        summary,
+    })
+}
+
+/// Differential mode: the same plan under two policies. Returns both
+/// outcomes for side-by-side comparison of violations / SLA behavior.
+pub fn run_differential(
+    cfg: &ExperimentConfig,
+    policy_b: crate::config::PolicyKind,
+    plan: &FaultPlan,
+    opts: &ChaosOptions,
+    runtime: Option<&Runtime>,
+) -> Result<(ChaosOutcome, ChaosOutcome)> {
+    let a = run_chaos(cfg, plan, opts, runtime)?;
+    let mut cfg_b = cfg.clone();
+    cfg_b.policy = policy_b;
+    let b = run_chaos(&cfg_b, plan, opts, runtime)?;
+    Ok((a, b))
+}
+
+/// Shrink budget for [`shrink_to_minimal`] (re-runs of the scenario).
+pub const SHRINK_MAX_RUNS: usize = 400;
+
+/// Shrink `plan` to a minimal plan that still violates `oracle_name` under
+/// the same cfg/opts. Assumes the full plan does.
+pub fn shrink_to_minimal(
+    cfg: &ExperimentConfig,
+    plan: &FaultPlan,
+    opts: &ChaosOptions,
+    runtime: Option<&Runtime>,
+    oracle_name: &str,
+) -> ShrinkResult {
+    shrink_plan(plan, SHRINK_MAX_RUNS, |candidate| {
+        run_chaos(cfg, candidate, opts, runtime)
+            .map(|o| o.violations.iter().any(|v| v.oracle == oracle_name))
+            .unwrap_or(false)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, PolicyKind};
+
+    fn chaos_cfg(intervals: usize, lambda: f64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::small();
+        cfg.policy = PolicyKind::ModelCompression; // runs without artifacts
+        cfg.sim.intervals = intervals;
+        cfg.workload.lambda = lambda;
+        cfg
+    }
+
+    #[test]
+    fn clean_heavy_run_is_deterministic_and_green() {
+        let cfg = chaos_cfg(12, 4.0);
+        let plan = FaultPlan::generate(7, 12, Profile::Heavy, cfg.cluster.total_workers());
+        let opts = ChaosOptions::default();
+        let a = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        let b = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        assert!(a.violations.is_empty(), "clean engine must stay green: {:?}", a.violations);
+        assert_eq!(a.signatures, b.signatures, "same seed + plan ⇒ identical stream");
+        assert!(a.admitted > 0);
+    }
+
+    #[test]
+    fn mab_policy_survives_chaos_with_fallback_placer() {
+        let mut cfg = chaos_cfg(12, 3.0);
+        cfg.policy = PolicyKind::MabDaso;
+        let plan = FaultPlan::generate(3, 12, Profile::Heavy, cfg.cluster.total_workers());
+        let out = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        assert!(out.admitted > 0);
+        // MAB state updates are order-sensitive (response-time EMA), so
+        // this specifically guards the deterministic task-iteration order
+        let replay = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert_eq!(out.signatures, replay.signatures, "MAB runs must replay identically");
+    }
+
+    #[test]
+    fn crash_storm_still_completes_tasks() {
+        let cfg = chaos_cfg(20, 3.0);
+        // crash workers 0..5 early, recover them a few intervals later
+        let base = FaultPlan::empty(1, 20);
+        let mut events = Vec::new();
+        for w in 0..5 {
+            events.push(TimedEvent { t: 2, event: ChaosEvent::Crash { worker: w } });
+            events.push(TimedEvent { t: 6, event: ChaosEvent::Recover { worker: w } });
+        }
+        let plan = base.with_events(events);
+        let out = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        assert!(out.completed > 0, "tasks must complete despite the crash storm");
+    }
+
+    #[test]
+    fn flash_crowd_inflates_admissions() {
+        let cfg = chaos_cfg(10, 2.0);
+        let quiet = run_chaos(
+            &cfg,
+            &FaultPlan::empty(2, 10),
+            &ChaosOptions::default(),
+            None,
+        )
+        .unwrap();
+        let base = FaultPlan::empty(2, 10);
+        let plan = base.with_events(vec![TimedEvent {
+            t: 1,
+            event: ChaosEvent::FlashCrowd { lambda_mult: 10.0 },
+        }]);
+        let crowd = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert!(
+            crowd.admitted > 2 * quiet.admitted.max(1),
+            "quiet={} crowd={}",
+            quiet.admitted,
+            crowd.admitted
+        );
+        assert!(crowd.violations.is_empty(), "{:?}", crowd.violations);
+    }
+
+    // NOTE: the full bug→catch→shrink→replay scenario (including the ≤3
+    // event minimality bound) lives in tests/properties.rs, seeded over
+    // several generated plans. This unit test only pins the two ends of
+    // it: the oracle fires with the bug and stays green without it.
+    #[test]
+    fn injected_bug_is_caught_by_the_idle_oracle() {
+        let cfg = chaos_cfg(10, 6.0);
+        let n = cfg.cluster.total_workers();
+        let base = FaultPlan::empty(4, 10);
+        let events = (0..n)
+            .map(|w| TimedEvent { t: 2, event: ChaosEvent::Crash { worker: w } })
+            .collect();
+        let plan = base.with_events(events);
+        let opts = ChaosOptions { bug: Some(BugKind::SkipCrashRequeue), ..Default::default() };
+
+        let out = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        assert!(
+            out.violated_oracles().contains(&"crashed-workers-idle"),
+            "bug must be caught: {:?}",
+            out.violated_oracles()
+        );
+        // the same plan without the bug is green
+        let fixed = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert!(fixed.violations.is_empty(), "{:?}", fixed.violations);
+    }
+}

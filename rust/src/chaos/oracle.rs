@@ -1,0 +1,361 @@
+//! Interval invariant oracles.
+//!
+//! After every simulated interval the chaos harness evaluates a fixed set
+//! of *named* invariants against the engine state and the interval report.
+//! Any violation is a bug — either in the simulator/broker or in a fault
+//! hook — and carries enough detail to debug it; the harness then shrinks
+//! the fault plan to a minimal reproduction (see [`super::shrink`]).
+
+use std::collections::HashSet;
+
+use crate::sim::engine::RAM_OVERCOMMIT;
+use crate::sim::{ContainerState, Engine, IntervalReport};
+
+/// All invariant names, in evaluation order.
+pub const ORACLES: [&str; 9] = [
+    "task-conservation",
+    "allocation-capacity",
+    "chain-precedence",
+    "task-times-sane",
+    "energy-sane",
+    "mab-accounting",
+    "crashed-workers-idle",
+    "telemetry-consistent",
+    "completion-unique",
+];
+
+pub fn describe(oracle: &str) -> &'static str {
+    match oracle {
+        "task-conservation" => "admitted = active + completed + failed, always",
+        "allocation-capacity" => "resident RAM never exceeds the overcommit cap at allocation",
+        "chain-precedence" => "no fragment progresses before its chain predecessor completes",
+        "task-times-sane" => "response/wait/exec/transfer/migrate are finite and non-negative",
+        "energy-sane" => "interval energy, AEC and utilization are finite and in range",
+        "mab-accounting" => "bandit decision counts sum to decisions actually taken",
+        "crashed-workers-idle" => "no container runs, stages or migrates on an offline worker",
+        "telemetry-consistent" => "reported queue/offline figures match engine state",
+        "completion-unique" => "every completion names a known task, at most once",
+        _ => "unknown invariant",
+    }
+}
+
+/// One invariant violation.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub oracle: &'static str,
+    pub interval: usize,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] interval {}: {}", self.oracle, self.interval, self.detail)
+    }
+}
+
+/// Everything an interval check can see. `seen_completed` persists across
+/// intervals (the harness owns it) so duplicate completions are caught.
+pub struct OracleCtx<'a> {
+    pub engine: &'a Engine,
+    pub report: &'a IntervalReport,
+    /// Tasks admitted by the broker since construction.
+    pub admitted: u64,
+    /// MAB decisions recorded by the bandit since harness start (current
+    /// count sum minus the warm-start baseline); None for non-MAB policies.
+    pub mab_decisions: Option<u64>,
+    pub seen_completed: &'a mut HashSet<u64>,
+}
+
+/// Evaluate every oracle; returns all violations found this interval.
+pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let t = ctx.report.interval;
+    let mut fail = |oracle: &'static str, detail: String| {
+        out.push(Violation { oracle, interval: t, detail });
+    };
+
+    // -- task-conservation --------------------------------------------------
+    // Cross-structure checks (the task-map partition active/completed/
+    // failed is exhaustive by construction, so comparing those counts to
+    // each other would be a tautology): the broker's admission count, the
+    // engine's task map, and the container pool must all agree.
+    let admitted = ctx.engine.admitted_task_count();
+    if admitted as u64 != ctx.admitted {
+        fail(
+            "task-conservation",
+            format!("engine tracks {admitted} tasks but broker admitted {}", ctx.admitted),
+        );
+    }
+    let container_tasks: HashSet<u64> =
+        ctx.engine.containers.iter().map(|c| c.task_id).collect();
+    if container_tasks.len() != admitted {
+        fail(
+            "task-conservation",
+            format!(
+                "containers reference {} distinct tasks but {admitted} were admitted",
+                container_tasks.len()
+            ),
+        );
+    }
+    for id in &container_tasks {
+        if ctx.engine.task(*id).is_none() {
+            fail("task-conservation", format!("container references unknown task {id}"));
+        }
+    }
+
+    // -- allocation-capacity ------------------------------------------------
+    // Every path into residency is capacity-checked (placement and
+    // migration via `fits`, chain unblocks via the Blocked reservation
+    // that already counts), and squeezes only shrink the effective cap
+    // below the physical one — so resident demand must NEVER exceed the
+    // physical overcommit cap, not even by a single container.
+    let resident = ctx.engine.resident_ram();
+    for (w, worker) in ctx.engine.cluster.workers.iter().enumerate() {
+        let cap = worker.spec.ram_mb * RAM_OVERCOMMIT;
+        if resident[w] > cap + 1e-6 {
+            fail(
+                "allocation-capacity",
+                format!("worker {w}: resident {:.0} MB > cap {cap:.0} MB", resident[w]),
+            );
+        }
+    }
+
+    // -- chain-precedence ---------------------------------------------------
+    for c in &ctx.engine.containers {
+        if let Some(prev) = c.prev {
+            let prev_done = ctx.engine.containers[prev].is_done();
+            if c.mi_done > 0.0 && !prev_done {
+                fail(
+                    "chain-precedence",
+                    format!("container {} progressed before predecessor {prev} finished", c.id),
+                );
+            }
+            if matches!(c.state, ContainerState::Running) && !prev_done {
+                fail(
+                    "chain-precedence",
+                    format!("container {} running before predecessor {prev} done", c.id),
+                );
+            }
+        }
+    }
+
+    // -- task-times-sane ----------------------------------------------------
+    for task in &ctx.report.completed {
+        let parts = [
+            ("response", task.response),
+            ("wait", task.wait),
+            ("exec", task.exec),
+            ("transfer", task.transfer),
+            ("migrate", task.migrate),
+        ];
+        for (name, v) in parts {
+            if !v.is_finite() || v < 0.0 {
+                fail(
+                    "task-times-sane",
+                    format!("task {}: {name} = {v}", task.task_id),
+                );
+            }
+        }
+        if task.response <= 0.0 {
+            fail(
+                "task-times-sane",
+                format!("task {}: non-positive response {}", task.task_id, task.response),
+            );
+        }
+    }
+    for task in &ctx.report.failed {
+        if !task.age.is_finite() || task.age < 0.0 {
+            fail("task-times-sane", format!("failed task {}: age {}", task.task_id, task.age));
+        }
+    }
+
+    // -- energy-sane --------------------------------------------------------
+    if !ctx.report.energy_wh.is_finite() || ctx.report.energy_wh < 0.0 {
+        fail("energy-sane", format!("energy_wh = {}", ctx.report.energy_wh));
+    }
+    if !ctx.report.aec.is_finite() || ctx.report.aec < 0.0 {
+        fail("energy-sane", format!("aec = {}", ctx.report.aec));
+    }
+    for (w, s) in ctx.report.snapshots.iter().enumerate() {
+        if !(0.0..=1.0).contains(&s.cpu) || !s.ram.is_finite() || s.ram < 0.0 {
+            fail("energy-sane", format!("worker {w}: cpu {} ram {}", s.cpu, s.ram));
+        }
+    }
+
+    // -- mab-accounting -----------------------------------------------------
+    if let Some(decided) = ctx.mab_decisions {
+        if decided != ctx.admitted {
+            fail(
+                "mab-accounting",
+                format!("bandit recorded {decided} decisions, broker admitted {}", ctx.admitted),
+            );
+        }
+    }
+
+    // -- crashed-workers-idle -----------------------------------------------
+    let online = ctx.engine.online();
+    for c in &ctx.engine.containers {
+        let offending = match c.state {
+            ContainerState::Running | ContainerState::Transferring { .. } => {
+                c.worker.map(|w| !online[w]).unwrap_or(false)
+            }
+            ContainerState::Migrating { to, .. } => {
+                !online[to] || c.worker.map(|w| !online[w]).unwrap_or(false)
+            }
+            _ => false,
+        };
+        if offending {
+            fail(
+                "crashed-workers-idle",
+                format!("container {} is {:?} on offline worker {:?}", c.id, c.state, c.worker),
+            );
+        }
+    }
+
+    // -- telemetry-consistent -----------------------------------------------
+    let queued_now = ctx
+        .engine
+        .containers
+        .iter()
+        .filter(|c| matches!(c.state, ContainerState::Queued))
+        .count();
+    if queued_now != ctx.report.queued {
+        fail(
+            "telemetry-consistent",
+            format!("report says {} queued, engine holds {queued_now}", ctx.report.queued),
+        );
+    }
+    let offline_now = online.iter().filter(|&&o| !o).count();
+    if offline_now != ctx.report.offline {
+        fail(
+            "telemetry-consistent",
+            format!("report says {} offline, engine has {offline_now}", ctx.report.offline),
+        );
+    }
+
+    // -- completion-unique --------------------------------------------------
+    for task in &ctx.report.completed {
+        if ctx.engine.task(task.task_id).is_none() {
+            fail(
+                "completion-unique",
+                format!("completion for unknown task {}", task.task_id),
+            );
+        }
+        if !ctx.seen_completed.insert(task.task_id) {
+            fail(
+                "completion-unique",
+                format!("task {} completed twice", task.task_id),
+            );
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::build_fleet;
+    use crate::config::{ClusterConfig, SimConfig};
+    use crate::sim::Engine;
+    use crate::splits::{App, SplitDecision};
+    use crate::workload::Task;
+
+    fn engine() -> Engine {
+        Engine::new(build_fleet(&ClusterConfig::small()), SimConfig::default(), 1)
+    }
+
+    fn task(id: u64) -> Task {
+        Task { id, app: App::Mnist, batch: 32_000, sla: 5.0, arrival_s: 0.0, decision: None }
+    }
+
+    #[test]
+    fn clean_interval_has_no_violations() {
+        let mut e = engine();
+        e.admit(task(0), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 0)]);
+        let report = e.step_interval();
+        let mut seen = HashSet::new();
+        let mut ctx = OracleCtx {
+            engine: &e,
+            report: &report,
+            admitted: 1,
+            mab_decisions: None,
+            seen_completed: &mut seen,
+        };
+        let v = check_interval(&mut ctx);
+        assert!(v.is_empty(), "unexpected violations: {v:?}");
+    }
+
+    #[test]
+    fn admission_mismatch_is_caught() {
+        let mut e = engine();
+        e.admit(task(0), SplitDecision::Compressed);
+        let report = e.step_interval();
+        let mut seen = HashSet::new();
+        let mut ctx = OracleCtx {
+            engine: &e,
+            report: &report,
+            admitted: 5, // broker claims more than the engine holds
+            mab_decisions: None,
+            seen_completed: &mut seen,
+        };
+        let v = check_interval(&mut ctx);
+        assert!(v.iter().any(|v| v.oracle == "task-conservation"), "{v:?}");
+    }
+
+    #[test]
+    fn progress_on_crashed_worker_is_caught() {
+        let mut e = engine();
+        e.admit(task(0), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 0)]);
+        e.step_interval();
+        // the deliberate bug hook: offline without evicting
+        e.force_offline_no_evict(0);
+        let report = e.step_interval();
+        let mut seen = HashSet::new();
+        let mut ctx = OracleCtx {
+            engine: &e,
+            report: &report,
+            admitted: 1,
+            mab_decisions: None,
+            seen_completed: &mut seen,
+        };
+        let v = check_interval(&mut ctx);
+        assert!(v.iter().any(|v| v.oracle == "crashed-workers-idle"), "{v:?}");
+    }
+
+    #[test]
+    fn duplicate_completion_is_caught() {
+        let mut e = engine();
+        e.admit(task(0), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 0)]);
+        let mut report = None;
+        for _ in 0..40 {
+            let r = e.step_interval();
+            if !r.completed.is_empty() {
+                report = Some(r);
+                break;
+            }
+        }
+        let report = report.expect("compressed task completes");
+        let mut seen = HashSet::new();
+        seen.insert(report.completed[0].task_id); // pretend we saw it before
+        let mut ctx = OracleCtx {
+            engine: &e,
+            report: &report,
+            admitted: 1,
+            mab_decisions: None,
+            seen_completed: &mut seen,
+        };
+        let v = check_interval(&mut ctx);
+        assert!(v.iter().any(|v| v.oracle == "completion-unique"), "{v:?}");
+    }
+
+    #[test]
+    fn every_oracle_has_a_description() {
+        for o in ORACLES {
+            assert_ne!(describe(o), "");
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! Seeded, serializable fault plans.
+//!
+//! A [`FaultPlan`] is a per-interval schedule of [`ChaosEvent`]s generated
+//! deterministically from a seed and a [`Profile`]. Plans round-trip
+//! through JSON so a failing run can be reproduced (and shrunk) from the
+//! printed `seed + plan` artifact alone.
+
+use crate::util::json::{JsonError, Value};
+use crate::util::rng::Rng;
+
+use super::events::{ChaosEvent, TimedEvent};
+
+/// How hostile the generated plan is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// Occasional single-worker faults; the system should barely notice.
+    Light,
+    /// Frequent crashes, stragglers, blackouts, squeezes and flash crowds.
+    Heavy,
+}
+
+impl Profile {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Profile::Light => "light",
+            Profile::Heavy => "heavy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Profile> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "light" => Profile::Light,
+            "heavy" => Profile::Heavy,
+            _ => return None,
+        })
+    }
+
+    /// Per-interval injection probabilities
+    /// (crash, straggler, blackout, ram-squeeze, flash-crowd).
+    fn rates(&self) -> [f64; 5] {
+        match self {
+            Profile::Light => [0.03, 0.05, 0.03, 0.03, 0.02],
+            Profile::Heavy => [0.15, 0.20, 0.12, 0.12, 0.08],
+        }
+    }
+
+    /// Longest outage/episode, in intervals.
+    fn max_duration(&self) -> usize {
+        match self {
+            Profile::Light => 3,
+            Profile::Heavy => 6,
+        }
+    }
+}
+
+/// A complete, reproducible fault schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed the plan was generated from (also seeds the experiment config
+    /// in the CLI so one number reproduces the whole run).
+    pub seed: u64,
+    /// Horizon the plan was generated for.
+    pub intervals: usize,
+    /// Profile name, for provenance in printed artifacts.
+    pub profile: String,
+    /// Events sorted by interval.
+    pub events: Vec<TimedEvent>,
+}
+
+impl FaultPlan {
+    /// Empty plan (a chaos run with no chaos — useful as a control).
+    pub fn empty(seed: u64, intervals: usize) -> FaultPlan {
+        FaultPlan { seed, intervals, profile: "none".into(), events: Vec::new() }
+    }
+
+    /// Generate a plan for `intervals` intervals over `n_workers` workers.
+    /// Equal (seed, intervals, profile, n_workers) yield equal plans.
+    ///
+    /// Episodes of the same kind never overlap (per worker, or fleet-wide
+    /// for flash crowds): an overlapping start would let the earlier
+    /// episode's end event cancel the later one early, making plans less
+    /// hostile than they claim.
+    pub fn generate(seed: u64, intervals: usize, profile: Profile, n_workers: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xC4A0_5EED);
+        let [p_crash, p_strag, p_black, p_squeeze, p_flash] = profile.rates();
+        let max_d = profile.max_duration();
+        let n = n_workers.max(1);
+        let mut events: Vec<TimedEvent> = Vec::new();
+        let mut push = |t: usize, event: ChaosEvent| {
+            if t < intervals {
+                events.push(TimedEvent { t, event });
+            }
+        };
+        // first interval the worker/fleet is free of each episode kind
+        let mut offline_until = vec![0usize; n];
+        let mut strag_until = vec![0usize; n];
+        let mut black_until = vec![0usize; n];
+        let mut squeeze_until = vec![0usize; n];
+        let mut flash_until = 0usize;
+        for t in 0..intervals {
+            if rng.chance(p_crash) {
+                let w = rng.below(n as u64) as usize;
+                let d = rng.int_range(1, max_d as i64) as usize;
+                if t >= offline_until[w] {
+                    push(t, ChaosEvent::Crash { worker: w });
+                    push(t + d, ChaosEvent::Recover { worker: w });
+                    offline_until[w] = t + d;
+                }
+            }
+            if rng.chance(p_strag) {
+                let w = rng.below(n as u64) as usize;
+                let factor = rng.range(0.15, 0.6);
+                let d = rng.int_range(1, max_d as i64) as usize;
+                if t >= strag_until[w] {
+                    push(t, ChaosEvent::Straggler { worker: w, factor });
+                    push(t + d, ChaosEvent::Straggler { worker: w, factor: 1.0 });
+                    strag_until[w] = t + d;
+                }
+            }
+            if rng.chance(p_black) {
+                let w = rng.below(n as u64) as usize;
+                let d = rng.int_range(1, max_d as i64) as usize;
+                if t >= black_until[w] {
+                    push(t, ChaosEvent::Blackout { worker: w });
+                    push(t + d, ChaosEvent::BlackoutEnd { worker: w });
+                    black_until[w] = t + d;
+                }
+            }
+            if rng.chance(p_squeeze) {
+                let w = rng.below(n as u64) as usize;
+                let factor = rng.range(0.25, 0.7);
+                let d = rng.int_range(1, max_d as i64) as usize;
+                if t >= squeeze_until[w] {
+                    push(t, ChaosEvent::RamSqueeze { worker: w, factor });
+                    push(t + d, ChaosEvent::RamSqueeze { worker: w, factor: 1.0 });
+                    squeeze_until[w] = t + d;
+                }
+            }
+            if rng.chance(p_flash) {
+                let mult = rng.range(3.0, 6.0);
+                let d = rng.int_range(1, max_d as i64) as usize;
+                if t >= flash_until {
+                    push(t, ChaosEvent::FlashCrowd { lambda_mult: mult });
+                    push(t + d, ChaosEvent::FlashCrowdEnd);
+                    flash_until = t + d;
+                }
+            }
+        }
+        events.sort_by_key(|e| e.t);
+        FaultPlan { seed, intervals, profile: profile.name().into(), events }
+    }
+
+    /// Same plan with a different event list (shrinker constructor).
+    pub fn with_events(&self, events: Vec<TimedEvent>) -> FaultPlan {
+        FaultPlan {
+            seed: self.seed,
+            intervals: self.intervals,
+            profile: self.profile.clone(),
+            events,
+        }
+    }
+
+    /// Events firing at the start of interval `t`.
+    pub fn events_at(&self, t: usize) -> impl Iterator<Item = &TimedEvent> {
+        self.events.iter().filter(move |e| e.t == t)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            // string, not number: JSON numbers are f64 here and would
+            // silently corrupt seeds above 2^53
+            ("seed", Value::Str(self.seed.to_string())),
+            ("intervals", Value::Num(self.intervals as f64)),
+            ("profile", Value::Str(self.profile.clone())),
+            ("events", Value::Arr(self.events.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<FaultPlan, JsonError> {
+        let events = v
+            .req("events")?
+            .as_arr()?
+            .iter()
+            .map(TimedEvent::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let seed = match v.req("seed")? {
+            Value::Str(s) => s.parse().map_err(|_| JsonError::Type("u64 seed"))?,
+            other => other.as_f64()? as u64, // older numeric plans
+        };
+        Ok(FaultPlan {
+            seed,
+            intervals: v.req("intervals")?.as_usize()?,
+            profile: v.req("profile")?.as_str()?.to_string(),
+            events,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = FaultPlan::generate(7, 50, Profile::Heavy, 10);
+        let b = FaultPlan::generate(7, 50, Profile::Heavy, 10);
+        assert_eq!(a, b);
+        let c = FaultPlan::generate(8, 50, Profile::Heavy, 10);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn heavy_generates_more_events_than_light() {
+        let light = FaultPlan::generate(3, 100, Profile::Light, 10);
+        let heavy = FaultPlan::generate(3, 100, Profile::Heavy, 10);
+        assert!(
+            heavy.events.len() > 2 * light.events.len().max(1),
+            "light={} heavy={}",
+            light.events.len(),
+            heavy.events.len()
+        );
+    }
+
+    #[test]
+    fn events_sorted_and_in_horizon() {
+        let p = FaultPlan::generate(11, 40, Profile::Heavy, 10);
+        assert!(!p.events.is_empty());
+        for pair in p.events.windows(2) {
+            assert!(pair[0].t <= pair[1].t);
+        }
+        for e in &p.events {
+            assert!(e.t < 40);
+            if let Some(w) = e.event.worker() {
+                assert!(w < 10);
+            }
+        }
+    }
+
+    #[test]
+    fn episodes_of_one_kind_never_overlap() {
+        for seed in [5u64, 6, 7] {
+            let p = FaultPlan::generate(seed, 80, Profile::Heavy, 6);
+            let mut offline = vec![false; 6];
+            let mut strag = vec![false; 6];
+            let mut black = vec![false; 6];
+            let mut squeeze = vec![false; 6];
+            let mut flash = false;
+            // generation order is chronological and the sort is stable, so
+            // an episode's end always precedes the next start at equal t
+            for e in &p.events {
+                match e.event {
+                    ChaosEvent::Crash { worker } => {
+                        assert!(!offline[worker], "overlapping crash on {worker}");
+                        offline[worker] = true;
+                    }
+                    ChaosEvent::Recover { worker } => offline[worker] = false,
+                    ChaosEvent::Straggler { worker, factor } if factor < 1.0 => {
+                        assert!(!strag[worker], "overlapping straggler on {worker}");
+                        strag[worker] = true;
+                    }
+                    ChaosEvent::Straggler { worker, .. } => strag[worker] = false,
+                    ChaosEvent::Blackout { worker } => {
+                        assert!(!black[worker], "overlapping blackout on {worker}");
+                        black[worker] = true;
+                    }
+                    ChaosEvent::BlackoutEnd { worker } => black[worker] = false,
+                    ChaosEvent::RamSqueeze { worker, factor } if factor < 1.0 => {
+                        assert!(!squeeze[worker], "overlapping squeeze on {worker}");
+                        squeeze[worker] = true;
+                    }
+                    ChaosEvent::RamSqueeze { worker, .. } => squeeze[worker] = false,
+                    ChaosEvent::FlashCrowd { .. } => {
+                        assert!(!flash, "overlapping flash crowd");
+                        flash = true;
+                    }
+                    ChaosEvent::FlashCrowdEnd => flash = false,
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let p = FaultPlan::generate(13, 30, Profile::Heavy, 8);
+        let j = p.to_json().to_string();
+        let back = FaultPlan::from_json(&json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn huge_seed_survives_json() {
+        // above 2^53: would corrupt if routed through an f64 JSON number
+        let p = FaultPlan::empty((1u64 << 53) + 1, 5);
+        let back = FaultPlan::from_json(&json::parse(&p.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.seed, p.seed);
+    }
+
+    #[test]
+    fn events_at_filters_by_interval() {
+        let base = FaultPlan::empty(1, 10);
+        let p = base.with_events(vec![
+            TimedEvent { t: 2, event: ChaosEvent::Crash { worker: 0 } },
+            TimedEvent { t: 2, event: ChaosEvent::FlashCrowdEnd },
+            TimedEvent { t: 5, event: ChaosEvent::Recover { worker: 0 } },
+        ]);
+        assert_eq!(p.events_at(2).count(), 2);
+        assert_eq!(p.events_at(3).count(), 0);
+        assert_eq!(p.events_at(5).count(), 1);
+    }
+}

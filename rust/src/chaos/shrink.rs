@@ -1,0 +1,115 @@
+//! Shrink a failing fault plan to a minimal counterexample.
+//!
+//! Classic ddmin over the flat event list: repeatedly try removing chunks
+//! of events (halves, then quarters, … down to single events) and keep any
+//! reduction under which the run — restarted from the same seed — still
+//! violates the same oracle. The result is 1-minimal: removing any single
+//! remaining event makes the violation disappear.
+
+use super::plan::FaultPlan;
+
+/// Outcome of a shrink pass.
+#[derive(Clone, Debug)]
+pub struct ShrinkResult {
+    /// The minimized plan (still failing).
+    pub plan: FaultPlan,
+    /// Events in the original plan.
+    pub original_events: usize,
+    /// Re-runs spent shrinking.
+    pub runs: usize,
+}
+
+/// Minimize `plan` while `still_fails` holds. `still_fails` must re-run
+/// the whole scenario deterministically from the plan's seed and report
+/// whether the *same* oracle is still violated; it is assumed to hold for
+/// `plan` itself. Cost is bounded by `max_runs` re-executions.
+pub fn shrink_plan<F>(plan: &FaultPlan, max_runs: usize, mut still_fails: F) -> ShrinkResult
+where
+    F: FnMut(&FaultPlan) -> bool,
+{
+    let original_events = plan.events.len();
+    let mut events = plan.events.clone();
+    let mut runs = 0;
+    let mut granularity = 2usize;
+
+    while events.len() >= 2 && runs < max_runs {
+        let chunk = (events.len() + granularity - 1) / granularity;
+        let mut reduced = false;
+        let mut start = 0;
+        while start < events.len() && runs < max_runs {
+            let end = (start + chunk).min(events.len());
+            let mut candidate = events.clone();
+            candidate.drain(start..end);
+            runs += 1;
+            if still_fails(&plan.with_events(candidate.clone())) {
+                events = candidate;
+                granularity = granularity.saturating_sub(1).max(2);
+                reduced = true;
+                break;
+            }
+            start = end;
+        }
+        if !reduced {
+            if granularity >= events.len() {
+                break; // 1-minimal: no single event can be removed
+            }
+            granularity = (granularity * 2).min(events.len());
+        }
+    }
+
+    ShrinkResult { plan: plan.with_events(events), original_events, runs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::events::{ChaosEvent, TimedEvent};
+
+    fn plan_with(n: usize) -> FaultPlan {
+        let events = (0..n)
+            .map(|i| TimedEvent { t: i, event: ChaosEvent::Crash { worker: i % 4 } })
+            .collect();
+        FaultPlan::empty(9, n).with_events(events)
+    }
+
+    #[test]
+    fn shrinks_to_single_culprit() {
+        // the "bug" fires iff the plan still contains one specific crash
+        let plan = plan_with(12);
+        let culprit =
+            TimedEvent { t: 5, event: ChaosEvent::Crash { worker: 1 } };
+        let mut plan = plan;
+        plan.events[5] = culprit;
+        let r = shrink_plan(&plan, 10_000, |p| p.events.contains(&culprit));
+        assert_eq!(r.plan.events, vec![culprit]);
+        assert_eq!(r.original_events, 12);
+        assert!(r.runs > 0);
+    }
+
+    #[test]
+    fn shrinks_conjunction_to_both_events() {
+        // violation needs BOTH event 3 and event 9 (e.g. crash + recover
+        // interplay); ddmin must keep exactly the pair
+        let plan = plan_with(16);
+        let a = plan.events[3];
+        let b = plan.events[9];
+        let r = shrink_plan(&plan, 10_000, |p| {
+            p.events.contains(&a) && p.events.contains(&b)
+        });
+        assert_eq!(r.plan.events, vec![a, b]);
+    }
+
+    #[test]
+    fn already_minimal_plan_is_kept() {
+        let plan = plan_with(1);
+        let r = shrink_plan(&plan, 100, |_| true);
+        assert!(r.plan.events.len() <= 1);
+    }
+
+    #[test]
+    fn run_budget_respected() {
+        let plan = plan_with(64);
+        let r = shrink_plan(&plan, 5, |p| !p.events.is_empty());
+        assert!(r.runs <= 5);
+    }
+}

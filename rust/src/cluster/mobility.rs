@@ -25,6 +25,11 @@ pub struct ChannelState {
 
 impl ChannelState {
     pub const STATIC: ChannelState = ChannelState { ping_mult: 1.0, bw_factor: 1.0 };
+
+    /// Worst-case channel during an injected network blackout: ping pinned
+    /// at the mobility ceiling, bandwidth well below the OU floor (a real
+    /// outage is worse than any bad-signal state the OU walk can reach).
+    pub const BLACKOUT: ChannelState = ChannelState { ping_mult: 6.0, bw_factor: 0.05 };
 }
 
 /// Mobility trace generator for a fleet.

@@ -52,11 +52,13 @@ impl PolicyKind {
 
     pub fn parse(s: &str) -> Option<PolicyKind> {
         Some(match s.to_ascii_lowercase().as_str() {
-            "mab+daso" | "m+d" | "splitplace" | "mabdaso" => PolicyKind::MabDaso,
-            "mab+gobi" | "m+g" | "mabgobi" => PolicyKind::MabGobi,
-            "random+daso" | "r+d" | "randomdaso" => PolicyKind::RandomDaso,
-            "layer+gobi" | "l+g" | "layergobi" => PolicyKind::LayerGobi,
-            "semantic+gobi" | "s+g" | "semanticgobi" => PolicyKind::SemanticGobi,
+            "mab+daso" | "mab-daso" | "m+d" | "splitplace" | "mabdaso" => PolicyKind::MabDaso,
+            "mab+gobi" | "mab-gobi" | "m+g" | "mabgobi" => PolicyKind::MabGobi,
+            "random+daso" | "random-daso" | "r+d" | "randomdaso" => PolicyKind::RandomDaso,
+            "layer+gobi" | "layer-gobi" | "l+g" | "layergobi" => PolicyKind::LayerGobi,
+            "semantic+gobi" | "semantic-gobi" | "s+g" | "semanticgobi" => {
+                PolicyKind::SemanticGobi
+            }
             "gillis" => PolicyKind::Gillis,
             "mc" | "modelcompression" | "model-compression" => PolicyKind::ModelCompression,
             _ => return None,

@@ -47,6 +47,11 @@ pub struct Broker<'rt> {
     trace: TraceBuffer,
     rng: Rng,
     last_snapshots: Vec<WorkerSnapshot>,
+    /// Total tasks admitted (decisions taken) over the broker's lifetime,
+    /// including pre-training intervals. Chaos oracles audit against this.
+    pub admitted: u64,
+    /// Flash-crowd injection: when set, overrides the configured Poisson λ.
+    lambda_override: Option<f64>,
 }
 
 impl<'rt> Broker<'rt> {
@@ -56,6 +61,28 @@ impl<'rt> Broker<'rt> {
         cfg: ExperimentConfig,
         runtime: Option<&'rt Runtime>,
         mab_mode: Mode,
+    ) -> anyhow::Result<Self> {
+        Self::build(cfg, runtime, mab_mode, false)
+    }
+
+    /// Like [`Broker::new`], but a surrogate-based policy degrades to
+    /// best-fit placement when the PJRT runtime is unavailable instead of
+    /// erroring. The split decider (MAB / fixed / baseline) is unaffected.
+    /// Used by the chaos harness so fault-injection runs work without
+    /// built artifacts.
+    pub fn new_with_fallback(
+        cfg: ExperimentConfig,
+        runtime: Option<&'rt Runtime>,
+        mab_mode: Mode,
+    ) -> anyhow::Result<Self> {
+        Self::build(cfg, runtime, mab_mode, true)
+    }
+
+    fn build(
+        cfg: ExperimentConfig,
+        runtime: Option<&'rt Runtime>,
+        mab_mode: Mode,
+        fallback_placer: bool,
     ) -> anyhow::Result<Self> {
         let cluster = build_fleet(&cfg.cluster);
         let n_workers = cluster.len();
@@ -73,17 +100,29 @@ impl<'rt> Broker<'rt> {
                 | PolicyKind::SemanticGobi
         );
         let placer = if uses_gradient {
-            let rt = runtime.ok_or_else(|| {
-                anyhow::anyhow!("policy {:?} needs the PJRT runtime (artifacts)", cfg.policy)
-            })?;
-            let surrogate = Surrogate::for_workers(rt, n_workers)?;
-            let decision_aware =
-                matches!(cfg.policy, PolicyKind::MabDaso | PolicyKind::RandomDaso);
-            PlacerImpl::Gradient(GradientPlacer::new(
-                surrogate,
-                cfg.placement.clone(),
-                decision_aware,
-            ))
+            match runtime {
+                Some(rt) => {
+                    let surrogate = Surrogate::for_workers(rt, n_workers)?;
+                    let decision_aware =
+                        matches!(cfg.policy, PolicyKind::MabDaso | PolicyKind::RandomDaso);
+                    PlacerImpl::Gradient(GradientPlacer::new(
+                        surrogate,
+                        cfg.placement.clone(),
+                        decision_aware,
+                    ))
+                }
+                None if fallback_placer => {
+                    crate::log_warn!(
+                        "policy {:?}: PJRT runtime unavailable, degrading to best-fit placement",
+                        cfg.policy
+                    );
+                    PlacerImpl::Heuristic(BestFitPlacer)
+                }
+                None => anyhow::bail!(
+                    "policy {:?} needs the PJRT runtime (artifacts)",
+                    cfg.policy
+                ),
+            }
         } else {
             PlacerImpl::Heuristic(BestFitPlacer)
         };
@@ -115,7 +154,15 @@ impl<'rt> Broker<'rt> {
             trace: TraceBuffer::new(512),
             rng: Rng::new(seed),
             last_snapshots: vec![WorkerSnapshot::default(); n_workers],
+            admitted: 0,
+            lambda_override: None,
         })
+    }
+
+    /// Flash-crowd injection: override the arrival rate (None restores the
+    /// configured λ).
+    pub fn set_lambda_override(&mut self, lambda: Option<f64>) {
+        self.lambda_override = lambda;
     }
 
     fn decide(&mut self, task: &crate::workload::Task) -> SplitDecision {
@@ -163,15 +210,26 @@ impl<'rt> Broker<'rt> {
     /// One scheduling interval (Algorithm 1 body). Returns the interval's
     /// O^P objective.
     pub fn step(&mut self) -> f64 {
+        self.step_report().0
+    }
+
+    /// Like [`Broker::step`], but also hands back the engine's interval
+    /// report so callers (the chaos harness) can audit what happened.
+    pub fn step_report(&mut self) -> (f64, crate::sim::IntervalReport) {
         let t0 = Instant::now();
 
         // 1. new tasks + split decisions
-        let tasks = self.generator.arrivals(self.engine.now_s);
+        let now = self.engine.now_s;
+        let tasks = match self.lambda_override {
+            Some(l) => self.generator.arrivals_with(now, l),
+            None => self.generator.arrivals(now),
+        };
         let mut decisions = Vec::with_capacity(tasks.len());
         for task in tasks {
             let d = self.decide(&task);
             decisions.push(d);
             self.engine.admit(task, d);
+            self.admitted += 1;
         }
         self.metrics.record_decisions(&decisions);
 
@@ -213,6 +271,9 @@ impl<'rt> Broker<'rt> {
                 }
             }
         };
+        if let Some(mab) = &mut self.mab {
+            mab.observe_failures(&report.failed);
+        }
         if let Some(g) = &mut self.gillis {
             g.observe(&report.completed);
         }
@@ -245,7 +306,7 @@ impl<'rt> Broker<'rt> {
 
         // 7. metrics
         self.metrics.record_interval(&report, sched_s, o_mab);
-        o_p
+        (o_p, report)
     }
 
     /// Run the configured number of intervals.
@@ -271,6 +332,7 @@ impl<'rt> Broker<'rt> {
             for task in tasks {
                 let d = self.decide(&task);
                 self.engine.admit(task, d);
+                self.admitted += 1;
             }
             let snapshots = std::mem::take(&mut self.last_snapshots);
             let input = Self::placement_input(&self.engine, &snapshots);
@@ -357,6 +419,35 @@ mod tests {
     fn gradient_policy_requires_runtime() {
         let cfg = ExperimentConfig::small();
         assert!(Broker::new(cfg, None, Mode::Test).is_err());
+    }
+
+    #[test]
+    fn fallback_broker_runs_gradient_policy_without_runtime() {
+        let mut cfg = ExperimentConfig::small();
+        cfg.policy = PolicyKind::MabDaso;
+        cfg.sim.intervals = 8;
+        let mut b = Broker::new_with_fallback(cfg, None, Mode::Test).unwrap();
+        b.run();
+        assert!(b.metrics.summary("M+D/best-fit").tasks > 0);
+        assert!(b.admitted > 0, "admission counter must advance");
+    }
+
+    #[test]
+    fn lambda_override_scales_arrivals() {
+        let run = |mult: Option<f64>| -> u64 {
+            let mut cfg = ExperimentConfig::small();
+            cfg.policy = PolicyKind::ModelCompression;
+            cfg.sim.intervals = 10;
+            let mut b = Broker::new(cfg, None, Mode::Test).unwrap();
+            b.set_lambda_override(mult);
+            for _ in 0..10 {
+                b.step();
+            }
+            b.admitted
+        };
+        let base = run(None);
+        let crowd = run(Some(20.0));
+        assert!(crowd > 2 * base.max(1), "base={base} crowd={crowd}");
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //!   split decider ([`mab`]), decision-aware surrogate placement
 //!   ([`placement::daso`]), the broker loop implementing the paper's
 //!   Algorithm 1 ([`coordinator`]), a discrete-interval mobile-edge cluster
-//!   engine ([`sim`], [`cluster`]), baselines ([`baselines`]) and a
-//!   thread-pool serving front-end ([`server`]).
+//!   engine ([`sim`], [`cluster`]), baselines ([`baselines`]), a
+//!   thread-pool serving front-end ([`server`]) and a deterministic
+//!   fault-injection harness with invariant oracles ([`chaos`]).
 //! * **Layer 2 (python/compile, build-time only)** — JAX split-network and
 //!   surrogate graphs, AOT-lowered to HLO text in `artifacts/`.
 //! * **Layer 1 (python/compile/kernels)** — the Pallas fused-dense kernel
@@ -19,6 +20,7 @@
 
 pub mod baselines;
 pub mod benchlib;
+pub mod chaos;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

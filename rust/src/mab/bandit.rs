@@ -93,6 +93,16 @@ impl Bandit {
         o_sum / 4.0
     }
 
+    /// Eq. 5 update toward a zero observation — a task of this
+    /// (context, arm) left the system failed: SLA blown, no output.
+    pub fn penalize(&mut self, ctx: Context, d: SplitDecision) {
+        if !matches!(d, SplitDecision::Layer | SplitDecision::Semantic) {
+            return;
+        }
+        let (c, a) = (ctx.index(), d.arm_index());
+        self.q[c][a] += self.gamma * (0.0 - self.q[c][a]);
+    }
+
     /// Greedy arm for a context.
     pub fn greedy(&self, ctx: Context) -> SplitDecision {
         if self.q[ctx.index()][0] >= self.q[ctx.index()][1] {

@@ -145,6 +145,27 @@ impl MabPolicy {
         self.last_o_mab = o_mab;
         o_mab
     }
+
+    /// Failed (abandoned) tasks carry a zero reward for the arm that was
+    /// chosen for them — without this, a policy whose decisions strand
+    /// tasks never feels it. The R^a estimator is untouched: a failure
+    /// says nothing about layer response time.
+    pub fn observe_failures(&mut self, failed: &[crate::sim::FailedTask]) {
+        for t in failed {
+            if !matches!(t.decision, SplitDecision::Layer | SplitDecision::Semantic) {
+                continue;
+            }
+            let ctx = if self.cfg.single_context {
+                Context::High
+            } else {
+                Context::of(
+                    t.sla,
+                    self.estimator.estimate(t.app) * Self::size_factor(t.batch),
+                )
+            };
+            self.bandit.penalize(ctx, t.decision);
+        }
+    }
 }
 
 impl ResponseEstimator {
@@ -242,6 +263,27 @@ mod tests {
             "high ctx should not strongly favor semantic: {:?}",
             p.bandit.q
         );
+    }
+
+    #[test]
+    fn failures_penalize_the_chosen_arm_only() {
+        let mut p = MabPolicy::new(MabConfig::default(), Mode::Test);
+        let q0 = p.bandit.q[0][0];
+        let f = crate::sim::FailedTask {
+            task_id: 0,
+            app: App::Mnist,
+            decision: SplitDecision::Layer,
+            batch: 32_000,
+            sla: 20.0, // far above the warm estimate: High context
+            age: 40.0,
+        };
+        p.observe_failures(std::slice::from_ref(&f));
+        assert!(p.bandit.q[0][0] < q0, "failed layer task must drag Q down");
+        // non-arm decisions are ignored
+        let q_before = p.bandit.q;
+        let f2 = crate::sim::FailedTask { decision: SplitDecision::Compressed, ..f };
+        p.observe_failures(std::slice::from_ref(&f2));
+        assert_eq!(p.bandit.q, q_before);
     }
 
     #[test]

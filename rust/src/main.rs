@@ -4,6 +4,9 @@
 //!   run [--policy P] [--intervals N] [--lambda L] [--workers small|full]
 //!       [--alpha A] [--constraint c] [--accuracy measured|manifest]
 //!   compare [--intervals N]        all 7 policies, Table-4 style
+//!   chaos [--seed S] [--intervals N] [--profile light|heavy] [--policy P]
+//!         [--differential P2] [--plan FILE] [--inject-bug KIND]
+//!         [--task-timeout K]      deterministic fault injection + oracles
 //!   serve [--addr A] [--threads N] serving front-end
 //!   info                           artifact + cluster inventory
 //!
@@ -11,6 +14,7 @@
 
 use anyhow::{bail, Result};
 
+use splitplace::chaos::{self, BugKind, ChaosOptions, ChaosOutcome, FaultPlan, Profile};
 use splitplace::config::{
     AccuracyMode, ClusterConfig, EnvConstraint, ExperimentConfig, PolicyKind,
 };
@@ -141,6 +145,183 @@ fn cmd_compare(flags: std::collections::HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Derive the experiment's internal seeds from the chaos seed so one
+/// number reproduces the whole run (plan, fleet, workload, MAB).
+fn chaos_seed_config(cfg: &mut ExperimentConfig, seed: u64) {
+    cfg.workload.seed = seed ^ 0x57AB;
+    cfg.cluster.seed = seed ^ 0xC1A0;
+    cfg.mab.seed = seed ^ 0x03AB;
+}
+
+fn print_chaos_outcome(policy: &str, out: &ChaosOutcome, intervals: usize) {
+    let mut t = Table::new(
+        &format!("Chaos oracles — {policy}, {intervals} intervals"),
+        &["invariant", "status", "violations"],
+    );
+    for oracle in chaos::ORACLES {
+        let n = out.violations.iter().filter(|v| v.oracle == oracle).count();
+        t.row(vec![
+            oracle.into(),
+            if n == 0 { "ok".into() } else { "VIOLATED".into() },
+            n.to_string(),
+        ]);
+    }
+    t.print();
+    let s = &out.summary;
+    let mut t = Table::new("Run summary", &["metric", "value"]);
+    t.row(vec!["tasks admitted".into(), out.admitted.to_string()]);
+    t.row(vec!["tasks completed".into(), out.completed.to_string()]);
+    t.row(vec!["tasks failed".into(), out.failed.to_string()]);
+    t.row(vec!["SLA violations (eq.14)".into(), fnum(s.sla_violations)]);
+    t.row(vec!["avg reward (eq.15)".into(), fnum(s.avg_reward)]);
+    t.row(vec!["response (intervals)".into(), fpm(s.response.0, s.response.1)]);
+    t.row(vec!["energy (MW-hr)".into(), fnum(s.energy_mwh)]);
+    t.print();
+}
+
+fn cmd_chaos(flags: std::collections::HashMap<String, String>) -> Result<()> {
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(7);
+    let profile_name = flags.get("profile").map(String::as_str).unwrap_or("light");
+    let profile = Profile::parse(profile_name)
+        .ok_or_else(|| anyhow::anyhow!("--profile must be light|heavy, got {profile_name}"))?;
+
+    let mut cfg = build_config(&flags)?;
+    if !flags.contains_key("workers") {
+        cfg.cluster = ClusterConfig::small();
+    }
+    if !flags.contains_key("intervals") {
+        cfg.sim.intervals = 25;
+    }
+    chaos_seed_config(&mut cfg, seed);
+
+    let plan = match flags.get("plan") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading plan {path}: {e}"))?;
+            let plan = FaultPlan::from_json(&splitplace::util::json::parse(&text)?)?;
+            if !flags.contains_key("intervals") {
+                cfg.sim.intervals = plan.intervals;
+            }
+            // reproduce the original run exactly, whatever --seed says
+            chaos_seed_config(&mut cfg, plan.seed);
+            plan
+        }
+        None => FaultPlan::generate(seed, cfg.sim.intervals, profile, cfg.cluster.total_workers()),
+    };
+
+    let opts = ChaosOptions {
+        bug: match flags.get("inject-bug") {
+            Some(s) => Some(
+                BugKind::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown --inject-bug '{s}'"))?,
+            ),
+            None => None,
+        },
+        task_timeout_intervals: flags
+            .get("task-timeout")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(40),
+    };
+
+    let rt = try_runtime();
+    eprintln!(
+        "chaos: seed {seed}, profile {}, {} events over {} intervals, policy {}",
+        plan.profile,
+        plan.events.len(),
+        cfg.sim.intervals,
+        cfg.policy.name()
+    );
+
+    let policy_b = flags
+        .get("differential")
+        .map(|p2| {
+            PolicyKind::parse(p2)
+                .ok_or_else(|| anyhow::anyhow!("unknown --differential policy '{p2}'"))
+        })
+        .transpose()?;
+    let (out, out_b) = match policy_b {
+        Some(pb) => {
+            let (a, b) = chaos::run_differential(&cfg, pb, &plan, &opts, rt.as_ref())?;
+            (a, Some((pb, b)))
+        }
+        None => (chaos::run_chaos(&cfg, &plan, &opts, rt.as_ref())?, None),
+    };
+    print_chaos_outcome(cfg.policy.name(), &out, cfg.sim.intervals);
+
+    if let Some((pb, out_b)) = &out_b {
+        print_chaos_outcome(pb.name(), out_b, cfg.sim.intervals);
+        let mut t = Table::new(
+            "Differential (same fault plan)",
+            &["metric", cfg.policy.name(), pb.name()],
+        );
+        t.row(vec![
+            "oracle violations".into(),
+            out.violations.len().to_string(),
+            out_b.violations.len().to_string(),
+        ]);
+        t.row(vec![
+            "completed".into(),
+            out.completed.to_string(),
+            out_b.completed.to_string(),
+        ]);
+        t.row(vec!["failed".into(), out.failed.to_string(), out_b.failed.to_string()]);
+        t.row(vec![
+            "SLA violations".into(),
+            fnum(out.summary.sla_violations),
+            fnum(out_b.summary.sla_violations),
+        ]);
+        t.row(vec![
+            "avg reward".into(),
+            fnum(out.summary.avg_reward),
+            fnum(out_b.summary.avg_reward),
+        ]);
+        t.print();
+    }
+
+    // A violation under EITHER policy is a bug: shrink under the policy
+    // that hit it and exit non-zero so CI fails.
+    let culprit = if !out.violations.is_empty() {
+        Some((cfg.policy, &out.violations[0]))
+    } else {
+        out_b
+            .as_ref()
+            .and_then(|(pb, b)| b.violations.first().map(|v| (*pb, v)))
+    };
+    if let Some((policy, first)) = culprit {
+        let mut cfg_v = cfg.clone();
+        cfg_v.policy = policy;
+        eprintln!("first violation ({}): {first}", policy.name());
+        eprintln!("shrinking the plan to a minimal counterexample...");
+        let shrunk = chaos::shrink_to_minimal(&cfg_v, &plan, &opts, rt.as_ref(), first.oracle);
+        eprintln!(
+            "minimal failing plan: {} events (from {}), found in {} re-runs",
+            shrunk.plan.events.len(),
+            shrunk.original_events,
+            shrunk.runs
+        );
+        println!("{}", shrunk.plan.to_json().to_pretty());
+        // carry every non-plan flag through so the replay rebuilds the
+        // same cluster/workload/policy config, not the defaults
+        let mut extra = String::new();
+        let mut keys: Vec<&String> = flags.keys().collect();
+        keys.sort();
+        for key in keys {
+            if matches!(key.as_str(), "plan" | "seed" | "profile" | "differential" | "policy") {
+                continue; // plan carries seed/profile; policy set below
+            }
+            extra.push_str(&format!(" --{key} {}", flags[key]));
+        }
+        eprintln!(
+            "reproduce: save the JSON above to plan.json, then run\n  \
+             splitplace chaos --plan plan.json --policy {}{extra}",
+            policy.name()
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_serve(flags: std::collections::HashMap<String, String>) -> Result<()> {
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7077".into());
     let threads: usize = flags.get("threads").map(|t| t.parse()).transpose()?.unwrap_or(4);
@@ -206,10 +387,11 @@ fn main() -> Result<()> {
     match cmd {
         "run" => cmd_run(flags),
         "compare" => cmd_compare(flags),
+        "chaos" => cmd_chaos(flags),
         "serve" => cmd_serve(flags),
         "info" => cmd_info(),
         other => {
-            eprintln!("unknown command '{other}'; try: run, compare, serve, info");
+            eprintln!("unknown command '{other}'; try: run, compare, chaos, serve, info");
             std::process::exit(2);
         }
     }

@@ -18,20 +18,21 @@ pub fn write_csv(metrics: &Metrics, dir: impl AsRef<Path>) -> Result<()> {
         .context("creating intervals.csv")?;
     writeln!(
         f,
-        "interval,energy_wh,aec,art,sched_s,queued,o_mab,layer_fraction"
+        "interval,energy_wh,aec,art,sched_s,queued,failed,o_mab,layer_fraction"
     )?;
     let n = metrics.energy_wh.len();
     for i in 0..n {
         let lf = metrics.layer_fraction.get(i).copied().unwrap_or(f64::NAN);
         writeln!(
             f,
-            "{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{}",
             i,
             metrics.energy_wh[i],
             metrics.aec[i],
             metrics.art.get(i).copied().unwrap_or(f64::NAN),
             metrics.sched_s[i],
             metrics.queued.get(i).copied().unwrap_or(0),
+            metrics.failed.get(i).copied().unwrap_or(0),
             metrics.o_mab.get(i).copied().unwrap_or(f64::NAN),
             lf,
         )?;
@@ -78,6 +79,7 @@ mod tests {
         m.record_interval(
             &IntervalReport {
                 interval: 0,
+                failed: vec![],
                 completed: vec![CompletedTask {
                     task_id: 1,
                     app: App::Mnist,

@@ -24,6 +24,13 @@ pub struct Metrics {
     pub sched_s: Vec<f64>,
     /// Per-interval queue length at interval end.
     pub queued: Vec<usize>,
+    /// Per-interval count of abandoned (failed) tasks — nonzero only under
+    /// fault injection / starvation guards.
+    pub failed: Vec<usize>,
+    /// Running total of failed tasks. A failed task is a blown SLA and a
+    /// zero-reward outcome, so the eq. 13–15 metrics count it — otherwise
+    /// a policy that strands tasks would beat one that finishes them late.
+    pub failed_total: usize,
     /// Per-interval O^MAB (reward signal trace, Fig. 6).
     pub o_mab: Vec<f64>,
     /// Containers executed per worker (fairness input).
@@ -72,6 +79,8 @@ impl Metrics {
         self.aec.push(report.aec);
         self.sched_s.push(sched_s);
         self.queued.push(report.queued);
+        self.failed.push(report.failed.len());
+        self.failed_total += report.failed.len();
         self.o_mab.push(o_mab);
         let art = stats::mean(
             &report
@@ -117,31 +126,34 @@ impl Metrics {
         )
     }
 
-    /// Eq. 14: fraction of tasks with response > SLA.
+    /// Eq. 14: fraction of leaving tasks with response > SLA. A failed
+    /// (abandoned) task never met its deadline, so it counts as violated.
     pub fn sla_violations(&self) -> f64 {
-        if self.completed.is_empty() {
+        let n = self.completed.len() + self.failed_total;
+        if n == 0 {
             return 0.0;
         }
-        self.completed
-            .iter()
-            .filter(|t| t.response > t.sla)
-            .count() as f64
-            / self.completed.len() as f64
+        let late = self.completed.iter().filter(|t| t.response > t.sla).count();
+        (late + self.failed_total) as f64 / n as f64
     }
 
-    /// Eq. 15: mean of (1(r≤sla) + p)/2.
+    /// Eq. 15: mean of (1(r≤sla) + p)/2 over leaving tasks; a failed task
+    /// contributes reward 0.
     pub fn avg_reward(&self) -> f64 {
-        stats::mean(
-            &self
-                .completed
-                .iter()
-                .map(|t| {
-                    let ok = if t.response <= t.sla { 1.0 } else { 0.0 };
-                    let p = if t.accuracy.is_finite() { t.accuracy } else { 0.0 };
-                    (ok + p) / 2.0
-                })
-                .collect::<Vec<_>>(),
-        )
+        let n = self.completed.len() + self.failed_total;
+        if n == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .completed
+            .iter()
+            .map(|t| {
+                let ok = if t.response <= t.sla { 1.0 } else { 0.0 };
+                let p = if t.accuracy.is_finite() { t.accuracy } else { 0.0 };
+                (ok + p) / 2.0
+            })
+            .sum();
+        sum / n as f64
     }
 
     /// Eq. 16: fleet cost over the run (static fleet ⇒ rate × wall time).
@@ -293,6 +305,7 @@ mod tests {
         IntervalReport {
             interval: 0,
             completed,
+            failed: vec![],
             energy_wh: 1000.0,
             aec: 0.5,
             snapshots: vec![WorkerSnapshot::default(); 4],
@@ -323,6 +336,25 @@ mod tests {
             done(App::Mnist, SplitDecision::Layer, 2.0, 5.0, 0.9),
         ]);
         assert!((m.sla_violations() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failed_tasks_count_as_violations_and_zero_reward() {
+        let mut m = Metrics::new(4, 10.0, 300.0);
+        let mut r = report(vec![done(App::Mnist, SplitDecision::Layer, 2.0, 5.0, 1.0)]);
+        r.failed = vec![crate::sim::FailedTask {
+            task_id: 9,
+            app: App::Mnist,
+            decision: SplitDecision::Layer,
+            batch: 1000,
+            sla: 5.0,
+            age: 40.0,
+        }];
+        m.record_interval(&r, 0.1, 0.9);
+        // one perfect completion (reward 1, in-SLA) + one failure:
+        // violations 1/2, reward (1 + 0)/2
+        assert!((m.sla_violations() - 0.5).abs() < 1e-12);
+        assert!((m.avg_reward() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 use std::io::{BufRead, BufReader, Write as _};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -33,6 +33,10 @@ struct Shared {
     mab: Mutex<MabPolicy>,
     requests: AtomicU64,
     stop: AtomicBool,
+    /// Worker threads whose runtime loaded successfully.
+    ready_workers: AtomicUsize,
+    /// Worker threads that died before serving (runtime load failure).
+    dead_workers: AtomicUsize,
 }
 
 /// Handle for a running server.
@@ -56,6 +60,8 @@ impl Server {
             mab: Mutex::new(MabPolicy::new(MabConfig::default(), Mode::Test)),
             requests: AtomicU64::new(0),
             stop: AtomicBool::new(false),
+            ready_workers: AtomicUsize::new(0),
+            dead_workers: AtomicUsize::new(0),
         });
 
         // bounded handoff queue: accept thread -> worker pool
@@ -68,8 +74,19 @@ impl Server {
             let sh = shared.clone();
             threads.push(std::thread::spawn(move || {
                 // per-thread PJRT runtime (see Shared docs)
-                let Ok(runtime) = Runtime::load(&sh.artifacts_dir) else {
-                    return;
+                let runtime = match Runtime::load(&sh.artifacts_dir) {
+                    Ok(rt) => {
+                        sh.ready_workers.fetch_add(1, Ordering::SeqCst);
+                        rt
+                    }
+                    Err(e) => {
+                        crate::log_error!(
+                            "server worker thread died: failed to load runtime from {}: {e:#}",
+                            sh.artifacts_dir
+                        );
+                        sh.dead_workers.fetch_add(1, Ordering::SeqCst);
+                        return;
+                    }
                 };
                 loop {
                 let stream = {
@@ -91,6 +108,23 @@ impl Server {
                 }
                 }
             }));
+        }
+
+        // Surface a server-level startup failure when EVERY worker thread
+        // dies loading its runtime — a server with no workers would accept
+        // connections and never answer them.
+        let n_workers = workers.max(1);
+        loop {
+            if shared.ready_workers.load(Ordering::SeqCst) > 0 {
+                break;
+            }
+            if shared.dead_workers.load(Ordering::SeqCst) == n_workers {
+                anyhow::bail!(
+                    "server startup failed: all {n_workers} worker threads failed to load \
+                     the runtime from {artifacts_dir} (see log for per-worker errors)"
+                );
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
         }
 
         let q2 = queue.clone();
@@ -117,6 +151,11 @@ impl Server {
 
     pub fn requests_served(&self) -> u64 {
         self.shared.requests.load(Ordering::Relaxed)
+    }
+
+    /// Worker threads that loaded their runtime and are serving.
+    pub fn live_workers(&self) -> usize {
+        self.shared.ready_workers.load(Ordering::SeqCst)
     }
 
     pub fn shutdown(mut self) {
@@ -257,6 +296,17 @@ mod tests {
         }
         assert_eq!(server.requests_served(), 3);
         server.shutdown();
+    }
+
+    #[test]
+    fn startup_fails_loudly_when_all_workers_die() {
+        // no artifacts at this path: every worker thread dies loading its
+        // runtime, and start() must surface that instead of hanging
+        let err = Server::start("/nonexistent/splitplace_artifacts", "127.0.0.1:0", 2)
+            .err()
+            .expect("start must fail with no live workers");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("all 2 worker threads"), "got: {msg}");
     }
 
     #[test]

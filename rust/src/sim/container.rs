@@ -25,6 +25,9 @@ pub enum ContainerState {
     Migrating { until_s: f64, to: usize },
     /// Finished at the recorded time.
     Done { at_s: f64 },
+    /// Abandoned: the task was failed (timeout / unrecoverable fault) and
+    /// this fragment will never run. Terminal, like `Done`.
+    Failed,
 }
 
 #[derive(Clone, Debug)]
@@ -61,7 +64,10 @@ pub struct Container {
 
 impl Container {
     pub fn is_active(&self) -> bool {
-        !matches!(self.state, ContainerState::Done { .. })
+        !matches!(
+            self.state,
+            ContainerState::Done { .. } | ContainerState::Failed
+        )
     }
 
     /// Containers the placement engine should consider this interval.
@@ -131,6 +137,8 @@ mod tests {
         assert!(c.is_active() && c.is_placeable(), "chains are pre-placed");
         c.state = ContainerState::Done { at_s: 5.0 };
         assert!(!c.is_active() && c.is_done());
+        c.state = ContainerState::Failed;
+        assert!(!c.is_active() && !c.is_placeable() && !c.is_done());
     }
 
     #[test]

@@ -18,7 +18,11 @@
 //!
 //! Energy integrates the SPEC power curve over busy time per worker.
 
-use std::collections::HashMap;
+// BTreeMap, not HashMap: task iteration order feeds order-sensitive
+// consumers (the MAB response-time EMA, Gillis RL updates), and std's
+// HashMap order varies per process — which would break the chaos engine's
+// bit-identical replay guarantee.
+use std::collections::BTreeMap;
 
 use crate::cluster::energy;
 use crate::cluster::mobility::{ChannelState, MobilityModel};
@@ -56,6 +60,20 @@ pub struct CompletedTask {
     pub accuracy: f64,
 }
 
+/// A task that was abandoned (timeout or unrecoverable fault) rather than
+/// completed. Failed tasks leave the system like completions do, so the
+/// broker's bookkeeping stays conserved under fault injection.
+#[derive(Clone, Debug)]
+pub struct FailedTask {
+    pub task_id: u64,
+    pub app: crate::splits::App,
+    pub decision: SplitDecision,
+    pub batch: u64,
+    pub sla: f64,
+    /// Age at failure, in scheduling intervals.
+    pub age: f64,
+}
+
 /// Per-worker observability snapshot (feeds S_t featurization).
 #[derive(Clone, Debug, Default)]
 pub struct WorkerSnapshot {
@@ -76,6 +94,8 @@ pub struct WorkerSnapshot {
 pub struct IntervalReport {
     pub interval: usize,
     pub completed: Vec<CompletedTask>,
+    /// Tasks abandoned this interval (see [`Engine::fail_task`]).
+    pub failed: Vec<FailedTask>,
     pub energy_wh: f64,
     /// Normalized AEC ∈ [0,1] (for eq. 10).
     pub aec: f64,
@@ -92,7 +112,7 @@ pub struct Engine {
     pub channels: Vec<ChannelState>,
     cfg: SimConfig,
     pub containers: Vec<Container>,
-    tasks: HashMap<u64, TaskEntry>,
+    tasks: BTreeMap<u64, TaskEntry>,
     pub now_s: f64,
     pub interval: usize,
     /// Worker availability under churn (paper §7 future work); all online
@@ -100,6 +120,15 @@ pub struct Engine {
     online: Vec<bool>,
     churn_rate: f64,
     churn_rng: crate::util::rng::Rng,
+    /// Per-worker MIPS degradation factor ∈ (0, 1] (straggler injection).
+    mips_factor: Vec<f64>,
+    /// Per-worker effective-RAM factor ∈ (0, 1] (RAM-squeeze injection).
+    ram_factor: Vec<f64>,
+    /// Per-worker forced channel state (network blackout injection);
+    /// overlays the mobility model while set.
+    channel_override: Vec<Option<ChannelState>>,
+    /// Tasks failed since the last interval report.
+    pending_failed: Vec<FailedTask>,
     // scratch: per-worker busy seconds within the current interval
     busy_s: Vec<f64>,
     xfer_s: Vec<f64>,
@@ -110,6 +139,7 @@ struct TaskEntry {
     task: Task,
     containers: Vec<ContainerId>,
     done: bool,
+    failed: bool,
 }
 
 impl Engine {
@@ -124,12 +154,16 @@ impl Engine {
             channels,
             cfg,
             containers: Vec::new(),
-            tasks: HashMap::new(),
+            tasks: BTreeMap::new(),
             now_s: 0.0,
             interval: 0,
             online: vec![true; n],
             churn_rate: 0.0,
             churn_rng: crate::util::rng::Rng::new(seed ^ 0xC0FFEE),
+            mips_factor: vec![1.0; n],
+            ram_factor: vec![1.0; n],
+            channel_override: vec![None; n],
+            pending_failed: Vec::new(),
             busy_s: vec![0.0; n],
             xfer_s: vec![0.0; n],
         }
@@ -187,7 +221,8 @@ impl Engine {
             });
             ids.push(id);
         }
-        self.tasks.insert(task.id, TaskEntry { task, containers: ids, done: false });
+        self.tasks
+            .insert(task.id, TaskEntry { task, containers: ids, done: false, failed: false });
     }
 
     /// Containers the placement engine must consider (placeable states).
@@ -199,12 +234,17 @@ impl Engine {
             .collect()
     }
 
-    /// Resident RAM demand per worker (running/transferring/migrating-in).
+    /// Resident RAM demand per worker: running/transferring/migrating-in
+    /// containers plus Blocked chain successors holding a reservation —
+    /// a reservation consumes capacity so the later unblock (which starts
+    /// its transfer unconditionally) can never breach the overcommit cap.
     pub fn resident_ram(&self) -> Vec<f64> {
         let mut ram = vec![0.0; self.cluster.len()];
         for c in &self.containers {
             match c.state {
-                ContainerState::Running | ContainerState::Transferring { .. } => {
+                ContainerState::Running
+                | ContainerState::Transferring { .. }
+                | ContainerState::Blocked => {
                     if let Some(w) = c.worker {
                         ram[w] += c.ram_mb;
                     }
@@ -234,9 +274,41 @@ impl Engine {
             return;
         }
         self.online[w] = up;
-        if up {
+        if !up {
+            self.evict_worker(w, false);
+        }
+    }
+
+    /// Hard-crash a worker: offline immediately, and unlike the graceful
+    /// churn path there is no time to checkpoint — resident containers are
+    /// requeued with their progress LOST (input must be re-staged and the
+    /// fragment recomputed from scratch).
+    pub fn crash_worker(&mut self, w: usize) {
+        if w >= self.online.len() || !self.online[w] {
             return;
         }
+        self.online[w] = false;
+        self.evict_worker(w, true);
+    }
+
+    /// Bring a crashed/offline worker back.
+    pub fn recover_worker(&mut self, w: usize) {
+        if w < self.online.len() {
+            self.set_online(w, true);
+        }
+    }
+
+    /// Chaos-testing bug-injection hook: take a worker offline WITHOUT
+    /// evicting its containers. This deliberately violates the
+    /// `crashed-workers-idle` invariant so the chaos oracles can be
+    /// validated end-to-end. Never call this outside fault-injection tests.
+    pub fn force_offline_no_evict(&mut self, w: usize) {
+        if w < self.online.len() {
+            self.online[w] = false;
+        }
+    }
+
+    fn evict_worker(&mut self, w: usize, drop_progress: bool) {
         for c in self.containers.iter_mut() {
             let resident_here = match c.state {
                 ContainerState::Running | ContainerState::Transferring { .. } => {
@@ -253,11 +325,112 @@ impl Engine {
                 _ => false,
             };
             if resident_here {
-                // checkpoint: mi_done preserved; input must be re-staged
+                // checkpoint (or drop): input must be re-staged either way
                 c.worker = None;
                 c.state = ContainerState::Queued;
+                if drop_progress {
+                    c.mi_done = 0.0;
+                }
             }
         }
+    }
+
+    /// Degrade a worker's compute throughput (straggler injection):
+    /// `factor` scales its MIPS; 1.0 restores full speed.
+    pub fn set_mips_factor(&mut self, w: usize, factor: f64) {
+        if w < self.mips_factor.len() {
+            self.mips_factor[w] = factor.clamp(0.05, 1.0);
+        }
+    }
+
+    /// Shrink a worker's effective RAM (memory-squeeze injection): `factor`
+    /// scales the capacity seen by allocation and thrash checks; 1.0
+    /// restores it. The physical Table-3 capacity is unchanged.
+    pub fn set_ram_factor(&mut self, w: usize, factor: f64) {
+        if w < self.ram_factor.len() {
+            self.ram_factor[w] = factor.clamp(0.1, 1.0);
+        }
+    }
+
+    /// Force a worker's channel state (network blackout injection); `None`
+    /// returns control to the mobility model at the next interval.
+    pub fn set_channel_override(&mut self, w: usize, ch: Option<ChannelState>) {
+        if w >= self.channel_override.len() {
+            return;
+        }
+        self.channel_override[w] = ch;
+        if let Some(ch) = ch {
+            self.channels[w] = ch;
+        }
+    }
+
+    /// Effective RAM capacity of worker `w` under any active squeeze.
+    pub fn effective_ram_mb(&self, w: usize) -> f64 {
+        self.cluster.workers[w].spec.ram_mb * self.ram_factor[w]
+    }
+
+    /// Abandon a task: mark it failed, kill its unfinished containers and
+    /// release their workers. Returns false if the task is unknown or has
+    /// already left the system. The failure surfaces in the next
+    /// [`IntervalReport::failed`].
+    pub fn fail_task(&mut self, id: u64) -> bool {
+        let Some(e) = self.tasks.get_mut(&id) else {
+            return false;
+        };
+        if e.done {
+            return false;
+        }
+        e.done = true;
+        e.failed = true;
+        let task = e.task.clone();
+        let cids = e.containers.clone();
+        for &cid in &cids {
+            let c = &mut self.containers[cid];
+            if !c.is_done() {
+                c.state = ContainerState::Failed;
+                c.worker = None;
+            }
+        }
+        self.pending_failed.push(FailedTask {
+            task_id: id,
+            app: task.app,
+            decision: task.decision.unwrap_or(SplitDecision::Full),
+            batch: task.batch,
+            sla: task.sla,
+            age: (self.now_s - task.arrival_s) / self.cfg.interval_seconds,
+        });
+        true
+    }
+
+    /// Fail every active task older than `age_s` simulation seconds
+    /// (starvation guard under fault injection). Returns how many failed.
+    pub fn fail_tasks_older_than(&mut self, age_s: f64) -> usize {
+        let now = self.now_s;
+        let ids: Vec<u64> = self
+            .tasks
+            .iter()
+            .filter(|(_, e)| !e.done && now - e.task.arrival_s > age_s)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &ids {
+            self.fail_task(*id);
+        }
+        ids.len()
+    }
+
+    /// Tasks ever admitted.
+    pub fn admitted_task_count(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Tasks that completed successfully.
+    pub fn completed_task_count(&self) -> usize {
+        self.tasks.values().filter(|e| e.done && !e.failed).count()
+    }
+
+    /// Tasks that were abandoned via [`Engine::fail_task`].
+    pub fn failed_task_count(&self) -> usize {
+        self.tasks.values().filter(|e| e.failed).count()
     }
 
     fn apply_churn(&mut self) {
@@ -289,7 +462,7 @@ impl Engine {
             return true;
         }
         let resident = self.resident_ram();
-        resident[w] + c.ram_mb <= self.cluster.workers[w].spec.ram_mb * RAM_OVERCOMMIT
+        resident[w] + c.ram_mb <= self.effective_ram_mb(w) * RAM_OVERCOMMIT
     }
 
     /// Apply a placement: allocations for queued containers, migrations for
@@ -416,6 +589,7 @@ impl Engine {
         let report = IntervalReport {
             interval: self.interval,
             completed,
+            failed: std::mem::take(&mut self.pending_failed),
             energy_wh,
             aec,
             snapshots,
@@ -424,8 +598,13 @@ impl Engine {
         };
 
         self.interval += 1;
-        // advance mobility for the next interval
+        // advance mobility for the next interval; blackout overrides win
         self.channels = self.mobility.step();
+        for (w, ov) in self.channel_override.iter().enumerate() {
+            if let Some(ch) = ov {
+                self.channels[w] = *ch;
+            }
+        }
         report
     }
 
@@ -478,20 +657,23 @@ impl Engine {
                 continue;
             }
             let spec = &self.cluster.workers[w].spec;
+            // Straggler injection scales the whole node's throughput.
+            let mips = spec.mips * self.mips_factor[w];
             // Per-container rate is capped at two cores' worth: every
             // Table-3 node has the same per-core speed ("Intel i3 2.4 GHz
             // cores" for all types), so a bigger node hosts more
             // containers rather than running one container faster. This
             // keeps layer response times tight (paper: 9.92±0.91).
-            let per_core = spec.mips / spec.cores as f64;
-            let share = (spec.mips / running[w].len() as f64).min(per_core * 2.0);
-            let thrash = if resident[w] > spec.ram_mb {
-                (spec.ram_mb / resident[w]).max(THRASH_FLOOR)
+            let per_core = mips / spec.cores as f64;
+            let share = (mips / running[w].len() as f64).min(per_core * 2.0);
+            let ram_cap = self.effective_ram_mb(w);
+            let thrash = if resident[w] > ram_cap {
+                (ram_cap / resident[w]).max(THRASH_FLOOR)
             } else {
                 1.0
             };
             let used: f64 = share * running[w].len() as f64;
-            self.busy_s[w] += dt * (used / spec.mips).min(1.0);
+            self.busy_s[w] += dt * (used / mips).min(1.0);
             for &cid in &running[w] {
                 let c = &mut self.containers[cid];
                 c.mi_done += share * thrash * dt;
@@ -676,10 +858,19 @@ mod tests {
                     return t.response;
                 }
             }
-            panic!("{decision:?} never completed");
+            // A starved task is a recoverable failed outcome, not a panic:
+            // abandon it and surface the failure through the report.
+            assert!(e.fail_task(1), "starved task must still be active");
+            let r = e.step_interval();
+            assert_eq!(r.failed.len(), 1, "{decision:?} starved without a failure report");
+            f64::INFINITY
         };
         let layer = run(SplitDecision::Layer);
         let semantic = run(SplitDecision::Semantic);
+        // both must actually complete — an INFINITY sentinel would make
+        // the ordering assertion below pass vacuously
+        assert!(layer.is_finite(), "layer starved instead of completing");
+        assert!(semantic.is_finite(), "semantic starved instead of completing");
         assert!(
             semantic < layer,
             "semantic ({semantic}) must beat layer ({layer})"
@@ -827,6 +1018,121 @@ mod tests {
         e.set_online(4, false);
         assert_eq!(e.containers[1].worker, None, "reservation must clear");
         assert_eq!(e.containers[0].state, ContainerState::Queued);
+    }
+
+    #[test]
+    fn fail_task_reports_failed_outcome() {
+        let mut e = engine();
+        e.admit(task(1, App::Mnist, 32_000), SplitDecision::Layer);
+        e.apply_placement(&[(0, 0)]);
+        e.step_interval();
+        assert!(e.fail_task(1), "active task fails");
+        assert!(!e.fail_task(1), "double-fail is a no-op");
+        assert!(!e.fail_task(99), "unknown task ignored");
+        let r = e.step_interval();
+        assert_eq!(r.failed.len(), 1);
+        assert_eq!(r.failed[0].task_id, 1);
+        assert_eq!(r.failed[0].decision, SplitDecision::Layer);
+        assert!(r.failed[0].age > 0.0);
+        // containers are terminal and hold no resources
+        for c in &e.containers {
+            assert_eq!(c.state, ContainerState::Failed);
+            assert_eq!(c.worker, None);
+        }
+        assert_eq!(e.failed_task_count(), 1);
+        assert_eq!(e.completed_task_count(), 0);
+        assert_eq!(e.active_task_count(), 0);
+        // a later report does not re-announce the failure
+        assert!(e.step_interval().failed.is_empty());
+    }
+
+    #[test]
+    fn fail_tasks_older_than_is_a_starvation_guard() {
+        let mut e = engine();
+        e.admit(task(1, App::Mnist, 32_000), SplitDecision::Compressed);
+        for _ in 0..3 {
+            e.step_interval(); // never placed: starves
+        }
+        assert_eq!(e.fail_tasks_older_than(2.0 * 300.0), 1);
+        assert_eq!(e.fail_tasks_older_than(2.0 * 300.0), 0, "only once");
+        assert_eq!(e.step_interval().failed.len(), 1);
+    }
+
+    #[test]
+    fn crash_drops_progress_and_requeues() {
+        let mut e = engine();
+        e.admit(task(1, App::Mnist, 32_000), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 2)]);
+        e.step_interval();
+        assert!(e.containers[0].mi_done > 0.0);
+        e.crash_worker(2);
+        let c = &e.containers[0];
+        assert_eq!(c.state, ContainerState::Queued);
+        assert_eq!(c.worker, None);
+        assert_eq!(c.mi_done, 0.0, "hard crash loses progress");
+        assert!(!e.fits(0, 2));
+        e.recover_worker(2);
+        assert!(e.fits(0, 2));
+        // crashing an already-offline worker is a no-op
+        e.crash_worker(2);
+        e.set_online(2, false);
+        e.crash_worker(2);
+    }
+
+    #[test]
+    fn straggler_slows_progress() {
+        let progress = |factor: f64| -> f64 {
+            let mut e = engine();
+            e.admit(task(1, App::Mnist, 64_000), SplitDecision::Compressed);
+            e.set_mips_factor(0, factor);
+            e.apply_placement(&[(0, 0)]);
+            e.step_interval();
+            e.containers[0].mi_done
+        };
+        let full = progress(1.0);
+        let slow = progress(0.25);
+        assert!(slow < 0.5 * full, "full={full} slow={slow}");
+    }
+
+    #[test]
+    fn ram_squeeze_restricts_allocation_and_thrashes() {
+        let mut e = engine();
+        e.admit(task(1, App::Cifar100, 64_000), SplitDecision::Compressed);
+        let ram = e.containers[0].ram_mb;
+        // squeeze worker 0 so the container no longer fits
+        let factor = ram / (e.cluster.workers[0].spec.ram_mb * RAM_OVERCOMMIT) * 0.5;
+        e.set_ram_factor(0, factor);
+        assert!(!e.fits(0, 0), "squeezed worker must reject the container");
+        e.set_ram_factor(0, 1.0);
+        assert!(e.fits(0, 0));
+    }
+
+    #[test]
+    fn channel_override_floors_transfers() {
+        use crate::cluster::mobility::ChannelState;
+        let stage_time = |blackout: bool| -> f64 {
+            let mut e = engine();
+            e.admit(task(1, App::Cifar100, 64_000), SplitDecision::Compressed);
+            if blackout {
+                e.set_channel_override(0, Some(ChannelState::BLACKOUT));
+            }
+            e.apply_placement(&[(0, 0)]);
+            match e.containers[0].state {
+                ContainerState::Transferring { until_s } => until_s,
+                _ => 0.0,
+            }
+        };
+        let normal = stage_time(false);
+        let blackout = stage_time(true);
+        assert!(blackout > normal, "blackout={blackout} normal={normal}");
+        // override persists across intervals until cleared
+        let mut e = engine();
+        e.set_channel_override(0, Some(ChannelState::BLACKOUT));
+        e.step_interval();
+        assert_eq!(e.channels[0], ChannelState::BLACKOUT);
+        e.set_channel_override(0, None);
+        e.step_interval();
+        assert_ne!(e.channels[0], ChannelState::BLACKOUT);
     }
 
     #[test]

@@ -10,4 +10,4 @@ pub mod container;
 pub mod engine;
 
 pub use container::{Container, ContainerId, ContainerState};
-pub use engine::{CompletedTask, Engine, IntervalReport, WorkerSnapshot};
+pub use engine::{CompletedTask, Engine, FailedTask, IntervalReport, WorkerSnapshot};

@@ -40,7 +40,14 @@ impl Generator {
 
     /// Tasks arriving at the start of one interval (`now_s` = interval start).
     pub fn arrivals(&mut self, now_s: f64) -> Vec<Task> {
-        let n = self.rng.poisson(self.cfg.lambda);
+        let lambda = self.cfg.lambda;
+        self.arrivals_with(now_s, lambda)
+    }
+
+    /// Arrivals under an overridden rate (flash-crowd injection): same
+    /// stream, different λ for this interval only.
+    pub fn arrivals_with(&mut self, now_s: f64, lambda: f64) -> Vec<Task> {
+        let n = self.rng.poisson(lambda);
         (0..n).map(|_| self.one(now_s)).collect()
     }
 

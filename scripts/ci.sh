@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI entrypoint: build, test, and a fixed-seed chaos smoke run so fault
+# handling (crash/requeue/re-place + invariant oracles) is exercised on
+# every PR. Fails on any oracle violation (chaos exits non-zero).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== chaos smoke (fixed seed, light profile) =="
+./target/release/splitplace chaos --seed 7 --profile light --intervals 10 --policy mc
+
+echo "== chaos smoke (fixed seed, heavy profile, differential) =="
+./target/release/splitplace chaos --seed 7 --profile heavy --intervals 10 \
+    --policy mab-daso --differential layer-gobi
+
+echo "CI OK"

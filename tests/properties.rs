@@ -2,8 +2,13 @@
 //! not in the offline crate set; `splitplace::testutil::check` provides the
 //! seeded-case driver — failures report the case seed for replay).
 
+use splitplace::chaos::{
+    self, BugKind, ChaosEvent, ChaosOptions, FaultPlan, Profile, TimedEvent,
+};
 use splitplace::cluster::build_fleet;
-use splitplace::config::{ClusterConfig, MabConfig, SimConfig, WorkloadConfig};
+use splitplace::config::{
+    ClusterConfig, ExperimentConfig, MabConfig, PolicyKind, SimConfig, WorkloadConfig,
+};
 use splitplace::mab::{Bandit, Context, MabPolicy, Mode};
 use splitplace::placement::{BestFitPlacer, FeatureLayout, Placer, PlacementInput, SlotInfo};
 use splitplace::sim::{CompletedTask, ContainerState, Engine, WorkerSnapshot};
@@ -442,6 +447,90 @@ fn prop_generator_stays_in_spec() {
                 if t.sla <= 0.0 || !t.sla.is_finite() {
                     return Err(format!("bad sla {}", t.sla));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn chaos_cfg(intervals: usize, lambda: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::small();
+    cfg.policy = PolicyKind::ModelCompression; // runs without artifacts
+    cfg.sim.intervals = intervals;
+    cfg.workload.lambda = lambda;
+    cfg
+}
+
+#[test]
+fn prop_chaos_replay_is_deterministic_and_green() {
+    check(
+        "chaos-determinism",
+        6,
+        |rng| rng.next_u64() % 10_000,
+        |seed| {
+            let cfg = chaos_cfg(8, 3.0);
+            let plan =
+                FaultPlan::generate(*seed, 8, Profile::Heavy, cfg.cluster.total_workers());
+            let opts = ChaosOptions::default();
+            let a = chaos::run_chaos(&cfg, &plan, &opts, None).map_err(|e| e.to_string())?;
+            let b = chaos::run_chaos(&cfg, &plan, &opts, None).map_err(|e| e.to_string())?;
+            if a.signatures != b.signatures {
+                return Err(format!(
+                    "same seed + plan must replay identically (plan seed {seed})"
+                ));
+            }
+            if !a.violations.is_empty() {
+                return Err(format!("clean engine violated invariants: {:?}", a.violations));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chaos_shrink_preserves_the_violated_oracle() {
+    check(
+        "chaos-shrink",
+        3,
+        |rng| rng.next_u64() % 1_000,
+        |seed| {
+            let cfg = chaos_cfg(8, 6.0);
+            let n = cfg.cluster.total_workers();
+            // a generated plan as decoys, plus a crash of every worker —
+            // under the skip-crash-requeue bug something must keep running
+            // on a dead machine
+            let base = FaultPlan::generate(*seed, 8, Profile::Light, n);
+            let mut events = base.events.clone();
+            for w in 0..n {
+                events.push(TimedEvent { t: 2, event: ChaosEvent::Crash { worker: w } });
+            }
+            events.sort_by_key(|e| e.t);
+            let plan = base.with_events(events);
+            let opts =
+                ChaosOptions { bug: Some(BugKind::SkipCrashRequeue), ..Default::default() };
+
+            let out = chaos::run_chaos(&cfg, &plan, &opts, None).map_err(|e| e.to_string())?;
+            let Some(first) = out.violations.first() else {
+                return Err("injected bug was not caught by any oracle".into());
+            };
+            let oracle = first.oracle;
+
+            let shrunk = chaos::shrink_to_minimal(&cfg, &plan, &opts, None, oracle);
+            if shrunk.plan.events.len() > plan.events.len() {
+                return Err("shrinking must never grow the plan".into());
+            }
+            if shrunk.plan.events.len() > 3 {
+                return Err(format!(
+                    "counterexample should be minimal, got {} events",
+                    shrunk.plan.events.len()
+                ));
+            }
+            let replay =
+                chaos::run_chaos(&cfg, &shrunk.plan, &opts, None).map_err(|e| e.to_string())?;
+            if !replay.violations.iter().any(|v| v.oracle == oracle) {
+                return Err(format!(
+                    "shrunk counterexample no longer violates '{oracle}'"
+                ));
             }
             Ok(())
         },
