@@ -8,6 +8,7 @@ use splitplace::benchlib::scenarios;
 use splitplace::chaos::Profile;
 use splitplace::config::PolicyKind;
 use splitplace::coordinator::runner::try_runtime;
+use splitplace::harness::Scenario;
 use splitplace::util::table::{fnum, Table};
 
 fn main() {
@@ -35,6 +36,35 @@ fn main() {
                 out.completed.to_string(),
                 out.failed.to_string(),
                 fnum(out.summary.sla_violations),
+                fnum(out.summary.avg_reward),
+            ]);
+        }
+    }
+    t.print();
+
+    // the matrix harness's scenario universe under the full policy trio —
+    // the same cells `splitplace matrix` gates with goldens
+    let mut t = Table::new(
+        "Matrix scenarios (fixed seed 1)",
+        &["policy", "scenario", "events", "violations", "completed", "resp ema", "reward"],
+    );
+    for scenario in Scenario::ALL {
+        for policy in [
+            PolicyKind::ModelCompression,
+            PolicyKind::Gillis,
+            PolicyKind::MabDaso,
+        ] {
+            let (cfg, plan) = scenarios::matrix_scenario(scenario, policy, 1);
+            let Some(out) = scenarios::run_chaos(cfg, &plan, rt.as_ref()) else {
+                continue;
+            };
+            t.row(vec![
+                policy.name().into(),
+                scenario.name().into(),
+                plan.events.len().to_string(),
+                out.violations.len().to_string(),
+                out.completed.to_string(),
+                fnum(out.response_ema),
                 fnum(out.summary.avg_reward),
             ]);
         }

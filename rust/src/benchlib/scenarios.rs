@@ -9,6 +9,7 @@
 use crate::chaos::{self, ChaosOptions, ChaosOutcome, FaultPlan, Profile};
 use crate::config::{ExperimentConfig, PolicyKind};
 use crate::coordinator::runner::{run_experiment, try_runtime, ExperimentOutput};
+use crate::harness::Scenario;
 use crate::runtime::Runtime;
 
 pub fn bench_intervals() -> usize {
@@ -79,6 +80,18 @@ pub fn chaos_scenario(profile: Profile, seed: u64) -> (ExperimentConfig, FaultPl
     let cfg = base_config();
     let plan = FaultPlan::generate(seed, cfg.sim.intervals, profile, cfg.cluster.total_workers());
     (cfg, plan)
+}
+
+/// Build one matrix cell as a bench scenario (harness cluster/λ shape,
+/// bench interval count): benches and `matrix` cells draw from the same
+/// scenario universe, so a regime a bench charts is a regime the golden
+/// gate watches.
+pub fn matrix_scenario(
+    scenario: Scenario,
+    policy: PolicyKind,
+    seed: u64,
+) -> (ExperimentConfig, FaultPlan) {
+    scenario.build(policy, seed, bench_intervals())
 }
 
 /// Run a chaos scenario, tolerating failures like [`run`] does. Oracle

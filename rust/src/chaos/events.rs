@@ -8,6 +8,19 @@
 
 use crate::util::json::{JsonError, Value};
 
+/// Topology racks per fleet. Fleets are built type-grouped (Table 3 order),
+/// so a contiguous quarter of the worker range shares a failure domain —
+/// power feed, ToR switch — the way same-SKU machines do in a real rack.
+pub const RACKS: usize = 4;
+
+/// Workers belonging to `rack` (contiguous quarter of an `n_workers` fleet).
+/// Identical at plan-generation and event-application time, so a plan
+/// generated for one fleet size names the same machines when replayed.
+pub fn rack_members(n_workers: usize, rack: usize) -> std::ops::Range<usize> {
+    let r = rack % RACKS;
+    (r * n_workers / RACKS)..((r + 1) * n_workers / RACKS)
+}
+
 /// One injectable fault.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ChaosEvent {
@@ -30,6 +43,16 @@ pub enum ChaosEvent {
     FlashCrowd { lambda_mult: f64 },
     /// End of a flash crowd: the configured λ resumes.
     FlashCrowdEnd,
+    /// Correlated rack failure: hard-crash every worker in a topology
+    /// rack (see [`rack_members`]) in one interval — shared power feed or
+    /// ToR switch going down, progress lost on all of them at once.
+    CorrelatedRackFailure { rack: usize },
+    /// End of a rack failure: every member rejoins the fleet.
+    RackRecover { rack: usize },
+    /// Clock skew: the worker's clock drifts `offset_s` seconds from the
+    /// broker's; coordination pays the skew on every transfer touching the
+    /// worker. 0.0 ends the episode (clocks resynchronized).
+    ClockSkew { worker: usize, offset_s: f64 },
 }
 
 impl ChaosEvent {
@@ -43,6 +66,9 @@ impl ChaosEvent {
             ChaosEvent::BlackoutEnd { .. } => "blackout-end",
             ChaosEvent::FlashCrowd { .. } => "flash-crowd",
             ChaosEvent::FlashCrowdEnd => "flash-crowd-end",
+            ChaosEvent::CorrelatedRackFailure { .. } => "rack-failure",
+            ChaosEvent::RackRecover { .. } => "rack-recover",
+            ChaosEvent::ClockSkew { .. } => "clock-skew",
         }
     }
 
@@ -54,7 +80,18 @@ impl ChaosEvent {
             | ChaosEvent::Straggler { worker, .. }
             | ChaosEvent::RamSqueeze { worker, .. }
             | ChaosEvent::Blackout { worker }
-            | ChaosEvent::BlackoutEnd { worker } => Some(*worker),
+            | ChaosEvent::BlackoutEnd { worker }
+            | ChaosEvent::ClockSkew { worker, .. } => Some(*worker),
+            _ => None,
+        }
+    }
+
+    /// Target rack, if the event is rack-scoped.
+    pub fn rack(&self) -> Option<usize> {
+        match self {
+            ChaosEvent::CorrelatedRackFailure { rack } | ChaosEvent::RackRecover { rack } => {
+                Some(*rack)
+            }
             _ => None,
         }
     }
@@ -64,12 +101,18 @@ impl ChaosEvent {
         if let Some(w) = self.worker() {
             kv.push(("worker", Value::Num(w as f64)));
         }
+        if let Some(r) = self.rack() {
+            kv.push(("rack", Value::Num(r as f64)));
+        }
         match self {
             ChaosEvent::Straggler { factor, .. } | ChaosEvent::RamSqueeze { factor, .. } => {
                 kv.push(("factor", Value::Num(*factor)));
             }
             ChaosEvent::FlashCrowd { lambda_mult } => {
                 kv.push(("lambda_mult", Value::Num(*lambda_mult)));
+            }
+            ChaosEvent::ClockSkew { offset_s, .. } => {
+                kv.push(("offset_s", Value::Num(*offset_s)));
             }
             _ => {}
         }
@@ -91,6 +134,12 @@ impl ChaosEvent {
                 ChaosEvent::FlashCrowd { lambda_mult: v.req("lambda_mult")?.as_f64()? }
             }
             "flash-crowd-end" => ChaosEvent::FlashCrowdEnd,
+            "rack-failure" => ChaosEvent::CorrelatedRackFailure { rack: v.req("rack")?.as_usize()? },
+            "rack-recover" => ChaosEvent::RackRecover { rack: v.req("rack")?.as_usize()? },
+            "clock-skew" => ChaosEvent::ClockSkew {
+                worker: worker()?,
+                offset_s: v.req("offset_s")?.as_f64()?,
+            },
             _ => return Err(JsonError::Type("known chaos event kind")),
         })
     }
@@ -133,6 +182,9 @@ mod tests {
             ChaosEvent::BlackoutEnd { worker: 7 },
             ChaosEvent::FlashCrowd { lambda_mult: 4.0 },
             ChaosEvent::FlashCrowdEnd,
+            ChaosEvent::CorrelatedRackFailure { rack: 2 },
+            ChaosEvent::RackRecover { rack: 2 },
+            ChaosEvent::ClockSkew { worker: 4, offset_s: 37.5 },
         ];
         for (i, e) in events.iter().enumerate() {
             let te = TimedEvent { t: i, event: *e };
@@ -148,5 +200,25 @@ mod tests {
         assert!(TimedEvent::from_json(&v).is_err());
         let v = json::parse(r#"{"t":0,"kind":"crash"}"#).unwrap();
         assert!(TimedEvent::from_json(&v).is_err(), "crash needs a worker");
+        let v = json::parse(r#"{"t":0,"kind":"rack-failure"}"#).unwrap();
+        assert!(TimedEvent::from_json(&v).is_err(), "rack failure needs a rack");
+        let v = json::parse(r#"{"t":0,"kind":"clock-skew","worker":1}"#).unwrap();
+        assert!(TimedEvent::from_json(&v).is_err(), "clock skew needs an offset");
+    }
+
+    #[test]
+    fn racks_partition_the_fleet() {
+        for n in [1usize, 4, 10, 50, 51] {
+            let mut covered = vec![false; n];
+            for r in 0..RACKS {
+                for w in rack_members(n, r) {
+                    assert!(!covered[w], "worker {w} in two racks (n={n})");
+                    covered[w] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "racks must cover the fleet (n={n})");
+        }
+        // rack index wraps so plans survive fleet-size changes
+        assert_eq!(rack_members(10, 5), rack_members(10, 1));
     }
 }

@@ -44,18 +44,28 @@ pub enum BugKind {
     /// Crashes take the worker offline but "forget" to drop its
     /// containers — progress continues on a dead machine.
     SkipCrashRequeue,
+    /// A correlated rack failure only takes down the first rack member —
+    /// the rest of the rack keeps serving from a dead failure domain.
+    ForgetRackMember,
+    /// Clock-skew events are silently ignored — the engine's clocks stay
+    /// synchronized while the plan says they drifted.
+    DropClockSkew,
 }
 
 impl BugKind {
     pub fn name(&self) -> &'static str {
         match self {
             BugKind::SkipCrashRequeue => "skip-crash-requeue",
+            BugKind::ForgetRackMember => "forget-rack-member",
+            BugKind::DropClockSkew => "drop-clock-skew",
         }
     }
 
     pub fn parse(s: &str) -> Option<BugKind> {
         match s.to_ascii_lowercase().as_str() {
             "skip-crash-requeue" => Some(BugKind::SkipCrashRequeue),
+            "forget-rack-member" => Some(BugKind::ForgetRackMember),
+            "drop-clock-skew" => Some(BugKind::DropClockSkew),
             _ => None,
         }
     }
@@ -116,6 +126,9 @@ pub struct ChaosOutcome {
     pub admitted: u64,
     pub completed: usize,
     pub failed: usize,
+    /// φ=0.9 EMA of task response times in completion order (NaN when no
+    /// task left the system) — the matrix harness's latency headline.
+    pub response_ema: f64,
     /// Standard experiment summary (Table-4 quantities) for the run.
     pub summary: Summary,
 }
@@ -162,6 +175,59 @@ fn apply_event(broker: &mut Broker, event: &ChaosEvent, opts: &ChaosOptions, bas
             broker.set_lambda_override(Some(base_lambda * lambda_mult));
         }
         ChaosEvent::FlashCrowdEnd => broker.set_lambda_override(None),
+        ChaosEvent::CorrelatedRackFailure { rack } => {
+            let members = events::rack_members(n, rack);
+            if opts.bug == Some(BugKind::ForgetRackMember) {
+                if let Some(w) = members.clone().next() {
+                    broker.engine.crash_worker(w);
+                }
+            } else {
+                for w in members {
+                    broker.engine.crash_worker(w);
+                }
+            }
+        }
+        ChaosEvent::RackRecover { rack } => {
+            for w in events::rack_members(n, rack) {
+                broker.engine.recover_worker(w);
+            }
+        }
+        ChaosEvent::ClockSkew { worker, offset_s } => {
+            if opts.bug != Some(BugKind::DropClockSkew) {
+                broker.engine.set_clock_skew(worker, offset_s);
+            }
+        }
+    }
+}
+
+/// Replay one event's intended effect onto the plan-state ledger the
+/// `offline-matches-plan` / `clock-skew-applied` oracles audit against.
+/// Mirrors the bug-free [`apply_event`] semantics exactly — an injected
+/// bug makes the engine diverge from this ledger, which is the point.
+fn expect_event(event: &ChaosEvent, offline: &mut [bool], skew: &mut [f64]) {
+    let n = offline.len();
+    if let Some(w) = event.worker() {
+        if w >= n {
+            return; // apply_event ignores it too
+        }
+    }
+    match *event {
+        ChaosEvent::Crash { worker } => offline[worker] = true,
+        ChaosEvent::Recover { worker } => offline[worker] = false,
+        ChaosEvent::CorrelatedRackFailure { rack } => {
+            for w in events::rack_members(n, rack) {
+                offline[w] = true;
+            }
+        }
+        ChaosEvent::RackRecover { rack } => {
+            for w in events::rack_members(n, rack) {
+                offline[w] = false;
+            }
+        }
+        ChaosEvent::ClockSkew { worker, offset_s } => {
+            skew[worker] = offset_s.clamp(0.0, 600.0);
+        }
+        _ => {}
     }
 }
 
@@ -184,11 +250,19 @@ pub fn run_chaos(
     let mut seen_completed: HashSet<u64> = HashSet::new();
     let mut violations = Vec::new();
     let mut signatures = Vec::with_capacity(cfg.sim.intervals);
+    // Plan-state ledger for the injected-state oracles. Churn lets the
+    // engine toggle availability on its own, so the comparison is only
+    // meaningful on churn-free runs (every chaos config today).
+    let track_plan_state = cfg.cluster.churn_rate == 0.0;
+    let n_workers = broker.engine.workers();
+    let mut expected_offline = vec![false; n_workers];
+    let mut expected_skew = vec![0.0f64; n_workers];
 
     for t in 0..cfg.sim.intervals {
         let fired: Vec<ChaosEvent> = plan.events_at(t).map(|e| e.event).collect();
         for event in &fired {
             apply_event(&mut broker, event, opts, base_lambda);
+            expect_event(event, &mut expected_offline, &mut expected_skew);
         }
         if opts.task_timeout_intervals > 0 {
             broker
@@ -203,6 +277,8 @@ pub fn run_chaos(
             admitted: broker.admitted,
             mab_decisions,
             seen_completed: &mut seen_completed,
+            expected_offline: track_plan_state.then_some(expected_offline.as_slice()),
+            expected_skew: track_plan_state.then_some(expected_skew.as_slice()),
         };
         violations.extend(check_interval(&mut ctx));
         signatures.push(IntervalSig::of(&report));
@@ -215,6 +291,7 @@ pub fn run_chaos(
         admitted: broker.admitted,
         completed: broker.engine.completed_task_count(),
         failed: broker.engine.failed_task_count(),
+        response_ema: broker.metrics.response_ema(0.9),
         summary,
     })
 }
@@ -332,6 +409,62 @@ mod tests {
             crowd.admitted
         );
         assert!(crowd.violations.is_empty(), "{:?}", crowd.violations);
+    }
+
+    #[test]
+    fn rack_failure_takes_the_whole_rack_down_and_recovers_it() {
+        let cfg = chaos_cfg(8, 2.0);
+        let n = cfg.cluster.total_workers();
+        let rack = 1usize;
+        let members: Vec<usize> = events::rack_members(n, rack).collect();
+        assert!(members.len() >= 2, "small fleet racks must have ≥2 members");
+        let base = FaultPlan::empty(5, 8);
+        let plan = base.with_events(vec![
+            TimedEvent { t: 1, event: ChaosEvent::CorrelatedRackFailure { rack } },
+            TimedEvent { t: 4, event: ChaosEvent::RackRecover { rack } },
+        ]);
+        let out = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        // during the outage the interval reports count the members offline
+        assert_eq!(out.signatures[1].offline, members.len());
+        assert_eq!(out.signatures[3].offline, members.len());
+        assert_eq!(out.signatures[5].offline, 0, "rack must rejoin after recovery");
+    }
+
+    #[test]
+    fn forgotten_rack_member_is_caught_by_the_plan_ledger_oracle() {
+        let cfg = chaos_cfg(8, 2.0);
+        let plan = FaultPlan::empty(5, 8).with_events(vec![TimedEvent {
+            t: 1,
+            event: ChaosEvent::CorrelatedRackFailure { rack: 0 },
+        }]);
+        let opts = ChaosOptions { bug: Some(BugKind::ForgetRackMember), ..Default::default() };
+        let out = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        assert!(
+            out.violated_oracles().contains(&"offline-matches-plan"),
+            "bug must be caught: {:?}",
+            out.violated_oracles()
+        );
+        let fixed = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert!(fixed.violations.is_empty(), "{:?}", fixed.violations);
+    }
+
+    #[test]
+    fn dropped_clock_skew_is_caught_by_the_skew_oracle() {
+        let cfg = chaos_cfg(8, 2.0);
+        let plan = FaultPlan::empty(6, 8).with_events(vec![
+            TimedEvent { t: 1, event: ChaosEvent::ClockSkew { worker: 2, offset_s: 30.0 } },
+            TimedEvent { t: 5, event: ChaosEvent::ClockSkew { worker: 2, offset_s: 0.0 } },
+        ]);
+        let opts = ChaosOptions { bug: Some(BugKind::DropClockSkew), ..Default::default() };
+        let out = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        assert!(
+            out.violated_oracles().contains(&"clock-skew-applied"),
+            "bug must be caught: {:?}",
+            out.violated_oracles()
+        );
+        let fixed = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert!(fixed.violations.is_empty(), "{:?}", fixed.violations);
     }
 
     // NOTE: the full bug→catch→shrink→replay scenario (including the ≤3

@@ -12,7 +12,7 @@ use crate::sim::engine::RAM_OVERCOMMIT;
 use crate::sim::{ContainerState, Engine, IntervalReport};
 
 /// All invariant names, in evaluation order.
-pub const ORACLES: [&str; 9] = [
+pub const ORACLES: [&str; 11] = [
     "task-conservation",
     "allocation-capacity",
     "chain-precedence",
@@ -22,6 +22,8 @@ pub const ORACLES: [&str; 9] = [
     "crashed-workers-idle",
     "telemetry-consistent",
     "completion-unique",
+    "offline-matches-plan",
+    "clock-skew-applied",
 ];
 
 pub fn describe(oracle: &str) -> &'static str {
@@ -35,6 +37,10 @@ pub fn describe(oracle: &str) -> &'static str {
         "crashed-workers-idle" => "no container runs, stages or migrates on an offline worker",
         "telemetry-consistent" => "reported queue/offline figures match engine state",
         "completion-unique" => "every completion names a known task, at most once",
+        "offline-matches-plan" => {
+            "worker availability equals the fault plan's crash/rack ledger (churn-free runs)"
+        }
+        "clock-skew-applied" => "engine clock skew equals the plan's active skew, per worker",
         _ => "unknown invariant",
     }
 }
@@ -64,6 +70,14 @@ pub struct OracleCtx<'a> {
     /// count sum minus the warm-start baseline); None for non-MAB policies.
     pub mab_decisions: Option<u64>,
     pub seen_completed: &'a mut HashSet<u64>,
+    /// Per-worker offline expectation replayed from the fault plan's
+    /// crash/recover/rack events. None when the engine can legitimately
+    /// toggle availability on its own (churn enabled), which would make
+    /// the comparison meaningless.
+    pub expected_offline: Option<&'a [bool]>,
+    /// Per-worker clock-skew seconds the plan currently holds active
+    /// (post-clamp); None disables the check.
+    pub expected_skew: Option<&'a [f64]>,
 }
 
 /// Evaluate every oracle; returns all violations found this interval.
@@ -233,6 +247,39 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
         );
     }
 
+    // -- offline-matches-plan -----------------------------------------------
+    // Replaying the plan's crash/recover/rack ledger must land on exactly
+    // the engine's availability vector — a rack failure that "forgets" a
+    // member, or a recovery that revives the wrong machine, shows up here
+    // even while the fleet is idle (crashed-workers-idle can't see those).
+    if let Some(expected) = ctx.expected_offline {
+        for (w, &exp_off) in expected.iter().enumerate().take(online.len()) {
+            if exp_off == online[w] {
+                fail(
+                    "offline-matches-plan",
+                    format!(
+                        "worker {w}: plan says {}, engine says {}",
+                        if exp_off { "offline" } else { "online" },
+                        if online[w] { "online" } else { "offline" }
+                    ),
+                );
+            }
+        }
+    }
+
+    // -- clock-skew-applied -------------------------------------------------
+    if let Some(expected) = ctx.expected_skew {
+        for (w, &exp_skew) in expected.iter().enumerate() {
+            let got = ctx.engine.clock_skew(w);
+            if (got - exp_skew).abs() > 1e-9 {
+                fail(
+                    "clock-skew-applied",
+                    format!("worker {w}: plan holds skew {exp_skew}s, engine applies {got}s"),
+                );
+            }
+        }
+    }
+
     // -- completion-unique --------------------------------------------------
     for task in &ctx.report.completed {
         if ctx.engine.task(task.task_id).is_none() {
@@ -282,6 +329,8 @@ mod tests {
             admitted: 1,
             mab_decisions: None,
             seen_completed: &mut seen,
+            expected_offline: None,
+            expected_skew: None,
         };
         let v = check_interval(&mut ctx);
         assert!(v.is_empty(), "unexpected violations: {v:?}");
@@ -299,6 +348,8 @@ mod tests {
             admitted: 5, // broker claims more than the engine holds
             mab_decisions: None,
             seen_completed: &mut seen,
+            expected_offline: None,
+            expected_skew: None,
         };
         let v = check_interval(&mut ctx);
         assert!(v.iter().any(|v| v.oracle == "task-conservation"), "{v:?}");
@@ -320,6 +371,8 @@ mod tests {
             admitted: 1,
             mab_decisions: None,
             seen_completed: &mut seen,
+            expected_offline: None,
+            expected_skew: None,
         };
         let v = check_interval(&mut ctx);
         assert!(v.iter().any(|v| v.oracle == "crashed-workers-idle"), "{v:?}");
@@ -347,9 +400,75 @@ mod tests {
             admitted: 1,
             mab_decisions: None,
             seen_completed: &mut seen,
+            expected_offline: None,
+            expected_skew: None,
         };
         let v = check_interval(&mut ctx);
         assert!(v.iter().any(|v| v.oracle == "completion-unique"), "{v:?}");
+    }
+
+    #[test]
+    fn offline_mismatch_against_plan_is_caught() {
+        let mut e = engine();
+        e.crash_worker(1);
+        let report = e.step_interval();
+        let mut seen = HashSet::new();
+        // plan ledger says workers 1 AND 2 should be down — a rack failure
+        // that only took one member offline
+        let mut expected = vec![false; e.workers()];
+        expected[1] = true;
+        expected[2] = true;
+        let mut ctx = OracleCtx {
+            engine: &e,
+            report: &report,
+            admitted: 0,
+            mab_decisions: None,
+            seen_completed: &mut seen,
+            expected_offline: Some(&expected),
+            expected_skew: None,
+        };
+        let v = check_interval(&mut ctx);
+        assert!(v.iter().any(|v| v.oracle == "offline-matches-plan"), "{v:?}");
+        assert!(
+            v.iter().all(|v| v.oracle != "offline-matches-plan" || v.detail.contains("worker 2")),
+            "only the forgotten member may be flagged: {v:?}"
+        );
+    }
+
+    #[test]
+    fn clock_skew_mismatch_is_caught_and_match_is_green() {
+        let mut e = engine();
+        e.set_clock_skew(3, 42.0);
+        let report = e.step_interval();
+        let mut expected = vec![0.0; e.workers()];
+        expected[3] = 42.0;
+        {
+            let mut seen = HashSet::new();
+            let mut ctx = OracleCtx {
+                engine: &e,
+                report: &report,
+                admitted: 0,
+                mab_decisions: None,
+                seen_completed: &mut seen,
+                expected_offline: None,
+                expected_skew: Some(&expected),
+            };
+            let v = check_interval(&mut ctx);
+            assert!(v.is_empty(), "matching skew must stay green: {v:?}");
+        }
+        expected[3] = 0.0; // plan says the episode ended; engine still skewed
+        let mut seen = HashSet::new();
+        let mut ctx = OracleCtx {
+            engine: &e,
+            report: &report,
+            admitted: 0,
+            mab_decisions: None,
+            seen_completed: &mut seen,
+            expected_offline: None,
+            expected_skew: Some(&expected),
+        };
+        let v = check_interval(&mut ctx);
+        assert!(v.iter().any(|v| v.oracle == "clock-skew-applied"), "{v:?}");
     }
 
     #[test]

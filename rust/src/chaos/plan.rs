@@ -36,11 +36,12 @@ impl Profile {
     }
 
     /// Per-interval injection probabilities
-    /// (crash, straggler, blackout, ram-squeeze, flash-crowd).
-    fn rates(&self) -> [f64; 5] {
+    /// (crash, straggler, blackout, ram-squeeze, flash-crowd,
+    /// rack-failure, clock-skew).
+    fn rates(&self) -> [f64; 7] {
         match self {
-            Profile::Light => [0.03, 0.05, 0.03, 0.03, 0.02],
-            Profile::Heavy => [0.15, 0.20, 0.12, 0.12, 0.08],
+            Profile::Light => [0.03, 0.05, 0.03, 0.03, 0.02, 0.01, 0.03],
+            Profile::Heavy => [0.15, 0.20, 0.12, 0.12, 0.08, 0.04, 0.10],
         }
     }
 
@@ -82,7 +83,7 @@ impl FaultPlan {
     /// hostile than they claim.
     pub fn generate(seed: u64, intervals: usize, profile: Profile, n_workers: usize) -> FaultPlan {
         let mut rng = Rng::new(seed ^ 0xC4A0_5EED);
-        let [p_crash, p_strag, p_black, p_squeeze, p_flash] = profile.rates();
+        let [p_crash, p_strag, p_black, p_squeeze, p_flash, p_rack, p_skew] = profile.rates();
         let max_d = profile.max_duration();
         let n = n_workers.max(1);
         let mut events: Vec<TimedEvent> = Vec::new();
@@ -96,6 +97,7 @@ impl FaultPlan {
         let mut strag_until = vec![0usize; n];
         let mut black_until = vec![0usize; n];
         let mut squeeze_until = vec![0usize; n];
+        let mut skew_until = vec![0usize; n];
         let mut flash_until = 0usize;
         for t in 0..intervals {
             if rng.chance(p_crash) {
@@ -105,6 +107,20 @@ impl FaultPlan {
                     push(t, ChaosEvent::Crash { worker: w });
                     push(t + d, ChaosEvent::Recover { worker: w });
                     offline_until[w] = t + d;
+                }
+            }
+            if rng.chance(p_rack) {
+                let rack = rng.below(super::events::RACKS as u64) as usize;
+                let d = rng.int_range(1, max_d as i64) as usize;
+                // the whole rack must be free of offline episodes, so an
+                // individual Recover never revives a failed rack early
+                let members = super::events::rack_members(n, rack);
+                if !members.is_empty() && members.clone().all(|w| t >= offline_until[w]) {
+                    push(t, ChaosEvent::CorrelatedRackFailure { rack });
+                    push(t + d, ChaosEvent::RackRecover { rack });
+                    for w in members {
+                        offline_until[w] = t + d;
+                    }
                 }
             }
             if rng.chance(p_strag) {
@@ -134,6 +150,16 @@ impl FaultPlan {
                     push(t, ChaosEvent::RamSqueeze { worker: w, factor });
                     push(t + d, ChaosEvent::RamSqueeze { worker: w, factor: 1.0 });
                     squeeze_until[w] = t + d;
+                }
+            }
+            if rng.chance(p_skew) {
+                let w = rng.below(n as u64) as usize;
+                let offset = rng.range(10.0, 90.0);
+                let d = rng.int_range(1, max_d as i64) as usize;
+                if t >= skew_until[w] {
+                    push(t, ChaosEvent::ClockSkew { worker: w, offset_s: offset });
+                    push(t + d, ChaosEvent::ClockSkew { worker: w, offset_s: 0.0 });
+                    skew_until[w] = t + d;
                 }
             }
             if rng.chance(p_flash) {
@@ -245,6 +271,7 @@ mod tests {
             let mut strag = vec![false; 6];
             let mut black = vec![false; 6];
             let mut squeeze = vec![false; 6];
+            let mut skewed = vec![false; 6];
             let mut flash = false;
             // generation order is chronological and the sort is stable, so
             // an episode's end always precedes the next start at equal t
@@ -255,6 +282,22 @@ mod tests {
                         offline[worker] = true;
                     }
                     ChaosEvent::Recover { worker } => offline[worker] = false,
+                    ChaosEvent::CorrelatedRackFailure { rack } => {
+                        for w in crate::chaos::events::rack_members(6, rack) {
+                            assert!(!offline[w], "rack failure overlaps offline worker {w}");
+                            offline[w] = true;
+                        }
+                    }
+                    ChaosEvent::RackRecover { rack } => {
+                        for w in crate::chaos::events::rack_members(6, rack) {
+                            offline[w] = false;
+                        }
+                    }
+                    ChaosEvent::ClockSkew { worker, offset_s } if offset_s > 0.0 => {
+                        assert!(!skewed[worker], "overlapping clock skew on {worker}");
+                        skewed[worker] = true;
+                    }
+                    ChaosEvent::ClockSkew { worker, .. } => skewed[worker] = false,
                     ChaosEvent::Straggler { worker, factor } if factor < 1.0 => {
                         assert!(!strag[worker], "overlapping straggler on {worker}");
                         strag[worker] = true;
@@ -277,6 +320,23 @@ mod tests {
                     ChaosEvent::FlashCrowdEnd => flash = false,
                 }
             }
+        }
+    }
+
+    #[test]
+    fn heavy_plans_exercise_the_full_vocabulary() {
+        // union across a few seeds: every event kind must be reachable
+        let mut kinds = std::collections::HashSet::new();
+        for seed in 0..6u64 {
+            for e in &FaultPlan::generate(seed, 120, Profile::Heavy, 8).events {
+                kinds.insert(e.event.name());
+            }
+        }
+        for kind in [
+            "crash", "recover", "straggler", "ram-squeeze", "blackout",
+            "flash-crowd", "rack-failure", "rack-recover", "clock-skew",
+        ] {
+            assert!(kinds.contains(kind), "generator never emits '{kind}'");
         }
     }
 

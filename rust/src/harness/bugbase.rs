@@ -1,0 +1,279 @@
+//! Persisted bug-base: shrunk failing scenarios that replay forever.
+//!
+//! Every invariant violation the matrix (or `chaos` CLI) ever finds is
+//! ddmin-shrunk and written here as a self-contained `seed + plan`
+//! artifact. A dedicated regression test (`tests/bugbase_replay.rs`)
+//! replays every artifact on every CI run:
+//!
+//! * `expect: "green"` — the scenario once exposed a real engine/broker
+//!   bug; after the fix it must stay violation-free forever.
+//! * `expect: "violates"` — the scenario pairs a deliberate [`BugKind`]
+//!   with the oracle that catches it; the oracle must keep firing, or the
+//!   harness has lost detection power.
+
+use std::path::{Path, PathBuf};
+
+use crate::chaos::{self, BugKind, ChaosOptions, FaultPlan};
+use crate::config::PolicyKind;
+use crate::util::json::{self, JsonError, Value};
+
+use super::scenario::{policy_slug, Scenario};
+
+/// What a replay of the artifact must observe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Expectation {
+    /// The run is violation-free (a fixed bug staying fixed).
+    Green,
+    /// The named oracle fires (a deliberate bug staying caught).
+    Violates,
+}
+
+impl Expectation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Expectation::Green => "green",
+            Expectation::Violates => "violates",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Expectation> {
+        match s {
+            "green" => Some(Expectation::Green),
+            "violates" => Some(Expectation::Violates),
+            _ => None,
+        }
+    }
+}
+
+/// One bug-base artifact: everything needed to rebuild the exact cell
+/// config and replay the (shrunk) fault plan.
+#[derive(Clone, Debug)]
+pub struct BugRecord {
+    /// Artifact id; also the file stem.
+    pub id: String,
+    /// Oracle the expectation is stated over.
+    pub oracle: String,
+    pub expect: Expectation,
+    /// Deliberate bug to inject on replay (None for real-bug artifacts).
+    pub bug: Option<BugKind>,
+    pub policy: PolicyKind,
+    pub scenario: Scenario,
+    pub seed: u64,
+    pub intervals: usize,
+    pub task_timeout_intervals: usize,
+    /// The shrunk plan (replayed verbatim, never regenerated).
+    pub plan: FaultPlan,
+    /// Free-form provenance (who found it, shrink stats).
+    pub note: String,
+}
+
+impl BugRecord {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("id", Value::Str(self.id.clone())),
+            ("oracle", Value::Str(self.oracle.clone())),
+            ("expect", Value::Str(self.expect.name().into())),
+            (
+                "inject_bug",
+                match self.bug {
+                    Some(b) => Value::Str(b.name().into()),
+                    None => Value::Null,
+                },
+            ),
+            ("policy", Value::Str(policy_slug(self.policy).into())),
+            ("scenario", Value::Str(self.scenario.name().into())),
+            ("seed", Value::Str(self.seed.to_string())),
+            ("intervals", Value::Num(self.intervals as f64)),
+            (
+                "task_timeout_intervals",
+                Value::Num(self.task_timeout_intervals as f64),
+            ),
+            ("plan", self.plan.to_json()),
+            ("note", Value::Str(self.note.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<BugRecord, JsonError> {
+        let expect = Expectation::parse(v.req("expect")?.as_str()?)
+            .ok_or(JsonError::Type("expect: green|violates"))?;
+        let bug = match v.req("inject_bug")? {
+            Value::Null => None,
+            other => Some(
+                BugKind::parse(other.as_str()?).ok_or(JsonError::Type("known bug kind"))?,
+            ),
+        };
+        let policy = PolicyKind::parse(v.req("policy")?.as_str()?)
+            .ok_or(JsonError::Type("known policy"))?;
+        let scenario = Scenario::parse(v.req("scenario")?.as_str()?)
+            .ok_or(JsonError::Type("known scenario"))?;
+        let seed = match v.req("seed")? {
+            Value::Str(s) => s.parse().map_err(|_| JsonError::Type("u64 seed"))?,
+            other => other.as_f64()? as u64,
+        };
+        Ok(BugRecord {
+            id: v.req("id")?.as_str()?.to_string(),
+            oracle: v.req("oracle")?.as_str()?.to_string(),
+            expect,
+            bug,
+            policy,
+            scenario,
+            seed,
+            intervals: v.req("intervals")?.as_usize()?,
+            task_timeout_intervals: v.req("task_timeout_intervals")?.as_usize()?,
+            plan: FaultPlan::from_json(v.req("plan")?)?,
+            note: v.get("note").and_then(|n| n.as_str().ok()).unwrap_or("").to_string(),
+        })
+    }
+
+    /// Replay the artifact and check its expectation. `Ok(())` means the
+    /// contract still holds; `Err` carries a human-readable diagnosis.
+    pub fn replay(&self) -> Result<(), String> {
+        let (cfg, _generated) = self.scenario.build(self.policy, self.seed, self.intervals);
+        let opts = ChaosOptions {
+            bug: self.bug,
+            task_timeout_intervals: self.task_timeout_intervals,
+        };
+        let out = chaos::run_chaos(&cfg, &self.plan, &opts, None)
+            .map_err(|e| format!("{}: replay failed to run: {e:#}", self.id))?;
+        let hit = out.violations.iter().any(|v| v.oracle == self.oracle);
+        match self.expect {
+            Expectation::Green => {
+                if let Some(first) = out.violations.first() {
+                    Err(format!(
+                        "{}: expected a green replay but got {} violation(s); first: {first}",
+                        self.id,
+                        out.violations.len()
+                    ))
+                } else {
+                    Ok(())
+                }
+            }
+            Expectation::Violates => {
+                if hit {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "{}: oracle '{}' no longer fires — detection power regressed \
+                         (other violations: {:?})",
+                        self.id,
+                        self.oracle,
+                        out.violated_oracles()
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// Write a record into `dir` as `<id>.json` (pretty-printed for review).
+pub fn save(dir: &Path, record: &BugRecord) -> Result<PathBuf, String> {
+    std::fs::create_dir_all(dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
+    let path = dir.join(format!("{}.json", record.id));
+    let mut text = record.to_json().to_pretty();
+    text.push('\n');
+    std::fs::write(&path, text).map_err(|e| format!("writing {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+/// Load every artifact in `dir`, sorted by file name for a stable replay
+/// order. A missing directory is an empty bug-base; an unparsable file is
+/// an error (a corrupt artifact must not silently stop guarding).
+pub fn load_dir(dir: &Path) -> Result<Vec<BugRecord>, String> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(format!("reading {}: {e}", dir.display())),
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    paths.sort();
+    let mut out = Vec::with_capacity(paths.len());
+    for path in paths {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?;
+        out.push(
+            BugRecord::from_json(&v)
+                .map_err(|e| format!("decoding {}: {e}", path.display()))?,
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::{ChaosEvent, TimedEvent};
+
+    fn record() -> BugRecord {
+        let plan = FaultPlan::empty(5, 8).with_events(vec![TimedEvent {
+            t: 1,
+            event: ChaosEvent::CorrelatedRackFailure { rack: 0 },
+        }]);
+        BugRecord {
+            id: "forget-rack-member__offline-matches-plan".into(),
+            oracle: "offline-matches-plan".into(),
+            expect: Expectation::Violates,
+            bug: Some(BugKind::ForgetRackMember),
+            policy: PolicyKind::ModelCompression,
+            scenario: Scenario::Clean,
+            seed: 5,
+            intervals: 8,
+            task_timeout_intervals: 40,
+            plan,
+            note: "unit-test artifact".into(),
+        }
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let r = record();
+        let text = r.to_json().to_string();
+        let back = BugRecord::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.id, r.id);
+        assert_eq!(back.oracle, r.oracle);
+        assert_eq!(back.expect, r.expect);
+        assert_eq!(back.bug, r.bug);
+        assert_eq!(back.policy, r.policy);
+        assert_eq!(back.scenario, r.scenario);
+        assert_eq!(back.seed, r.seed);
+        assert_eq!(back.plan, r.plan);
+    }
+
+    #[test]
+    fn violates_artifact_replays_and_guards_detection() {
+        let r = record();
+        assert!(r.replay().is_ok(), "oracle must still catch the deliberate bug");
+        // without the bug the same plan is green, so a Green twin also holds
+        let green = BugRecord {
+            id: "rack-cycle-green".into(),
+            expect: Expectation::Green,
+            bug: None,
+            ..record()
+        };
+        assert!(green.replay().is_ok(), "{:?}", green.replay());
+        // and a Green expectation WITH the bug must fail loudly
+        let broken = BugRecord { expect: Expectation::Green, ..record() };
+        let err = broken.replay().unwrap_err();
+        assert!(err.contains("expected a green replay"), "{err}");
+    }
+
+    #[test]
+    fn save_load_dir_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("splitplace-bugbase-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(load_dir(&dir).unwrap().is_empty(), "missing dir is an empty base");
+        let r = record();
+        save(&dir, &r).unwrap();
+        let loaded = load_dir(&dir).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].id, r.id);
+        // corrupt artifacts fail loudly
+        std::fs::write(dir.join("zz-corrupt.json"), "{nope").unwrap();
+        assert!(load_dir(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

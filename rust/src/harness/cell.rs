@@ -1,0 +1,177 @@
+//! Compact, canonically-serialized result of one matrix cell.
+//!
+//! A [`CellSummary`] holds only *deterministic* quantities — everything in
+//! it is a pure function of the cell coordinates, never of wall-clock or
+//! scheduling. That is what makes two guarantees checkable byte-for-byte:
+//! `--jobs 1` and `--jobs N` runs serialize identically, and a golden
+//! recorded yesterday still matches a replay today.
+
+use std::collections::BTreeMap;
+
+use crate::chaos::ChaosOutcome;
+use crate::util::json::{JsonError, Value};
+
+use super::scenario::Cell;
+
+/// Scalar reduction of one cell run. Metric keys are sorted (BTreeMap) and
+/// non-finite values serialize as JSON `null`, so serialization is
+/// canonical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellSummary {
+    /// `policy/scenario/sN` coordinates, e.g. `mab-daso/chaos-heavy/s1`.
+    pub cell: String,
+    pub policy: String,
+    pub scenario: String,
+    pub seed: u64,
+    pub intervals: usize,
+    /// Named scalar metrics (NaN allowed, e.g. accuracy with zero
+    /// completions).
+    pub metrics: BTreeMap<String, f64>,
+    /// Distinct oracle names violated during the run, in detection order.
+    pub violated_oracles: Vec<String>,
+}
+
+impl CellSummary {
+    /// Reduce a chaos run into the cell's scalar summary.
+    pub fn from_outcome(cell: &Cell, intervals: usize, out: &ChaosOutcome) -> CellSummary {
+        let s = &out.summary;
+        let mut metrics = BTreeMap::new();
+        metrics.insert("admitted".into(), out.admitted as f64);
+        metrics.insert("completed".into(), out.completed as f64);
+        metrics.insert("failed".into(), out.failed as f64);
+        metrics.insert("oracle_violations".into(), out.violations.len() as f64);
+        metrics.insert("response_mean".into(), s.response.0);
+        metrics.insert("response_ema".into(), out.response_ema);
+        metrics.insert("wait_mean".into(), s.wait.0);
+        metrics.insert("sla_violation_rate".into(), s.sla_violations);
+        metrics.insert("accuracy".into(), s.accuracy);
+        metrics.insert("avg_reward".into(), s.avg_reward);
+        metrics.insert("energy_mwh".into(), s.energy_mwh);
+        CellSummary {
+            cell: cell.id(),
+            policy: super::scenario::policy_slug(cell.policy).to_string(),
+            scenario: cell.scenario.name().to_string(),
+            seed: cell.seed,
+            intervals,
+            metrics,
+            violated_oracles: out
+                .violated_oracles()
+                .into_iter()
+                .map(str::to_string)
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let metrics = Value::Obj(
+            self.metrics
+                .iter()
+                .map(|(k, v)| {
+                    (k.clone(), if v.is_finite() { Value::Num(*v) } else { Value::Null })
+                })
+                .collect(),
+        );
+        Value::obj(vec![
+            ("cell", Value::Str(self.cell.clone())),
+            ("policy", Value::Str(self.policy.clone())),
+            ("scenario", Value::Str(self.scenario.clone())),
+            // string, not number: seeds above 2^53 would corrupt as f64
+            ("seed", Value::Str(self.seed.to_string())),
+            ("intervals", Value::Num(self.intervals as f64)),
+            ("metrics", metrics),
+            (
+                "violated_oracles",
+                Value::Arr(
+                    self.violated_oracles.iter().map(|s| Value::Str(s.clone())).collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<CellSummary, JsonError> {
+        let mut metrics = BTreeMap::new();
+        for (k, mv) in v.req("metrics")?.as_obj()? {
+            let x = match mv {
+                Value::Null => f64::NAN,
+                other => other.as_f64()?,
+            };
+            metrics.insert(k.clone(), x);
+        }
+        let seed = match v.req("seed")? {
+            Value::Str(s) => s.parse().map_err(|_| JsonError::Type("u64 seed"))?,
+            other => other.as_f64()? as u64,
+        };
+        Ok(CellSummary {
+            cell: v.req("cell")?.as_str()?.to_string(),
+            policy: v.req("policy")?.as_str()?.to_string(),
+            scenario: v.req("scenario")?.as_str()?.to_string(),
+            seed,
+            intervals: v.req("intervals")?.as_usize()?,
+            metrics,
+            violated_oracles: v
+                .req("violated_oracles")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_str().map(str::to_string))
+                .collect::<Result<Vec<_>, _>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn summary() -> CellSummary {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("accuracy".to_string(), f64::NAN);
+        metrics.insert("response_mean".to_string(), 4.25);
+        metrics.insert("completed".to_string(), 17.0);
+        CellSummary {
+            cell: "mc/clean/s1".into(),
+            policy: "mc".into(),
+            scenario: "clean".into(),
+            seed: 1,
+            intervals: 12,
+            metrics,
+            violated_oracles: vec!["task-conservation".into()],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_nan_as_null() {
+        let s = summary();
+        let text = s.to_json().to_string();
+        assert!(text.contains("\"accuracy\":null"), "{text}");
+        let back = CellSummary::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert!(back.metrics["accuracy"].is_nan());
+        assert_eq!(back.metrics["response_mean"], 4.25);
+        assert_eq!(back.cell, s.cell);
+        assert_eq!(back.violated_oracles, s.violated_oracles);
+    }
+
+    #[test]
+    fn serialization_is_canonical() {
+        let s = summary();
+        // repeated serialization and a roundtrip both yield the same bytes
+        let a = s.to_json().to_string();
+        let b = s.to_json().to_string();
+        assert_eq!(a, b);
+        let back = CellSummary::from_json(&json::parse(&a).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), a, "roundtrip must be byte-stable");
+        // metric keys come out sorted regardless of insertion order
+        let pos = |k: &str| a.find(k).unwrap();
+        assert!(pos("accuracy") < pos("completed"));
+        assert!(pos("completed") < pos("response_mean"));
+    }
+
+    #[test]
+    fn huge_seed_survives_json() {
+        let mut s = summary();
+        s.seed = (1u64 << 53) + 1;
+        let back =
+            CellSummary::from_json(&json::parse(&s.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.seed, s.seed);
+    }
+}

@@ -1,0 +1,336 @@
+//! Golden-trace regression gating.
+//!
+//! Each matrix cell has one committed golden: the canonical
+//! [`CellSummary`] JSON recorded by a trusted run (`matrix
+//! --update-goldens`, diff reviewed like code). A later run *drifts* when
+//! any metric leaves its tolerance band, the oracle verdicts change, or
+//! the metric key sets diverge — drift is a regression gate, not noise,
+//! because every cell is deterministic by construction.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+
+use super::cell::CellSummary;
+
+/// Per-metric tolerance band: `|got − want| ≤ abs + rel·|want|`.
+/// Defaults are tight — cells are bit-deterministic on one binary; the
+/// band only absorbs cross-platform libm/rounding differences.
+#[derive(Clone, Copy, Debug)]
+pub struct Tolerance {
+    pub abs: f64,
+    pub rel: f64,
+}
+
+impl Default for Tolerance {
+    fn default() -> Self {
+        Tolerance { abs: 1e-9, rel: 1e-6 }
+    }
+}
+
+impl Tolerance {
+    /// Exact comparison (counters: admitted/completed/failed/…).
+    pub const EXACT: Tolerance = Tolerance { abs: 0.0, rel: 0.0 };
+
+    /// Is `got` within this band of `want`? Two NaNs agree (an empty cell
+    /// must stay empty); any other non-finite pairing agrees only on
+    /// bitwise-equal semantics.
+    pub fn accepts(&self, got: f64, want: f64) -> bool {
+        if got.is_nan() && want.is_nan() {
+            return true;
+        }
+        if !got.is_finite() || !want.is_finite() {
+            return got == want;
+        }
+        (got - want).abs() <= self.abs + self.rel * want.abs()
+    }
+}
+
+/// Tolerance for a named metric: counters compare exactly, continuous
+/// metrics get the default band.
+pub fn tolerance_for(metric: &str) -> Tolerance {
+    match metric {
+        "admitted" | "completed" | "failed" | "oracle_violations" => Tolerance::EXACT,
+        _ => Tolerance::default(),
+    }
+}
+
+/// Compare a freshly computed summary against its golden. Returns every
+/// drift found (empty = match). A key present on one side only is drift:
+/// a *new* metric means the golden is stale (re-record it), a *missing*
+/// one means the summary lost coverage.
+pub fn drift(golden: &CellSummary, got: &CellSummary) -> Vec<String> {
+    let mut out = Vec::new();
+    if golden.cell != got.cell {
+        out.push(format!("cell id mismatch: golden '{}' vs run '{}'", golden.cell, got.cell));
+    }
+    if golden.intervals != got.intervals {
+        out.push(format!(
+            "horizon mismatch: golden ran {} intervals, this run {} — \
+             re-record with --update-goldens",
+            golden.intervals, got.intervals
+        ));
+    }
+    for (k, want) in &golden.metrics {
+        match got.metrics.get(k) {
+            None => out.push(format!("metric '{k}' in golden but missing from this run")),
+            Some(&g) => {
+                if !tolerance_for(k).accepts(g, *want) {
+                    out.push(format!("metric '{k}': golden {want}, got {g}"));
+                }
+            }
+        }
+    }
+    for k in got.metrics.keys() {
+        if !golden.metrics.contains_key(k) {
+            out.push(format!(
+                "new metric '{k}' not in golden — review and --update-goldens"
+            ));
+        }
+    }
+    if golden.violated_oracles != got.violated_oracles {
+        out.push(format!(
+            "oracle verdicts changed: golden {:?}, got {:?}",
+            golden.violated_oracles, got.violated_oracles
+        ));
+    }
+    out
+}
+
+/// Outcome of gating one cell against its golden.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GoldenStatus {
+    /// Within tolerance of the committed golden.
+    Match,
+    /// `--update-goldens` rewrote (or created) the golden.
+    Updated,
+    /// No golden recorded for this cell yet — a gate failure, because an
+    /// ungated cell is an unwatched regime.
+    Missing,
+    /// Out of tolerance; carries one message per drifting quantity.
+    Drift(Vec<String>),
+    /// Golden gating disabled for this run.
+    Skipped,
+}
+
+impl GoldenStatus {
+    pub fn is_failure(&self) -> bool {
+        matches!(self, GoldenStatus::Missing | GoldenStatus::Drift(_))
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            GoldenStatus::Match => "match",
+            GoldenStatus::Updated => "updated",
+            GoldenStatus::Missing => "MISSING",
+            GoldenStatus::Drift(_) => "DRIFT",
+            GoldenStatus::Skipped => "-",
+        }
+    }
+}
+
+/// Directory of per-cell golden files (`<file_stem>.json`).
+#[derive(Clone, Debug)]
+pub struct GoldenStore {
+    pub dir: PathBuf,
+}
+
+impl GoldenStore {
+    pub fn new(dir: impl AsRef<Path>) -> GoldenStore {
+        GoldenStore { dir: dir.as_ref().to_path_buf() }
+    }
+
+    pub fn path(&self, stem: &str) -> PathBuf {
+        self.dir.join(format!("{stem}.json"))
+    }
+
+    /// Load a cell's golden. `Ok(None)` when none is recorded; `Err` when
+    /// the file exists but does not parse (a corrupt golden must fail the
+    /// gate loudly, not read as "missing").
+    pub fn load(&self, stem: &str) -> Result<Option<CellSummary>, String> {
+        let path = self.path(stem);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(format!("reading {}: {e}", path.display())),
+        };
+        let v = json::parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?;
+        CellSummary::from_json(&v)
+            .map(Some)
+            .map_err(|e| format!("decoding {}: {e}", path.display()))
+    }
+
+    /// Record `summary` as the golden for its cell (pretty-printed so the
+    /// review diff reads line-per-metric).
+    pub fn save(&self, stem: &str, summary: &CellSummary) -> Result<(), String> {
+        std::fs::create_dir_all(&self.dir)
+            .map_err(|e| format!("creating {}: {e}", self.dir.display()))?;
+        let path = self.path(stem);
+        let mut text = summary.to_json().to_pretty();
+        text.push('\n');
+        std::fs::write(&path, text).map_err(|e| format!("writing {}: {e}", path.display()))
+    }
+
+    /// Gate `summary`: compare against the stored golden, or record it
+    /// when `update` is set.
+    pub fn gate(&self, stem: &str, summary: &CellSummary, update: bool) -> GoldenStatus {
+        if update {
+            return match self.save(stem, summary) {
+                Ok(()) => GoldenStatus::Updated,
+                Err(e) => GoldenStatus::Drift(vec![e]),
+            };
+        }
+        match self.load(stem) {
+            Ok(None) => GoldenStatus::Missing,
+            Ok(Some(golden)) => {
+                let d = drift(&golden, summary);
+                if d.is_empty() {
+                    GoldenStatus::Match
+                } else {
+                    GoldenStatus::Drift(d)
+                }
+            }
+            Err(e) => GoldenStatus::Drift(vec![e]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn summary(cell: &str) -> CellSummary {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("completed".to_string(), 12.0);
+        metrics.insert("response_mean".to_string(), 3.5);
+        metrics.insert("accuracy".to_string(), 0.9);
+        CellSummary {
+            cell: cell.to_string(),
+            policy: "mc".into(),
+            scenario: "clean".into(),
+            seed: 1,
+            intervals: 12,
+            metrics,
+            violated_oracles: Vec::new(),
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("splitplace-golden-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn identical_summaries_match() {
+        let g = summary("mc/clean/s1");
+        assert!(drift(&g, &g.clone()).is_empty());
+    }
+
+    #[test]
+    fn tolerance_band_absorbs_rounding_but_not_regressions() {
+        let g = summary("mc/clean/s1");
+        let mut close = g.clone();
+        *close.metrics.get_mut("response_mean").unwrap() = 3.5 * (1.0 + 1e-9);
+        assert!(drift(&g, &close).is_empty(), "1e-9 relative wiggle is rounding");
+        let mut far = g.clone();
+        *far.metrics.get_mut("response_mean").unwrap() = 3.6;
+        let d = drift(&g, &far);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("response_mean"));
+    }
+
+    #[test]
+    fn counters_compare_exactly() {
+        let g = summary("mc/clean/s1");
+        let mut off = g.clone();
+        *off.metrics.get_mut("completed").unwrap() = 12.0000001;
+        assert!(!drift(&g, &off).is_empty(), "counters get no tolerance band");
+    }
+
+    #[test]
+    fn nan_metrics_agree_only_with_nan() {
+        // both NaN (cell with zero completions): no drift
+        let mut g = summary("mc/clean/s1");
+        *g.metrics.get_mut("accuracy").unwrap() = f64::NAN;
+        let mut got = g.clone();
+        assert!(drift(&g, &got).is_empty(), "NaN golden vs NaN run must match");
+        // golden NaN, run finite → the cell started completing tasks: drift
+        *got.metrics.get_mut("accuracy").unwrap() = 0.8;
+        assert!(!drift(&g, &got).is_empty());
+        // golden finite, run NaN → the cell stopped completing tasks: drift
+        let g2 = summary("mc/clean/s1");
+        let mut got2 = g2.clone();
+        *got2.metrics.get_mut("accuracy").unwrap() = f64::NAN;
+        assert!(!drift(&g2, &got2).is_empty());
+    }
+
+    #[test]
+    fn new_and_missing_metric_keys_are_drift() {
+        let g = summary("mc/clean/s1");
+        let mut extra = g.clone();
+        extra.metrics.insert("queue_p99".to_string(), 4.0);
+        let d = drift(&g, &extra);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("new metric 'queue_p99'"), "{d:?}");
+
+        let mut lost = g.clone();
+        lost.metrics.remove("accuracy");
+        let d = drift(&g, &lost);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("missing from this run"), "{d:?}");
+    }
+
+    #[test]
+    fn oracle_verdict_changes_are_drift() {
+        let g = summary("mc/clean/s1");
+        let mut got = g.clone();
+        got.violated_oracles.push("task-conservation".into());
+        let d = drift(&g, &got);
+        assert!(d.iter().any(|m| m.contains("oracle verdicts")), "{d:?}");
+    }
+
+    #[test]
+    fn missing_golden_file_fails_the_gate() {
+        let store = GoldenStore::new(tmpdir("missing"));
+        let s = summary("mc/clean/s1");
+        assert_eq!(store.gate("mc__clean__s1", &s, false), GoldenStatus::Missing);
+        assert!(GoldenStatus::Missing.is_failure());
+    }
+
+    #[test]
+    fn update_then_gate_roundtrips_through_disk() {
+        let dir = tmpdir("roundtrip");
+        let store = GoldenStore::new(&dir);
+        let mut s = summary("mc/clean/s1");
+        *s.metrics.get_mut("accuracy").unwrap() = f64::NAN; // null on disk
+        assert_eq!(store.gate("mc__clean__s1", &s, true), GoldenStatus::Updated);
+        assert_eq!(store.gate("mc__clean__s1", &s, false), GoldenStatus::Match);
+        // a drifted rerun is rejected with a per-metric message
+        let mut bad = s.clone();
+        *bad.metrics.get_mut("response_mean").unwrap() = 99.0;
+        match store.gate("mc__clean__s1", &bad, false) {
+            GoldenStatus::Drift(msgs) => {
+                assert!(msgs.iter().any(|m| m.contains("response_mean")), "{msgs:?}")
+            }
+            other => panic!("expected drift, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_golden_is_a_loud_failure_not_missing() {
+        let dir = tmpdir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("mc__clean__s1.json"), "{not json").unwrap();
+        let store = GoldenStore::new(&dir);
+        let s = summary("mc/clean/s1");
+        match store.gate("mc__clean__s1", &s, false) {
+            GoldenStatus::Drift(msgs) => assert!(msgs[0].contains("parsing"), "{msgs:?}"),
+            other => panic!("expected loud failure, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,35 @@
+//! Scenario-matrix harness: exhaustive policy × scenario × seed
+//! evaluation with parallel execution, golden-trace regression gating and
+//! a persisted bug-base.
+//!
+//! The paper's claims are *comparative* — MAB+DASO beats the baselines on
+//! response time, deadline violations and reward across workload regimes
+//! (Table 4, Figs. 16–18) — so checking one policy×scenario pair at a
+//! time leaves every other regime unwatched. This subsystem turns the
+//! whole cross product into one deterministic, machine-checked run:
+//!
+//! 1. [`scenario`] enumerates [`scenario::Cell`]s — each a pure function
+//!    of its (policy, scenario, seed) coordinates, with RNG streams
+//!    derived via [`crate::util::rng::mix`] so no state is shared.
+//! 2. [`runner`] executes cells across worker threads; `--jobs 1` and
+//!    `--jobs N` produce byte-identical [`cell::CellSummary`] JSON.
+//! 3. [`golden`] gates each summary against a committed golden with
+//!    per-metric tolerances; drift fails the run.
+//! 4. Any oracle violation is ddmin-shrunk ([`crate::chaos::shrink`]) and
+//!    persisted by [`bugbase`]; `tests/bugbase_replay.rs` replays every
+//!    artifact forever after.
+//!
+//! CLI: `splitplace matrix --filter smoke --jobs 4 [--update-goldens]
+//! [--fail-fast]` (see `main.rs`).
+
+pub mod bugbase;
+pub mod cell;
+pub mod golden;
+pub mod runner;
+pub mod scenario;
+
+pub use bugbase::{BugRecord, Expectation};
+pub use cell::CellSummary;
+pub use golden::{drift, GoldenStatus, GoldenStore, Tolerance};
+pub use runner::{persist_violations, run_matrix, CellResult, MatrixOptions, MatrixReport};
+pub use scenario::{matrix_cells, policy_slug, seed_config, Cell, Scenario};

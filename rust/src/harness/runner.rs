@@ -1,0 +1,312 @@
+//! Parallel fleet runner for the scenario matrix.
+//!
+//! Cells are pulled off a shared atomic cursor by `jobs` worker threads.
+//! Every cell builds its own broker, engine and RNG streams from its
+//! coordinates alone (see [`super::scenario`]), so *which thread runs a
+//! cell, and in what order, cannot change its result* — `--jobs 1` and
+//! `--jobs N` produce byte-identical [`CellSummary`] JSON. Wall-clock is
+//! measured per cell and reported, but kept out of the summary precisely
+//! so that guarantee stays checkable.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::chaos::{self, ChaosOptions, FaultPlan, Violation};
+use crate::config::ExperimentConfig;
+
+use super::cell::CellSummary;
+use super::golden::{GoldenStatus, GoldenStore};
+use super::scenario::Cell;
+
+/// Matrix execution knobs.
+#[derive(Clone, Debug)]
+pub struct MatrixOptions {
+    /// Worker threads (≥1). Results are independent of this.
+    pub jobs: usize,
+    /// Scheduling intervals per cell.
+    pub intervals: usize,
+    /// Stop scheduling new cells after the first failing one.
+    pub fail_fast: bool,
+    /// Record goldens instead of gating against them.
+    pub update_goldens: bool,
+    /// Golden store; None disables gating entirely.
+    pub goldens: Option<GoldenStore>,
+    /// Chaos knobs threaded into every cell (bug injection, starvation
+    /// guard) — `--inject-bug` works through the matrix too, which is how
+    /// the golden/bug-base machinery itself gets exercised.
+    pub chaos: ChaosOptions,
+}
+
+impl Default for MatrixOptions {
+    fn default() -> Self {
+        MatrixOptions {
+            jobs: 1,
+            intervals: 12,
+            fail_fast: false,
+            update_goldens: false,
+            goldens: None,
+            chaos: ChaosOptions::default(),
+        }
+    }
+}
+
+/// Everything one executed cell produced.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub cell: Cell,
+    pub summary: CellSummary,
+    /// Full violation details (the summary only keeps oracle names).
+    pub violations: Vec<Violation>,
+    /// The exact config/plan the cell ran — kept so a violating cell can
+    /// be ddmin-shrunk and persisted without re-deriving anything.
+    pub cfg: ExperimentConfig,
+    pub plan: FaultPlan,
+    pub golden: GoldenStatus,
+    /// Broker/engine construction failure, if any (summary metrics are
+    /// empty in that case).
+    pub error: Option<String>,
+    /// Wall-clock of this cell's execution, milliseconds. Reported, never
+    /// serialized into the summary.
+    pub wall_ms: f64,
+}
+
+impl CellResult {
+    pub fn failed(&self) -> bool {
+        self.error.is_some() || !self.violations.is_empty() || self.golden.is_failure()
+    }
+}
+
+/// Outcome of one matrix run.
+#[derive(Debug)]
+pub struct MatrixReport {
+    /// Executed cells, in enumeration order (independent of jobs); under
+    /// `fail_fast` unscheduled cells are simply absent.
+    pub results: Vec<CellResult>,
+    /// Cells skipped by fail-fast.
+    pub skipped: usize,
+    /// Whole-matrix wall-clock, milliseconds.
+    pub wall_ms: f64,
+}
+
+impl MatrixReport {
+    pub fn failed(&self) -> bool {
+        self.results.iter().any(CellResult::failed)
+    }
+
+    /// Canonical JSON of all cell summaries, in enumeration order. This is
+    /// the byte string the serial-vs-parallel equivalence contract is
+    /// stated over.
+    pub fn summaries_json(&self) -> crate::util::json::Value {
+        crate::util::json::Value::Arr(
+            self.results.iter().map(|r| r.summary.to_json()).collect(),
+        )
+    }
+}
+
+/// Execute one cell, including its golden gate.
+fn run_cell(cell: &Cell, opts: &MatrixOptions) -> CellResult {
+    let (cfg, plan) = cell.scenario.build(cell.policy, cell.seed, opts.intervals);
+    let t0 = Instant::now();
+    let (summary, violations, error) =
+        match chaos::run_chaos(&cfg, &plan, &opts.chaos, None) {
+            Ok(out) => {
+                (CellSummary::from_outcome(cell, opts.intervals, &out), out.violations, None)
+            }
+            Err(e) => {
+                let empty = CellSummary {
+                    cell: cell.id(),
+                    policy: super::scenario::policy_slug(cell.policy).to_string(),
+                    scenario: cell.scenario.name().to_string(),
+                    seed: cell.seed,
+                    intervals: opts.intervals,
+                    metrics: Default::default(),
+                    violated_oracles: Vec::new(),
+                };
+                (empty, Vec::new(), Some(format!("{e:#}")))
+            }
+        };
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // Goldens capture healthy behavior only: a violating cell already
+    // fails the run, and recording (or comparing) its skewed summary
+    // would bake the violation into the committed baseline.
+    let golden = match (&opts.goldens, &error) {
+        (Some(store), None) if violations.is_empty() => {
+            store.gate(&cell.file_stem(), &summary, opts.update_goldens)
+        }
+        _ => GoldenStatus::Skipped,
+    };
+    CellResult { cell: *cell, summary, violations, cfg, plan, golden, error, wall_ms }
+}
+
+/// Run every cell across `opts.jobs` worker threads.
+pub fn run_matrix(cells: &[Cell], opts: &MatrixOptions) -> MatrixReport {
+    let t0 = Instant::now();
+    let next = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let slots: Vec<Mutex<Option<CellResult>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    let jobs = opts.jobs.max(1).min(cells.len().max(1));
+
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= cells.len() {
+                    break;
+                }
+                let result = run_cell(&cells[i], opts);
+                if opts.fail_fast && result.failed() {
+                    stop.store(true, Ordering::SeqCst);
+                }
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+
+    let mut results = Vec::with_capacity(cells.len());
+    for slot in slots {
+        if let Some(r) = slot.into_inner().unwrap() {
+            results.push(r);
+        }
+    }
+    let skipped = cells.len() - results.len();
+    MatrixReport { results, skipped, wall_ms: t0.elapsed().as_secs_f64() * 1e3 }
+}
+
+/// Shrink every violating cell's plan to a minimal counterexample and
+/// persist each as a bug-base artifact. Returns the written records.
+/// Serial on purpose: shrinking re-runs the scenario up to
+/// [`chaos::SHRINK_MAX_RUNS`] times per violation.
+pub fn persist_violations(
+    report: &MatrixReport,
+    opts: &MatrixOptions,
+    dir: impl AsRef<std::path::Path>,
+) -> Result<Vec<std::path::PathBuf>, String> {
+    let mut written = Vec::new();
+    for r in &report.results {
+        let Some(first) = r.violations.first() else {
+            continue;
+        };
+        let shrunk =
+            chaos::shrink_to_minimal(&r.cfg, &r.plan, &opts.chaos, None, first.oracle);
+        let note = format!(
+            "found by matrix run; first violation: {first}; shrunk {} → {} events in {} re-runs",
+            shrunk.original_events,
+            shrunk.plan.events.len(),
+            shrunk.runs
+        );
+        // A violation found with a deliberate bug injected guards the
+        // oracle's detection power (must keep firing under the bug); one
+        // found on the real engine is a real bug that must stay fixed.
+        let expect = if opts.chaos.bug.is_some() {
+            super::bugbase::Expectation::Violates
+        } else {
+            super::bugbase::Expectation::Green
+        };
+        let record = super::bugbase::BugRecord {
+            id: format!("{}__{}", r.cell.file_stem(), first.oracle),
+            oracle: first.oracle.to_string(),
+            expect,
+            bug: opts.chaos.bug,
+            policy: r.cell.policy,
+            scenario: r.cell.scenario,
+            seed: r.cell.seed,
+            intervals: opts.intervals,
+            task_timeout_intervals: opts.chaos.task_timeout_intervals,
+            plan: shrunk.plan,
+            note,
+        };
+        let path = super::bugbase::save(dir.as_ref(), &record)?;
+        written.push(path);
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+    use crate::harness::scenario::Scenario;
+
+    fn slice() -> Vec<Cell> {
+        vec![
+            Cell { policy: PolicyKind::ModelCompression, scenario: Scenario::Clean, seed: 1 },
+            Cell { policy: PolicyKind::ModelCompression, scenario: Scenario::ChaosHeavy, seed: 1 },
+            Cell { policy: PolicyKind::Gillis, scenario: Scenario::FlashCrowd, seed: 1 },
+        ]
+    }
+
+    #[test]
+    fn results_come_back_in_enumeration_order() {
+        let cells = slice();
+        let opts = MatrixOptions { jobs: 3, intervals: 6, ..Default::default() };
+        let report = run_matrix(&cells, &opts);
+        assert_eq!(report.results.len(), cells.len());
+        assert_eq!(report.skipped, 0);
+        for (r, c) in report.results.iter().zip(&cells) {
+            assert_eq!(r.cell.id(), c.id());
+            assert!(r.wall_ms >= 0.0);
+            assert_eq!(r.golden, GoldenStatus::Skipped);
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+    }
+
+    #[test]
+    fn more_jobs_than_cells_is_fine() {
+        let cells = vec![Cell {
+            policy: PolicyKind::ModelCompression,
+            scenario: Scenario::Clean,
+            seed: 2,
+        }];
+        let opts = MatrixOptions { jobs: 16, intervals: 4, ..Default::default() };
+        let report = run_matrix(&cells, &opts);
+        assert_eq!(report.results.len(), 1);
+    }
+
+    #[test]
+    fn empty_cell_list_yields_empty_report() {
+        let report = run_matrix(&[], &MatrixOptions::default());
+        assert!(report.results.is_empty());
+        assert!(!report.failed());
+    }
+
+    #[test]
+    fn injected_bug_marks_the_cell_failed() {
+        // pick the first seed whose heavy plan holds a clock-skew episode,
+        // so the test is structural rather than a bet on one seed's draw
+        let seed = (1u64..50)
+            .find(|&s| {
+                let (_, plan) = Scenario::ChaosHeavy.build(PolicyKind::ModelCompression, s, 10);
+                plan.events.iter().any(|e| {
+                    matches!(e.event,
+                        crate::chaos::ChaosEvent::ClockSkew { offset_s, .. } if offset_s > 0.0)
+                })
+            })
+            .expect("some heavy plan within 50 seeds has clock skew");
+        let cells = vec![Cell {
+            policy: PolicyKind::ModelCompression,
+            scenario: Scenario::ChaosHeavy,
+            seed,
+        }];
+        let opts = MatrixOptions {
+            jobs: 1,
+            intervals: 10,
+            chaos: ChaosOptions {
+                bug: Some(crate::chaos::BugKind::DropClockSkew),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let report = run_matrix(&cells, &opts);
+        assert!(report.failed(), "bug run must fail");
+        assert!(report.results[0]
+            .summary
+            .violated_oracles
+            .iter()
+            .any(|o| o == "clock-skew-applied"));
+    }
+}

@@ -1,0 +1,305 @@
+//! Matrix axes: scenarios × policies × seeds.
+//!
+//! A [`Cell`] is one point of the evaluation cross product. Each cell is a
+//! *pure function of its coordinates*: the experiment config, the fault
+//! plan and every internal RNG stream derive deterministically from
+//! (policy, scenario, seed), so cells can execute on any worker thread in
+//! any order and still reproduce bit-identical results.
+
+use crate::chaos::{ChaosEvent, FaultPlan, Profile, TimedEvent};
+use crate::config::{ExperimentConfig, PolicyKind};
+use crate::util::rng::{mix, Rng};
+
+/// Derive the experiment's internal seeds from one master seed so a single
+/// number reproduces the whole run (plan, fleet, workload, MAB). Shared by
+/// the `chaos` and `matrix` CLIs — a matrix cell replays exactly under
+/// `splitplace chaos --plan`.
+pub fn seed_config(cfg: &mut ExperimentConfig, seed: u64) {
+    cfg.workload.seed = seed ^ 0x57AB;
+    cfg.cluster.seed = seed ^ 0xC1A0;
+    cfg.mab.seed = seed ^ 0x03AB;
+}
+
+/// One workload regime of the paper's evaluation (Table 4 / Figs. 16–18
+/// territory), encoded as a config shape plus a deterministic fault plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    /// Fault-free control run.
+    Clean,
+    /// Occasional single-worker faults (generated light profile).
+    ChaosLight,
+    /// Crash storms, stragglers, blackouts, squeezes, rack failures,
+    /// clock skew and flash crowds (generated heavy profile).
+    ChaosHeavy,
+    /// Lower base λ punctured by two seeded arrival bursts.
+    FlashCrowd,
+    /// Every worker mobile: channels swing across the full OU range, plus
+    /// seeded blackout episodes on top.
+    MobilityHeavy,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 5] = [
+        Scenario::Clean,
+        Scenario::ChaosLight,
+        Scenario::ChaosHeavy,
+        Scenario::FlashCrowd,
+        Scenario::MobilityHeavy,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Clean => "clean",
+            Scenario::ChaosLight => "chaos-light",
+            Scenario::ChaosHeavy => "chaos-heavy",
+            Scenario::FlashCrowd => "flash-crowd",
+            Scenario::MobilityHeavy => "mobility-heavy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        Scenario::ALL.into_iter().find(|sc| sc.name() == s.to_ascii_lowercase())
+    }
+
+    /// Build the cell's experiment config and fault plan. Deterministic in
+    /// (policy, seed, intervals); never touches global state.
+    pub fn build(
+        &self,
+        policy: PolicyKind,
+        seed: u64,
+        intervals: usize,
+    ) -> (ExperimentConfig, FaultPlan) {
+        let mut cfg = ExperimentConfig::small();
+        cfg.policy = policy;
+        cfg.sim.intervals = intervals;
+        cfg.workload.lambda = 3.0;
+        seed_config(&mut cfg, seed);
+        let n = cfg.cluster.total_workers();
+        let plan = match self {
+            Scenario::Clean => FaultPlan::empty(seed, intervals),
+            Scenario::ChaosLight => FaultPlan::generate(seed, intervals, Profile::Light, n),
+            Scenario::ChaosHeavy => FaultPlan::generate(seed, intervals, Profile::Heavy, n),
+            Scenario::FlashCrowd => {
+                cfg.workload.lambda = 2.0;
+                let mut rng = Rng::new(mix(seed, 0xF1A5));
+                let mut events = Vec::new();
+                // two bursts: one early, one in the latter half; episodes
+                // never overlap (an earlier END would cancel a later burst)
+                let mut flash_until = 0usize;
+                for phase in 0..2usize {
+                    let lo = (1 + phase * intervals / 2).max(flash_until);
+                    if lo + 1 >= intervals {
+                        break;
+                    }
+                    let t = lo + rng.below(2) as usize;
+                    let d = 2 + rng.below(3) as usize;
+                    let mult = rng.range(6.0, 10.0);
+                    if t >= intervals {
+                        break;
+                    }
+                    events.push(TimedEvent {
+                        t,
+                        event: ChaosEvent::FlashCrowd { lambda_mult: mult },
+                    });
+                    let end = (t + d).min(intervals - 1).max(t + 1);
+                    if end < intervals {
+                        events.push(TimedEvent { t: end, event: ChaosEvent::FlashCrowdEnd });
+                    }
+                    flash_until = end + 1;
+                }
+                events.sort_by_key(|e| e.t);
+                FaultPlan {
+                    seed,
+                    intervals,
+                    profile: "flash-crowd".into(),
+                    events,
+                }
+            }
+            Scenario::MobilityHeavy => {
+                cfg.cluster.mobile_fraction = 1.0;
+                let mut rng = Rng::new(mix(seed, 0xB1AC));
+                let mut events = Vec::new();
+                let mut black_until = vec![0usize; n];
+                for t in 0..intervals {
+                    if rng.chance(0.10) {
+                        let w = rng.below(n as u64) as usize;
+                        let d = 1 + rng.below(3) as usize;
+                        if t >= black_until[w] {
+                            events.push(TimedEvent { t, event: ChaosEvent::Blackout { worker: w } });
+                            if t + d < intervals {
+                                events.push(TimedEvent {
+                                    t: t + d,
+                                    event: ChaosEvent::BlackoutEnd { worker: w },
+                                });
+                            }
+                            black_until[w] = t + d;
+                        }
+                    }
+                }
+                events.sort_by_key(|e| e.t);
+                FaultPlan {
+                    seed,
+                    intervals,
+                    profile: "mobility-heavy".into(),
+                    events,
+                }
+            }
+        };
+        (cfg, plan)
+    }
+}
+
+/// CLI-facing policy slug (lowercase, also accepted by [`PolicyKind::parse`]).
+pub fn policy_slug(p: PolicyKind) -> &'static str {
+    match p {
+        PolicyKind::MabDaso => "mab-daso",
+        PolicyKind::MabGobi => "mab-gobi",
+        PolicyKind::RandomDaso => "random-daso",
+        PolicyKind::LayerGobi => "layer-gobi",
+        PolicyKind::SemanticGobi => "semantic-gobi",
+        PolicyKind::Gillis => "gillis",
+        PolicyKind::ModelCompression => "mc",
+    }
+}
+
+/// One point of the policy × scenario × seed cross product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cell {
+    pub policy: PolicyKind,
+    pub scenario: Scenario,
+    pub seed: u64,
+}
+
+impl Cell {
+    /// Human-facing id, also the unit `--filter` substrings match against.
+    pub fn id(&self) -> String {
+        format!("{}/{}/s{}", policy_slug(self.policy), self.scenario.name(), self.seed)
+    }
+
+    /// Filesystem-safe id (golden and bug-base file stems).
+    pub fn file_stem(&self) -> String {
+        self.id().replace('/', "__")
+    }
+}
+
+fn cross(policies: &[PolicyKind], scenarios: &[Scenario], seeds: &[u64]) -> Vec<Cell> {
+    let mut cells = Vec::with_capacity(policies.len() * scenarios.len() * seeds.len());
+    for &policy in policies {
+        for &scenario in scenarios {
+            for &seed in seeds {
+                cells.push(Cell { policy, scenario, seed });
+            }
+        }
+    }
+    cells
+}
+
+/// Enumerate matrix cells for a filter, in a fixed deterministic order.
+///
+/// * `"smoke"` — the CI subset: 3 representative policies (heuristic MC,
+///   RL Gillis, the full MAB+DASO stack) × every scenario × the first seed.
+/// * `"full"` / `""` — all 7 policies × every scenario × all seeds.
+/// * anything else — substring match against [`Cell::id`] over the full
+///   cross product (e.g. `"chaos-heavy"`, `"mab-daso/"`, `"/s2"`).
+pub fn matrix_cells(filter: &str, seeds: &[u64]) -> Vec<Cell> {
+    let smoke_policies =
+        [PolicyKind::ModelCompression, PolicyKind::Gillis, PolicyKind::MabDaso];
+    match filter {
+        "smoke" => cross(&smoke_policies, &Scenario::ALL, &seeds[..seeds.len().min(1)]),
+        "full" | "" => cross(&PolicyKind::all(), &Scenario::ALL, seeds),
+        substr => cross(&PolicyKind::all(), &Scenario::ALL, seeds)
+            .into_iter()
+            .filter(|c| c.id().contains(substr))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_names_roundtrip() {
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::parse(s.name()), Some(s));
+        }
+        assert_eq!(Scenario::parse("meteor"), None);
+    }
+
+    #[test]
+    fn policy_slugs_parse_back() {
+        for p in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(policy_slug(p)), Some(p), "{}", policy_slug(p));
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic_per_coordinates() {
+        for s in Scenario::ALL {
+            let (cfg_a, plan_a) = s.build(PolicyKind::MabDaso, 3, 12);
+            let (cfg_b, plan_b) = s.build(PolicyKind::MabDaso, 3, 12);
+            assert_eq!(plan_a, plan_b, "{}", s.name());
+            assert_eq!(cfg_a.workload.seed, cfg_b.workload.seed);
+            let (_, plan_c) = s.build(PolicyKind::MabDaso, 4, 12);
+            if !matches!(s, Scenario::Clean) {
+                // plan content (or at least its seed) must track the seed
+                assert_ne!(plan_a.seed, plan_c.seed);
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_plans_stay_in_horizon_and_sorted() {
+        for s in Scenario::ALL {
+            for seed in [1u64, 2, 9] {
+                let (cfg, plan) = s.build(PolicyKind::ModelCompression, seed, 10);
+                assert_eq!(plan.intervals, 10);
+                for pair in plan.events.windows(2) {
+                    assert!(pair[0].t <= pair[1].t, "{} unsorted", s.name());
+                }
+                for e in &plan.events {
+                    assert!(e.t < 10, "{} event beyond horizon", s.name());
+                    if let Some(w) = e.event.worker() {
+                        assert!(w < cfg.cluster.total_workers());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flash_crowd_scenario_has_bursts() {
+        let (_, plan) = Scenario::FlashCrowd.build(PolicyKind::ModelCompression, 1, 12);
+        let bursts = plan
+            .events
+            .iter()
+            .filter(|e| matches!(e.event, ChaosEvent::FlashCrowd { .. }))
+            .count();
+        assert!(bursts >= 1, "flash-crowd scenario without a burst");
+    }
+
+    #[test]
+    fn mobility_heavy_is_fully_mobile() {
+        let (cfg, _) = Scenario::MobilityHeavy.build(PolicyKind::ModelCompression, 1, 12);
+        assert_eq!(cfg.cluster.mobile_fraction, 1.0);
+        assert_eq!(cfg.cluster.churn_rate, 0.0, "plan-ledger oracles need churn off");
+    }
+
+    #[test]
+    fn smoke_filter_is_small_and_full_is_the_cross_product() {
+        let seeds = [1u64, 2];
+        let smoke = matrix_cells("smoke", &seeds);
+        assert_eq!(smoke.len(), 3 * Scenario::ALL.len(), "3 policies × scenarios × 1 seed");
+        let full = matrix_cells("full", &seeds);
+        assert_eq!(full.len(), 7 * Scenario::ALL.len() * seeds.len());
+        let slice = matrix_cells("mab-daso/chaos", &seeds);
+        assert!(!slice.is_empty());
+        assert!(slice.iter().all(|c| c.id().contains("mab-daso/chaos")));
+        assert!(matrix_cells("no-such-cell", &seeds).is_empty());
+        // ids are unique — they key goldens and bug-base artifacts
+        let mut ids: Vec<String> = full.iter().map(|c| c.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), full.len());
+    }
+}

@@ -8,8 +8,10 @@
 //!   ([`placement::daso`]), the broker loop implementing the paper's
 //!   Algorithm 1 ([`coordinator`]), a discrete-interval mobile-edge cluster
 //!   engine ([`sim`], [`cluster`]), baselines ([`baselines`]), a
-//!   thread-pool serving front-end ([`server`]) and a deterministic
-//!   fault-injection harness with invariant oracles ([`chaos`]).
+//!   thread-pool serving front-end ([`server`]), a deterministic
+//!   fault-injection harness with invariant oracles ([`chaos`]) and a
+//!   parallel scenario-matrix harness with golden-trace gating and a
+//!   persisted bug-base ([`harness`]).
 //! * **Layer 2 (python/compile, build-time only)** — JAX split-network and
 //!   surrogate graphs, AOT-lowered to HLO text in `artifacts/`.
 //! * **Layer 1 (python/compile/kernels)** — the Pallas fused-dense kernel
@@ -24,6 +26,7 @@ pub mod chaos;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod harness;
 pub mod mab;
 pub mod metrics;
 pub mod placement;

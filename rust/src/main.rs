@@ -7,6 +7,11 @@
 //!   chaos [--seed S] [--intervals N] [--profile light|heavy] [--policy P]
 //!         [--differential P2] [--plan FILE] [--inject-bug KIND]
 //!         [--task-timeout K]      deterministic fault injection + oracles
+//!   matrix [--filter smoke|full|SUBSTR] [--jobs N] [--seeds K]
+//!          [--intervals N] [--update-goldens] [--fail-fast] [--list]
+//!          [--goldens DIR] [--bugbase DIR] [--inject-bug KIND]
+//!                                  policy × scenario × seed cross product,
+//!                                  parallel cells, golden gating, bug-base
 //!   serve [--addr A] [--threads N] serving front-end
 //!   info                           artifact + cluster inventory
 //!
@@ -19,6 +24,7 @@ use splitplace::config::{
     AccuracyMode, ClusterConfig, EnvConstraint, ExperimentConfig, PolicyKind,
 };
 use splitplace::coordinator::runner::{artifacts_dir, run_experiment, try_runtime};
+use splitplace::harness::{self, GoldenStatus, GoldenStore, MatrixOptions};
 use splitplace::util::table::{fnum, fpm, Table};
 
 fn parse_flags(args: &[String]) -> std::collections::HashMap<String, String> {
@@ -146,11 +152,31 @@ fn cmd_compare(flags: std::collections::HashMap<String, String>) -> Result<()> {
 }
 
 /// Derive the experiment's internal seeds from the chaos seed so one
-/// number reproduces the whole run (plan, fleet, workload, MAB).
+/// number reproduces the whole run (plan, fleet, workload, MAB). Shared
+/// with the matrix harness so its cells replay under `chaos --plan`.
 fn chaos_seed_config(cfg: &mut ExperimentConfig, seed: u64) {
-    cfg.workload.seed = seed ^ 0x57AB;
-    cfg.cluster.seed = seed ^ 0xC1A0;
-    cfg.mab.seed = seed ^ 0x03AB;
+    harness::seed_config(cfg, seed);
+}
+
+/// `--inject-bug` / `--task-timeout` flags → [`ChaosOptions`], shared by
+/// the `chaos` and `matrix` subcommands.
+fn chaos_options_from_flags(
+    flags: &std::collections::HashMap<String, String>,
+) -> Result<ChaosOptions> {
+    Ok(ChaosOptions {
+        bug: match flags.get("inject-bug") {
+            Some(s) => Some(
+                BugKind::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown --inject-bug '{s}'"))?,
+            ),
+            None => None,
+        },
+        task_timeout_intervals: flags
+            .get("task-timeout")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(40),
+    })
 }
 
 fn print_chaos_outcome(policy: &str, out: &ChaosOutcome, intervals: usize) {
@@ -209,20 +235,7 @@ fn cmd_chaos(flags: std::collections::HashMap<String, String>) -> Result<()> {
         None => FaultPlan::generate(seed, cfg.sim.intervals, profile, cfg.cluster.total_workers()),
     };
 
-    let opts = ChaosOptions {
-        bug: match flags.get("inject-bug") {
-            Some(s) => Some(
-                BugKind::parse(s)
-                    .ok_or_else(|| anyhow::anyhow!("unknown --inject-bug '{s}'"))?,
-            ),
-            None => None,
-        },
-        task_timeout_intervals: flags
-            .get("task-timeout")
-            .map(|s| s.parse())
-            .transpose()?
-            .unwrap_or(40),
-    };
+    let opts = chaos_options_from_flags(&flags)?;
 
     let rt = try_runtime();
     eprintln!(
@@ -322,6 +335,111 @@ fn cmd_chaos(flags: std::collections::HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_matrix(flags: std::collections::HashMap<String, String>) -> Result<()> {
+    let filter = flags.get("filter").map(String::as_str).unwrap_or("smoke");
+    let jobs: usize = flags.get("jobs").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let intervals: usize =
+        flags.get("intervals").map(|s| s.parse()).transpose()?.unwrap_or(12);
+    let n_seeds: u64 = flags.get("seeds").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let seeds: Vec<u64> = (1..=n_seeds.max(1)).collect();
+    let cells = harness::matrix_cells(filter, &seeds);
+    if cells.is_empty() {
+        bail!("--filter '{filter}' matches no cells (try smoke, full, or an id substring)");
+    }
+    if flags.contains_key("list") {
+        for c in &cells {
+            println!("{}", c.id());
+        }
+        return Ok(());
+    }
+
+    let goldens_dir = flags.get("goldens").cloned().unwrap_or_else(|| "tests/goldens".into());
+    let bugbase_dir = flags.get("bugbase").cloned().unwrap_or_else(|| "tests/bugbase".into());
+    let opts = MatrixOptions {
+        jobs,
+        intervals,
+        fail_fast: flags.contains_key("fail-fast"),
+        update_goldens: flags.contains_key("update-goldens"),
+        goldens: Some(GoldenStore::new(&goldens_dir)),
+        chaos: chaos_options_from_flags(&flags)?,
+    };
+
+    eprintln!(
+        "matrix: {} cells (filter '{filter}'), {} intervals each, {jobs} jobs",
+        cells.len(),
+        intervals
+    );
+    let report = harness::run_matrix(&cells, &opts);
+
+    let mut t = Table::new(
+        &format!("Scenario matrix — {} cells in {:.0} ms", report.results.len(), report.wall_ms),
+        &["cell", "ms", "done", "fail", "resp ema", "viol rate", "reward", "oracles", "golden"],
+    );
+    for r in &report.results {
+        let m = |k: &str| r.summary.metrics.get(k).copied().unwrap_or(f64::NAN);
+        t.row(vec![
+            r.cell.id(),
+            format!("{:.0}", r.wall_ms),
+            format!("{}", m("completed")),
+            format!("{}", m("failed")),
+            fnum(m("response_ema")),
+            fnum(m("sla_violation_rate")),
+            fnum(m("avg_reward")),
+            if r.summary.violated_oracles.is_empty() {
+                "ok".into()
+            } else {
+                r.summary.violated_oracles.join(",")
+            },
+            r.golden.label().into(),
+        ]);
+    }
+    t.print();
+    if report.skipped > 0 {
+        eprintln!("fail-fast: {} cells not scheduled", report.skipped);
+    }
+
+    // errors + golden drift details
+    for r in &report.results {
+        if let Some(e) = &r.error {
+            eprintln!("ERROR {}: {e}", r.cell.id());
+        }
+        if let GoldenStatus::Drift(msgs) = &r.golden {
+            for m in msgs {
+                eprintln!("DRIFT {}: {m}", r.cell.id());
+            }
+        }
+        if let GoldenStatus::Missing = &r.golden {
+            eprintln!(
+                "MISSING {}: no golden at {}; record with --update-goldens and review the diff",
+                r.cell.id(),
+                GoldenStore::new(&goldens_dir).path(&r.cell.file_stem()).display()
+            );
+        }
+    }
+
+    // violations → shrink → bug-base artifacts that replay forever
+    let violated = report.results.iter().filter(|r| !r.violations.is_empty()).count();
+    if violated > 0 {
+        eprintln!("{violated} cell(s) violated invariants; shrinking to minimal plans...");
+        match harness::persist_violations(&report, &opts, &bugbase_dir) {
+            Ok(paths) => {
+                for p in &paths {
+                    eprintln!("bug-base artifact written: {}", p.display());
+                }
+                eprintln!(
+                    "commit these artifacts: tests/bugbase_replay.rs replays them on every run"
+                );
+            }
+            Err(e) => eprintln!("bug-base persistence failed: {e}"),
+        }
+    }
+
+    if report.failed() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_serve(flags: std::collections::HashMap<String, String>) -> Result<()> {
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7077".into());
     let threads: usize = flags.get("threads").map(|t| t.parse()).transpose()?.unwrap_or(4);
@@ -388,10 +506,11 @@ fn main() -> Result<()> {
         "run" => cmd_run(flags),
         "compare" => cmd_compare(flags),
         "chaos" => cmd_chaos(flags),
+        "matrix" => cmd_matrix(flags),
         "serve" => cmd_serve(flags),
         "info" => cmd_info(),
         other => {
-            eprintln!("unknown command '{other}'; try: run, compare, chaos, serve, info");
+            eprintln!("unknown command '{other}'; try: run, compare, chaos, matrix, serve, info");
             std::process::exit(2);
         }
     }

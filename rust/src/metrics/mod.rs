@@ -167,6 +167,19 @@ impl Metrics {
         stats::jain_fairness(&self.per_worker_containers)
     }
 
+    /// Response-time EMA over leaving tasks in completion order (φ-weighted
+    /// like the MAB's eq. 2 smoothing). The matrix harness's headline
+    /// latency figure: robust to tail noise but still order-sensitive, so
+    /// a replay that reorders completions drifts immediately. NaN when no
+    /// task has left the system.
+    pub fn response_ema(&self, phi: f64) -> f64 {
+        let mut ema = f64::NAN;
+        for t in &self.completed {
+            ema = if ema.is_nan() { t.response } else { phi * ema + (1.0 - phi) * t.response };
+        }
+        ema
+    }
+
     fn dist(&self, f: impl Fn(&CompletedTask) -> f64) -> (f64, f64) {
         let xs: Vec<f64> = self.completed.iter().map(f).collect();
         (stats::mean(&xs), stats::std(&xs))
@@ -394,6 +407,24 @@ mod tests {
         assert!((per[&App::Mnist].0 - 0.99).abs() < 1e-12);
         let pd = m.per_decision_response();
         assert!((pd[&SplitDecision::Semantic].0 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn response_ema_weights_recent_tasks() {
+        let mut m = Metrics::new(4, 10.0, 300.0);
+        assert!(m.response_ema(0.9).is_nan(), "no completions yet");
+        m.record_interval(
+            &report(vec![
+                done(App::Mnist, SplitDecision::Layer, 10.0, 5.0, 0.9),
+                done(App::Mnist, SplitDecision::Layer, 2.0, 5.0, 0.9),
+            ]),
+            0.1,
+            0.9,
+        );
+        // seeded at 10, then 0.9·10 + 0.1·2 = 9.2
+        assert!((m.response_ema(0.9) - 9.2).abs() < 1e-12);
+        // φ = 0 tracks the latest completion exactly
+        assert!((m.response_ema(0.0) - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -127,6 +127,11 @@ pub struct Engine {
     /// Per-worker forced channel state (network blackout injection);
     /// overlays the mobility model while set.
     channel_override: Vec<Option<ChannelState>>,
+    /// Per-worker clock-skew seconds (clock-skew injection): coordination
+    /// with a skewed worker pays this extra latency on every payload
+    /// movement that touches it (the broker must reconcile timestamps
+    /// before trusting a transfer window). 0 = clocks agree.
+    clock_skew_s: Vec<f64>,
     /// Tasks failed since the last interval report.
     pending_failed: Vec<FailedTask>,
     // scratch: per-worker busy seconds within the current interval
@@ -163,6 +168,7 @@ impl Engine {
             mips_factor: vec![1.0; n],
             ram_factor: vec![1.0; n],
             channel_override: vec![None; n],
+            clock_skew_s: vec![0.0; n],
             pending_failed: Vec::new(),
             busy_s: vec![0.0; n],
             xfer_s: vec![0.0; n],
@@ -364,6 +370,21 @@ impl Engine {
         }
     }
 
+    /// Drift a worker's clock by `skew_s` seconds (clock-skew injection):
+    /// every payload movement touching the worker pays the skew as extra
+    /// coordination latency; 0.0 ends the episode. Clamped to [0, 600] —
+    /// NTP-grade drift, not a wall-clock rewrite.
+    pub fn set_clock_skew(&mut self, w: usize, skew_s: f64) {
+        if w < self.clock_skew_s.len() {
+            self.clock_skew_s[w] = skew_s.clamp(0.0, 600.0);
+        }
+    }
+
+    /// Currently applied clock skew of worker `w`, in seconds.
+    pub fn clock_skew(&self, w: usize) -> f64 {
+        self.clock_skew_s.get(w).copied().unwrap_or(0.0)
+    }
+
     /// Effective RAM capacity of worker `w` under any active squeeze.
     pub fn effective_ram_mb(&self, w: usize) -> f64 {
         self.cluster.workers[w].spec.ram_mb * self.ram_factor[w]
@@ -531,7 +552,12 @@ impl Engine {
         let disk_dst = self.cluster.workers[dst].spec.disk_bw_mbps;
         let disk_src = src.map(|s| self.cluster.workers[s].spec.disk_bw_mbps).unwrap_or(f64::MAX);
         let disk_s = mb / disk_dst.min(disk_src);
-        net_s.max(disk_s)
+        // Clock skew on either endpoint: the broker reconciles timestamps
+        // before trusting the transfer window (same-node moves above never
+        // cross a clock boundary and stay skew-free).
+        let skew_s = self.clock_skew_s[dst]
+            + src.map(|s| self.clock_skew_s[s]).unwrap_or(0.0);
+        net_s.max(disk_s) + skew_s
     }
 
     /// Simulate one full interval; the placement must already be applied.
@@ -1133,6 +1159,32 @@ mod tests {
         e.set_channel_override(0, None);
         e.step_interval();
         assert_ne!(e.channels[0], ChannelState::BLACKOUT);
+    }
+
+    #[test]
+    fn clock_skew_delays_transfers_by_the_offset() {
+        let stage_until = |skew: f64| -> f64 {
+            let mut e = engine();
+            e.admit(task(1, App::Cifar100, 64_000), SplitDecision::Compressed);
+            e.set_clock_skew(0, skew);
+            e.apply_placement(&[(0, 0)]);
+            match e.containers[0].state {
+                ContainerState::Transferring { until_s } => until_s,
+                other => panic!("expected staging transfer, got {other:?}"),
+            }
+        };
+        let normal = stage_until(0.0);
+        let skewed = stage_until(45.0);
+        assert!(
+            (skewed - normal - 45.0).abs() < 1e-6,
+            "skew must add exactly its offset: normal={normal} skewed={skewed}"
+        );
+        let mut e = engine();
+        e.set_clock_skew(3, 1e9);
+        assert_eq!(e.clock_skew(3), 600.0, "skew clamps to the NTP-grade cap");
+        e.set_clock_skew(3, 0.0);
+        assert_eq!(e.clock_skew(3), 0.0);
+        assert_eq!(e.clock_skew(99), 0.0, "out-of-range worker reads as unskewed");
     }
 
     #[test]

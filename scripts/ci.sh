@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# CI entrypoint: build, test, and a fixed-seed chaos smoke run so fault
-# handling (crash/requeue/re-place + invariant oracles) is exercised on
-# every PR. Fails on any oracle violation (chaos exits non-zero).
+# CI entrypoint: build, test, a fixed-seed chaos smoke, and the scenario
+# matrix smoke (policy × scenario × seed cross product with golden-trace
+# gating). Fails on any oracle violation or golden drift. Budget: the
+# post-build steps stay well under ~2 minutes.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,5 +18,16 @@ echo "== chaos smoke (fixed seed, light profile) =="
 echo "== chaos smoke (fixed seed, heavy profile, differential) =="
 ./target/release/splitplace chaos --seed 7 --profile heavy --intervals 10 \
     --policy mab-daso --differential layer-gobi
+
+echo "== matrix smoke (parallel cells, golden gate, bug-base) =="
+# First run on a machine with no recorded goldens: bootstrap them with a
+# serial run (review + commit the diff under tests/goldens/). The parallel
+# gate right after must then match byte-for-byte, which exercises the
+# --jobs 1 == --jobs N determinism contract end-to-end on every CI run.
+if ! ls tests/goldens/*.json >/dev/null 2>&1; then
+    echo "no goldens recorded yet — bootstrapping (serial, --update-goldens)"
+    ./target/release/splitplace matrix --filter smoke --jobs 1 --update-goldens
+fi
+./target/release/splitplace matrix --filter smoke --jobs 2
 
 echo "CI OK"

@@ -1,0 +1,80 @@
+//! Bug-base regression replay: every artifact committed under
+//! `tests/bugbase/` is replayed on every test run, forever.
+//!
+//! The contract (see `splitplace::harness::bugbase`):
+//! * `expect: "green"` artifacts are shrunk scenarios that once exposed a
+//!   real bug — after the fix they must stay violation-free.
+//! * `expect: "violates"` artifacts pair a deliberate injected bug with
+//!   the oracle that catches it — the oracle must keep firing, or the
+//!   harness has silently lost detection power.
+
+use std::path::PathBuf;
+
+use splitplace::harness::bugbase;
+
+fn bugbase_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("bugbase")
+}
+
+#[test]
+fn every_bugbase_artifact_replays_and_holds_its_expectation() {
+    let records = bugbase::load_dir(&bugbase_dir()).expect("bug-base must load cleanly");
+    assert!(
+        !records.is_empty(),
+        "tests/bugbase/ must hold at least one artifact — the replay gate \
+         is pointless when empty"
+    );
+    let mut failures = Vec::new();
+    for record in &records {
+        if let Err(e) = record.replay() {
+            failures.push(e);
+        }
+    }
+    assert!(failures.is_empty(), "bug-base regressions:\n{}", failures.join("\n"));
+}
+
+#[test]
+fn bugbase_covers_both_expectation_directions() {
+    let records = bugbase::load_dir(&bugbase_dir()).unwrap();
+    let greens = records.iter().filter(|r| r.expect == bugbase::Expectation::Green).count();
+    let violates =
+        records.iter().filter(|r| r.expect == bugbase::Expectation::Violates).count();
+    assert!(greens > 0, "need at least one fixed-bug (green) artifact");
+    assert!(violates > 0, "need at least one detection-power (violates) artifact");
+}
+
+/// End-to-end format exercise: write a fresh shrunk-style artifact, load
+/// it back through the directory scanner, and replay it — the same path a
+/// matrix-discovered violation takes.
+#[test]
+fn freshly_persisted_artifact_roundtrips_and_replays() {
+    use splitplace::chaos::{BugKind, ChaosEvent, FaultPlan, TimedEvent};
+    use splitplace::config::PolicyKind;
+    use splitplace::harness::{BugRecord, Expectation, Scenario};
+
+    let dir = std::env::temp_dir()
+        .join(format!("splitplace-bugbase-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let record = BugRecord {
+        id: "e2e__skip-crash-requeue".into(),
+        oracle: "offline-matches-plan".into(),
+        expect: Expectation::Violates,
+        bug: Some(BugKind::ForgetRackMember),
+        policy: PolicyKind::Gillis,
+        scenario: Scenario::Clean,
+        seed: 11,
+        intervals: 6,
+        task_timeout_intervals: 40,
+        plan: FaultPlan::empty(11, 6).with_events(vec![TimedEvent {
+            t: 1,
+            event: ChaosEvent::CorrelatedRackFailure { rack: 2 },
+        }]),
+        note: "end-to-end format exercise".into(),
+    };
+    let path = bugbase::save(&dir, &record).unwrap();
+    assert!(path.ends_with("e2e__skip-crash-requeue.json"));
+    let loaded = bugbase::load_dir(&dir).unwrap();
+    assert_eq!(loaded.len(), 1);
+    assert!(loaded[0].replay().is_ok(), "{:?}", loaded[0].replay());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,160 @@
+//! Integration tests for the scenario-matrix harness: serial-vs-parallel
+//! equivalence, end-to-end golden gating, and matrix smoke health.
+
+use splitplace::chaos::ChaosOptions;
+use splitplace::config::PolicyKind;
+use splitplace::harness::{
+    matrix_cells, run_matrix, Cell, GoldenStatus, GoldenStore, MatrixOptions, Scenario,
+};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("splitplace-matrix-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The headline determinism contract: the same matrix slice run with
+/// `--jobs 1` and `--jobs 4` serializes to byte-identical CellSummary
+/// JSON. Everything else (goldens, CI bootstrap, replay) leans on this.
+#[test]
+fn serial_and_parallel_runs_are_byte_identical() {
+    let cells = matrix_cells("smoke", &[1]);
+    assert!(cells.len() >= 8, "smoke slice unexpectedly small: {}", cells.len());
+    let base = MatrixOptions { intervals: 8, ..Default::default() };
+    let serial = run_matrix(&cells, &MatrixOptions { jobs: 1, ..base.clone() });
+    let parallel = run_matrix(&cells, &MatrixOptions { jobs: 4, ..base });
+    assert_eq!(serial.results.len(), parallel.results.len());
+    let a = serial.summaries_json().to_string();
+    let b = parallel.summaries_json().to_string();
+    assert_eq!(a, b, "--jobs 1 and --jobs 4 must serialize identically");
+    // and a re-run of either is byte-identical too (full replay stability)
+    let again = run_matrix(&cells, &MatrixOptions { jobs: 4, ..MatrixOptions { intervals: 8, ..Default::default() } });
+    assert_eq!(b, again.summaries_json().to_string());
+}
+
+/// Every smoke cell must run clean: no construction errors and no oracle
+/// violations — the matrix is the regression net, so the net itself has
+/// to be green at head.
+#[test]
+fn smoke_matrix_is_green() {
+    let cells = matrix_cells("smoke", &[1]);
+    let report =
+        run_matrix(&cells, &MatrixOptions { jobs: 4, intervals: 8, ..Default::default() });
+    assert_eq!(report.results.len(), cells.len());
+    for r in &report.results {
+        assert!(r.error.is_none(), "{}: {:?}", r.cell.id(), r.error);
+        assert!(
+            r.violations.is_empty(),
+            "{}: {:?}",
+            r.cell.id(),
+            r.summary.violated_oracles
+        );
+        let admitted = r.summary.metrics.get("admitted").copied().unwrap_or(0.0);
+        assert!(admitted > 0.0, "{}: no tasks admitted", r.cell.id());
+    }
+    assert!(!report.failed());
+}
+
+/// Golden gating end-to-end on a real slice: record goldens, re-run and
+/// match, then corrupt one golden and watch the drift gate trip.
+#[test]
+fn golden_gate_matches_then_catches_injected_drift() {
+    let dir = tmpdir("gate");
+    let cells = vec![
+        Cell { policy: PolicyKind::ModelCompression, scenario: Scenario::Clean, seed: 1 },
+        Cell { policy: PolicyKind::Gillis, scenario: Scenario::ChaosHeavy, seed: 1 },
+    ];
+    let record = MatrixOptions {
+        jobs: 2,
+        intervals: 8,
+        update_goldens: true,
+        goldens: Some(GoldenStore::new(&dir)),
+        ..Default::default()
+    };
+    let rec = run_matrix(&cells, &record);
+    assert!(rec.results.iter().all(|r| r.golden == GoldenStatus::Updated));
+    assert!(!rec.failed(), "recording goldens must not fail the run");
+
+    let gate = MatrixOptions {
+        jobs: 2,
+        intervals: 8,
+        goldens: Some(GoldenStore::new(&dir)),
+        ..Default::default()
+    };
+    let ok = run_matrix(&cells, &gate);
+    assert!(
+        ok.results.iter().all(|r| r.golden == GoldenStatus::Match),
+        "{:?}",
+        ok.results.iter().map(|r| r.golden.clone()).collect::<Vec<_>>()
+    );
+    assert!(!ok.failed());
+
+    // corrupt one recorded metric → that cell must drift, the other match
+    let store = GoldenStore::new(&dir);
+    let stem = cells[0].file_stem();
+    let mut golden = store.load(&stem).unwrap().unwrap();
+    *golden.metrics.get_mut("completed").unwrap() += 1.0;
+    store.save(&stem, &golden).unwrap();
+    let drifted = run_matrix(&cells, &gate);
+    assert!(drifted.failed(), "tampered golden must fail the gate");
+    match &drifted.results[0].golden {
+        GoldenStatus::Drift(msgs) => {
+            assert!(msgs.iter().any(|m| m.contains("completed")), "{msgs:?}")
+        }
+        other => panic!("expected drift on tampered cell, got {other:?}"),
+    }
+    assert_eq!(drifted.results[1].golden, GoldenStatus::Match);
+
+    // a cell with no golden at all is a gate failure, not a silent pass
+    let extra = vec![Cell {
+        policy: PolicyKind::ModelCompression,
+        scenario: Scenario::FlashCrowd,
+        seed: 1,
+    }];
+    let missing = run_matrix(&extra, &gate);
+    assert_eq!(missing.results[0].golden, GoldenStatus::Missing);
+    assert!(missing.failed());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A matrix cell replays identically through the chaos entry point with
+/// the same plan — the contract that lets `splitplace chaos --plan`
+/// reproduce any matrix finding.
+#[test]
+fn matrix_cell_replays_through_chaos_cli_path() {
+    let cell = Cell { policy: PolicyKind::Gillis, scenario: Scenario::ChaosHeavy, seed: 2 };
+    let report = run_matrix(
+        &[cell],
+        &MatrixOptions { jobs: 1, intervals: 8, ..Default::default() },
+    );
+    let summary = &report.results[0].summary;
+    let (cfg, plan) = cell.scenario.build(cell.policy, cell.seed, 8);
+    let out = splitplace::chaos::run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+    let direct = splitplace::harness::CellSummary::from_outcome(&cell, 8, &out);
+    assert_eq!(
+        summary.to_json().to_string(),
+        direct.to_json().to_string(),
+        "matrix cell and direct chaos replay must agree byte-for-byte"
+    );
+}
+
+/// fail-fast stops scheduling new cells once a failure lands.
+#[test]
+fn fail_fast_skips_remaining_cells() {
+    // a missing-golden failure on every cell, serial so ordering is exact
+    let cells = matrix_cells("smoke", &[1]);
+    let dir = tmpdir("failfast");
+    let opts = MatrixOptions {
+        jobs: 1,
+        intervals: 4,
+        fail_fast: true,
+        goldens: Some(GoldenStore::new(&dir)),
+        ..Default::default()
+    };
+    let report = run_matrix(&cells, &opts);
+    assert!(report.failed());
+    assert_eq!(report.results.len(), 1, "first failure must stop the serial run");
+    assert_eq!(report.skipped, cells.len() - 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}

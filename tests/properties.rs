@@ -538,6 +538,145 @@ fn prop_chaos_shrink_preserves_the_violated_oracle() {
 }
 
 #[test]
+fn prop_shrink_output_is_1_minimal() {
+    // ddmin's contract: removing ANY single event from the shrunk plan no
+    // longer satisfies the failure predicate. Checked against two
+    // predicate shapes over seeded generated plans.
+    check(
+        "shrink-1-minimal",
+        12,
+        |rng| {
+            let plan = FaultPlan::generate(rng.next_u64() % 10_000, 40, Profile::Heavy, 8);
+            // predicate A: a random subset of 1..=3 events must survive
+            let k = rng.int_range(1, 3) as usize;
+            let mut required = Vec::new();
+            for _ in 0..k.min(plan.events.len()) {
+                required.push(plan.events[rng.below(plan.events.len() as u64) as usize]);
+            }
+            // predicate B threshold: at least m crash events
+            let m = rng.int_range(1, 3) as usize;
+            (plan, required, m)
+        },
+        |(plan, required, m)| {
+            if plan.events.is_empty() || required.is_empty() {
+                return Ok(());
+            }
+            let holds_a = |p: &FaultPlan| required.iter().all(|e| p.events.contains(e));
+            let crashes = |p: &FaultPlan| {
+                p.events
+                    .iter()
+                    .filter(|e| matches!(e.event, ChaosEvent::Crash { .. }))
+                    .count()
+            };
+            let holds_b = |p: &FaultPlan| crashes(p) >= *m;
+            for (name, pred) in [
+                ("subset", &holds_a as &dyn Fn(&FaultPlan) -> bool),
+                ("crash-count", &holds_b),
+            ] {
+                if !pred(plan) {
+                    continue; // plan doesn't fail this predicate at all
+                }
+                let shrunk = chaos::shrink_plan(plan, 100_000, |p| pred(p));
+                if !pred(&shrunk.plan) {
+                    return Err(format!("{name}: shrunk plan no longer fails"));
+                }
+                for i in 0..shrunk.plan.events.len() {
+                    let mut events = shrunk.plan.events.clone();
+                    events.remove(i);
+                    if pred(&shrunk.plan.with_events(events)) {
+                        return Err(format!(
+                            "{name}: not 1-minimal — event {i} of {} is removable",
+                            shrunk.plan.events.len()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rack_failure_plans_replay_identically_and_green() {
+    // determinism property for CorrelatedRackFailure (ROADMAP follow-up):
+    // seeded rack-only plans replay bit-identically and a correct engine
+    // keeps every oracle green, including the plan-ledger one.
+    check(
+        "rack-failure-determinism",
+        5,
+        |rng| {
+            let intervals = 10usize;
+            let mut events = Vec::new();
+            let mut t = 1usize;
+            while t + 2 < intervals {
+                let rack = rng.below(4) as usize;
+                let d = 1 + rng.below(2) as usize;
+                events.push(TimedEvent { t, event: ChaosEvent::CorrelatedRackFailure { rack } });
+                events.push(TimedEvent { t: t + d, event: ChaosEvent::RackRecover { rack } });
+                t += d + 1 + rng.below(3) as usize;
+            }
+            events.sort_by_key(|e| e.t);
+            (FaultPlan::empty(rng.next_u64() % 1000, intervals).with_events(events), intervals)
+        },
+        |(plan, intervals)| {
+            let cfg = chaos_cfg(*intervals, 3.0);
+            let opts = ChaosOptions::default();
+            let a = chaos::run_chaos(&cfg, plan, &opts, None).map_err(|e| e.to_string())?;
+            let b = chaos::run_chaos(&cfg, plan, &opts, None).map_err(|e| e.to_string())?;
+            if a.signatures != b.signatures {
+                return Err("rack-failure plan must replay identically".into());
+            }
+            if !a.violations.is_empty() {
+                return Err(format!("clean engine violated: {:?}", a.violations));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_clock_skew_plans_replay_identically_and_green() {
+    // determinism property for ClockSkew (ROADMAP follow-up): seeded
+    // skew-only plans replay bit-identically and stay green.
+    check(
+        "clock-skew-determinism",
+        5,
+        |rng| {
+            let intervals = 10usize;
+            let mut events = Vec::new();
+            for _ in 0..4 {
+                let w = rng.below(10) as usize;
+                let t = 1 + rng.below(intervals as u64 - 3) as usize;
+                let d = 1 + rng.below(2) as usize;
+                events.push(TimedEvent {
+                    t,
+                    event: ChaosEvent::ClockSkew { worker: w, offset_s: rng.range(5.0, 120.0) },
+                });
+                events.push(TimedEvent {
+                    t: t + d,
+                    event: ChaosEvent::ClockSkew { worker: w, offset_s: 0.0 },
+                });
+            }
+            events.sort_by_key(|e| e.t);
+            (FaultPlan::empty(rng.next_u64() % 1000, intervals).with_events(events), intervals)
+        },
+        |(plan, intervals)| {
+            let cfg = chaos_cfg(*intervals, 3.0);
+            let opts = ChaosOptions::default();
+            let a = chaos::run_chaos(&cfg, plan, &opts, None).map_err(|e| e.to_string())?;
+            let b = chaos::run_chaos(&cfg, plan, &opts, None).map_err(|e| e.to_string())?;
+            if a.signatures != b.signatures {
+                return Err("clock-skew plan must replay identically".into());
+            }
+            if !a.violations.is_empty() {
+                return Err(format!("clean engine violated: {:?}", a.violations));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_registry_plans_internally_consistent() {
     check(
         "registry-consistency",
