@@ -34,7 +34,7 @@ fn main() {
     for i in 0..intervals {
         broker.step();
         if (i + 1) % sample_every == 0 {
-            let mab = broker.mab.as_ref().unwrap();
+            let mab = broker.mab().unwrap();
             curve.row(vec![
                 (i + 1).to_string(),
                 fnum(mab.epsilon),
@@ -50,7 +50,7 @@ fn main() {
     }
     curve.print();
 
-    let mab = broker.mab.as_ref().unwrap();
+    let mab = broker.mab().unwrap();
     let mut counts = Table::new(
         "Fig. 6(b,c) — decision counts",
         &["context", "layer", "semantic"],

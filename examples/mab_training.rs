@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     for i in 0..TRAIN_INTERVALS {
         broker.step();
         if (i + 1) % SAMPLE_EVERY == 0 {
-            let mab = broker.mab.as_ref().unwrap();
+            let mab = broker.mab().unwrap();
             let b = &mab.bandit;
             t.row(vec![
                 (i + 1).to_string(),
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    let mab = broker.mab.as_ref().unwrap();
+    let mab = broker.mab().unwrap();
     println!("final ε = {:.4} (started at 1.0, decays on reward feedback)", mab.epsilon);
     println!(
         "low-SLA context dichotomy (Fig. 6f): Q[l][semantic]={:.3} vs Q[l][layer]={:.3}",

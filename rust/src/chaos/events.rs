@@ -6,6 +6,8 @@
 //! start/end event pairs at plan-generation time, which keeps plans flat —
 //! the shrinker can delete any single event and still have a valid plan.
 
+use crate::cluster::mobility::ChannelState;
+use crate::sim::EngineCmd;
 use crate::util::json::{JsonError, Value};
 
 /// Topology racks per fleet. Fleets are built type-grouped (Table 3 order),
@@ -53,6 +55,11 @@ pub enum ChaosEvent {
     /// broker's; coordination pays the skew on every transfer touching the
     /// worker. 0.0 ends the episode (clocks resynchronized).
     ClockSkew { worker: usize, offset_s: f64 },
+    /// Payload corruption: a bit-flip/truncation hits every input payload
+    /// currently staging toward the worker (rsync-through-disk has no
+    /// end-to-end checksum). A corrupted transfer cannot produce valid
+    /// output: the owning task must fail-and-penalize, never complete.
+    PayloadCorruption { worker: usize },
 }
 
 impl ChaosEvent {
@@ -69,6 +76,52 @@ impl ChaosEvent {
             ChaosEvent::CorrelatedRackFailure { .. } => "rack-failure",
             ChaosEvent::RackRecover { .. } => "rack-recover",
             ChaosEvent::ClockSkew { .. } => "clock-skew",
+            ChaosEvent::PayloadCorruption { .. } => "payload-corruption",
+        }
+    }
+
+    /// Compile this event to the typed engine commands it means — the
+    /// single semantic source both for application (possibly mutated by an
+    /// injected [`super::BugKind`]) and for the plan-state ledger the
+    /// chaos oracles audit against. Events targeting workers outside an
+    /// `n_workers` fleet compile to nothing (plans generated for a bigger
+    /// fleet replay harmlessly). Flash crowds are broker-scoped (arrival
+    /// rate), not engine commands, and also compile to nothing.
+    pub fn compile(&self, n_workers: usize) -> Vec<EngineCmd> {
+        if let Some(w) = self.worker() {
+            if w >= n_workers {
+                return Vec::new();
+            }
+        }
+        match *self {
+            ChaosEvent::Crash { worker } => vec![EngineCmd::Crash { worker }],
+            ChaosEvent::Recover { worker } => vec![EngineCmd::Recover { worker }],
+            ChaosEvent::Straggler { worker, factor } => {
+                vec![EngineCmd::SetMipsFactor { worker, factor }]
+            }
+            ChaosEvent::RamSqueeze { worker, factor } => {
+                vec![EngineCmd::SetRamFactor { worker, factor }]
+            }
+            ChaosEvent::Blackout { worker } => vec![EngineCmd::SetChannelOverride {
+                worker,
+                channel: Some(ChannelState::BLACKOUT),
+            }],
+            ChaosEvent::BlackoutEnd { worker } => {
+                vec![EngineCmd::SetChannelOverride { worker, channel: None }]
+            }
+            ChaosEvent::FlashCrowd { .. } | ChaosEvent::FlashCrowdEnd => Vec::new(),
+            ChaosEvent::CorrelatedRackFailure { rack } => rack_members(n_workers, rack)
+                .map(|worker| EngineCmd::Crash { worker })
+                .collect(),
+            ChaosEvent::RackRecover { rack } => rack_members(n_workers, rack)
+                .map(|worker| EngineCmd::Recover { worker })
+                .collect(),
+            ChaosEvent::ClockSkew { worker, offset_s } => {
+                vec![EngineCmd::SetClockSkew { worker, skew_s: offset_s }]
+            }
+            ChaosEvent::PayloadCorruption { worker } => {
+                vec![EngineCmd::CorruptPayload { worker }]
+            }
         }
     }
 
@@ -81,7 +134,8 @@ impl ChaosEvent {
             | ChaosEvent::RamSqueeze { worker, .. }
             | ChaosEvent::Blackout { worker }
             | ChaosEvent::BlackoutEnd { worker }
-            | ChaosEvent::ClockSkew { worker, .. } => Some(*worker),
+            | ChaosEvent::ClockSkew { worker, .. }
+            | ChaosEvent::PayloadCorruption { worker } => Some(*worker),
             _ => None,
         }
     }
@@ -140,6 +194,7 @@ impl ChaosEvent {
                 worker: worker()?,
                 offset_s: v.req("offset_s")?.as_f64()?,
             },
+            "payload-corruption" => ChaosEvent::PayloadCorruption { worker: worker()? },
             _ => return Err(JsonError::Type("known chaos event kind")),
         })
     }
@@ -185,6 +240,7 @@ mod tests {
             ChaosEvent::CorrelatedRackFailure { rack: 2 },
             ChaosEvent::RackRecover { rack: 2 },
             ChaosEvent::ClockSkew { worker: 4, offset_s: 37.5 },
+            ChaosEvent::PayloadCorruption { worker: 6 },
         ];
         for (i, e) in events.iter().enumerate() {
             let te = TimedEvent { t: i, event: *e };
@@ -220,5 +276,30 @@ mod tests {
         }
         // rack index wraps so plans survive fleet-size changes
         assert_eq!(rack_members(10, 5), rack_members(10, 1));
+    }
+
+    #[test]
+    fn events_compile_to_their_engine_commands() {
+        use crate::sim::EngineCmd;
+        assert_eq!(
+            ChaosEvent::Crash { worker: 3 }.compile(10),
+            vec![EngineCmd::Crash { worker: 3 }]
+        );
+        assert_eq!(
+            ChaosEvent::ClockSkew { worker: 1, offset_s: 30.0 }.compile(10),
+            vec![EngineCmd::SetClockSkew { worker: 1, skew_s: 30.0 }]
+        );
+        assert_eq!(
+            ChaosEvent::PayloadCorruption { worker: 2 }.compile(10),
+            vec![EngineCmd::CorruptPayload { worker: 2 }]
+        );
+        // rack events fan out to one command per member
+        let rack = ChaosEvent::CorrelatedRackFailure { rack: 0 }.compile(8);
+        assert_eq!(rack.len(), rack_members(8, 0).len());
+        assert!(rack.iter().all(|c| matches!(c, EngineCmd::Crash { .. })));
+        // broker-scoped and out-of-range events compile to nothing
+        assert!(ChaosEvent::FlashCrowd { lambda_mult: 4.0 }.compile(10).is_empty());
+        assert!(ChaosEvent::FlashCrowdEnd.compile(10).is_empty());
+        assert!(ChaosEvent::Crash { worker: 50 }.compile(10).is_empty());
     }
 }

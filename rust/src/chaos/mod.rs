@@ -7,11 +7,18 @@
 //!
 //! 1. [`plan::FaultPlan`] — a seeded, serializable per-interval schedule of
 //!    [`events::ChaosEvent`]s: worker crash/recover, stragglers, network
-//!    blackouts, RAM squeezes, flash-crowd arrival bursts.
-//! 2. [`run_chaos`] threads the plan through [`crate::coordinator::Broker`]
-//!    and [`crate::sim::Engine`] — crashed workers drop their containers,
-//!    which the broker re-admits and re-places.
-//! 3. [`oracle`] checks named invariants after every interval.
+//!    blackouts, RAM squeezes, flash-crowd bursts, rack failures, clock
+//!    skew, payload corruption.
+//! 2. [`run_chaos`] compiles each event to typed
+//!    [`crate::sim::EngineCmd`]s and applies them through the engine's
+//!    single `apply` entry point — the engine's command ledger records
+//!    every mutation. An injected [`BugKind`] *sabotages the compiled
+//!    command list* (drops/replaces commands), which is exactly what the
+//!    oracles must catch.
+//! 3. [`oracle`] checks named invariants after every interval, auditing
+//!    the bug-free compiled commands (replayed into a [`PlanLedger`])
+//!    against engine state, and the engine's own command ledger against
+//!    task outcomes.
 //! 4. On a violation, [`shrink`] bisects the plan down to a minimal failing
 //!    counterexample; the printed `seed + plan` JSON reproduces it exactly.
 
@@ -26,11 +33,9 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::Broker;
-use crate::cluster::mobility::ChannelState;
-use crate::mab::Mode;
 use crate::metrics::Summary;
 use crate::runtime::Runtime;
-use crate::sim::IntervalReport;
+use crate::sim::{EngineCmd, IntervalReport};
 
 pub use events::{ChaosEvent, TimedEvent};
 pub use oracle::{check_interval, OracleCtx, Violation, ORACLES};
@@ -38,7 +43,9 @@ pub use plan::{FaultPlan, Profile};
 pub use shrink::{shrink_plan, ShrinkResult};
 
 /// Deliberate invariant bugs, used to validate that the oracles catch real
-/// defects and that shrinking produces minimal reproductions.
+/// defects and that shrinking produces minimal reproductions. Each bug is
+/// a *command-level sabotage*: the event still compiles, but the command
+/// list the engine receives is mutated.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BugKind {
     /// Crashes take the worker offline but "forget" to drop its
@@ -50,6 +57,10 @@ pub enum BugKind {
     /// Clock-skew events are silently ignored — the engine's clocks stay
     /// synchronized while the plan says they drifted.
     DropClockSkew,
+    /// Payload corruption is recorded but the checksum check is missing —
+    /// the corrupted transfer completes as if nothing happened instead of
+    /// failing the task.
+    SwallowCorruption,
 }
 
 impl BugKind {
@@ -58,6 +69,7 @@ impl BugKind {
             BugKind::SkipCrashRequeue => "skip-crash-requeue",
             BugKind::ForgetRackMember => "forget-rack-member",
             BugKind::DropClockSkew => "drop-clock-skew",
+            BugKind::SwallowCorruption => "swallow-corruption",
         }
     }
 
@@ -66,6 +78,7 @@ impl BugKind {
             "skip-crash-requeue" => Some(BugKind::SkipCrashRequeue),
             "forget-rack-member" => Some(BugKind::ForgetRackMember),
             "drop-clock-skew" => Some(BugKind::DropClockSkew),
+            "swallow-corruption" => Some(BugKind::SwallowCorruption),
             _ => None,
         }
     }
@@ -100,7 +113,7 @@ pub struct IntervalSig {
 }
 
 impl IntervalSig {
-    fn of(report: &IntervalReport) -> IntervalSig {
+    pub(crate) fn of(report: &IntervalReport) -> IntervalSig {
         let mut completed: Vec<u64> = report.completed.iter().map(|t| t.task_id).collect();
         completed.sort_unstable();
         let mut failed: Vec<u64> = report.failed.iter().map(|t| t.task_id).collect();
@@ -145,89 +158,95 @@ impl ChaosOutcome {
     }
 }
 
-fn mab_decision_count(broker: &Broker) -> Option<u64> {
-    broker.mab.as_ref().map(|m| m.bandit.n.iter().flatten().sum::<u64>())
+/// Expected engine fault state, replayed from the *bug-free* compiled
+/// commands of every plan event applied so far. The `offline-matches-plan`
+/// and `clock-skew-applied` oracles compare engine state to this ledger —
+/// a sabotaged command list makes the engine diverge from it, which is the
+/// point. Replaying commands (not events) means the compilation in
+/// [`ChaosEvent::compile`] is the single semantic source.
+#[derive(Clone, Debug)]
+pub struct PlanLedger {
+    pub offline: Vec<bool>,
+    pub skew: Vec<f64>,
 }
 
-fn apply_event(broker: &mut Broker, event: &ChaosEvent, opts: &ChaosOptions, base_lambda: f64) {
-    let n = broker.engine.workers();
-    if let Some(w) = event.worker() {
-        if w >= n {
-            return; // plan generated for a bigger fleet; ignore
-        }
+impl PlanLedger {
+    pub fn new(n_workers: usize) -> PlanLedger {
+        PlanLedger { offline: vec![false; n_workers], skew: vec![0.0; n_workers] }
     }
-    match *event {
-        ChaosEvent::Crash { worker } => {
-            if opts.bug == Some(BugKind::SkipCrashRequeue) {
-                broker.engine.force_offline_no_evict(worker);
-            } else {
-                broker.engine.crash_worker(worker);
+
+    /// Absorb one bug-free compiled command. Mirrors the engine's own
+    /// semantics exactly: values clamp the same way, and out-of-range
+    /// workers are no-ops (the engine Noops them; `ChaosEvent::compile`
+    /// filters them too, but `absorb` must not trust its caller).
+    pub fn absorb(&mut self, cmd: &EngineCmd) {
+        let n = self.offline.len();
+        if let Some(w) = cmd.worker() {
+            if w >= n {
+                return;
             }
         }
-        ChaosEvent::Recover { worker } => broker.engine.recover_worker(worker),
-        ChaosEvent::Straggler { worker, factor } => broker.engine.set_mips_factor(worker, factor),
-        ChaosEvent::RamSqueeze { worker, factor } => broker.engine.set_ram_factor(worker, factor),
-        ChaosEvent::Blackout { worker } => {
-            broker.engine.set_channel_override(worker, Some(ChannelState::BLACKOUT));
+        match *cmd {
+            EngineCmd::Crash { worker } | EngineCmd::ForceOfflineNoEvict { worker } => {
+                self.offline[worker] = true;
+            }
+            EngineCmd::Recover { worker } => self.offline[worker] = false,
+            EngineCmd::SetOnline { worker, up } => self.offline[worker] = !up,
+            EngineCmd::SetClockSkew { worker, skew_s } => {
+                self.skew[worker] = skew_s.clamp(0.0, 600.0);
+            }
+            _ => {}
         }
-        ChaosEvent::BlackoutEnd { worker } => broker.engine.set_channel_override(worker, None),
+    }
+}
+
+/// Mutate one event's compiled command list per the injected bug. Bugs are
+/// event-kind-scoped: e.g. `ForgetRackMember` only sabotages rack
+/// failures, never individual crashes.
+fn sabotage(event: &ChaosEvent, cmds: Vec<EngineCmd>, bug: BugKind) -> Vec<EngineCmd> {
+    match (bug, event) {
+        (BugKind::SkipCrashRequeue, ChaosEvent::Crash { .. }) => cmds
+            .into_iter()
+            .map(|c| match c {
+                EngineCmd::Crash { worker } => EngineCmd::ForceOfflineNoEvict { worker },
+                other => other,
+            })
+            .collect(),
+        (BugKind::ForgetRackMember, ChaosEvent::CorrelatedRackFailure { .. }) => {
+            cmds.into_iter().take(1).collect()
+        }
+        (BugKind::DropClockSkew, ChaosEvent::ClockSkew { .. }) => Vec::new(),
+        (BugKind::SwallowCorruption, ChaosEvent::PayloadCorruption { .. }) => cmds
+            .into_iter()
+            .map(|c| match c {
+                EngineCmd::CorruptPayload { worker } => {
+                    EngineCmd::CorruptPayloadSwallowed { worker }
+                }
+                other => other,
+            })
+            .collect(),
+        _ => cmds,
+    }
+}
+
+/// Apply one plan event: broker-scoped events adjust the arrival rate;
+/// engine-scoped events compile to commands (sabotaged under an injected
+/// bug) and go through the engine's command bus.
+fn apply_event(broker: &mut Broker, event: &ChaosEvent, opts: &ChaosOptions, base_lambda: f64) {
+    match *event {
         ChaosEvent::FlashCrowd { lambda_mult } => {
             broker.set_lambda_override(Some(base_lambda * lambda_mult));
         }
         ChaosEvent::FlashCrowdEnd => broker.set_lambda_override(None),
-        ChaosEvent::CorrelatedRackFailure { rack } => {
-            let members = events::rack_members(n, rack);
-            if opts.bug == Some(BugKind::ForgetRackMember) {
-                if let Some(w) = members.clone().next() {
-                    broker.engine.crash_worker(w);
-                }
-            } else {
-                for w in members {
-                    broker.engine.crash_worker(w);
-                }
+        _ => {
+            let mut cmds = event.compile(broker.engine.workers());
+            if let Some(bug) = opts.bug {
+                cmds = sabotage(event, cmds, bug);
+            }
+            for cmd in cmds {
+                broker.engine.apply(cmd);
             }
         }
-        ChaosEvent::RackRecover { rack } => {
-            for w in events::rack_members(n, rack) {
-                broker.engine.recover_worker(w);
-            }
-        }
-        ChaosEvent::ClockSkew { worker, offset_s } => {
-            if opts.bug != Some(BugKind::DropClockSkew) {
-                broker.engine.set_clock_skew(worker, offset_s);
-            }
-        }
-    }
-}
-
-/// Replay one event's intended effect onto the plan-state ledger the
-/// `offline-matches-plan` / `clock-skew-applied` oracles audit against.
-/// Mirrors the bug-free [`apply_event`] semantics exactly — an injected
-/// bug makes the engine diverge from this ledger, which is the point.
-fn expect_event(event: &ChaosEvent, offline: &mut [bool], skew: &mut [f64]) {
-    let n = offline.len();
-    if let Some(w) = event.worker() {
-        if w >= n {
-            return; // apply_event ignores it too
-        }
-    }
-    match *event {
-        ChaosEvent::Crash { worker } => offline[worker] = true,
-        ChaosEvent::Recover { worker } => offline[worker] = false,
-        ChaosEvent::CorrelatedRackFailure { rack } => {
-            for w in events::rack_members(n, rack) {
-                offline[w] = true;
-            }
-        }
-        ChaosEvent::RackRecover { rack } => {
-            for w in events::rack_members(n, rack) {
-                offline[w] = false;
-            }
-        }
-        ChaosEvent::ClockSkew { worker, offset_s } => {
-            skew[worker] = offset_s.clamp(0.0, 600.0);
-        }
-        _ => {}
     }
 }
 
@@ -244,8 +263,8 @@ pub fn run_chaos(
     opts: &ChaosOptions,
     runtime: Option<&Runtime>,
 ) -> Result<ChaosOutcome> {
-    let mut broker = Broker::new_with_fallback(cfg.clone(), runtime, Mode::Test)?;
-    let mab_baseline = mab_decision_count(&broker).unwrap_or(0);
+    let mut broker = Broker::new_with_fallback(cfg.clone(), runtime, crate::mab::Mode::Test)?;
+    let mab_baseline = broker.decision_count().unwrap_or(0);
     let base_lambda = cfg.workload.lambda;
     let mut seen_completed: HashSet<u64> = HashSet::new();
     let mut violations = Vec::new();
@@ -255,30 +274,32 @@ pub fn run_chaos(
     // meaningful on churn-free runs (every chaos config today).
     let track_plan_state = cfg.cluster.churn_rate == 0.0;
     let n_workers = broker.engine.workers();
-    let mut expected_offline = vec![false; n_workers];
-    let mut expected_skew = vec![0.0f64; n_workers];
+    let mut plan_ledger = PlanLedger::new(n_workers);
 
     for t in 0..cfg.sim.intervals {
         let fired: Vec<ChaosEvent> = plan.events_at(t).map(|e| e.event).collect();
         for event in &fired {
             apply_event(&mut broker, event, opts, base_lambda);
-            expect_event(event, &mut expected_offline, &mut expected_skew);
+            // the expectation absorbs the BUG-FREE compilation
+            for cmd in event.compile(n_workers) {
+                plan_ledger.absorb(&cmd);
+            }
         }
         if opts.task_timeout_intervals > 0 {
-            broker
-                .engine
-                .fail_tasks_older_than(opts.task_timeout_intervals as f64 * cfg.sim.interval_seconds);
+            broker.engine.apply(EngineCmd::FailTasksOlderThan {
+                age_s: opts.task_timeout_intervals as f64 * cfg.sim.interval_seconds,
+            });
         }
         let (_o_p, report) = broker.step_report();
-        let mab_decisions = mab_decision_count(&broker).map(|c| c - mab_baseline);
+        let mab_decisions = broker.decision_count().map(|c| c - mab_baseline);
         let mut ctx = OracleCtx {
             engine: &broker.engine,
             report: &report,
             admitted: broker.admitted,
             mab_decisions,
             seen_completed: &mut seen_completed,
-            expected_offline: track_plan_state.then_some(expected_offline.as_slice()),
-            expected_skew: track_plan_state.then_some(expected_skew.as_slice()),
+            expected_offline: track_plan_state.then_some(plan_ledger.offline.as_slice()),
+            expected_skew: track_plan_state.then_some(plan_ledger.skew.as_slice()),
         };
         violations.extend(check_interval(&mut ctx));
         signatures.push(IntervalSig::of(&report));
@@ -491,5 +512,68 @@ mod tests {
         // the same plan without the bug is green
         let fixed = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
         assert!(fixed.violations.is_empty(), "{:?}", fixed.violations);
+    }
+
+    /// A plan whose corruption events land while transfers are actually
+    /// in flight — structural, not a bet on one run's draw: a fleet-wide
+    /// blackout first slows every staging transfer ~20×, so anything
+    /// placed during the blackout is still in flight when the corruption
+    /// sweep hits both following intervals. The run is deterministic in
+    /// cfg (the plan's seed field is provenance only), so the expensive
+    /// liveness check runs once and is cached across the tests sharing
+    /// it — both pass `chaos_cfg(10, 5.0)`.
+    fn corrupting_plan(cfg: &ExperimentConfig) -> FaultPlan {
+        static FOUND: std::sync::OnceLock<FaultPlan> = std::sync::OnceLock::new();
+        FOUND
+            .get_or_init(|| {
+                let n = cfg.cluster.total_workers();
+                let mut events: Vec<TimedEvent> = Vec::new();
+                for w in 0..n {
+                    events.push(TimedEvent { t: 1, event: ChaosEvent::Blackout { worker: w } });
+                    for t in [2usize, 3] {
+                        events.push(TimedEvent {
+                            t,
+                            event: ChaosEvent::PayloadCorruption { worker: w },
+                        });
+                    }
+                    events
+                        .push(TimedEvent { t: 4, event: ChaosEvent::BlackoutEnd { worker: w } });
+                }
+                events.sort_by_key(|e| e.t);
+                let plan = FaultPlan::empty(1, cfg.sim.intervals).with_events(events);
+                let out = run_chaos(cfg, &plan, &ChaosOptions::default(), None).unwrap();
+                assert!(
+                    out.failed > 0,
+                    "blackout-slowed corruption sweep hit no in-flight transfer — \
+                     the transfer model or scenario shape changed"
+                );
+                plan
+            })
+            .clone()
+    }
+
+    #[test]
+    fn payload_corruption_fails_tasks_and_stays_green() {
+        let cfg = chaos_cfg(10, 5.0);
+        let plan = corrupting_plan(&cfg);
+        let out = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        assert!(out.failed > 0, "a corrupted in-flight transfer must fail its task");
+        // determinism holds with corruption in the plan
+        let replay = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert_eq!(out.signatures, replay.signatures);
+    }
+
+    #[test]
+    fn swallowed_corruption_is_caught_by_the_corruption_oracle() {
+        let cfg = chaos_cfg(10, 5.0);
+        let plan = corrupting_plan(&cfg);
+        let opts = ChaosOptions { bug: Some(BugKind::SwallowCorruption), ..Default::default() };
+        let out = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        assert!(
+            out.violated_oracles().contains(&"payload-corruption-handled"),
+            "bug must be caught: {:?}",
+            out.violated_oracles()
+        );
     }
 }

@@ -8,11 +8,10 @@
 
 use std::collections::HashSet;
 
-use crate::sim::engine::RAM_OVERCOMMIT;
-use crate::sim::{ContainerState, Engine, IntervalReport};
+use crate::sim::{ContainerState, Effect, Engine, EngineCmd, IntervalReport, RAM_OVERCOMMIT};
 
 /// All invariant names, in evaluation order.
-pub const ORACLES: [&str; 11] = [
+pub const ORACLES: [&str; 12] = [
     "task-conservation",
     "allocation-capacity",
     "chain-precedence",
@@ -24,6 +23,7 @@ pub const ORACLES: [&str; 11] = [
     "completion-unique",
     "offline-matches-plan",
     "clock-skew-applied",
+    "payload-corruption-handled",
 ];
 
 pub fn describe(oracle: &str) -> &'static str {
@@ -41,6 +41,9 @@ pub fn describe(oracle: &str) -> &'static str {
             "worker availability equals the fault plan's crash/rack ledger (churn-free runs)"
         }
         "clock-skew-applied" => "engine clock skew equals the plan's active skew, per worker",
+        "payload-corruption-handled" => {
+            "every task the command ledger marks payload-corrupted is failed, never completed"
+        }
         _ => "unknown invariant",
     }
 }
@@ -71,9 +74,9 @@ pub struct OracleCtx<'a> {
     pub mab_decisions: Option<u64>,
     pub seen_completed: &'a mut HashSet<u64>,
     /// Per-worker offline expectation replayed from the fault plan's
-    /// crash/recover/rack events. None when the engine can legitimately
-    /// toggle availability on its own (churn enabled), which would make
-    /// the comparison meaningless.
+    /// bug-free compiled commands (see [`super::PlanLedger`]). None when
+    /// the engine can legitimately toggle availability on its own (churn
+    /// enabled), which would make the comparison meaningless.
     pub expected_offline: Option<&'a [bool]>,
     /// Per-worker clock-skew seconds the plan currently holds active
     /// (post-clamp); None disables the check.
@@ -280,6 +283,35 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
         }
     }
 
+    // -- payload-corruption-handled -----------------------------------------
+    // Audits the engine's own command ledger: every task a corruption
+    // command reported as affected must be failed by now — a "swallowed"
+    // corruption (missing checksum) leaves it active or lets it complete,
+    // and keeps this firing every interval until fixed.
+    for rec in ctx.engine.ledger() {
+        let corrupting = matches!(
+            rec.cmd,
+            EngineCmd::CorruptPayload { .. } | EngineCmd::CorruptPayloadSwallowed { .. }
+        );
+        if !corrupting {
+            continue;
+        }
+        let Effect::Affected { tasks } = &rec.effect else {
+            continue;
+        };
+        for &id in tasks {
+            if !ctx.engine.task_failed(id) {
+                fail(
+                    "payload-corruption-handled",
+                    format!(
+                        "task {id}: payload corrupted at interval {} but the task is not failed",
+                        rec.interval
+                    ),
+                );
+            }
+        }
+    }
+
     // -- completion-unique --------------------------------------------------
     for task in &ctx.report.completed {
         if ctx.engine.task(task.task_id).is_none() {
@@ -362,7 +394,7 @@ mod tests {
         e.apply_placement(&[(0, 0)]);
         e.step_interval();
         // the deliberate bug hook: offline without evicting
-        e.force_offline_no_evict(0);
+        e.apply(EngineCmd::ForceOfflineNoEvict { worker: 0 });
         let report = e.step_interval();
         let mut seen = HashSet::new();
         let mut ctx = OracleCtx {
@@ -410,7 +442,7 @@ mod tests {
     #[test]
     fn offline_mismatch_against_plan_is_caught() {
         let mut e = engine();
-        e.crash_worker(1);
+        e.apply(EngineCmd::Crash { worker: 1 });
         let report = e.step_interval();
         let mut seen = HashSet::new();
         // plan ledger says workers 1 AND 2 should be down — a rack failure
@@ -438,7 +470,7 @@ mod tests {
     #[test]
     fn clock_skew_mismatch_is_caught_and_match_is_green() {
         let mut e = engine();
-        e.set_clock_skew(3, 42.0);
+        e.apply(EngineCmd::SetClockSkew { worker: 3, skew_s: 42.0 });
         let report = e.step_interval();
         let mut expected = vec![0.0; e.workers()];
         expected[3] = 42.0;
@@ -469,6 +501,39 @@ mod tests {
         };
         let v = check_interval(&mut ctx);
         assert!(v.iter().any(|v| v.oracle == "clock-skew-applied"), "{v:?}");
+    }
+
+    #[test]
+    fn swallowed_corruption_is_caught_and_handled_corruption_is_green() {
+        let mk = |swallow: bool| -> Vec<Violation> {
+            let mut e = engine();
+            e.admit(task(0), SplitDecision::Compressed);
+            e.apply_placement(&[(0, 0)]); // transfer now staging toward 0
+            if swallow {
+                e.apply(EngineCmd::CorruptPayloadSwallowed { worker: 0 });
+            } else {
+                e.apply(EngineCmd::CorruptPayload { worker: 0 });
+            }
+            let report = e.step_interval();
+            let mut seen = HashSet::new();
+            let mut ctx = OracleCtx {
+                engine: &e,
+                report: &report,
+                admitted: 1,
+                mab_decisions: None,
+                seen_completed: &mut seen,
+                expected_offline: None,
+                expected_skew: None,
+            };
+            check_interval(&mut ctx)
+        };
+        let v = mk(false);
+        assert!(v.is_empty(), "handled corruption must stay green: {v:?}");
+        let v = mk(true);
+        assert!(
+            v.iter().any(|v| v.oracle == "payload-corruption-handled"),
+            "swallowed corruption must be caught: {v:?}"
+        );
     }
 
     #[test]

@@ -37,11 +37,11 @@ impl Profile {
 
     /// Per-interval injection probabilities
     /// (crash, straggler, blackout, ram-squeeze, flash-crowd,
-    /// rack-failure, clock-skew).
-    fn rates(&self) -> [f64; 7] {
+    /// rack-failure, clock-skew, payload-corruption).
+    fn rates(&self) -> [f64; 8] {
         match self {
-            Profile::Light => [0.03, 0.05, 0.03, 0.03, 0.02, 0.01, 0.03],
-            Profile::Heavy => [0.15, 0.20, 0.12, 0.12, 0.08, 0.04, 0.10],
+            Profile::Light => [0.03, 0.05, 0.03, 0.03, 0.02, 0.01, 0.03, 0.02],
+            Profile::Heavy => [0.15, 0.20, 0.12, 0.12, 0.08, 0.04, 0.10, 0.08],
         }
     }
 
@@ -83,7 +83,8 @@ impl FaultPlan {
     /// hostile than they claim.
     pub fn generate(seed: u64, intervals: usize, profile: Profile, n_workers: usize) -> FaultPlan {
         let mut rng = Rng::new(seed ^ 0xC4A0_5EED);
-        let [p_crash, p_strag, p_black, p_squeeze, p_flash, p_rack, p_skew] = profile.rates();
+        let [p_crash, p_strag, p_black, p_squeeze, p_flash, p_rack, p_skew, p_corrupt] =
+            profile.rates();
         let max_d = profile.max_duration();
         let n = n_workers.max(1);
         let mut events: Vec<TimedEvent> = Vec::new();
@@ -170,6 +171,12 @@ impl FaultPlan {
                     push(t + d, ChaosEvent::FlashCrowdEnd);
                     flash_until = t + d;
                 }
+            }
+            // instantaneous, so no episode bookkeeping: corrupting a
+            // worker with nothing in flight is a recorded no-op
+            if rng.chance(p_corrupt) {
+                let w = rng.below(n as u64) as usize;
+                push(t, ChaosEvent::PayloadCorruption { worker: w });
             }
         }
         events.sort_by_key(|e| e.t);
@@ -318,6 +325,8 @@ mod tests {
                         flash = true;
                     }
                     ChaosEvent::FlashCrowdEnd => flash = false,
+                    // instantaneous — no episode to overlap
+                    ChaosEvent::PayloadCorruption { .. } => {}
                 }
             }
         }
@@ -335,6 +344,7 @@ mod tests {
         for kind in [
             "crash", "recover", "straggler", "ram-squeeze", "blackout",
             "flash-crowd", "rack-failure", "rack-recover", "clock-skew",
+            "payload-corruption",
         ] {
             assert!(kinds.contains(kind), "generator never emits '{kind}'");
         }

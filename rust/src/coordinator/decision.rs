@@ -1,0 +1,406 @@
+//! The decision plane: pluggable split/place policy stacks.
+//!
+//! The paper's claims are comparative — seven policy stacks race on
+//! reward/ART/SLA (Table 4) — so the broker must treat "which policy" as
+//! data, not structure. This module defines the two decision traits and
+//! their composition:
+//!
+//! * [`Splitter`] — per-task split decision (MAB / fixed / random /
+//!   Gillis RL / model compression) plus the interval feedback hooks
+//!   (`observe_interval`, `observe_failures`);
+//! * [`crate::placement::Placer`] — container placement plus the
+//!   surrogate learning hooks (gradient DASO/GOBI or heuristics);
+//! * [`DecisionStack`] — one splitter + one placer, built by the
+//!   [`PolicyKind::stack`] factory. The broker holds exactly one stack
+//!   and nothing policy-specific.
+//!
+//! Adding a new stack = implement `Splitter` (and/or `Placer`), extend
+//! the factory, done — the broker, chaos harness and scenario matrix pick
+//! it up unchanged.
+
+use crate::baselines::{GillisPolicy, McPolicy};
+use crate::config::{ExperimentConfig, PolicyKind};
+use crate::mab::{MabPolicy, Mode};
+use crate::placement::{Assignment, BestFitPlacer, GradientPlacer, Placer, PlacementInput};
+use crate::runtime::{Runtime, Surrogate};
+use crate::sim::{CompletedTask, FailedTask, WorkerSnapshot};
+use crate::splits::SplitDecision;
+use crate::util::rng::Rng;
+use crate::workload::trace::TraceBuffer;
+use crate::workload::Task;
+
+/// What a split decision may consult beyond the task itself. Carries the
+/// broker's RNG so stochastic splitters draw from the same stream the
+/// pre-trait broker used (fixed-seed trajectory parity).
+pub struct SplitCtx<'a> {
+    pub rng: &'a mut Rng,
+}
+
+/// A split-decision policy: decides per task, learns from the interval's
+/// leaving tasks E_t and from failures.
+pub trait Splitter {
+    fn name(&self) -> &'static str;
+
+    /// Take the split decision for an incoming task (Algorithm 1 line 9).
+    fn decide(&mut self, task: &Task, ctx: &mut SplitCtx) -> SplitDecision;
+
+    /// Interval bookkeeping with the leaving tasks. Returns `Some(O^MAB)`
+    /// when the splitter defines its own interval objective (eq. 6); the
+    /// broker substitutes the mean task reward otherwise.
+    fn observe_interval(&mut self, leaving: &[CompletedTask]) -> Option<f64> {
+        let _ = leaving;
+        None
+    }
+
+    /// Failed (abandoned) tasks — policies that track per-arm value can
+    /// penalize the arm that stranded them.
+    fn observe_failures(&mut self, failed: &[FailedTask]) {
+        let _ = failed;
+    }
+
+    /// Total split decisions recorded by the policy's own counters, if it
+    /// keeps any (the chaos `mab-accounting` oracle audits this against
+    /// broker admissions).
+    fn decision_count(&self) -> Option<u64> {
+        None
+    }
+
+    /// Introspection for benches/examples that chart MAB internals
+    /// (Fig. 6 curves). `None` for every non-MAB splitter.
+    fn mab(&self) -> Option<&MabPolicy> {
+        None
+    }
+}
+
+/// MAB split decider (the paper's §4.1 contextual bandit).
+pub struct MabSplitter {
+    policy: MabPolicy,
+}
+
+impl Splitter for MabSplitter {
+    fn name(&self) -> &'static str {
+        "mab"
+    }
+
+    fn decide(&mut self, task: &Task, _ctx: &mut SplitCtx) -> SplitDecision {
+        self.policy.decide(task)
+    }
+
+    fn observe_interval(&mut self, leaving: &[CompletedTask]) -> Option<f64> {
+        Some(self.policy.observe_interval(leaving))
+    }
+
+    fn observe_failures(&mut self, failed: &[FailedTask]) {
+        self.policy.observe_failures(failed);
+    }
+
+    fn decision_count(&self) -> Option<u64> {
+        Some(self.policy.bandit.n.iter().flatten().sum::<u64>())
+    }
+
+    fn mab(&self) -> Option<&MabPolicy> {
+        Some(&self.policy)
+    }
+}
+
+/// Always the same decision (Layer+GOBI / Semantic+GOBI ablation rows).
+pub struct FixedSplitter {
+    decision: SplitDecision,
+    name: &'static str,
+}
+
+impl Splitter for FixedSplitter {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn decide(&mut self, _task: &Task, _ctx: &mut SplitCtx) -> SplitDecision {
+        self.decision
+    }
+}
+
+/// Uniform-random arm (the R+D ablation). Draws from the broker RNG via
+/// [`SplitCtx`], preserving the pre-trait decision stream.
+pub struct RandomSplitter;
+
+impl Splitter for RandomSplitter {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn decide(&mut self, _task: &Task, ctx: &mut SplitCtx) -> SplitDecision {
+        *ctx.rng.choice(&SplitDecision::ARMS)
+    }
+}
+
+/// Gillis baseline: tabular Q-learning over layer/compressed actions.
+pub struct GillisSplitter {
+    policy: GillisPolicy,
+}
+
+impl Splitter for GillisSplitter {
+    fn name(&self) -> &'static str {
+        "gillis"
+    }
+
+    fn decide(&mut self, task: &Task, _ctx: &mut SplitCtx) -> SplitDecision {
+        self.policy.decide(task)
+    }
+
+    fn observe_interval(&mut self, leaving: &[CompletedTask]) -> Option<f64> {
+        self.policy.observe(leaving);
+        None
+    }
+}
+
+/// Model-compression baseline: every task runs the pruned single model.
+#[derive(Default)]
+pub struct McSplitter {
+    policy: McPolicy,
+}
+
+impl Splitter for McSplitter {
+    fn name(&self) -> &'static str {
+        "mc"
+    }
+
+    fn decide(&mut self, task: &Task, _ctx: &mut SplitCtx) -> SplitDecision {
+        self.policy.decide(task)
+    }
+}
+
+/// One composed policy stack: a splitter and a placer. This is the only
+/// policy state the broker holds.
+pub struct DecisionStack<'rt> {
+    splitter: Box<dyn Splitter>,
+    placer: Box<dyn Placer + 'rt>,
+}
+
+impl<'rt> DecisionStack<'rt> {
+    pub fn new(splitter: Box<dyn Splitter>, placer: Box<dyn Placer + 'rt>) -> Self {
+        DecisionStack { splitter, placer }
+    }
+
+    pub fn splitter_name(&self) -> &'static str {
+        self.splitter.name()
+    }
+
+    pub fn placer_name(&self) -> &'static str {
+        self.placer.name()
+    }
+
+    pub fn decide(&mut self, task: &Task, ctx: &mut SplitCtx) -> SplitDecision {
+        self.splitter.decide(task, ctx)
+    }
+
+    pub fn observe_interval(&mut self, leaving: &[CompletedTask]) -> Option<f64> {
+        self.splitter.observe_interval(leaving)
+    }
+
+    pub fn observe_failures(&mut self, failed: &[FailedTask]) {
+        self.splitter.observe_failures(failed);
+    }
+
+    pub fn decision_count(&self) -> Option<u64> {
+        self.splitter.decision_count()
+    }
+
+    pub fn mab(&self) -> Option<&MabPolicy> {
+        self.splitter.mab()
+    }
+
+    pub fn place(&mut self, input: &PlacementInput) -> Assignment {
+        self.placer.place(input)
+    }
+
+    pub fn learned_placer(&self) -> bool {
+        self.placer.is_learned()
+    }
+
+    pub fn observe_objective(
+        &mut self,
+        o_p: f64,
+        trace: &mut TraceBuffer,
+        steps: usize,
+        rng: &mut Rng,
+    ) {
+        self.placer.observe_objective(o_p, trace, steps, rng);
+    }
+
+    pub fn featurize_idle(&self, snapshots: &[WorkerSnapshot]) -> Option<Vec<f32>> {
+        self.placer.featurize_idle(snapshots)
+    }
+
+    pub fn pretrain_placer(
+        &mut self,
+        trace: &TraceBuffer,
+        steps: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<()> {
+        self.placer.pretrain(trace, steps, rng)
+    }
+
+    pub fn placer_stats(&self) -> Option<(usize, f32)> {
+        self.placer.stats()
+    }
+}
+
+impl PolicyKind {
+    /// Factory: build the [`DecisionStack`] for this policy. `runtime` is
+    /// required for the surrogate-based stacks (M+D, M+G, R+D, L+G, S+G);
+    /// with `fallback_placer` they degrade to best-fit placement instead
+    /// of erroring when the PJRT runtime is unavailable (the split
+    /// decider is unaffected) — used by the chaos/matrix harnesses so
+    /// fault-injection runs work without built artifacts.
+    pub fn stack<'rt>(
+        self,
+        cfg: &ExperimentConfig,
+        runtime: Option<&'rt Runtime>,
+        mab_mode: Mode,
+        fallback_placer: bool,
+    ) -> anyhow::Result<DecisionStack<'rt>> {
+        let splitter: Box<dyn Splitter> = match self {
+            PolicyKind::MabDaso | PolicyKind::MabGobi => Box::new(MabSplitter {
+                policy: MabPolicy::new(cfg.mab.clone(), mab_mode),
+            }),
+            PolicyKind::RandomDaso => Box::new(RandomSplitter),
+            PolicyKind::LayerGobi => Box::new(FixedSplitter {
+                decision: SplitDecision::Layer,
+                name: "layer",
+            }),
+            PolicyKind::SemanticGobi => Box::new(FixedSplitter {
+                decision: SplitDecision::Semantic,
+                name: "semantic",
+            }),
+            PolicyKind::Gillis => Box::new(GillisSplitter {
+                policy: GillisPolicy::new(cfg.mab.seed ^ 0x61),
+            }),
+            PolicyKind::ModelCompression => Box::new(McSplitter::default()),
+        };
+
+        let uses_gradient = matches!(
+            self,
+            PolicyKind::MabDaso
+                | PolicyKind::MabGobi
+                | PolicyKind::RandomDaso
+                | PolicyKind::LayerGobi
+                | PolicyKind::SemanticGobi
+        );
+        let placer: Box<dyn Placer + 'rt> = if uses_gradient {
+            match runtime {
+                Some(rt) => {
+                    let surrogate = Surrogate::for_workers(rt, cfg.cluster.total_workers())?;
+                    let decision_aware =
+                        matches!(self, PolicyKind::MabDaso | PolicyKind::RandomDaso);
+                    Box::new(GradientPlacer::new(
+                        surrogate,
+                        cfg.placement.clone(),
+                        decision_aware,
+                    ))
+                }
+                None if fallback_placer => {
+                    crate::log_warn!(
+                        "policy {:?}: PJRT runtime unavailable, degrading to best-fit placement",
+                        self
+                    );
+                    Box::new(BestFitPlacer)
+                }
+                None => anyhow::bail!("policy {:?} needs the PJRT runtime (artifacts)", self),
+            }
+        } else {
+            Box::new(BestFitPlacer)
+        };
+
+        Ok(DecisionStack { splitter, placer })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_policy_builds_a_stack_with_fallback() {
+        let cfg = ExperimentConfig::small();
+        for policy in PolicyKind::all() {
+            let stack = policy.stack(&cfg, None, Mode::Test, true).unwrap();
+            assert!(!stack.splitter_name().is_empty());
+            assert_eq!(stack.placer_name(), "best-fit", "{policy:?} fallback placer");
+            assert!(!stack.learned_placer());
+            assert!(stack.placer_stats().is_none());
+        }
+    }
+
+    #[test]
+    fn gradient_stacks_error_without_runtime_unless_fallback() {
+        let cfg = ExperimentConfig::small();
+        for policy in [
+            PolicyKind::MabDaso,
+            PolicyKind::MabGobi,
+            PolicyKind::RandomDaso,
+            PolicyKind::LayerGobi,
+            PolicyKind::SemanticGobi,
+        ] {
+            assert!(policy.stack(&cfg, None, Mode::Test, false).is_err(), "{policy:?}");
+        }
+        for policy in [PolicyKind::Gillis, PolicyKind::ModelCompression] {
+            assert!(policy.stack(&cfg, None, Mode::Test, false).is_ok(), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn splitters_produce_their_documented_arms() {
+        let cfg = ExperimentConfig::small();
+        let mut rng = Rng::new(7);
+        let task = Task {
+            id: 1,
+            app: crate::splits::App::Mnist,
+            batch: 32_000,
+            sla: 5.0,
+            arrival_s: 0.0,
+            decision: None,
+        };
+        let mut decide = |policy: PolicyKind| {
+            let mut stack = policy.stack(&cfg, None, Mode::Test, true).unwrap();
+            let mut ctx = SplitCtx { rng: &mut rng };
+            stack.decide(&task, &mut ctx)
+        };
+        assert_eq!(decide(PolicyKind::LayerGobi), SplitDecision::Layer);
+        assert_eq!(decide(PolicyKind::SemanticGobi), SplitDecision::Semantic);
+        assert_eq!(decide(PolicyKind::ModelCompression), SplitDecision::Compressed);
+        assert!(matches!(
+            decide(PolicyKind::MabDaso),
+            SplitDecision::Layer | SplitDecision::Semantic
+        ));
+        assert!(matches!(
+            decide(PolicyKind::Gillis),
+            SplitDecision::Layer | SplitDecision::Compressed
+        ));
+        for _ in 0..20 {
+            assert!(SplitDecision::ARMS.contains(&decide(PolicyKind::RandomDaso)));
+        }
+    }
+
+    #[test]
+    fn mab_stack_exposes_introspection_and_counts() {
+        let cfg = ExperimentConfig::small();
+        let mut stack = PolicyKind::MabDaso.stack(&cfg, None, Mode::Test, true).unwrap();
+        let warm = stack.decision_count().unwrap();
+        let mut rng = Rng::new(1);
+        let task = Task {
+            id: 1,
+            app: crate::splits::App::Mnist,
+            batch: 32_000,
+            sla: 5.0,
+            arrival_s: 0.0,
+            decision: None,
+        };
+        stack.decide(&task, &mut SplitCtx { rng: &mut rng });
+        assert_eq!(stack.decision_count().unwrap(), warm + 1);
+        assert!(stack.mab().is_some());
+        // non-MAB stacks expose neither
+        let mc = PolicyKind::ModelCompression.stack(&cfg, None, Mode::Test, true).unwrap();
+        assert!(mc.decision_count().is_none());
+        assert!(mc.mab().is_none());
+    }
+}

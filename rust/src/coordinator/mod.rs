@@ -1,9 +1,11 @@
-//! The broker: SplitPlace's Algorithm 1 plus the baseline policy loops.
+//! The broker: SplitPlace's Algorithm 1 plus the pluggable decision plane.
 
 pub mod broker;
+pub mod decision;
 pub mod oracle;
 pub mod runner;
 
 pub use broker::Broker;
+pub use decision::{DecisionStack, SplitCtx, Splitter};
 pub use oracle::AccuracyOracle;
 pub use runner::{run_experiment, ExperimentOutput};

@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 use crate::chaos::ChaosOutcome;
 use crate::util::json::{JsonError, Value};
 
-use super::scenario::Cell;
+use super::scenario::{Cell, DiffCell};
 
 /// Scalar reduction of one cell run. Metric keys are sorted (BTreeMap) and
 /// non-finite values serialize as JSON `null`, so serialization is
@@ -59,6 +59,62 @@ impl CellSummary {
                 .into_iter()
                 .map(str::to_string)
                 .collect(),
+        }
+    }
+
+    /// Reduce a differential pair run into one summary: each side's
+    /// headline metrics plus the policy-pair deltas (a − b) as first-class
+    /// gated quantities. `ordering_ok` is 1 unless the cell's Table-4
+    /// ordering assertion was armed and violated (see
+    /// [`DiffCell::expect_a_reward_ge_b`]).
+    pub fn from_diff(
+        cell: &DiffCell,
+        intervals: usize,
+        a: &ChaosOutcome,
+        b: &ChaosOutcome,
+        ordering_ok: bool,
+    ) -> CellSummary {
+        let mut metrics = BTreeMap::new();
+        let mut side = |tag: &str, out: &ChaosOutcome| {
+            let s = &out.summary;
+            metrics.insert(format!("{tag}_admitted"), out.admitted as f64);
+            metrics.insert(format!("{tag}_completed"), out.completed as f64);
+            metrics.insert(format!("{tag}_failed"), out.failed as f64);
+            metrics.insert(format!("{tag}_response_ema"), out.response_ema);
+            metrics.insert(format!("{tag}_sla_violation_rate"), s.sla_violations);
+            metrics.insert(format!("{tag}_accuracy"), s.accuracy);
+            metrics.insert(format!("{tag}_avg_reward"), s.avg_reward);
+        };
+        side("a", a);
+        side("b", b);
+        // deltas: NaN when either side has no completions (serializes null)
+        metrics.insert(
+            "delta_avg_reward".into(),
+            a.summary.avg_reward - b.summary.avg_reward,
+        );
+        metrics.insert("delta_response_ema".into(), a.response_ema - b.response_ema);
+        metrics.insert(
+            "delta_sla_violation_rate".into(),
+            a.summary.sla_violations - b.summary.sla_violations,
+        );
+        metrics.insert("delta_accuracy".into(), a.summary.accuracy - b.summary.accuracy);
+        metrics.insert("delta_completed".into(), a.completed as f64 - b.completed as f64);
+        metrics.insert(
+            "oracle_violations".into(),
+            (a.violations.len() + b.violations.len()) as f64,
+        );
+        metrics.insert("ordering_ok".into(), if ordering_ok { 1.0 } else { 0.0 });
+        let mut violated: Vec<String> =
+            a.violated_oracles().into_iter().map(|o| format!("a:{o}")).collect();
+        violated.extend(b.violated_oracles().into_iter().map(|o| format!("b:{o}")));
+        CellSummary {
+            cell: cell.id(),
+            policy: cell.policy_pair(),
+            scenario: cell.scenario.name().to_string(),
+            seed: cell.seed,
+            intervals,
+            metrics,
+            violated_oracles: violated,
         }
     }
 

@@ -47,10 +47,18 @@ impl Tolerance {
 }
 
 /// Tolerance for a named metric: counters compare exactly, continuous
-/// metrics get the default band.
+/// metrics get the default band. Differential cells prefix per-side
+/// metrics with `a_`/`b_`; the base name decides the band, and the
+/// `ordering_ok` flag is a counter.
 pub fn tolerance_for(metric: &str) -> Tolerance {
-    match metric {
-        "admitted" | "completed" | "failed" | "oracle_violations" => Tolerance::EXACT,
+    let base = metric
+        .strip_prefix("a_")
+        .or_else(|| metric.strip_prefix("b_"))
+        .unwrap_or(metric);
+    match base {
+        "admitted" | "completed" | "failed" | "oracle_violations" | "ordering_ok" => {
+            Tolerance::EXACT
+        }
         _ => Tolerance::default(),
     }
 }
@@ -248,6 +256,16 @@ mod tests {
         let mut off = g.clone();
         *off.metrics.get_mut("completed").unwrap() = 12.0000001;
         assert!(!drift(&g, &off).is_empty(), "counters get no tolerance band");
+    }
+
+    #[test]
+    fn side_prefixed_counters_and_ordering_flag_are_exact() {
+        assert_eq!(tolerance_for("a_completed").abs, 0.0);
+        assert_eq!(tolerance_for("b_failed").rel, 0.0);
+        assert_eq!(tolerance_for("ordering_ok").abs, 0.0);
+        // continuous metrics keep the band, prefixed or not
+        assert!(tolerance_for("a_avg_reward").rel > 0.0);
+        assert!(tolerance_for("delta_avg_reward").rel > 0.0);
     }
 
     #[test]

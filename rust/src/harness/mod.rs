@@ -8,9 +8,12 @@
 //! time leaves every other regime unwatched. This subsystem turns the
 //! whole cross product into one deterministic, machine-checked run:
 //!
-//! 1. [`scenario`] enumerates [`scenario::Cell`]s — each a pure function
-//!    of its (policy, scenario, seed) coordinates, with RNG streams
-//!    derived via [`crate::util::rng::mix`] so no state is shared.
+//! 1. [`scenario`] enumerates [`scenario::MatrixCell`]s — single-policy
+//!    cells and differential policy pairs ([`scenario::DiffCell`]: both
+//!    sides replay the same fault plan, deltas and the Table-4 reward
+//!    ordering gate like any metric) — each a pure function of its
+//!    (policy, scenario, seed) coordinates, with RNG streams derived via
+//!    [`crate::util::rng::mix`] so no state is shared.
 //! 2. [`runner`] executes cells across worker threads; `--jobs 1` and
 //!    `--jobs N` produce byte-identical [`cell::CellSummary`] JSON.
 //! 3. [`golden`] gates each summary against a committed golden with
@@ -32,4 +35,6 @@ pub use bugbase::{BugRecord, Expectation};
 pub use cell::CellSummary;
 pub use golden::{drift, GoldenStatus, GoldenStore, Tolerance};
 pub use runner::{persist_violations, run_matrix, CellResult, MatrixOptions, MatrixReport};
-pub use scenario::{matrix_cells, policy_slug, seed_config, Cell, Scenario};
+pub use scenario::{
+    matrix_cells, policy_slug, seed_config, Cell, DiffCell, MatrixCell, Scenario, REWARD_SLACK,
+};

@@ -182,6 +182,88 @@ impl Cell {
     }
 }
 
+/// Slack on the Table-4 reward ordering assertion: at matrix horizons
+/// (≈8–12 intervals, small fleet, fallback placement) the champion may
+/// trail a baseline by small-sample noise without the paper's claim being
+/// wrong — the gate exists to catch gross inversions (a broken champion
+/// stack losing the accuracy/SLA trade it is built around), while the
+/// exact deltas stay golden-gated at full precision.
+pub const REWARD_SLACK: f64 = 0.10;
+
+/// A differential policy-pair cell: policies `a` (champion) and `b`
+/// (challenger) run against the SAME scenario config and fault plan — the
+/// engine replays one compiled command stream per side, derived from
+/// identical coordinates — and the cell's summary carries the per-metric
+/// deltas (a − b) as first-class golden-gated quantities.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DiffCell {
+    pub a: PolicyKind,
+    pub b: PolicyKind,
+    pub scenario: Scenario,
+    pub seed: u64,
+    /// Assert the Table-4 ordering: `a` must not trail `b` on avg reward
+    /// by more than [`REWARD_SLACK`] (checked only when both sides
+    /// completed tasks). An ordering failure fails the cell like an
+    /// oracle violation does.
+    pub expect_a_reward_ge_b: bool,
+}
+
+impl DiffCell {
+    /// `a~b` — the pair slug shared by the cell id, the summary's policy
+    /// field and the golden/bug-base file stems.
+    pub fn policy_pair(&self) -> String {
+        format!("{}~{}", policy_slug(self.a), policy_slug(self.b))
+    }
+
+    /// `a~b/scenario/sN` — the `~` marks a differential pair.
+    pub fn id(&self) -> String {
+        format!("{}/{}/s{}", self.policy_pair(), self.scenario.name(), self.seed)
+    }
+
+    pub fn file_stem(&self) -> String {
+        self.id().replace('/', "__")
+    }
+}
+
+/// One schedulable unit of the matrix: a single policy run or a
+/// differential policy pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatrixCell {
+    Single(Cell),
+    Diff(DiffCell),
+}
+
+impl MatrixCell {
+    pub fn id(&self) -> String {
+        match self {
+            MatrixCell::Single(c) => c.id(),
+            MatrixCell::Diff(d) => d.id(),
+        }
+    }
+
+    pub fn file_stem(&self) -> String {
+        match self {
+            MatrixCell::Single(c) => c.file_stem(),
+            MatrixCell::Diff(d) => d.file_stem(),
+        }
+    }
+
+    /// Scenario coordinate (shared by both sides of a diff cell).
+    pub fn scenario(&self) -> Scenario {
+        match self {
+            MatrixCell::Single(c) => c.scenario,
+            MatrixCell::Diff(d) => d.scenario,
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        match self {
+            MatrixCell::Single(c) => c.seed,
+            MatrixCell::Diff(d) => d.seed,
+        }
+    }
+}
+
 fn cross(policies: &[PolicyKind], scenarios: &[Scenario], seeds: &[u64]) -> Vec<Cell> {
     let mut cells = Vec::with_capacity(policies.len() * scenarios.len() * seeds.len());
     for &policy in policies {
@@ -194,23 +276,69 @@ fn cross(policies: &[PolicyKind], scenarios: &[Scenario], seeds: &[u64]) -> Vec<
     cells
 }
 
+/// Differential pairs: the MAB+DASO champion against every baseline, on a
+/// clean run and under heavy chaos. The ordering assertion is armed only
+/// where it is structural at matrix horizons: against model compression on
+/// clean runs, where the champion's accuracy edge is decisive (Table 4).
+fn diff_cells(baselines: &[PolicyKind], seeds: &[u64]) -> Vec<MatrixCell> {
+    let mut cells = Vec::new();
+    for &b in baselines {
+        for scenario in [Scenario::Clean, Scenario::ChaosHeavy] {
+            for &seed in seeds {
+                cells.push(MatrixCell::Diff(DiffCell {
+                    a: PolicyKind::MabDaso,
+                    b,
+                    scenario,
+                    seed,
+                    expect_a_reward_ge_b: b == PolicyKind::ModelCompression
+                        && scenario == Scenario::Clean,
+                }));
+            }
+        }
+    }
+    cells
+}
+
 /// Enumerate matrix cells for a filter, in a fixed deterministic order.
 ///
 /// * `"smoke"` — the CI subset: 3 representative policies (heuristic MC,
-///   RL Gillis, the full MAB+DASO stack) × every scenario × the first seed.
-/// * `"full"` / `""` — all 7 policies × every scenario × all seeds.
-/// * anything else — substring match against [`Cell::id`] over the full
-///   cross product (e.g. `"chaos-heavy"`, `"mab-daso/"`, `"/s2"`).
-pub fn matrix_cells(filter: &str, seeds: &[u64]) -> Vec<Cell> {
+///   RL Gillis, the full MAB+DASO stack) × every scenario × the first
+///   seed, plus the MAB+DASO-vs-{MC, Gillis} differential pairs.
+/// * `"full"` / `""` — all 7 policies × every scenario × all seeds, plus
+///   MAB+DASO-vs-every-baseline differential pairs.
+/// * anything else — substring match against [`MatrixCell::id`] over the
+///   full cross product (e.g. `"chaos-heavy"`, `"mab-daso/"`, `"/s2"`,
+///   `"~"` for all differential cells).
+pub fn matrix_cells(filter: &str, seeds: &[u64]) -> Vec<MatrixCell> {
     let smoke_policies =
         [PolicyKind::ModelCompression, PolicyKind::Gillis, PolicyKind::MabDaso];
-    match filter {
-        "smoke" => cross(&smoke_policies, &Scenario::ALL, &seeds[..seeds.len().min(1)]),
-        "full" | "" => cross(&PolicyKind::all(), &Scenario::ALL, seeds),
-        substr => cross(&PolicyKind::all(), &Scenario::ALL, seeds)
+    let full = |seeds: &[u64]| -> Vec<MatrixCell> {
+        let mut cells: Vec<MatrixCell> = cross(&PolicyKind::all(), &Scenario::ALL, seeds)
             .into_iter()
-            .filter(|c| c.id().contains(substr))
-            .collect(),
+            .map(MatrixCell::Single)
+            .collect();
+        let baselines: Vec<PolicyKind> = PolicyKind::all()
+            .into_iter()
+            .filter(|&p| p != PolicyKind::MabDaso)
+            .collect();
+        cells.extend(diff_cells(&baselines, seeds));
+        cells
+    };
+    match filter {
+        "smoke" => {
+            let first = &seeds[..seeds.len().min(1)];
+            let mut cells: Vec<MatrixCell> = cross(&smoke_policies, &Scenario::ALL, first)
+                .into_iter()
+                .map(MatrixCell::Single)
+                .collect();
+            cells.extend(diff_cells(
+                &[PolicyKind::ModelCompression, PolicyKind::Gillis],
+                first,
+            ));
+            cells
+        }
+        "full" | "" => full(seeds),
+        substr => full(seeds).into_iter().filter(|c| c.id().contains(substr)).collect(),
     }
 }
 
@@ -289,9 +417,14 @@ mod tests {
     fn smoke_filter_is_small_and_full_is_the_cross_product() {
         let seeds = [1u64, 2];
         let smoke = matrix_cells("smoke", &seeds);
-        assert_eq!(smoke.len(), 3 * Scenario::ALL.len(), "3 policies × scenarios × 1 seed");
+        // 3 policies × scenarios × 1 seed, + 2 baselines × 2 scenarios diff
+        assert_eq!(smoke.len(), 3 * Scenario::ALL.len() + 4);
         let full = matrix_cells("full", &seeds);
-        assert_eq!(full.len(), 7 * Scenario::ALL.len() * seeds.len());
+        // singles + MAB+DASO-vs-6-baselines × {clean, chaos-heavy} × seeds
+        assert_eq!(
+            full.len(),
+            7 * Scenario::ALL.len() * seeds.len() + 6 * 2 * seeds.len()
+        );
         let slice = matrix_cells("mab-daso/chaos", &seeds);
         assert!(!slice.is_empty());
         assert!(slice.iter().all(|c| c.id().contains("mab-daso/chaos")));
@@ -301,5 +434,34 @@ mod tests {
         ids.sort();
         ids.dedup();
         assert_eq!(ids.len(), full.len());
+    }
+
+    #[test]
+    fn diff_cells_pair_the_champion_with_baselines() {
+        let seeds = [1u64];
+        let diffs: Vec<MatrixCell> = matrix_cells("~", &seeds);
+        assert!(!diffs.is_empty(), "the ~ filter selects differential cells");
+        for cell in &diffs {
+            let MatrixCell::Diff(d) = cell else {
+                panic!("~ filter matched a non-diff cell: {}", cell.id());
+            };
+            assert_eq!(d.a, PolicyKind::MabDaso, "champion side is the full stack");
+            assert_ne!(d.b, PolicyKind::MabDaso);
+            assert!(cell.id().contains('~'));
+            assert!(!cell.file_stem().contains('/'));
+        }
+        // the ordering assertion is armed on the structural pair only
+        let armed: Vec<&MatrixCell> = diffs
+            .iter()
+            .filter(|c| matches!(c, MatrixCell::Diff(d) if d.expect_a_reward_ge_b))
+            .collect();
+        assert!(!armed.is_empty(), "at least one cell must assert Table-4 ordering");
+        for cell in armed {
+            let MatrixCell::Diff(d) = cell else { unreachable!() };
+            assert_eq!(d.b, PolicyKind::ModelCompression);
+            assert_eq!(d.scenario, Scenario::Clean);
+        }
+        // smoke includes differential cells too
+        assert!(matrix_cells("smoke", &seeds).iter().any(|c| c.id().contains('~')));
     }
 }

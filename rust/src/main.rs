@@ -10,8 +10,11 @@
 //!   matrix [--filter smoke|full|SUBSTR] [--jobs N] [--seeds K]
 //!          [--intervals N] [--update-goldens] [--fail-fast] [--list]
 //!          [--goldens DIR] [--bugbase DIR] [--inject-bug KIND]
-//!                                  policy × scenario × seed cross product,
-//!                                  parallel cells, golden gating, bug-base
+//!                                  policy × scenario × seed cross product
+//!                                  plus differential policy-pair cells
+//!                                  (ids like mab-daso~mc/clean/s1; filter
+//!                                  with '~'), parallel cells, golden
+//!                                  gating, Table-4 ordering gate, bug-base
 //!   serve [--addr A] [--threads N] serving front-end
 //!   info                           artifact + cluster inventory
 //!
@@ -376,7 +379,24 @@ fn cmd_matrix(flags: std::collections::HashMap<String, String>) -> Result<()> {
         &["cell", "ms", "done", "fail", "resp ema", "viol rate", "reward", "oracles", "golden"],
     );
     for r in &report.results {
-        let m = |k: &str| r.summary.metrics.get(k).copied().unwrap_or(f64::NAN);
+        // differential cells carry side-prefixed metrics; show side `a`
+        // (the champion) in the shared columns, deltas in the oracle gap
+        let m = |k: &str| {
+            r.summary
+                .metrics
+                .get(k)
+                .or_else(|| r.summary.metrics.get(&format!("a_{k}")))
+                .copied()
+                .unwrap_or(f64::NAN)
+        };
+        let mut verdicts = if r.summary.violated_oracles.is_empty() {
+            "ok".to_string()
+        } else {
+            r.summary.violated_oracles.join(",")
+        };
+        if !r.ordering_failures.is_empty() {
+            verdicts = format!("ORDERING,{verdicts}");
+        }
         t.row(vec![
             r.cell.id(),
             format!("{:.0}", r.wall_ms),
@@ -385,11 +405,7 @@ fn cmd_matrix(flags: std::collections::HashMap<String, String>) -> Result<()> {
             fnum(m("response_ema")),
             fnum(m("sla_violation_rate")),
             fnum(m("avg_reward")),
-            if r.summary.violated_oracles.is_empty() {
-                "ok".into()
-            } else {
-                r.summary.violated_oracles.join(",")
-            },
+            verdicts,
             r.golden.label().into(),
         ]);
     }
@@ -398,10 +414,13 @@ fn cmd_matrix(flags: std::collections::HashMap<String, String>) -> Result<()> {
         eprintln!("fail-fast: {} cells not scheduled", report.skipped);
     }
 
-    // errors + golden drift details
+    // errors + ordering + golden drift details
     for r in &report.results {
         if let Some(e) = &r.error {
             eprintln!("ERROR {}: {e}", r.cell.id());
+        }
+        for o in &r.ordering_failures {
+            eprintln!("ORDERING {}: {o}", r.cell.id());
         }
         if let GoldenStatus::Drift(msgs) = &r.golden {
             for m in msgs {

@@ -8,10 +8,12 @@
 
 use super::features::{FeatureLayout, SlotInfo};
 use super::heuristics::BestFitPlacer;
-use super::{PlacementInput, Placer};
+use super::{Assignment, PlacementInput, Placer};
 use crate::config::PlacementConfig;
 use crate::runtime::Surrogate;
-use crate::sim::ContainerId;
+use crate::sim::WorkerSnapshot;
+use crate::util::rng::Rng;
+use crate::workload::trace::{TraceBuffer, TraceSample};
 
 /// Minimum advantage of the new worker's P-mass over the current one
 /// before a running container is migrated (hysteresis against churn).
@@ -87,7 +89,7 @@ impl<'rt> GradientPlacer<'rt> {
 }
 
 impl<'rt> Placer for GradientPlacer<'rt> {
-    fn place(&mut self, input: &PlacementInput) -> Vec<(ContainerId, usize)> {
+    fn place(&mut self, input: &PlacementInput) -> Assignment {
         let h = self.layout.workers;
         let m_cap = self.layout.slots;
         assert_eq!(input.workers(), h, "cluster/surrogate worker mismatch");
@@ -196,6 +198,52 @@ impl<'rt> Placer for GradientPlacer<'rt> {
         } else {
             "gobi"
         }
+    }
+
+    fn is_learned(&self) -> bool {
+        true
+    }
+
+    fn observe_objective(
+        &mut self,
+        o_p: f64,
+        trace: &mut TraceBuffer,
+        steps: usize,
+        rng: &mut Rng,
+    ) {
+        if !self.last_features.is_empty() {
+            trace.push(TraceSample {
+                features: self.last_features.clone(),
+                objective: o_p as f32,
+            });
+        }
+        for _ in 0..steps {
+            if let Some((xb, yb)) = trace
+                .minibatch(self.surrogate.spec.train_batch, |n| rng.below(n as u64) as usize)
+            {
+                let _ = self.surrogate.train_step(&xb, &yb);
+            }
+        }
+    }
+
+    fn featurize_idle(&self, snapshots: &[WorkerSnapshot]) -> Option<Vec<f32>> {
+        let slots: Vec<SlotInfo> = Vec::new();
+        let p = vec![0.0f32; self.layout.placement_dim()];
+        Some(self.layout.featurize(snapshots, &slots, &p, self.decision_aware))
+    }
+
+    fn pretrain(
+        &mut self,
+        trace: &TraceBuffer,
+        steps: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<()> {
+        self.surrogate.pretrain(trace, steps, rng)?;
+        Ok(())
+    }
+
+    fn stats(&self) -> Option<(usize, f32)> {
+        Some((self.last_iters, self.last_score))
     }
 }
 

@@ -15,6 +15,12 @@ pub use features::{FeatureLayout, SlotInfo};
 pub use heuristics::{BestFitPlacer, RandomPlacer, RoundRobinPlacer};
 
 use crate::sim::{ContainerId, WorkerSnapshot};
+use crate::util::rng::Rng;
+use crate::workload::trace::TraceBuffer;
+
+/// A placement decision: (container, worker) pairs. Containers omitted
+/// stay in the wait queue (paper §4.3's relaxation).
+pub type Assignment = Vec<(ContainerId, usize)>;
 
 /// Everything a placer sees at the start of an interval.
 pub struct PlacementInput<'a> {
@@ -46,7 +52,56 @@ impl<'a> PlacementInput<'a> {
 
 /// A placement engine: returns (container, worker) assignments. Containers
 /// omitted from the result stay in the wait queue.
+///
+/// Beyond `place`, the trait carries the learning hooks a surrogate-based
+/// placer needs from the broker loop (trace recording, online fine-tune,
+/// pre-training, telemetry). Heuristic placers keep the default no-ops, so
+/// the broker can hold one `Box<dyn Placer>` with no policy-specific
+/// enums or downcasts.
 pub trait Placer {
-    fn place(&mut self, input: &PlacementInput) -> Vec<(ContainerId, usize)>;
+    fn place(&mut self, input: &PlacementInput) -> Assignment;
     fn name(&self) -> &'static str;
+
+    /// True for learned placers that need pre-training and fine-tuning.
+    fn is_learned(&self) -> bool {
+        false
+    }
+
+    /// Pair the last placement's realized features with the observed
+    /// objective `o_p` (pushed into `trace`), then take `steps` surrogate
+    /// updates sampled from `trace` via `rng` (Algorithm 1 line 14).
+    fn observe_objective(
+        &mut self,
+        o_p: f64,
+        trace: &mut TraceBuffer,
+        steps: usize,
+        rng: &mut Rng,
+    ) {
+        let _ = (o_p, trace, steps, rng);
+    }
+
+    /// Featurize a realized cluster state with an empty placement window
+    /// (pre-training trace collection). `None` for heuristics.
+    fn featurize_idle(&self, snapshots: &[WorkerSnapshot]) -> Option<Vec<f32>> {
+        let _ = snapshots;
+        None
+    }
+
+    /// Fit the surrogate on the collected trace (paper: trained on an
+    /// execution trace dataset before deployment). No-op for heuristics.
+    fn pretrain(
+        &mut self,
+        trace: &TraceBuffer,
+        steps: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<()> {
+        let _ = (trace, steps, rng);
+        Ok(())
+    }
+
+    /// Gradient telemetry of the last `place` call: (iterations, surrogate
+    /// score). `None` for heuristics.
+    fn stats(&self) -> Option<(usize, f32)> {
+        None
+    }
 }

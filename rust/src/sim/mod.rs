@@ -6,8 +6,21 @@
 //! slowdown, mobility-modulated transfer times, CRIU-style migration, and
 //! SPEC-style energy accounting.
 
+//! The engine is one struct split across four files along its seams:
+//! [`state`] (fields + read-only views), [`lifecycle`] (admission,
+//! placement, interval integration), [`faults`] (the typed
+//! [`faults::EngineCmd`] command bus and its audit ledger — the only
+//! mutation path for the fault/availability surface), and [`network`]
+//! (payload-movement costs, channel refresh).
+
 pub mod container;
-pub mod engine;
+pub mod faults;
+pub mod lifecycle;
+pub mod network;
+pub mod state;
 
 pub use container::{Container, ContainerId, ContainerState};
-pub use engine::{CompletedTask, Engine, FailedTask, IntervalReport, WorkerSnapshot};
+pub use faults::{CmdOrigin, CmdRecord, Effect, EngineCmd};
+pub use state::{
+    CompletedTask, Engine, FailedTask, IntervalReport, WorkerSnapshot, RAM_OVERCOMMIT,
+};

@@ -1,0 +1,272 @@
+//! Engine state: the struct itself, construction, and read-only views.
+//!
+//! The discrete-interval engine is split along its seams (one file per
+//! concern, all `impl Engine` blocks on the same struct):
+//!
+//! * [`state`](self) — fields, constructor, accessors, report types;
+//! * [`super::lifecycle`] — admission, placement, interval integration,
+//!   completion/failure bookkeeping;
+//! * [`super::faults`] — the typed [`super::faults::EngineCmd`] command
+//!   bus (the ONLY mutation path for availability/degradation state) and
+//!   its per-interval ledger;
+//! * [`super::network`] — payload-movement cost model and channel
+//!   refresh.
+
+// BTreeMap, not HashMap: task iteration order feeds order-sensitive
+// consumers (the MAB response-time EMA, Gillis RL updates), and std's
+// HashMap order varies per process — which would break the chaos engine's
+// bit-identical replay guarantee.
+use std::collections::BTreeMap;
+
+use crate::cluster::mobility::{ChannelState, MobilityModel};
+use crate::cluster::node::Cluster;
+use crate::config::SimConfig;
+use crate::splits::SplitDecision;
+use crate::workload::Task;
+
+use super::container::{Container, ContainerId, ContainerState};
+use super::faults::CmdRecord;
+
+/// Allowed RAM overcommit at allocation time (swap headroom): a worker
+/// accepts a container while resident demand stays under this × RAM.
+pub const RAM_OVERCOMMIT: f64 = 2.0;
+/// Thrash floor: heaviest slowdown from memory pressure.
+pub(super) const THRASH_FLOOR: f64 = 0.2;
+
+/// A task that left the system this interval (paper E_t member).
+#[derive(Clone, Debug)]
+pub struct CompletedTask {
+    pub task_id: u64,
+    pub app: crate::splits::App,
+    pub decision: SplitDecision,
+    pub batch: u64,
+    pub sla: f64,
+    /// Response time in scheduling intervals (paper r_i).
+    pub response: f64,
+    pub wait: f64,
+    pub exec: f64,
+    pub transfer: f64,
+    pub migrate: f64,
+    /// Workers that hosted at least one fragment.
+    pub workers: Vec<usize>,
+    /// Filled by the coordinator (accuracy oracle), not the engine.
+    pub accuracy: f64,
+}
+
+/// A task that was abandoned (timeout or unrecoverable fault) rather than
+/// completed. Failed tasks leave the system like completions do, so the
+/// broker's bookkeeping stays conserved under fault injection.
+#[derive(Clone, Debug)]
+pub struct FailedTask {
+    pub task_id: u64,
+    pub app: crate::splits::App,
+    pub decision: SplitDecision,
+    pub batch: u64,
+    pub sla: f64,
+    /// Age at failure, in scheduling intervals.
+    pub age: f64,
+}
+
+/// Per-worker observability snapshot (feeds S_t featurization).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerSnapshot {
+    /// Fraction of the interval the CPU was busy.
+    pub cpu: f64,
+    /// Resident demand / RAM at interval end (can exceed 1 under pressure).
+    pub ram: f64,
+    /// Transfer seconds that touched this worker / interval length.
+    pub net: f64,
+    /// Same, for disk-bound payload movement.
+    pub disk: f64,
+    /// Number of resident containers at interval end.
+    pub containers: usize,
+}
+
+/// What happened during one simulated interval.
+#[derive(Clone, Debug)]
+pub struct IntervalReport {
+    pub interval: usize,
+    pub completed: Vec<CompletedTask>,
+    /// Tasks abandoned this interval (see [`Engine::fail_task`]).
+    pub failed: Vec<FailedTask>,
+    pub energy_wh: f64,
+    /// Normalized AEC ∈ [0,1] (for eq. 10).
+    pub aec: f64,
+    pub snapshots: Vec<WorkerSnapshot>,
+    /// Containers still waiting (unplaceable) at interval end.
+    pub queued: usize,
+    /// Workers offline this interval (churn).
+    pub offline: usize,
+}
+
+pub struct Engine {
+    pub cluster: Cluster,
+    pub(super) mobility: MobilityModel,
+    pub channels: Vec<ChannelState>,
+    pub(super) cfg: SimConfig,
+    pub containers: Vec<Container>,
+    pub(super) tasks: BTreeMap<u64, TaskEntry>,
+    pub now_s: f64,
+    pub interval: usize,
+    /// Worker availability under churn (paper §7 future work); all online
+    /// by default.
+    pub(super) online: Vec<bool>,
+    pub(super) churn_rate: f64,
+    pub(super) churn_rng: crate::util::rng::Rng,
+    /// Per-worker MIPS degradation factor ∈ (0, 1] (straggler injection).
+    pub(super) mips_factor: Vec<f64>,
+    /// Per-worker effective-RAM factor ∈ (0, 1] (RAM-squeeze injection).
+    pub(super) ram_factor: Vec<f64>,
+    /// Per-worker forced channel state (network blackout injection);
+    /// overlays the mobility model while set.
+    pub(super) channel_override: Vec<Option<ChannelState>>,
+    /// Per-worker clock-skew seconds (clock-skew injection): coordination
+    /// with a skewed worker pays this extra latency on every payload
+    /// movement that touches it (the broker must reconcile timestamps
+    /// before trusting a transfer window). 0 = clocks agree.
+    pub(super) clock_skew_s: Vec<f64>,
+    /// Tasks failed since the last interval report.
+    pub(super) pending_failed: Vec<FailedTask>,
+    /// Append-only record of every [`super::faults::EngineCmd`] applied,
+    /// stamped with the interval it landed in. Chaos oracles audit this
+    /// instead of re-deriving state.
+    pub(super) cmd_ledger: Vec<CmdRecord>,
+    // scratch: per-worker busy seconds within the current interval
+    pub(super) busy_s: Vec<f64>,
+    pub(super) xfer_s: Vec<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub(super) struct TaskEntry {
+    pub(super) task: Task,
+    pub(super) containers: Vec<ContainerId>,
+    pub(super) done: bool,
+    pub(super) failed: bool,
+}
+
+impl Engine {
+    pub fn new(cluster: Cluster, cfg: SimConfig, seed: u64) -> Self {
+        let flags: Vec<bool> = cluster.workers.iter().map(|w| w.mobile).collect();
+        let n = cluster.len();
+        let mut mobility = MobilityModel::new(&flags, seed);
+        let channels = mobility.step();
+        Engine {
+            cluster,
+            mobility,
+            channels,
+            cfg,
+            containers: Vec::new(),
+            tasks: BTreeMap::new(),
+            now_s: 0.0,
+            interval: 0,
+            online: vec![true; n],
+            churn_rate: 0.0,
+            churn_rng: crate::util::rng::Rng::new(seed ^ 0xC0FFEE),
+            mips_factor: vec![1.0; n],
+            ram_factor: vec![1.0; n],
+            channel_override: vec![None; n],
+            clock_skew_s: vec![0.0; n],
+            pending_failed: Vec::new(),
+            cmd_ledger: Vec::new(),
+            busy_s: vec![0.0; n],
+            xfer_s: vec![0.0; n],
+        }
+    }
+
+    pub fn interval_seconds(&self) -> f64 {
+        self.cfg.interval_seconds
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cluster.len()
+    }
+
+    pub fn task(&self, id: u64) -> Option<&Task> {
+        self.tasks.get(&id).map(|e| &e.task)
+    }
+
+    /// Has `id` been abandoned via [`Engine::fail_task`]? Unknown tasks
+    /// read as not-failed.
+    pub fn task_failed(&self, id: u64) -> bool {
+        self.tasks.get(&id).map(|e| e.failed).unwrap_or(false)
+    }
+
+    /// Containers the placement engine must consider (placeable states).
+    pub fn placeable(&self) -> Vec<ContainerId> {
+        self.containers
+            .iter()
+            .filter(|c| c.is_placeable())
+            .map(|c| c.id)
+            .collect()
+    }
+
+    /// Resident RAM demand per worker: running/transferring/migrating-in
+    /// containers plus Blocked chain successors holding a reservation —
+    /// a reservation consumes capacity so the later unblock (which starts
+    /// its transfer unconditionally) can never breach the overcommit cap.
+    pub fn resident_ram(&self) -> Vec<f64> {
+        let mut ram = vec![0.0; self.cluster.len()];
+        for c in &self.containers {
+            match c.state {
+                ContainerState::Running
+                | ContainerState::Transferring { .. }
+                | ContainerState::Blocked => {
+                    if let Some(w) = c.worker {
+                        ram[w] += c.ram_mb;
+                    }
+                }
+                ContainerState::Migrating { to, .. } => ram[to] += c.ram_mb,
+                _ => {}
+            }
+        }
+        ram
+    }
+
+    /// Worker availability (false = offline under churn).
+    pub fn online(&self) -> &[bool] {
+        &self.online
+    }
+
+    /// Currently applied clock skew of worker `w`, in seconds.
+    pub fn clock_skew(&self, w: usize) -> f64 {
+        self.clock_skew_s.get(w).copied().unwrap_or(0.0)
+    }
+
+    /// Effective RAM capacity of worker `w` under any active squeeze.
+    pub fn effective_ram_mb(&self, w: usize) -> f64 {
+        self.cluster.workers[w].spec.ram_mb * self.ram_factor[w]
+    }
+
+    /// Tasks ever admitted.
+    pub fn admitted_task_count(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Tasks that completed successfully.
+    pub fn completed_task_count(&self) -> usize {
+        self.tasks.values().filter(|e| e.done && !e.failed).count()
+    }
+
+    /// Tasks that were abandoned via [`Engine::fail_task`].
+    pub fn failed_task_count(&self) -> usize {
+        self.tasks.values().filter(|e| e.failed).count()
+    }
+
+    /// Tasks still in flight.
+    pub fn active_task_count(&self) -> usize {
+        self.tasks.values().filter(|e| !e.done).count()
+    }
+
+    /// Can `cid` be (re)placed on worker `w` right now?
+    pub fn fits(&self, cid: ContainerId, w: usize) -> bool {
+        if !self.online[w] {
+            return false;
+        }
+        let c = &self.containers[cid];
+        if c.worker == Some(w) {
+            return true;
+        }
+        let resident = self.resident_ram();
+        resident[w] + c.ram_mb <= self.effective_ram_mb(w) * RAM_OVERCOMMIT
+    }
+}

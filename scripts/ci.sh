@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# CI entrypoint: build, test, a fixed-seed chaos smoke, and the scenario
-# matrix smoke (policy × scenario × seed cross product with golden-trace
-# gating). Fails on any oracle violation or golden drift. Budget: the
-# post-build steps stay well under ~2 minutes.
+# CI entrypoint: lint, build, test, a fixed-seed chaos smoke, and the
+# scenario matrix smoke (policy × scenario × seed cross product with
+# golden-trace gating, including differential policy-pair cells). Fails on
+# any oracle violation, Table-4 ordering failure, lint warning or golden
+# drift. Budget: the post-build steps stay well under ~2 minutes.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,6 +11,8 @@ echo "== cargo build --release =="
 cargo build --release
 
 echo "== cargo test -q =="
+# NOTE: tests/parity.rs self-bootstraps tests/goldens/parity/*.json on a
+# tree that has none — commit the generated files after reviewing them.
 cargo test -q
 
 echo "== chaos smoke (fixed seed, light profile) =="
@@ -29,5 +32,13 @@ if ! ls tests/goldens/*.json >/dev/null 2>&1; then
     ./target/release/splitplace matrix --filter smoke --jobs 1 --update-goldens
 fi
 ./target/release/splitplace matrix --filter smoke --jobs 2
+
+# Lints run after the functional gates so a formatting nit never blocks
+# the golden bootstrap above; they still fail the script.
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy (deny warnings) =="
+cargo clippy --release -- -D warnings
 
 echo "CI OK"

@@ -4,8 +4,13 @@
 use splitplace::chaos::ChaosOptions;
 use splitplace::config::PolicyKind;
 use splitplace::harness::{
-    matrix_cells, run_matrix, Cell, GoldenStatus, GoldenStore, MatrixOptions, Scenario,
+    matrix_cells, run_matrix, Cell, GoldenStatus, GoldenStore, MatrixCell, MatrixOptions,
+    Scenario,
 };
+
+fn single(policy: PolicyKind, scenario: Scenario, seed: u64) -> MatrixCell {
+    MatrixCell::Single(Cell { policy, scenario, seed })
+}
 
 fn tmpdir(tag: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir()
@@ -33,12 +38,16 @@ fn serial_and_parallel_runs_are_byte_identical() {
     assert_eq!(b, again.summaries_json().to_string());
 }
 
-/// Every smoke cell must run clean: no construction errors and no oracle
-/// violations — the matrix is the regression net, so the net itself has
-/// to be green at head.
+/// Every smoke cell must run clean: no construction errors, no oracle
+/// violations and no ordering failures — the matrix is the regression
+/// net, so the net itself has to be green at head.
 #[test]
 fn smoke_matrix_is_green() {
     let cells = matrix_cells("smoke", &[1]);
+    assert!(
+        cells.iter().any(|c| matches!(c, MatrixCell::Diff(_))),
+        "smoke must include at least one differential policy-pair cell"
+    );
     let report =
         run_matrix(&cells, &MatrixOptions { jobs: 4, intervals: 8, ..Default::default() });
     assert_eq!(report.results.len(), cells.len());
@@ -50,8 +59,28 @@ fn smoke_matrix_is_green() {
             r.cell.id(),
             r.summary.violated_oracles
         );
-        let admitted = r.summary.metrics.get("admitted").copied().unwrap_or(0.0);
+        assert!(
+            r.ordering_failures.is_empty(),
+            "{}: {:?}",
+            r.cell.id(),
+            r.ordering_failures
+        );
+        // diff cells carry side-prefixed metrics
+        let admitted = r
+            .summary
+            .metrics
+            .get("admitted")
+            .or_else(|| r.summary.metrics.get("a_admitted"))
+            .copied()
+            .unwrap_or(0.0);
         assert!(admitted > 0.0, "{}: no tasks admitted", r.cell.id());
+        if let MatrixCell::Diff(_) = r.cell {
+            assert!(
+                r.summary.metrics.contains_key("delta_avg_reward"),
+                "{}: diff cell without delta metrics",
+                r.cell.id()
+            );
+        }
     }
     assert!(!report.failed());
 }
@@ -62,8 +91,8 @@ fn smoke_matrix_is_green() {
 fn golden_gate_matches_then_catches_injected_drift() {
     let dir = tmpdir("gate");
     let cells = vec![
-        Cell { policy: PolicyKind::ModelCompression, scenario: Scenario::Clean, seed: 1 },
-        Cell { policy: PolicyKind::Gillis, scenario: Scenario::ChaosHeavy, seed: 1 },
+        single(PolicyKind::ModelCompression, Scenario::Clean, 1),
+        single(PolicyKind::Gillis, Scenario::ChaosHeavy, 1),
     ];
     let record = MatrixOptions {
         jobs: 2,
@@ -107,11 +136,7 @@ fn golden_gate_matches_then_catches_injected_drift() {
     assert_eq!(drifted.results[1].golden, GoldenStatus::Match);
 
     // a cell with no golden at all is a gate failure, not a silent pass
-    let extra = vec![Cell {
-        policy: PolicyKind::ModelCompression,
-        scenario: Scenario::FlashCrowd,
-        seed: 1,
-    }];
+    let extra = vec![single(PolicyKind::ModelCompression, Scenario::FlashCrowd, 1)];
     let missing = run_matrix(&extra, &gate);
     assert_eq!(missing.results[0].golden, GoldenStatus::Missing);
     assert!(missing.failed());
@@ -125,7 +150,7 @@ fn golden_gate_matches_then_catches_injected_drift() {
 fn matrix_cell_replays_through_chaos_cli_path() {
     let cell = Cell { policy: PolicyKind::Gillis, scenario: Scenario::ChaosHeavy, seed: 2 };
     let report = run_matrix(
-        &[cell],
+        &[MatrixCell::Single(cell)],
         &MatrixOptions { jobs: 1, intervals: 8, ..Default::default() },
     );
     let summary = &report.results[0].summary;

@@ -1,0 +1,130 @@
+//! Refactor-parity goldens: fixed-seed trajectories for EVERY PolicyKind.
+//!
+//! Each policy runs one chaos-light matrix cell (seed 3, 10 intervals)
+//! through the full `DecisionStack` + `EngineCmd` wiring; the per-interval
+//! signature stream (completed/failed task ids, queue depth, offline
+//! count, energy bits) serializes canonically and must match the golden
+//! committed under `tests/goldens/parity/` byte-for-byte. Any behavioral
+//! change to the decision plane, the command bus, the engine integrator or
+//! the RNG stream derivation shows up here as a diff — re-record only for
+//! an *intended* behavior change, and review the diff like code.
+//!
+//! Bootstrap: on a tree with no parity goldens (e.g. the refactor commit
+//! itself was authored on a toolchain-less machine), the first `cargo
+//! test` run records them and passes; commit the generated files. After
+//! that the test is a byte-exact regression gate.
+
+use std::path::PathBuf;
+
+use splitplace::chaos::{self, ChaosOptions, IntervalSig};
+use splitplace::config::PolicyKind;
+use splitplace::harness::{policy_slug, Scenario};
+use splitplace::util::json::Value;
+
+const SEED: u64 = 3;
+const INTERVALS: usize = 10;
+
+fn parity_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("goldens")
+        .join("parity")
+}
+
+fn sig_json(s: &IntervalSig) -> Value {
+    Value::obj(vec![
+        ("t", Value::Num(s.interval as f64)),
+        (
+            "completed",
+            Value::Arr(s.completed.iter().map(|&id| Value::Num(id as f64)).collect()),
+        ),
+        (
+            "failed",
+            Value::Arr(s.failed.iter().map(|&id| Value::Num(id as f64)).collect()),
+        ),
+        ("queued", Value::Num(s.queued as f64)),
+        ("offline", Value::Num(s.offline as f64)),
+        // string: f64 bit patterns exceed 2^53
+        ("energy_bits", Value::Str(s.energy_bits.to_string())),
+    ])
+}
+
+/// Run one policy's parity cell and serialize its trajectory canonically.
+fn trajectory(policy: PolicyKind) -> String {
+    let (cfg, plan) = Scenario::ChaosLight.build(policy, SEED, INTERVALS);
+    let out = chaos::run_chaos(&cfg, &plan, &ChaosOptions::default(), None)
+        .unwrap_or_else(|e| panic!("{policy:?} parity run failed: {e:#}"));
+    assert!(
+        out.violations.is_empty(),
+        "{policy:?} parity run must be green: {:?}",
+        out.violations
+    );
+    let v = Value::obj(vec![
+        ("policy", Value::Str(policy_slug(policy).to_string())),
+        ("scenario", Value::Str("chaos-light".into())),
+        ("seed", Value::Str(SEED.to_string())),
+        ("intervals", Value::Num(INTERVALS as f64)),
+        ("admitted", Value::Num(out.admitted as f64)),
+        ("completed", Value::Num(out.completed as f64)),
+        ("failed", Value::Num(out.failed as f64)),
+        (
+            "signatures",
+            Value::Arr(out.signatures.iter().map(sig_json).collect()),
+        ),
+    ]);
+    let mut text = v.to_pretty();
+    text.push('\n');
+    text
+}
+
+#[test]
+fn fixed_seed_trajectories_match_goldens_for_every_policy() {
+    let dir = parity_dir();
+    let mut bootstrapped = Vec::new();
+    for policy in PolicyKind::all() {
+        let got = trajectory(policy);
+        let path = dir.join(format!("{}.json", policy_slug(policy)));
+        match std::fs::read_to_string(&path) {
+            Ok(want) => assert_eq!(
+                want,
+                got,
+                "{} trajectory drifted from its parity golden {} — an \
+                 unintended behavior change, or an intended one to re-record",
+                policy_slug(policy),
+                path.display()
+            ),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                // Bootstrap-on-first-run. NOTE: a golden recorded here
+                // captures CURRENT behavior — it gates future refactors,
+                // not this one; review the file before committing it.
+                let write = std::fs::create_dir_all(&dir)
+                    .and_then(|()| std::fs::write(&path, &got));
+                if let Err(we) = write {
+                    panic!(
+                        "parity golden for {} is missing and could not be \
+                         bootstrapped at {} ({we}); record it on a writable \
+                         checkout and commit it",
+                        policy_slug(policy),
+                        path.display()
+                    );
+                }
+                bootstrapped.push(path.display().to_string());
+            }
+            Err(e) => panic!("reading {}: {e}", path.display()),
+        }
+    }
+    if !bootstrapped.is_empty() {
+        eprintln!(
+            "bootstrapped {} parity golden(s) — review and commit:\n  {}",
+            bootstrapped.len(),
+            bootstrapped.join("\n  ")
+        );
+    }
+}
+
+#[test]
+fn parity_trajectories_are_deterministic_in_process() {
+    for policy in [PolicyKind::MabDaso, PolicyKind::Gillis] {
+        assert_eq!(trajectory(policy), trajectory(policy), "{policy:?}");
+    }
+}

@@ -121,7 +121,7 @@ fn prop_capacity_never_exceeded_at_allocation() {
         |engine| {
             let resident = engine.resident_ram();
             for (w, worker) in engine.cluster.workers.iter().enumerate() {
-                let cap = worker.spec.ram_mb * splitplace::sim::engine::RAM_OVERCOMMIT;
+                let cap = worker.spec.ram_mb * splitplace::sim::RAM_OVERCOMMIT;
                 // a single container may legitimately exceed cap on its own
                 // only if it was the first (engine admits |c| <= cap slack);
                 // the invariant: resident never exceeds cap + one container
@@ -670,6 +670,53 @@ fn prop_clock_skew_plans_replay_identically_and_green() {
             }
             if !a.violations.is_empty() {
                 return Err(format!("clean engine violated: {:?}", a.violations));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_payload_corruption_plans_replay_identically_and_green() {
+    // determinism property for PayloadCorruption: seeded corruption-only
+    // plans replay bit-identically, stay green on a correct engine, and
+    // never let a corrupted task complete (conservation holds because the
+    // task surfaces through `failed` instead).
+    check(
+        "payload-corruption-determinism",
+        5,
+        |rng| {
+            let intervals = 10usize;
+            let mut events = Vec::new();
+            for _ in 0..6 {
+                let w = rng.below(10) as usize;
+                let t = 1 + rng.below(intervals as u64 - 2) as usize;
+                events.push(TimedEvent { t, event: ChaosEvent::PayloadCorruption { worker: w } });
+            }
+            events.sort_by_key(|e| e.t);
+            (FaultPlan::empty(rng.next_u64() % 1000, intervals).with_events(events), intervals)
+        },
+        |(plan, intervals)| {
+            let mut cfg = ExperimentConfig::small();
+            cfg.policy = PolicyKind::ModelCompression;
+            cfg.sim.intervals = *intervals;
+            cfg.workload.lambda = 4.0;
+            let opts = ChaosOptions::default();
+            let a = chaos::run_chaos(&cfg, plan, &opts, None).map_err(|e| e.to_string())?;
+            let b = chaos::run_chaos(&cfg, plan, &opts, None).map_err(|e| e.to_string())?;
+            if a.signatures != b.signatures {
+                return Err("payload-corruption plan must replay identically".into());
+            }
+            if !a.violations.is_empty() {
+                return Err(format!("clean engine violated: {:?}", a.violations));
+            }
+            // a task that failed by corruption must never also complete
+            let failed: std::collections::HashSet<u64> =
+                a.signatures.iter().flat_map(|s| s.failed.iter().copied()).collect();
+            let completed: std::collections::HashSet<u64> =
+                a.signatures.iter().flat_map(|s| s.completed.iter().copied()).collect();
+            if let Some(id) = failed.intersection(&completed).next() {
+                return Err(format!("task {id} both failed and completed"));
             }
             Ok(())
         },
