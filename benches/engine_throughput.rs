@@ -1,0 +1,70 @@
+//! Engine-throughput bench across fleet tiers (the perf trajectory seed).
+//!
+//! Measures scheduling intervals/sec and active-container-intervals/sec on
+//! the small (10), medium (200) and large (1000) worker tiers under a
+//! chaos-light plan, and writes `BENCH_engine.json` at the repo root.
+//! The CLI twin is `splitplace bench` (same measurement, same artifact).
+//!
+//!     cargo bench --bench engine_throughput
+//!
+//! `SPLITPLACE_BENCH_INTERVALS` overrides the horizon (default 50 — the
+//! acceptance bar is the large tier finishing a ≥50-interval chaos-light
+//! run in seconds).
+
+use std::path::PathBuf;
+
+use splitplace::benchlib::throughput::{self, Throughput};
+use splitplace::util::table::Table;
+
+fn main() {
+    let intervals = splitplace::benchlib::scenarios::bench_intervals().max(50);
+    let mut results: Vec<Throughput> = Vec::new();
+    for tier in throughput::tiers() {
+        match throughput::measure(&tier, intervals, 7, true) {
+            Ok(r) => {
+                eprintln!(
+                    "[engine_throughput] {}: {} workers, {} intervals in {:.0} ms",
+                    r.tier, r.workers, r.intervals, r.wall_ms
+                );
+                results.push(r);
+            }
+            Err(e) => eprintln!("[engine_throughput] {} tier failed: {e:#}", tier.name),
+        }
+    }
+
+    let mut t = Table::new(
+        "Engine throughput — chaos-light, per fleet tier",
+        &[
+            "tier",
+            "workers",
+            "intervals",
+            "wall ms",
+            "intervals/s",
+            "container-intervals/s",
+            "admitted",
+            "done",
+        ],
+    );
+    for r in &results {
+        t.row(vec![
+            r.tier.clone(),
+            r.workers.to_string(),
+            r.intervals.to_string(),
+            format!("{:.0}", r.wall_ms),
+            format!("{:.1}", r.intervals_per_sec),
+            format!("{:.0}", r.container_intervals_per_sec),
+            r.admitted.to_string(),
+            r.completed.to_string(),
+        ]);
+    }
+    t.print();
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_engine.json");
+    match throughput::write_json(&path, &results) {
+        Ok(()) => eprintln!("[engine_throughput] wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("[engine_throughput] writing {} failed: {e}", path.display());
+            std::process::exit(1);
+        }
+    }
+}

@@ -3,6 +3,7 @@
 //! (registered with `harness = false`).
 
 pub mod scenarios;
+pub mod throughput;
 
 use std::time::Instant;
 

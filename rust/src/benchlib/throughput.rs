@@ -1,0 +1,252 @@
+//! Engine-throughput measurement across fleet tiers.
+//!
+//! Seeds the perf trajectory for the O(active) engine core: one
+//! chaos-light (or clean) run per tier (small/medium/large — 10/200/1000
+//! workers), measuring scheduling **intervals/sec** and
+//! **active-container-intervals/sec** (Σ per-interval active-set size over
+//! wall-clock — the unit the hot path actually scales with). Results
+//! serialize to `BENCH_engine.json`; `scripts/ci.sh` records a smoke run
+//! on every CI pass (perf numbers recorded, not yet regression-gated).
+//!
+//! Shared by `benches/engine_throughput.rs` and the `splitplace bench`
+//! CLI so both emit the same artifact.
+
+use std::time::Instant;
+
+use crate::chaos::{self, ChaosOptions};
+use crate::config::PolicyKind;
+use crate::coordinator::Broker;
+use crate::harness::Scenario;
+use crate::mab::Mode;
+use crate::sim::EngineCmd;
+use crate::util::json::Value;
+
+/// One measurable fleet tier, named by its pair of matrix tier scenarios —
+/// the bench derives its whole regime (cluster preset, tier λ, plan) from
+/// `Scenario::build`, so BENCH_engine.json always measures exactly what
+/// the golden gate watches, with no duplicated knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TierSpec {
+    pub name: &'static str,
+    pub clean: Scenario,
+    pub chaos_light: Scenario,
+}
+
+impl TierSpec {
+    pub fn scenario(&self, chaos: bool) -> Scenario {
+        if chaos {
+            self.chaos_light
+        } else {
+            self.clean
+        }
+    }
+}
+
+/// The three fleet tiers, smallest first.
+pub fn tiers() -> Vec<TierSpec> {
+    vec![
+        TierSpec {
+            name: "small",
+            clean: Scenario::Clean,
+            chaos_light: Scenario::ChaosLight,
+        },
+        TierSpec {
+            name: "medium",
+            clean: Scenario::MediumClean,
+            chaos_light: Scenario::MediumChaosLight,
+        },
+        TierSpec {
+            name: "large",
+            clean: Scenario::LargeClean,
+            chaos_light: Scenario::LargeChaosLight,
+        },
+    ]
+}
+
+pub fn tier_by_name(name: &str) -> Option<TierSpec> {
+    tiers().into_iter().find(|t| t.name == name.to_ascii_lowercase())
+}
+
+/// One tier's throughput measurement.
+#[derive(Clone, Debug)]
+pub struct Throughput {
+    pub tier: String,
+    pub workers: usize,
+    pub intervals: usize,
+    pub seed: u64,
+    pub chaos: bool,
+    pub admitted: u64,
+    pub completed: usize,
+    pub failed: usize,
+    /// Σ over intervals of the post-interval active-container count — the
+    /// work units the O(active) hot path processed.
+    pub container_intervals: u64,
+    pub wall_ms: f64,
+    pub intervals_per_sec: f64,
+    pub container_intervals_per_sec: f64,
+}
+
+/// Run one tier's matrix scenario (chaos-light is the representative
+/// fleet-scale regime) and measure wall-clock throughput. Pure-rust MC
+/// policy so the measurement isolates the engine+broker hot path and runs
+/// without artifacts. Oracle sweeps are deliberately absent: this times
+/// the simulation core, not the audit machinery.
+pub fn measure(
+    tier: &TierSpec,
+    intervals: usize,
+    seed: u64,
+    chaos: bool,
+) -> anyhow::Result<Throughput> {
+    let (cfg, plan) =
+        tier.scenario(chaos).build(PolicyKind::ModelCompression, seed, intervals);
+    let n = cfg.cluster.total_workers();
+    let opts = ChaosOptions::default();
+    let base_lambda = cfg.workload.lambda;
+    let timeout_s = opts.task_timeout_intervals as f64 * cfg.sim.interval_seconds;
+
+    let mut broker = Broker::new_with_fallback(cfg, None, Mode::Test)?;
+    let mut container_intervals = 0u64;
+    let t0 = Instant::now();
+    for t in 0..intervals {
+        for e in plan.events_at(t) {
+            chaos::apply_event(&mut broker, &e.event, &opts, base_lambda);
+        }
+        broker.engine.apply(EngineCmd::FailTasksOlderThan { age_s: timeout_s });
+        broker.step();
+        container_intervals += broker.engine.active_container_count() as u64;
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(Throughput {
+        tier: tier.name.to_string(),
+        workers: n,
+        intervals,
+        seed,
+        chaos,
+        admitted: broker.admitted,
+        completed: broker.engine.completed_task_count(),
+        failed: broker.engine.failed_task_count(),
+        container_intervals,
+        wall_ms: wall_s * 1e3,
+        intervals_per_sec: intervals as f64 / wall_s,
+        container_intervals_per_sec: container_intervals as f64 / wall_s,
+    })
+}
+
+/// Canonical `BENCH_engine.json` payload.
+pub fn to_json(results: &[Throughput]) -> Value {
+    Value::obj(vec![
+        ("bench", Value::Str("engine_throughput".into())),
+        ("measured", Value::Bool(true)),
+        (
+            "tiers",
+            Value::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Value::obj(vec![
+                            ("tier", Value::Str(r.tier.clone())),
+                            ("workers", Value::Num(r.workers as f64)),
+                            ("intervals", Value::Num(r.intervals as f64)),
+                            ("seed", Value::Str(r.seed.to_string())),
+                            (
+                                "scenario",
+                                Value::Str(
+                                    if r.chaos { "chaos-light" } else { "clean" }.into(),
+                                ),
+                            ),
+                            ("admitted", Value::Num(r.admitted as f64)),
+                            ("completed", Value::Num(r.completed as f64)),
+                            ("failed", Value::Num(r.failed as f64)),
+                            (
+                                "container_intervals",
+                                Value::Num(r.container_intervals as f64),
+                            ),
+                            ("wall_ms", Value::Num(r.wall_ms)),
+                            ("intervals_per_sec", Value::Num(r.intervals_per_sec)),
+                            (
+                                "container_intervals_per_sec",
+                                Value::Num(r.container_intervals_per_sec),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write `BENCH_engine.json` (pretty-printed; wall-clock fields make it a
+/// perf record, not a golden — never gate equality on it).
+pub fn write_json(path: &std::path::Path, results: &[Throughput]) -> std::io::Result<()> {
+    let mut text = to_json(results).to_pretty();
+    text.push('\n');
+    std::fs::write(path, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_tier_measures_and_serializes() {
+        let tier = tier_by_name("small").unwrap();
+        let r = measure(&tier, 6, 1, true).unwrap();
+        assert_eq!(r.workers, 10);
+        assert_eq!(r.intervals, 6);
+        assert!(r.admitted > 0, "load must arrive");
+        assert!(r.intervals_per_sec > 0.0);
+        assert!(r.wall_ms > 0.0);
+        let j = to_json(&[r]).to_string();
+        assert!(j.contains("\"bench\":\"engine_throughput\""), "{j}");
+        assert!(j.contains("\"tier\":\"small\""), "{j}");
+        assert!(j.contains("intervals_per_sec"), "{j}");
+    }
+
+    #[test]
+    fn tier_lookup_and_order() {
+        let ts = tiers();
+        assert_eq!(ts.len(), 3);
+        let workers = |t: &TierSpec| {
+            let (cfg, _) = t.scenario(true).build(PolicyKind::ModelCompression, 1, 4);
+            cfg.cluster.total_workers()
+        };
+        assert!(ts.windows(2).all(|w| workers(&w[0]) < workers(&w[1])));
+        assert!(tier_by_name("LARGE").is_some());
+        assert!(tier_by_name("huge").is_none());
+        assert_eq!(workers(&tier_by_name("large").unwrap()), 1000);
+        // clean and chaos-light share the tier's fleet; only the plan differs
+        for t in &ts {
+            let (cfg_a, plan_a) = t.scenario(false).build(PolicyKind::ModelCompression, 1, 4);
+            let (cfg_b, plan_b) = t.scenario(true).build(PolicyKind::ModelCompression, 1, 4);
+            assert_eq!(cfg_a.cluster.total_workers(), cfg_b.cluster.total_workers());
+            assert_eq!(cfg_a.workload.lambda, cfg_b.workload.lambda);
+            assert!(plan_a.events.is_empty());
+            let _ = plan_b;
+        }
+    }
+
+    /// The acceptance bar for the refactor: a large-tier chaos-light run
+    /// (≈1000 workers) over a meaningful horizon completes in seconds —
+    /// O(active) sub-stepping, not O(everything ever admitted). Runs only
+    /// in optimized builds: under `cargo test`'s debug profile the
+    /// float-heavy integrator is easily 10×+ slower, the bound would be
+    /// flaky, and without the bound the run would cost minutes for no
+    /// signal (the smoke matrix's large cells already cover panics).
+    /// `splitplace bench` runs the full ≥50-interval measurement.
+    #[test]
+    fn large_tier_run_is_fast() {
+        if cfg!(debug_assertions) {
+            return;
+        }
+        let tier = tier_by_name("large").unwrap();
+        let t0 = std::time::Instant::now();
+        let r = measure(&tier, 10, 1, true).unwrap();
+        assert_eq!(r.workers, 1000);
+        assert!(r.admitted > 100, "large tier must carry real load");
+        assert!(
+            t0.elapsed().as_secs_f64() < 30.0,
+            "large-tier run took {:.1}s — the active-set core has regressed",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}

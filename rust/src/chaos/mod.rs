@@ -231,8 +231,10 @@ fn sabotage(event: &ChaosEvent, cmds: Vec<EngineCmd>, bug: BugKind) -> Vec<Engin
 
 /// Apply one plan event: broker-scoped events adjust the arrival rate;
 /// engine-scoped events compile to commands (sabotaged under an injected
-/// bug) and go through the engine's command bus.
-fn apply_event(broker: &mut Broker, event: &ChaosEvent, opts: &ChaosOptions, base_lambda: f64) {
+/// bug) and go through the engine's command bus. Public so the throughput
+/// bench (`benchlib::throughput`) can drive plans through exactly the same
+/// path without paying for per-interval oracle sweeps.
+pub fn apply_event(broker: &mut Broker, event: &ChaosEvent, opts: &ChaosOptions, base_lambda: f64) {
     match *event {
         ChaosEvent::FlashCrowd { lambda_mult } => {
             broker.set_lambda_override(Some(base_lambda * lambda_mult));
@@ -515,13 +517,15 @@ mod tests {
     }
 
     /// A plan whose corruption events land while transfers are actually
-    /// in flight — structural, not a bet on one run's draw: a fleet-wide
-    /// blackout first slows every staging transfer ~20×, so anything
-    /// placed during the blackout is still in flight when the corruption
-    /// sweep hits both following intervals. The run is deterministic in
-    /// cfg (the plan's seed field is provenance only), so the expensive
-    /// liveness check runs once and is cached across the tests sharing
-    /// it — both pass `chaos_cfg(10, 5.0)`.
+    /// in flight — structural, not a bet on one run's draw: placement
+    /// happens at interval starts and even a blackout-throttled transfer
+    /// finishes inside one 300 s interval, so the plan drifts every
+    /// worker's clock by 400 s instead. Each staging transfer then pays
+    /// the skew and is guaranteed to still be in flight when the
+    /// corruption sweep hits the following intervals. The run is
+    /// deterministic in cfg (the plan's seed field is provenance only),
+    /// so the expensive liveness check runs once and is cached across
+    /// the tests sharing it — both pass `chaos_cfg(10, 5.0)`.
     fn corrupting_plan(cfg: &ExperimentConfig) -> FaultPlan {
         static FOUND: std::sync::OnceLock<FaultPlan> = std::sync::OnceLock::new();
         FOUND
@@ -529,22 +533,27 @@ mod tests {
                 let n = cfg.cluster.total_workers();
                 let mut events: Vec<TimedEvent> = Vec::new();
                 for w in 0..n {
-                    events.push(TimedEvent { t: 1, event: ChaosEvent::Blackout { worker: w } });
+                    events.push(TimedEvent {
+                        t: 1,
+                        event: ChaosEvent::ClockSkew { worker: w, offset_s: 400.0 },
+                    });
                     for t in [2usize, 3] {
                         events.push(TimedEvent {
                             t,
                             event: ChaosEvent::PayloadCorruption { worker: w },
                         });
                     }
-                    events
-                        .push(TimedEvent { t: 4, event: ChaosEvent::BlackoutEnd { worker: w } });
+                    events.push(TimedEvent {
+                        t: 4,
+                        event: ChaosEvent::ClockSkew { worker: w, offset_s: 0.0 },
+                    });
                 }
                 events.sort_by_key(|e| e.t);
                 let plan = FaultPlan::empty(1, cfg.sim.intervals).with_events(events);
                 let out = run_chaos(cfg, &plan, &ChaosOptions::default(), None).unwrap();
                 assert!(
                     out.failed > 0,
-                    "blackout-slowed corruption sweep hit no in-flight transfer — \
+                    "skew-stretched corruption sweep hit no in-flight transfer — \
                      the transfer model or scenario shape changed"
                 );
                 plan

@@ -8,10 +8,12 @@
 
 use std::collections::HashSet;
 
-use crate::sim::{ContainerState, Effect, Engine, EngineCmd, IntervalReport, RAM_OVERCOMMIT};
+use crate::sim::{
+    ContainerState, Effect, Engine, EngineCmd, FaultSurface, IntervalReport, RAM_OVERCOMMIT,
+};
 
 /// All invariant names, in evaluation order.
-pub const ORACLES: [&str; 12] = [
+pub const ORACLES: [&str; 13] = [
     "task-conservation",
     "allocation-capacity",
     "chain-precedence",
@@ -24,6 +26,7 @@ pub const ORACLES: [&str; 12] = [
     "offline-matches-plan",
     "clock-skew-applied",
     "payload-corruption-handled",
+    "ledger-replay-consistent",
 ];
 
 pub fn describe(oracle: &str) -> &'static str {
@@ -43,6 +46,10 @@ pub fn describe(oracle: &str) -> &'static str {
         "clock-skew-applied" => "engine clock skew equals the plan's active skew, per worker",
         "payload-corruption-handled" => {
             "every task the command ledger marks payload-corrupted is failed, never completed"
+        }
+        "ledger-replay-consistent" => {
+            "replaying the engine's own command ledger onto a fresh surface reproduces its \
+             online/mips/ram/skew state"
         }
         _ => "unknown invariant",
     }
@@ -104,7 +111,7 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
         );
     }
     let container_tasks: HashSet<u64> =
-        ctx.engine.containers.iter().map(|c| c.task_id).collect();
+        ctx.engine.containers().iter().map(|c| c.task_id).collect();
     if container_tasks.len() != admitted {
         fail(
             "task-conservation",
@@ -138,9 +145,9 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
     }
 
     // -- chain-precedence ---------------------------------------------------
-    for c in &ctx.engine.containers {
+    for c in ctx.engine.containers() {
         if let Some(prev) = c.prev {
-            let prev_done = ctx.engine.containers[prev].is_done();
+            let prev_done = ctx.engine.containers()[prev].is_done();
             if c.mi_done > 0.0 && !prev_done {
                 fail(
                     "chain-precedence",
@@ -211,7 +218,7 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
 
     // -- crashed-workers-idle -----------------------------------------------
     let online = ctx.engine.online();
-    for c in &ctx.engine.containers {
+    for c in ctx.engine.containers() {
         let offending = match c.state {
             ContainerState::Running | ContainerState::Transferring { .. } => {
                 c.worker.map(|w| !online[w]).unwrap_or(false)
@@ -232,7 +239,7 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
     // -- telemetry-consistent -----------------------------------------------
     let queued_now = ctx
         .engine
-        .containers
+        .containers()
         .iter()
         .filter(|c| matches!(c.state, ContainerState::Queued))
         .count();
@@ -326,6 +333,36 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
                 format!("task {} completed twice", task.task_id),
             );
         }
+    }
+
+    // -- ledger-replay-consistent -------------------------------------------
+    // The command bus is the ONLY mutation path for the fault surface, so
+    // a fresh replay of the engine's own ledger (churn toggles included —
+    // they are bus-routed) must land on exactly the live surface. A
+    // command that mutated state without recording it, or recorded an
+    // effect it did not apply, diverges here. Float fields compare exactly:
+    // replay mirrors the engine's own clamp arithmetic.
+    let replayed = FaultSurface::replay(ctx.engine.workers(), ctx.engine.ledger());
+    let live = ctx.engine.fault_surface();
+    if replayed != live {
+        let diff = (0..ctx.engine.workers())
+            .find_map(|w| {
+                let fields = [
+                    ("online", replayed.online[w] != live.online[w]),
+                    ("mips", replayed.mips_factor[w] != live.mips_factor[w]),
+                    ("ram", replayed.ram_factor[w] != live.ram_factor[w]),
+                    ("skew", replayed.clock_skew_s[w] != live.clock_skew_s[w]),
+                ];
+                fields.iter().find(|(_, d)| *d).map(|(name, _)| format!("worker {w}: {name}"))
+            })
+            .unwrap_or_else(|| "churn rate".into());
+        fail(
+            "ledger-replay-consistent",
+            format!(
+                "replaying {} ledger commands does not reproduce the fault surface ({diff})",
+                ctx.engine.ledger().len()
+            ),
+        );
     }
 
     out
@@ -534,6 +571,32 @@ mod tests {
             v.iter().any(|v| v.oracle == "payload-corruption-handled"),
             "swallowed corruption must be caught: {v:?}"
         );
+    }
+
+    #[test]
+    fn ledger_replay_oracle_matches_on_a_faulted_engine_and_catches_divergence() {
+        let mut e = engine();
+        e.apply(EngineCmd::Crash { worker: 1 });
+        e.apply(EngineCmd::SetMipsFactor { worker: 2, factor: 0.4 });
+        e.apply(EngineCmd::SetClockSkew { worker: 3, skew_s: 42.0 });
+        let report = e.step_interval();
+        let mut seen = HashSet::new();
+        let mut ctx = OracleCtx {
+            engine: &e,
+            report: &report,
+            admitted: 0,
+            mab_decisions: None,
+            seen_completed: &mut seen,
+            expected_offline: None,
+            expected_skew: None,
+        };
+        let v = check_interval(&mut ctx);
+        assert!(v.is_empty(), "bus-routed mutations must replay cleanly: {v:?}");
+        // divergence detection is covered structurally: FaultSurface::replay
+        // of a truncated ledger must differ from the live surface
+        let truncated =
+            crate::sim::FaultSurface::replay(e.workers(), &e.ledger()[..1]);
+        assert_ne!(truncated, e.fault_surface(), "truncation must be visible");
     }
 
     #[test]

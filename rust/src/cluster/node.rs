@@ -184,6 +184,32 @@ mod tests {
     }
 
     #[test]
+    fn tier_fleets_build_dense_and_type_grouped() {
+        // medium/large tiers must build like the paper fleet, just bigger:
+        // dense ids, Table-3 type grouping (what rack quarters rely on)
+        for (cfg, n) in [(ClusterConfig::medium(), 200), (ClusterConfig::large(), 1000)] {
+            let c = build_fleet(&cfg);
+            assert_eq!(c.len(), n);
+            for (i, w) in c.workers.iter().enumerate() {
+                assert_eq!(w.id, i);
+            }
+            // type-grouped in Table-3 order: B2ms block first, E4asv4 last
+            assert_eq!(c.workers[0].spec.name, "B2ms");
+            assert_eq!(c.workers[n - 1].spec.name, "E4asv4");
+            assert_eq!(
+                c.workers.iter().filter(|w| w.spec.name == "B2ms").count(),
+                2 * n / 5
+            );
+            // rack quarters partition the tier's fleet exactly
+            let mut covered = 0;
+            for r in 0..crate::chaos::events::RACKS {
+                covered += crate::chaos::events::rack_members(n, r).len();
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
     fn table3_values() {
         assert_eq!(NODE_TYPES[0].mips, 4029.0);
         assert_eq!(NODE_TYPES[2].ram_mb, 7962.0);

@@ -128,9 +128,33 @@ impl Default for ClusterConfig {
 }
 
 impl ClusterConfig {
+    /// λ the fleet-tier scenarios AND the throughput bench pair with each
+    /// preset (small/medium/large) — one source of truth, so the matrix
+    /// cells and the BENCH_engine.json perf trajectory always measure the
+    /// same regime. Scaled sub-linearly with the fleet: the active set
+    /// grows with n without saturating the wait queue at matrix horizons.
+    pub const SMALL_TIER_LAMBDA: f64 = 3.0;
+    pub const MEDIUM_TIER_LAMBDA: f64 = 12.0;
+    pub const LARGE_TIER_LAMBDA: f64 = 40.0;
+
     pub fn small() -> Self {
         // 10-worker variant matching the h10_m16 surrogate artifact.
         ClusterConfig { counts: [4, 2, 2, 2], ..Default::default() }
+    }
+
+    /// ≈200-worker fleet tier: 4× the paper's testbed in Table-3
+    /// proportions. The paper stops at 50 edge nodes; the medium/large
+    /// tiers are where the O(active) engine core earns its keep and where
+    /// fleet-scale scenario sweeps run.
+    pub fn medium() -> Self {
+        ClusterConfig { counts: [80, 40, 40, 40], ..Default::default() }
+    }
+
+    /// ≈1000-worker fleet tier (20× the paper's testbed, Table-3
+    /// proportions). Chaos rack quarters and plan worker draws scale with
+    /// `total_workers()` automatically.
+    pub fn large() -> Self {
+        ClusterConfig { counts: [400, 200, 200, 200], ..Default::default() }
     }
 
     pub fn total_workers(&self) -> usize {
@@ -536,5 +560,24 @@ mod tests {
     fn small_config_matches_small_surrogate() {
         let c = ExperimentConfig::small();
         assert_eq!(c.cluster.total_workers(), 10);
+    }
+
+    #[test]
+    fn fleet_tiers_scale_in_table3_proportions() {
+        let small = ClusterConfig::small();
+        let medium = ClusterConfig::medium();
+        let large = ClusterConfig::large();
+        assert_eq!(medium.total_workers(), 200);
+        assert_eq!(large.total_workers(), 1000);
+        // same mix as the paper's default [20,10,10,10] → [2,1,1,1] ratios
+        for cfg in [&small, &medium, &large] {
+            let [a, b, c, d] = cfg.counts;
+            assert_eq!(a, 2 * b);
+            assert_eq!(b, c);
+            assert_eq!(c, d);
+        }
+        // non-fleet knobs stay at defaults so tier cells differ only in n
+        assert_eq!(medium.mobile_fraction, large.mobile_fraction);
+        assert_eq!(medium.churn_rate, 0.0);
     }
 }

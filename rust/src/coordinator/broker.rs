@@ -141,7 +141,7 @@ impl<'rt> Broker<'rt> {
             .placeable()
             .into_iter()
             .map(|cid| {
-                let c = &engine.containers[cid];
+                let c = &engine.containers()[cid];
                 SlotInfo {
                     cid,
                     prev_worker: c.worker,

@@ -22,6 +22,13 @@ pub fn seed_config(cfg: &mut ExperimentConfig, seed: u64) {
 
 /// One workload regime of the paper's evaluation (Table 4 / Figs. 16–18
 /// territory), encoded as a config shape plus a deterministic fault plan.
+///
+/// The `Medium*`/`Large*` variants are the **fleet-tier axis**: the same
+/// regimes on the ≈200 / ≈1000-worker presets
+/// ([`crate::config::ClusterConfig::medium`]/[`large`][`crate::config::ClusterConfig::large`]),
+/// with λ scaled up so the active set grows with the fleet. Chaos plans
+/// generate against the tier's worker count, so crash draws and rack
+/// quarters respect the tier's `n`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Scenario {
     /// Fault-free control run.
@@ -36,15 +43,44 @@ pub enum Scenario {
     /// Every worker mobile: channels swing across the full OU range, plus
     /// seeded blackout episodes on top.
     MobilityHeavy,
+    /// Fault-free run on the ≈200-worker tier.
+    MediumClean,
+    /// Light chaos on the ≈200-worker tier.
+    MediumChaosLight,
+    /// Fault-free run on the ≈1000-worker tier.
+    LargeClean,
+    /// Light chaos on the ≈1000-worker tier.
+    LargeChaosLight,
 }
 
 impl Scenario {
-    pub const ALL: [Scenario; 5] = [
+    /// The paper-scale regimes (10-worker fleet).
+    pub const BASE: [Scenario; 5] = [
         Scenario::Clean,
         Scenario::ChaosLight,
         Scenario::ChaosHeavy,
         Scenario::FlashCrowd,
         Scenario::MobilityHeavy,
+    ];
+
+    /// The fleet-tier regimes (200/1000-worker fleets).
+    pub const TIERS: [Scenario; 4] = [
+        Scenario::MediumClean,
+        Scenario::MediumChaosLight,
+        Scenario::LargeClean,
+        Scenario::LargeChaosLight,
+    ];
+
+    pub const ALL: [Scenario; 9] = [
+        Scenario::Clean,
+        Scenario::ChaosLight,
+        Scenario::ChaosHeavy,
+        Scenario::FlashCrowd,
+        Scenario::MobilityHeavy,
+        Scenario::MediumClean,
+        Scenario::MediumChaosLight,
+        Scenario::LargeClean,
+        Scenario::LargeChaosLight,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -54,6 +90,10 @@ impl Scenario {
             Scenario::ChaosHeavy => "chaos-heavy",
             Scenario::FlashCrowd => "flash-crowd",
             Scenario::MobilityHeavy => "mobility-heavy",
+            Scenario::MediumClean => "medium-clean",
+            Scenario::MediumChaosLight => "medium-chaos-light",
+            Scenario::LargeClean => "large-clean",
+            Scenario::LargeChaosLight => "large-chaos-light",
         }
     }
 
@@ -72,12 +112,33 @@ impl Scenario {
         let mut cfg = ExperimentConfig::small();
         cfg.policy = policy;
         cfg.sim.intervals = intervals;
-        cfg.workload.lambda = 3.0;
+        cfg.workload.lambda = crate::config::ClusterConfig::SMALL_TIER_LAMBDA;
+        // fleet-tier axis: swap the 10-worker fleet for the 200/1000
+        // presets BEFORE seeding (seed_config stamps cluster.seed) and
+        // before plan generation (worker draws use the tier's n). The
+        // tier λ constants live next to the presets in `ClusterConfig`.
+        match self {
+            Scenario::MediumClean | Scenario::MediumChaosLight => {
+                cfg.cluster = crate::config::ClusterConfig::medium();
+                cfg.workload.lambda = crate::config::ClusterConfig::MEDIUM_TIER_LAMBDA;
+            }
+            Scenario::LargeClean | Scenario::LargeChaosLight => {
+                cfg.cluster = crate::config::ClusterConfig::large();
+                cfg.workload.lambda = crate::config::ClusterConfig::LARGE_TIER_LAMBDA;
+            }
+            _ => {}
+        }
         seed_config(&mut cfg, seed);
         let n = cfg.cluster.total_workers();
         let plan = match self {
-            Scenario::Clean => FaultPlan::empty(seed, intervals),
-            Scenario::ChaosLight => FaultPlan::generate(seed, intervals, Profile::Light, n),
+            Scenario::Clean | Scenario::MediumClean | Scenario::LargeClean => {
+                FaultPlan::empty(seed, intervals)
+            }
+            Scenario::ChaosLight
+            | Scenario::MediumChaosLight
+            | Scenario::LargeChaosLight => {
+                FaultPlan::generate(seed, intervals, Profile::Light, n)
+            }
             Scenario::ChaosHeavy => FaultPlan::generate(seed, intervals, Profile::Heavy, n),
             Scenario::FlashCrowd => {
                 cfg.workload.lambda = 2.0;
@@ -302,10 +363,12 @@ fn diff_cells(baselines: &[PolicyKind], seeds: &[u64]) -> Vec<MatrixCell> {
 /// Enumerate matrix cells for a filter, in a fixed deterministic order.
 ///
 /// * `"smoke"` — the CI subset: 3 representative policies (heuristic MC,
-///   RL Gillis, the full MAB+DASO stack) × every scenario × the first
-///   seed, plus the MAB+DASO-vs-{MC, Gillis} differential pairs.
-/// * `"full"` / `""` — all 7 policies × every scenario × all seeds, plus
-///   MAB+DASO-vs-every-baseline differential pairs.
+///   RL Gillis, the full MAB+DASO stack) × every base scenario × the
+///   first seed, the fleet-tier scenarios under the cheap MC policy (the
+///   tier axis stays golden-gated without tripling 1000-worker cells in
+///   CI), plus the MAB+DASO-vs-{MC, Gillis} differential pairs.
+/// * `"full"` / `""` — all 7 policies × every scenario (base AND tier) ×
+///   all seeds, plus MAB+DASO-vs-every-baseline differential pairs.
 /// * anything else — substring match against [`MatrixCell::id`] over the
 ///   full cross product (e.g. `"chaos-heavy"`, `"mab-daso/"`, `"/s2"`,
 ///   `"~"` for all differential cells).
@@ -327,10 +390,15 @@ pub fn matrix_cells(filter: &str, seeds: &[u64]) -> Vec<MatrixCell> {
     match filter {
         "smoke" => {
             let first = &seeds[..seeds.len().min(1)];
-            let mut cells: Vec<MatrixCell> = cross(&smoke_policies, &Scenario::ALL, first)
+            let mut cells: Vec<MatrixCell> = cross(&smoke_policies, &Scenario::BASE, first)
                 .into_iter()
                 .map(MatrixCell::Single)
                 .collect();
+            cells.extend(
+                cross(&[PolicyKind::ModelCompression], &Scenario::TIERS, first)
+                    .into_iter()
+                    .map(MatrixCell::Single),
+            );
             cells.extend(diff_cells(
                 &[PolicyKind::ModelCompression, PolicyKind::Gillis],
                 first,
@@ -414,11 +482,62 @@ mod tests {
     }
 
     #[test]
+    fn fleet_tier_scenarios_scale_the_fleet_and_the_plan() {
+        let (cfg_m, plan_m) =
+            Scenario::MediumChaosLight.build(PolicyKind::ModelCompression, 2, 12);
+        assert_eq!(cfg_m.cluster.total_workers(), 200);
+        assert!(cfg_m.workload.lambda > 3.0, "tier cells carry more load");
+        let (cfg_l, plan_l) =
+            Scenario::LargeChaosLight.build(PolicyKind::ModelCompression, 2, 12);
+        assert_eq!(cfg_l.cluster.total_workers(), 1000);
+        // plan worker draws respect the tier's n — and actually use the
+        // headroom beyond the small fleet across a few seeds
+        let mut beyond_small = false;
+        for seed in 1..6u64 {
+            let (_, plan) =
+                Scenario::LargeChaosLight.build(PolicyKind::ModelCompression, seed, 20);
+            for e in &plan.events {
+                if let Some(w) = e.event.worker() {
+                    assert!(w < 1000);
+                    beyond_small |= w >= 10;
+                }
+            }
+        }
+        assert!(beyond_small, "large-tier plans must target the big fleet");
+        // clean tier cells are fault-free controls
+        let (_, plan_clean) = Scenario::LargeClean.build(PolicyKind::ModelCompression, 2, 12);
+        assert!(plan_clean.events.is_empty());
+        // same coordinates, different tier ⇒ different fleet, same seeds
+        assert_eq!(cfg_m.workload.seed, cfg_l.workload.seed);
+        assert_eq!(plan_m.intervals, plan_l.intervals);
+    }
+
+    #[test]
+    fn base_and_tiers_partition_all() {
+        let mut combined: Vec<Scenario> = Scenario::BASE.to_vec();
+        combined.extend(Scenario::TIERS);
+        assert_eq!(combined, Scenario::ALL.to_vec());
+    }
+
+    #[test]
     fn smoke_filter_is_small_and_full_is_the_cross_product() {
         let seeds = [1u64, 2];
         let smoke = matrix_cells("smoke", &seeds);
-        // 3 policies × scenarios × 1 seed, + 2 baselines × 2 scenarios diff
-        assert_eq!(smoke.len(), 3 * Scenario::ALL.len() + 4);
+        // 3 policies × base scenarios × 1 seed, + MC × tier scenarios,
+        // + 2 baselines × 2 scenarios diff
+        assert_eq!(
+            smoke.len(),
+            3 * Scenario::BASE.len() + Scenario::TIERS.len() + 4
+        );
+        // the tier axis is present in smoke (golden-gated), MC-only
+        for s in Scenario::TIERS {
+            let with = smoke
+                .iter()
+                .filter(|c| c.id().contains(s.name()))
+                .collect::<Vec<_>>();
+            assert_eq!(with.len(), 1, "{} must appear exactly once in smoke", s.name());
+            assert!(with[0].id().starts_with("mc/"));
+        }
         let full = matrix_cells("full", &seeds);
         // singles + MAB+DASO-vs-6-baselines × {clean, chaos-heavy} × seeds
         assert_eq!(

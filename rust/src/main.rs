@@ -15,6 +15,11 @@
 //!                                  (ids like mab-daso~mc/clean/s1; filter
 //!                                  with '~'), parallel cells, golden
 //!                                  gating, Table-4 ordering gate, bug-base
+//!   bench [--tier small|medium|large|all] [--intervals N] [--seed S]
+//!         [--scenario clean|chaos-light] [--out FILE]
+//!                                  engine throughput per fleet tier
+//!                                  (10/200/1000 workers), written to
+//!                                  BENCH_engine.json — the perf trajectory
 //!   serve [--addr A] [--threads N] serving front-end
 //!   info                           artifact + cluster inventory
 //!
@@ -459,6 +464,68 @@ fn cmd_matrix(flags: std::collections::HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench(flags: std::collections::HashMap<String, String>) -> Result<()> {
+    use splitplace::benchlib::throughput;
+
+    let tier_flag = flags.get("tier").map(String::as_str).unwrap_or("all");
+    let tiers: Vec<throughput::TierSpec> = match tier_flag {
+        "all" => throughput::tiers(),
+        name => vec![throughput::tier_by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("--tier must be small|medium|large|all, got {name}"))?],
+    };
+    let intervals: usize =
+        flags.get("intervals").map(|s| s.parse()).transpose()?.unwrap_or(50);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(7);
+    let chaos = match flags.get("scenario").map(String::as_str).unwrap_or("chaos-light") {
+        "clean" => false,
+        "chaos-light" => true,
+        other => bail!("--scenario must be clean|chaos-light, got {other}"),
+    };
+    let out = flags.get("out").cloned().unwrap_or_else(|| "BENCH_engine.json".into());
+
+    let mut results = Vec::new();
+    for tier in &tiers {
+        eprintln!("bench: {} tier, {intervals} intervals, seed {seed}...", tier.name);
+        results.push(throughput::measure(tier, intervals, seed, chaos)?);
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Engine throughput — {} ({} intervals, seed {seed})",
+            if chaos { "chaos-light" } else { "clean" },
+            intervals
+        ),
+        &[
+            "tier",
+            "workers",
+            "wall ms",
+            "intervals/s",
+            "container-intervals/s",
+            "admitted",
+            "done",
+            "fail",
+        ],
+    );
+    for r in &results {
+        t.row(vec![
+            r.tier.clone(),
+            r.workers.to_string(),
+            format!("{:.0}", r.wall_ms),
+            format!("{:.1}", r.intervals_per_sec),
+            format!("{:.0}", r.container_intervals_per_sec),
+            r.admitted.to_string(),
+            r.completed.to_string(),
+            r.failed.to_string(),
+        ]);
+    }
+    t.print();
+
+    throughput::write_json(std::path::Path::new(&out), &results)
+        .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+    eprintln!("perf record written to {out}");
+    Ok(())
+}
+
 fn cmd_serve(flags: std::collections::HashMap<String, String>) -> Result<()> {
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7077".into());
     let threads: usize = flags.get("threads").map(|t| t.parse()).transpose()?.unwrap_or(4);
@@ -526,10 +593,13 @@ fn main() -> Result<()> {
         "compare" => cmd_compare(flags),
         "chaos" => cmd_chaos(flags),
         "matrix" => cmd_matrix(flags),
+        "bench" => cmd_bench(flags),
         "serve" => cmd_serve(flags),
         "info" => cmd_info(),
         other => {
-            eprintln!("unknown command '{other}'; try: run, compare, chaos, matrix, serve, info");
+            eprintln!(
+                "unknown command '{other}'; try: run, compare, chaos, matrix, bench, serve, info"
+            );
             std::process::exit(2);
         }
     }

@@ -118,6 +118,82 @@ pub struct CmdRecord {
     pub effect: Effect,
 }
 
+/// The engine's availability/degradation surface as a value: what a fresh
+/// engine would hold after replaying a command ledger. The
+/// `ledger-replay-consistent` oracle compares [`FaultSurface::replay`] of
+/// the engine's own ledger against [`Engine::fault_surface`] — since the
+/// bus is the only mutation path, any divergence means a command mutated
+/// state it did not record (or recorded state it did not mutate). This
+/// also pins the refactored incremental indexes to the ledger: a desynced
+/// index surfaces as a surface mismatch the moment it feeds back into
+/// availability handling.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSurface {
+    pub online: Vec<bool>,
+    pub mips_factor: Vec<f64>,
+    pub ram_factor: Vec<f64>,
+    pub clock_skew_s: Vec<f64>,
+    pub churn_rate: f64,
+}
+
+impl FaultSurface {
+    /// The surface of a freshly built `n_workers` engine.
+    pub fn baseline(n_workers: usize) -> FaultSurface {
+        FaultSurface {
+            online: vec![true; n_workers],
+            mips_factor: vec![1.0; n_workers],
+            ram_factor: vec![1.0; n_workers],
+            clock_skew_s: vec![0.0; n_workers],
+            churn_rate: 0.0,
+        }
+    }
+
+    /// Absorb one command, mirroring [`Engine::apply`]'s clamps exactly
+    /// (identical float operations, so comparisons are exact, not
+    /// approximate). Commands with no surface effect are ignored;
+    /// out-of-range targets are no-ops like the engine's.
+    pub fn absorb(&mut self, cmd: &EngineCmd) {
+        let n = self.online.len();
+        if let Some(w) = cmd.worker() {
+            if w >= n {
+                return;
+            }
+        }
+        match *cmd {
+            EngineCmd::SetOnline { worker, up } => self.online[worker] = up,
+            EngineCmd::Crash { worker } | EngineCmd::ForceOfflineNoEvict { worker } => {
+                self.online[worker] = false;
+            }
+            EngineCmd::Recover { worker } => self.online[worker] = true,
+            EngineCmd::SetMipsFactor { worker, factor } => {
+                self.mips_factor[worker] = factor.clamp(0.05, 1.0);
+            }
+            EngineCmd::SetRamFactor { worker, factor } => {
+                self.ram_factor[worker] = factor.clamp(0.1, 1.0);
+            }
+            EngineCmd::SetClockSkew { worker, skew_s } => {
+                self.clock_skew_s[worker] = skew_s.clamp(0.0, 600.0);
+            }
+            EngineCmd::SetChurn { rate } => self.churn_rate = rate.clamp(0.0, 1.0),
+            EngineCmd::SetChannelOverride { .. }
+            | EngineCmd::CorruptPayload { .. }
+            | EngineCmd::CorruptPayloadSwallowed { .. }
+            | EngineCmd::FailTasksOlderThan { .. } => {}
+        }
+    }
+
+    /// Replay a full ledger onto a fresh surface. Churn toggles are
+    /// ledger-recorded like external commands, so the replay tracks them
+    /// too — the comparison holds even on churny runs.
+    pub fn replay(n_workers: usize, ledger: &[CmdRecord]) -> FaultSurface {
+        let mut surface = FaultSurface::baseline(n_workers);
+        for rec in ledger {
+            surface.absorb(&rec.cmd);
+        }
+        surface
+    }
+}
+
 impl Engine {
     /// Apply one typed command and record it in the ledger. This is the
     /// only mutation path for the engine's fault/availability surface.
@@ -128,6 +204,18 @@ impl Engine {
     /// Full command history, in application order.
     pub fn ledger(&self) -> &[CmdRecord] {
         &self.cmd_ledger
+    }
+
+    /// Snapshot of the current availability/degradation surface (the state
+    /// the command bus owns). See [`FaultSurface`].
+    pub fn fault_surface(&self) -> FaultSurface {
+        FaultSurface {
+            online: self.online.clone(),
+            mips_factor: self.mips_factor.clone(),
+            ram_factor: self.ram_factor.clone(),
+            clock_skew_s: self.clock_skew_s.clone(),
+            churn_rate: self.churn_rate,
+        }
     }
 
     pub(super) fn apply_with_origin(&mut self, cmd: EngineCmd, origin: CmdOrigin) -> Effect {
@@ -237,14 +325,13 @@ impl Engine {
 
     /// Tasks with an input payload currently staging toward `worker`
     /// (deterministic: container order, deduplicated, sorted by task id).
+    /// Transferring containers live in the worker's residency index, so
+    /// this is O(resident on `worker`).
     fn in_flight_tasks(&self, worker: usize) -> Vec<u64> {
-        let mut tasks: Vec<u64> = self
-            .containers
+        let mut tasks: Vec<u64> = self.resident_idx[worker]
             .iter()
-            .filter(|c| {
-                matches!(c.state, ContainerState::Transferring { .. })
-                    && c.worker == Some(worker)
-            })
+            .map(|&cid| &self.containers[cid])
+            .filter(|c| matches!(c.state, ContainerState::Transferring { .. }))
             .map(|c| c.task_id)
             .collect();
         tasks.sort_unstable();
@@ -254,16 +341,26 @@ impl Engine {
 
     pub(super) fn evict_worker(&mut self, w: usize, drop_progress: bool) -> usize {
         let mut evicted = 0;
-        for c in self.containers.iter_mut() {
-            let resident_here = match c.state {
+        // The active list covers every evictable container (terminal ones
+        // never hold a worker), including in-flight migrations FROM `w`,
+        // which the residency index files under their destination. None
+        // of the transitions below is terminal, so indexed iteration is
+        // stable; id order matches the old full pool scan.
+        for i in 0..self.active.len() {
+            let cid = self.active[i];
+            let (state, worker) = {
+                let c = &self.containers[cid];
+                (c.state, c.worker)
+            };
+            let resident_here = match state {
                 ContainerState::Running | ContainerState::Transferring { .. } => {
-                    c.worker == Some(w)
+                    worker == Some(w)
                 }
-                ContainerState::Migrating { to, .. } => to == w || c.worker == Some(w),
+                ContainerState::Migrating { to, .. } => to == w || worker == Some(w),
                 ContainerState::Blocked => {
                     // clear a chain reservation on the failed worker
-                    if c.worker == Some(w) {
-                        c.worker = None;
+                    if worker == Some(w) {
+                        self.set_container(cid, ContainerState::Blocked, None);
                     }
                     false
                 }
@@ -271,10 +368,9 @@ impl Engine {
             };
             if resident_here {
                 // checkpoint (or drop): input must be re-staged either way
-                c.worker = None;
-                c.state = ContainerState::Queued;
+                self.set_container(cid, ContainerState::Queued, None);
                 if drop_progress {
-                    c.mi_done = 0.0;
+                    self.containers[cid].mi_done = 0.0;
                 }
                 evicted += 1;
             }
@@ -574,6 +670,55 @@ mod tests {
         assert_eq!(e.ledger()[1].interval, 1);
         assert!(matches!(e.ledger()[1].cmd, EngineCmd::Crash { worker: 1 }));
         assert!(matches!(e.ledger()[1].effect, Effect::Evicted { containers: 0 }));
+    }
+
+    #[test]
+    fn fault_surface_replay_reproduces_the_engine() {
+        let mut e = engine();
+        assert_eq!(
+            FaultSurface::replay(e.workers(), e.ledger()),
+            e.fault_surface(),
+            "empty ledger replays to the baseline surface"
+        );
+        e.apply(EngineCmd::Crash { worker: 2 });
+        e.apply(EngineCmd::SetMipsFactor { worker: 1, factor: 0.003 }); // clamps to 0.05
+        e.apply(EngineCmd::SetRamFactor { worker: 3, factor: 0.5 });
+        e.apply(EngineCmd::SetClockSkew { worker: 4, skew_s: 1e9 }); // clamps to 600
+        e.apply(EngineCmd::SetChurn { rate: 2.0 }); // clamps to 1.0
+        e.step_interval(); // churn toggles (if any) land in the ledger too
+        e.apply(EngineCmd::Recover { worker: 2 });
+        e.apply(EngineCmd::SetOnline { worker: 5, up: false });
+        e.apply(EngineCmd::Crash { worker: 99 }); // out-of-range no-op
+        let replayed = FaultSurface::replay(e.workers(), e.ledger());
+        assert_eq!(replayed, e.fault_surface());
+        assert!(!replayed.online[5]);
+        assert_eq!(replayed.mips_factor[1], 0.05);
+        assert_eq!(replayed.clock_skew_s[4], 600.0);
+        assert_eq!(replayed.churn_rate, 1.0);
+    }
+
+    #[test]
+    fn eviction_keeps_the_incremental_indices_exact() {
+        let mut e = engine();
+        e.admit(task(1, App::Mnist, 16_000), SplitDecision::Layer);
+        e.admit(task(2, App::Cifar100, 32_000), SplitDecision::Semantic);
+        // chain on worker 2, semantic fragments spread across 2..6
+        e.apply_placement(&[(0, 2), (1, 2), (2, 2), (3, 2), (4, 3), (5, 4), (6, 5)]);
+        e.verify_indices().unwrap();
+        e.step_interval();
+        e.verify_indices().unwrap();
+        // migrate one container away, then crash its destination mid-flight
+        let moved = e.apply_placement(&[(3, 6)]);
+        if !moved.is_empty() {
+            e.verify_indices().unwrap();
+            e.apply(EngineCmd::Crash { worker: 6 });
+        }
+        e.apply(EngineCmd::Crash { worker: 2 });
+        e.verify_indices().unwrap();
+        e.apply(EngineCmd::CorruptPayload { worker: 3 });
+        e.verify_indices().unwrap();
+        e.step_interval();
+        e.verify_indices().unwrap();
     }
 
     #[test]

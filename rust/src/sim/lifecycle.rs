@@ -68,9 +68,16 @@ impl Engine {
                 t_migrate: 0.0,
             });
             ids.push(id);
+            // ids are allocated in ascending order, so a plain push keeps
+            // the active list id-sorted
+            self.active.push(id);
         }
-        self.tasks
-            .insert(task.id, TaskEntry { task, containers: ids, done: false, failed: false });
+        self.active_tasks.insert(task.id);
+        let remaining = ids.len();
+        self.tasks.insert(
+            task.id,
+            TaskEntry { task, containers: ids, done: false, failed: false, remaining },
+        );
     }
 
     /// Apply a placement: allocations for queued containers, migrations for
@@ -98,21 +105,16 @@ impl Engine {
                     // transfer starts the moment the predecessor finishes.
                     ContainerState::Blocked => (ContainerState::Blocked, Some(w)),
                     ContainerState::Running if c.worker != Some(w) => {
-                        // CRIU migration: checkpoint resident set, move it.
+                        // CRIU migration: checkpoint resident set, move it;
+                        // `worker` stays the source until arrival, resident
+                        // RAM counts at the destination.
                         let t = self.payload_transfer_s(c.worker, w, c.ram_mb * 0.5);
                         (ContainerState::Migrating { until_s: now + t, to: w }, c.worker)
                     }
                     _ => continue,
                 }
             };
-            let c = &mut self.containers[cid];
-            c.state = state;
-            c.worker = worker.or(Some(w));
-            if let ContainerState::Migrating { .. } = c.state {
-                // worker updated on arrival
-            } else {
-                c.worker = Some(w);
-            }
+            self.set_container(cid, state, worker);
             applied.push(cid);
         }
         applied
@@ -134,12 +136,12 @@ impl Engine {
         let task = e.task.clone();
         let cids = e.containers.clone();
         for &cid in &cids {
-            let c = &mut self.containers[cid];
-            if !c.is_done() {
-                c.state = ContainerState::Failed;
-                c.worker = None;
+            if !self.containers[cid].is_done() {
+                self.set_container(cid, ContainerState::Failed, None);
             }
         }
+        self.n_failed += 1;
+        self.active_tasks.remove(&id);
         self.pending_failed.push(FailedTask {
             task_id: id,
             app: task.app,
@@ -164,11 +166,13 @@ impl Engine {
     /// (the command bus records them as the command's effect).
     pub(super) fn fail_tasks_older_than_collect(&mut self, age_s: f64) -> Vec<u64> {
         let now = self.now_s;
+        // walk only in-flight tasks (ascending id, like the old full
+        // task-map filter) — O(active tasks), not O(ever admitted)
         let ids: Vec<u64> = self
-            .tasks
+            .active_tasks
             .iter()
-            .filter(|(_, e)| !e.done && now - e.task.arrival_s > age_s)
-            .map(|(id, _)| *id)
+            .copied()
+            .filter(|id| now - self.tasks[id].task.arrival_s > age_s)
             .collect();
         for id in &ids {
             self.fail_task(*id);
@@ -202,14 +206,12 @@ impl Engine {
             self.cluster.workers.iter().map(|w| &w.spec).collect();
         let aec = energy::normalized_aec(&specs, &utils, self.cfg.interval_seconds);
 
-        // snapshots
+        // snapshots — derived from the active index, O(workers + active)
         let resident = self.resident_ram();
         let mut counts = vec![0usize; n];
-        for c in &self.containers {
-            if c.is_active() {
-                if let Some(w) = c.worker {
-                    counts[w] += 1;
-                }
+        for &cid in &self.active {
+            if let Some(w) = self.containers[cid].worker {
+                counts[w] += 1;
             }
         }
         let snapshots = (0..n)
@@ -223,9 +225,9 @@ impl Engine {
             .collect();
 
         let queued = self
-            .containers
+            .active
             .iter()
-            .filter(|c| matches!(c.state, ContainerState::Queued))
+            .filter(|&&cid| matches!(self.containers[cid].state, ContainerState::Queued))
             .count();
 
         let report = IntervalReport {
@@ -244,52 +246,66 @@ impl Engine {
         report
     }
 
+    /// One integrator sub-step, O(active + workers): every loop below
+    /// walks the active list or the per-worker residency index (both
+    /// id-sorted, matching the old full pool scan's visit order so float
+    /// accumulation is bit-identical), never the whole container pool.
     fn sub_step(&mut self, dt: f64) {
         let t_end = self.now_s + dt;
 
-        // 1. transfers & migrations that finish within this sub-step
-        for i in 0..self.containers.len() {
-            match self.containers[i].state {
+        // 1. transfers & migrations that finish within this sub-step.
+        //    No transition in this phase is terminal or changes residency
+        //    (Transferring→Running and Migrating→Running keep their home),
+        //    so indexing into the active list stays stable.
+        for i in 0..self.active.len() {
+            let cid = self.active[i];
+            match self.containers[cid].state {
                 ContainerState::Transferring { until_s } => {
-                    let c = &mut self.containers[i];
                     let spent = (until_s.min(t_end) - self.now_s).max(0.0).min(dt);
+                    let c = &mut self.containers[cid];
                     c.t_transfer += spent;
-                    if let Some(w) = c.worker {
+                    let worker = c.worker;
+                    if let Some(w) = worker {
                         self.xfer_s[w] += spent;
                     }
                     if until_s <= t_end {
-                        c.state = ContainerState::Running;
+                        self.set_container(cid, ContainerState::Running, worker);
                     }
                 }
                 ContainerState::Migrating { until_s, to } => {
-                    let c = &mut self.containers[i];
                     let spent = (until_s.min(t_end) - self.now_s).max(0.0).min(dt);
-                    c.t_migrate += spent;
+                    self.containers[cid].t_migrate += spent;
                     self.xfer_s[to] += spent;
                     if until_s <= t_end {
-                        c.worker = Some(to);
-                        c.state = ContainerState::Running;
+                        self.set_container(cid, ContainerState::Running, Some(to));
                     }
                 }
                 ContainerState::Queued => {
-                    self.containers[i].t_wait += dt;
+                    self.containers[cid].t_wait += dt;
                 }
                 _ => {}
             }
         }
 
-        // 2. fair-share CPU with RAM-pressure slowdown
+        // 2. fair-share CPU with RAM-pressure slowdown: per worker, the
+        //    Running members of its residency index (filtered in id order,
+        //    exactly the per-worker running set the old scan built).
         let n = self.cluster.len();
-        let mut running: Vec<Vec<ContainerId>> = vec![Vec::new(); n];
-        let mut resident = vec![0.0f64; n];
-        for c in &self.containers {
-            if let (ContainerState::Running, Some(w)) = (&c.state, c.worker) {
-                running[w].push(c.id);
-                resident[w] += c.ram_mb;
-            }
-        }
+        let mut running: Vec<ContainerId> = Vec::new();
         for w in 0..n {
-            if running[w].is_empty() {
+            if self.resident_idx[w].is_empty() {
+                continue;
+            }
+            running.clear();
+            let mut resident = 0.0f64;
+            for &cid in &self.resident_idx[w] {
+                let c = &self.containers[cid];
+                if matches!(c.state, ContainerState::Running) {
+                    running.push(cid);
+                    resident += c.ram_mb;
+                }
+            }
+            if running.is_empty() {
                 continue;
             }
             let spec = &self.cluster.workers[w].spec;
@@ -301,21 +317,25 @@ impl Engine {
             // containers rather than running one container faster. This
             // keeps layer response times tight (paper: 9.92±0.91).
             let per_core = mips / spec.cores as f64;
-            let share = (mips / running[w].len() as f64).min(per_core * 2.0);
+            let share = (mips / running.len() as f64).min(per_core * 2.0);
             let ram_cap = self.effective_ram_mb(w);
-            let thrash = if resident[w] > ram_cap {
-                (ram_cap / resident[w]).max(THRASH_FLOOR)
+            let thrash = if resident > ram_cap {
+                (ram_cap / resident).max(THRASH_FLOOR)
             } else {
                 1.0
             };
-            let used: f64 = share * running[w].len() as f64;
+            let used: f64 = share * running.len() as f64;
             self.busy_s[w] += dt * (used / mips).min(1.0);
-            for &cid in &running[w] {
-                let c = &mut self.containers[cid];
-                c.mi_done += share * thrash * dt;
-                c.t_exec += dt;
-                if c.mi_done >= c.mi_total {
-                    c.state = ContainerState::Done { at_s: t_end };
+            for &cid in &running {
+                let done = {
+                    let c = &mut self.containers[cid];
+                    c.mi_done += share * thrash * dt;
+                    c.t_exec += dt;
+                    c.mi_done >= c.mi_total
+                };
+                if done {
+                    let worker = self.containers[cid].worker;
+                    self.set_container(cid, ContainerState::Done { at_s: t_end }, worker);
                 }
             }
         }
@@ -323,29 +343,34 @@ impl Engine {
         // 3. unblock chain successors of containers that just finished.
         //    Pre-placed successors (worker reserved at placement time)
         //    start their input transfer immediately; unreserved ones fall
-        //    back to the wait queue for the next placement round.
-        for i in 0..self.containers.len() {
-            if let ContainerState::Blocked = self.containers[i].state {
-                if let Some(prev) = self.containers[i].prev {
-                    if self.containers[prev].is_done() {
-                        let src = self.containers[prev].worker;
-                        let dst = self.containers[i].worker;
-                        match dst {
-                            Some(w) => {
-                                let mb = self.containers[i].input_mb;
-                                let t = self.payload_transfer_s(src, w, mb);
-                                let c = &mut self.containers[i];
-                                c.input_src = src;
-                                c.state =
-                                    ContainerState::Transferring { until_s: t_end + t };
-                            }
-                            None => {
-                                let c = &mut self.containers[i];
-                                c.input_src = src;
-                                c.state = ContainerState::Queued;
-                            }
-                        }
-                    }
+        //    back to the wait queue for the next placement round. Neither
+        //    transition is terminal, so the active list stays stable.
+        for i in 0..self.active.len() {
+            let cid = self.active[i];
+            if !matches!(self.containers[cid].state, ContainerState::Blocked) {
+                continue;
+            }
+            let Some(prev) = self.containers[cid].prev else {
+                continue;
+            };
+            if !self.containers[prev].is_done() {
+                continue;
+            }
+            let src = self.containers[prev].worker;
+            match self.containers[cid].worker {
+                Some(w) => {
+                    let mb = self.containers[cid].input_mb;
+                    let t = self.payload_transfer_s(src, w, mb);
+                    self.containers[cid].input_src = src;
+                    self.set_container(
+                        cid,
+                        ContainerState::Transferring { until_s: t_end + t },
+                        Some(w),
+                    );
+                }
+                None => {
+                    self.containers[cid].input_src = src;
+                    self.set_container(cid, ContainerState::Queued, None);
                 }
             }
         }
@@ -353,16 +378,24 @@ impl Engine {
         self.now_s = t_end;
     }
 
+    /// Drain tasks whose remaining-fragment counter hit zero this
+    /// sub-step — O(completed-this-step), not a task-map scan. The drain
+    /// is sorted so completions surface in task-id order per sub-step,
+    /// exactly as the old ordered map filter emitted them.
     fn collect_completions(&mut self, out: &mut Vec<CompletedTask>) {
-        let ids: Vec<u64> = self
-            .tasks
-            .iter()
-            .filter(|(_, e)| !e.done && e.containers.iter().all(|&c| self.containers[c].is_done()))
-            .map(|(id, _)| *id)
-            .collect();
+        if self.pending_done.is_empty() {
+            return;
+        }
+        let mut ids = std::mem::take(&mut self.pending_done);
+        ids.sort_unstable();
         for id in ids {
             let e = self.tasks.get_mut(&id).unwrap();
+            if e.done {
+                continue;
+            }
             e.done = true;
+            self.n_completed += 1;
+            self.active_tasks.remove(&id);
             let task = e.task.clone();
             let cids = e.containers.clone();
             let isec = self.cfg.interval_seconds;

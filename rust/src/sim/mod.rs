@@ -12,6 +12,16 @@
 //! [`faults::EngineCmd`] command bus and its audit ledger — the only
 //! mutation path for the fault/availability surface), and [`network`]
 //! (payload-movement costs, channel refresh).
+//!
+//! The core is an **indexed active set**: an id-sorted list of in-flight
+//! containers plus per-worker residency indexes and per-task
+//! remaining-fragment counters, all maintained through the single
+//! `set_container` choke point. The integrator hot path costs O(active)
+//! per sub-step instead of O(everything ever admitted) — what makes
+//! 1000-worker, long-horizon fleets sweepable — while visiting containers
+//! in the same id order as the old full scans, so trajectories are
+//! bit-identical (`Engine::verify_indices` cross-checks the indexes
+//! against the full-scan derivations).
 
 pub mod container;
 pub mod faults;
@@ -20,7 +30,7 @@ pub mod network;
 pub mod state;
 
 pub use container::{Container, ContainerId, ContainerState};
-pub use faults::{CmdOrigin, CmdRecord, Effect, EngineCmd};
+pub use faults::{CmdOrigin, CmdRecord, Effect, EngineCmd, FaultSurface};
 pub use state::{
     CompletedTask, Engine, FailedTask, IntervalReport, WorkerSnapshot, RAM_OVERCOMMIT,
 };

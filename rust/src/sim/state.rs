@@ -16,7 +16,7 @@
 // consumers (the MAB response-time EMA, Gillis RL updates), and std's
 // HashMap order varies per process — which would break the chaos engine's
 // bit-identical replay guarantee.
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::cluster::mobility::{ChannelState, MobilityModel};
 use crate::cluster::node::Cluster;
@@ -104,7 +104,11 @@ pub struct Engine {
     pub(super) mobility: MobilityModel,
     pub channels: Vec<ChannelState>,
     pub(super) cfg: SimConfig,
-    pub containers: Vec<Container>,
+    /// The container pool. `pub(super)` on purpose: index correctness
+    /// depends on every state/worker mutation routing through
+    /// [`Engine::set_container`], so outside `sim` the pool is readable
+    /// only via [`Engine::containers`].
+    pub(super) containers: Vec<Container>,
     pub(super) tasks: BTreeMap<u64, TaskEntry>,
     pub now_s: f64,
     pub interval: usize,
@@ -134,6 +138,27 @@ pub struct Engine {
     // scratch: per-worker busy seconds within the current interval
     pub(super) busy_s: Vec<f64>,
     pub(super) xfer_s: Vec<f64>,
+    // ---- indexed active-set core -----------------------------------------
+    // The hot path must cost O(in-flight work), not O(everything ever
+    // admitted). Every container state/worker mutation goes through
+    // `set_container`, which keeps these indexes exact; `verify_indices`
+    // cross-checks them against the old full-scan derivations.
+    /// Non-terminal containers, ascending by id — the same visit order the
+    /// old full pool scan had, so float accumulation (xfer/busy seconds,
+    /// resident sums) is bit-identical to the pre-index engine.
+    pub(super) active: Vec<ContainerId>,
+    /// Per-worker containers currently holding resident RAM there
+    /// (Running/Transferring/Blocked at `worker`, Migrating at `to`),
+    /// ascending by id for the same summation-order guarantee.
+    pub(super) resident_idx: Vec<Vec<ContainerId>>,
+    /// Tasks whose remaining-fragment counter hit zero this sub-step;
+    /// drained (in task-id order) by completion collection.
+    pub(super) pending_done: Vec<u64>,
+    /// Tasks still in flight (not done, not failed), ascending by id —
+    /// starvation sweeps walk this instead of the full task map.
+    pub(super) active_tasks: BTreeSet<u64>,
+    pub(super) n_completed: usize,
+    pub(super) n_failed: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -142,6 +167,25 @@ pub(super) struct TaskEntry {
     pub(super) containers: Vec<ContainerId>,
     pub(super) done: bool,
     pub(super) failed: bool,
+    /// Fragments not yet `Done` — completion detection is O(1) per
+    /// terminal transition instead of a task-map scan.
+    pub(super) remaining: usize,
+}
+
+/// Insert into an id-sorted index (no-op if already present).
+pub(super) fn insert_sorted(v: &mut Vec<ContainerId>, cid: ContainerId) {
+    if let Err(pos) = v.binary_search(&cid) {
+        v.insert(pos, cid);
+    }
+}
+
+/// Remove from an id-sorted index (no-op if absent). Positional remove —
+/// not swap_remove — so the id-sorted invariant (and with it the float
+/// summation order) survives without a re-sort.
+pub(super) fn remove_sorted(v: &mut Vec<ContainerId>, cid: ContainerId) {
+    if let Ok(pos) = v.binary_search(&cid) {
+        v.remove(pos);
+    }
 }
 
 impl Engine {
@@ -170,7 +214,155 @@ impl Engine {
             cmd_ledger: Vec::new(),
             busy_s: vec![0.0; n],
             xfer_s: vec![0.0; n],
+            active: Vec::new(),
+            resident_idx: vec![Vec::new(); n],
+            pending_done: Vec::new(),
+            active_tasks: BTreeSet::new(),
+            n_completed: 0,
+            n_failed: 0,
         }
+    }
+
+    /// Where a `(state, worker)` combination holds resident RAM, if
+    /// anywhere. Single source of truth for the residency index AND for
+    /// [`Engine::resident_ram`].
+    pub(super) fn residency(state: &ContainerState, worker: Option<usize>) -> Option<usize> {
+        match state {
+            ContainerState::Running
+            | ContainerState::Transferring { .. }
+            | ContainerState::Blocked => worker,
+            ContainerState::Migrating { to, .. } => Some(*to),
+            _ => None,
+        }
+    }
+
+    /// The choke point for container state/worker mutation: updates the
+    /// container AND the active list, residency index, remaining-fragment
+    /// counter and completion queue in one place. Everything that mutates
+    /// `state`/`worker` must route through here — a direct field write
+    /// desynchronizes the indexes (caught by [`Engine::verify_indices`]).
+    pub(super) fn set_container(
+        &mut self,
+        cid: ContainerId,
+        state: ContainerState,
+        worker: Option<usize>,
+    ) {
+        let (old_state, old_worker) = {
+            let c = &self.containers[cid];
+            (c.state, c.worker)
+        };
+        let old_home = Self::residency(&old_state, old_worker);
+        let new_home = Self::residency(&state, worker);
+        {
+            let c = &mut self.containers[cid];
+            c.state = state;
+            c.worker = worker;
+        }
+        if old_home != new_home {
+            if let Some(w) = old_home {
+                remove_sorted(&mut self.resident_idx[w], cid);
+            }
+            if let Some(w) = new_home {
+                insert_sorted(&mut self.resident_idx[w], cid);
+            }
+        }
+        let was_terminal =
+            matches!(old_state, ContainerState::Done { .. } | ContainerState::Failed);
+        let is_terminal = matches!(state, ContainerState::Done { .. } | ContainerState::Failed);
+        debug_assert!(!was_terminal || is_terminal, "terminal containers never revive");
+        if !was_terminal && is_terminal {
+            remove_sorted(&mut self.active, cid);
+            if matches!(state, ContainerState::Done { .. }) {
+                let tid = self.containers[cid].task_id;
+                if let Some(e) = self.tasks.get_mut(&tid) {
+                    e.remaining = e.remaining.saturating_sub(1);
+                    if e.remaining == 0 && !e.done {
+                        self.pending_done.push(tid);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Recompute every incremental index from a full scan (the pre-index
+    /// engine's derivations) and compare. Used by the index-consistency
+    /// property tests; any divergence is a bug in [`Engine::set_container`]
+    /// routing.
+    pub fn verify_indices(&self) -> Result<(), String> {
+        let want_active: Vec<ContainerId> =
+            self.containers.iter().filter(|c| c.is_active()).map(|c| c.id).collect();
+        if want_active != self.active {
+            return Err(format!(
+                "active list diverged: index has {} entries, full scan {}",
+                self.active.len(),
+                want_active.len()
+            ));
+        }
+        let mut want_res: Vec<Vec<ContainerId>> = vec![Vec::new(); self.cluster.len()];
+        for c in &self.containers {
+            if let Some(w) = Self::residency(&c.state, c.worker) {
+                want_res[w].push(c.id);
+            }
+        }
+        if want_res != self.resident_idx {
+            let w = (0..want_res.len())
+                .find(|&w| want_res[w] != self.resident_idx[w])
+                .unwrap();
+            return Err(format!(
+                "residency index diverged at worker {w}: index {:?}, full scan {:?}",
+                self.resident_idx[w], want_res[w]
+            ));
+        }
+        // resident-RAM totals must be BIT-identical to the old full-scan
+        // derivation (same terms, same order), not merely approximately so
+        let mut want_ram = vec![0.0f64; self.cluster.len()];
+        for c in &self.containers {
+            if let Some(w) = Self::residency(&c.state, c.worker) {
+                want_ram[w] += c.ram_mb;
+            }
+        }
+        let got_ram = self.resident_ram();
+        for (w, (want, got)) in want_ram.iter().zip(&got_ram).enumerate() {
+            if want.to_bits() != got.to_bits() {
+                return Err(format!(
+                    "resident RAM diverged at worker {w}: index {got}, full scan {want}"
+                ));
+            }
+        }
+        for (id, e) in &self.tasks {
+            let want =
+                e.containers.iter().filter(|&&c| !self.containers[c].is_done()).count();
+            if want != e.remaining {
+                return Err(format!(
+                    "task {id}: remaining counter {} vs full scan {want}",
+                    e.remaining
+                ));
+            }
+        }
+        let want_completed = self.tasks.values().filter(|e| e.done && !e.failed).count();
+        let want_failed = self.tasks.values().filter(|e| e.failed).count();
+        if want_completed != self.n_completed || want_failed != self.n_failed {
+            return Err(format!(
+                "task counters diverged: completed {}/{want_completed}, failed {}/{want_failed}",
+                self.n_completed, self.n_failed
+            ));
+        }
+        let want_active_tasks: Vec<u64> =
+            self.tasks.iter().filter(|(_, e)| !e.done).map(|(id, _)| *id).collect();
+        if want_active_tasks != self.active_tasks.iter().copied().collect::<Vec<u64>>() {
+            return Err(format!(
+                "active-task set diverged: index holds {}, full scan {}",
+                self.active_tasks.len(),
+                want_active_tasks.len()
+            ));
+        }
+        if !self.pending_done.is_empty() {
+            return Err(format!(
+                "pending completions not drained: {:?}",
+                self.pending_done
+            ));
+        }
+        Ok(())
     }
 
     pub fn interval_seconds(&self) -> f64 {
@@ -185,6 +377,13 @@ impl Engine {
         self.tasks.get(&id).map(|e| &e.task)
     }
 
+    /// Read-only view of the container pool (every container ever
+    /// admitted, terminal ones included). Mutation goes through engine
+    /// methods only — see the field doc.
+    pub fn containers(&self) -> &[Container] {
+        &self.containers
+    }
+
     /// Has `id` been abandoned via [`Engine::fail_task`]? Unknown tasks
     /// read as not-failed.
     pub fn task_failed(&self, id: u64) -> bool {
@@ -192,11 +391,13 @@ impl Engine {
     }
 
     /// Containers the placement engine must consider (placeable states).
+    /// Walks the active index in id order — identical output to the old
+    /// full pool scan, in O(active).
     pub fn placeable(&self) -> Vec<ContainerId> {
-        self.containers
+        self.active
             .iter()
-            .filter(|c| c.is_placeable())
-            .map(|c| c.id)
+            .copied()
+            .filter(|&cid| self.containers[cid].is_placeable())
             .collect()
     }
 
@@ -204,20 +405,19 @@ impl Engine {
     /// containers plus Blocked chain successors holding a reservation —
     /// a reservation consumes capacity so the later unblock (which starts
     /// its transfer unconditionally) can never breach the overcommit cap.
+    ///
+    /// Summed from the per-worker residency index in container-id order —
+    /// the same terms in the same order as the old full scan, so the
+    /// result is bit-identical, in O(workers + resident).
     pub fn resident_ram(&self) -> Vec<f64> {
-        let mut ram = vec![0.0; self.cluster.len()];
-        for c in &self.containers {
-            match c.state {
-                ContainerState::Running
-                | ContainerState::Transferring { .. }
-                | ContainerState::Blocked => {
-                    if let Some(w) = c.worker {
-                        ram[w] += c.ram_mb;
-                    }
-                }
-                ContainerState::Migrating { to, .. } => ram[to] += c.ram_mb,
-                _ => {}
-            }
+        (0..self.cluster.len()).map(|w| self.resident_ram_of(w)).collect()
+    }
+
+    /// Resident RAM demand of one worker (see [`Engine::resident_ram`]).
+    pub fn resident_ram_of(&self, w: usize) -> f64 {
+        let mut ram = 0.0;
+        for &cid in &self.resident_idx[w] {
+            ram += self.containers[cid].ram_mb;
         }
         ram
     }
@@ -244,20 +444,27 @@ impl Engine {
 
     /// Tasks that completed successfully.
     pub fn completed_task_count(&self) -> usize {
-        self.tasks.values().filter(|e| e.done && !e.failed).count()
+        self.n_completed
     }
 
     /// Tasks that were abandoned via [`Engine::fail_task`].
     pub fn failed_task_count(&self) -> usize {
-        self.tasks.values().filter(|e| e.failed).count()
+        self.n_failed
     }
 
     /// Tasks still in flight.
     pub fn active_task_count(&self) -> usize {
-        self.tasks.values().filter(|e| !e.done).count()
+        self.active_tasks.len()
     }
 
-    /// Can `cid` be (re)placed on worker `w` right now?
+    /// Containers still in flight (the active-set size the hot path
+    /// scales with; throughput benches report work in these units).
+    pub fn active_container_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Can `cid` be (re)placed on worker `w` right now? O(resident on
+    /// `w`), not O(every container ever admitted).
     pub fn fits(&self, cid: ContainerId, w: usize) -> bool {
         if !self.online[w] {
             return false;
@@ -266,7 +473,6 @@ impl Engine {
         if c.worker == Some(w) {
             return true;
         }
-        let resident = self.resident_ram();
-        resident[w] + c.ram_mb <= self.effective_ram_mb(w) * RAM_OVERCOMMIT
+        self.resident_ram_of(w) + c.ram_mb <= self.effective_ram_mb(w) * RAM_OVERCOMMIT
     }
 }

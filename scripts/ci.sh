@@ -33,6 +33,14 @@ if ! ls tests/goldens/*.json >/dev/null 2>&1; then
 fi
 ./target/release/splitplace matrix --filter smoke --jobs 2
 
+echo "== engine throughput bench (smoke: all tiers, short horizon) =="
+# Smoke-mode perf record: every tier, few intervals — recorded in
+# BENCH_engine.json (the perf trajectory), not yet regression-gated. Any
+# panic here fails CI. The full ≥50-interval measurement is
+# `./target/release/splitplace bench` (or `cargo bench --bench
+# engine_throughput`).
+./target/release/splitplace bench --tier all --intervals 12 --out BENCH_engine.json
+
 # Lints run after the functional gates so a formatting nit never blocks
 # the golden bootstrap above; they still fail the script.
 echo "== cargo fmt --check =="

@@ -73,7 +73,7 @@ fn prop_no_task_lost_or_duplicated() {
             // container states are consistent with task bookkeeping
             let mut per_task: std::collections::HashMap<u64, (usize, usize)> =
                 std::collections::HashMap::new();
-            for c in &engine.containers {
+            for c in engine.containers() {
                 let e = per_task.entry(c.task_id).or_insert((0, 0));
                 e.0 += 1;
                 if c.is_done() {
@@ -128,7 +128,7 @@ fn prop_capacity_never_exceeded_at_allocation() {
                 if resident[w] > cap + 1e-6 {
                     // check it's not due to a single oversized container
                     let on_w: Vec<f64> = engine
-                        .containers
+                        .containers()
                         .iter()
                         .filter(|c| c.worker == Some(w) && c.is_active())
                         .map(|c| c.ram_mb)
@@ -154,9 +154,9 @@ fn prop_layer_precedence_never_violated() {
         20,
         |rng| random_engine(rng, 10).0,
         |engine| {
-            for c in &engine.containers {
+            for c in engine.containers() {
                 if let Some(prev) = c.prev {
-                    let prev_done = engine.containers[prev].is_done();
+                    let prev_done = engine.containers()[prev].is_done();
                     let started = !matches!(
                         c.state,
                         ContainerState::Blocked | ContainerState::Queued
@@ -717,6 +717,116 @@ fn prop_payload_corruption_plans_replay_identically_and_green() {
                 a.signatures.iter().flat_map(|s| s.completed.iter().copied()).collect();
             if let Some(id) = failed.intersection(&completed).next() {
                 return Err(format!("task {id} both failed and completed"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Index-consistency under chaos-heavy fault injection: after EVERY
+/// interval of a run that mixes admissions, placements, migrations,
+/// crashes, rack failures, squeezes, corruption and starvation sweeps, the
+/// engine's incremental indexes (active list, per-worker residency /
+/// resident-RAM totals, remaining-fragment counters, task counters) must
+/// exactly equal the values the old full-scan derivations recompute
+/// (`Engine::verify_indices` — resident RAM compared bit-for-bit).
+#[test]
+fn prop_incremental_indices_match_full_scan_under_heavy_chaos() {
+    check(
+        "index-consistency",
+        8,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let cluster = build_fleet(&ClusterConfig::small());
+            let mut engine = Engine::new(cluster, SimConfig::default(), rng.next_u64());
+            let intervals = 14usize;
+            let plan =
+                FaultPlan::generate(rng.next_u64(), intervals, Profile::Heavy, engine.workers());
+            let mut next_id = 0u64;
+            for t in 0..intervals {
+                for e in plan.events_at(t) {
+                    for cmd in e.event.compile(engine.workers()) {
+                        engine.apply(cmd);
+                    }
+                }
+                if t % 5 == 4 {
+                    engine.apply(splitplace::sim::EngineCmd::FailTasksOlderThan {
+                        age_s: 3.0 * 300.0,
+                    });
+                }
+                engine
+                    .verify_indices()
+                    .map_err(|e| format!("interval {t} post-faults: {e}"))?;
+                for _ in 0..rng.below(4) {
+                    let task = Task {
+                        id: next_id,
+                        app: rand_app(&mut rng),
+                        batch: rng.int_range(16_000, 64_000) as u64,
+                        sla: rng.range(1.0, 15.0),
+                        arrival_s: engine.now_s,
+                        decision: None,
+                    };
+                    next_id += 1;
+                    engine.admit(task, rand_decision(&mut rng));
+                }
+                // random placements INCLUDING re-placements (migrations);
+                // plain loop: chance() and below() each need &mut rng
+                let mut assigns: Vec<(usize, usize)> = Vec::new();
+                for c in engine.placeable() {
+                    if rng.chance(0.8) {
+                        assigns.push((c, rng.below(10) as usize));
+                    }
+                }
+                engine.apply_placement(&assigns);
+                engine
+                    .verify_indices()
+                    .map_err(|e| format!("interval {t} post-placement: {e}"))?;
+                engine.step_interval();
+                engine
+                    .verify_indices()
+                    .map_err(|e| format!("interval {t} post-step: {e}"))?;
+            }
+            // the run must have exercised real churn in the container pool
+            if engine.containers().is_empty() {
+                return Err("no containers were ever admitted".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Ledger-replay self-consistency with the engine's own churn active:
+/// replaying the full command ledger (external + churn-origin records)
+/// onto a fresh fault surface reproduces the live one exactly.
+#[test]
+fn prop_ledger_replay_reproduces_the_fault_surface_under_churn() {
+    check(
+        "ledger-replay",
+        6,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let cluster = build_fleet(&ClusterConfig::small());
+            let mut engine = Engine::new(cluster, SimConfig::default(), rng.next_u64());
+            engine.apply(splitplace::sim::EngineCmd::SetChurn { rate: 0.3 });
+            let intervals = 12usize;
+            let plan =
+                FaultPlan::generate(rng.next_u64(), intervals, Profile::Heavy, engine.workers());
+            for t in 0..intervals {
+                for e in plan.events_at(t) {
+                    for cmd in e.event.compile(engine.workers()) {
+                        engine.apply(cmd);
+                    }
+                }
+                engine.step_interval();
+                let replayed = splitplace::sim::FaultSurface::replay(
+                    engine.workers(),
+                    engine.ledger(),
+                );
+                if replayed != engine.fault_surface() {
+                    return Err(format!("interval {t}: ledger replay diverged"));
+                }
             }
             Ok(())
         },
