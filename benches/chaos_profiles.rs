@@ -6,7 +6,6 @@
 
 use splitplace::benchlib::scenarios;
 use splitplace::chaos::Profile;
-use splitplace::config::PolicyKind;
 use splitplace::coordinator::runner::try_runtime;
 use splitplace::harness::Scenario;
 use splitplace::util::table::{fnum, Table};
@@ -18,11 +17,7 @@ fn main() {
         &["policy", "profile", "events", "violations", "completed", "failed", "SLA viol", "reward"],
     );
     for profile in [Profile::Light, Profile::Heavy] {
-        for policy in [
-            PolicyKind::ModelCompression,
-            PolicyKind::Gillis,
-            PolicyKind::MabDaso,
-        ] {
+        for policy in scenarios::chaos_table_policies() {
             let (mut cfg, plan) = scenarios::chaos_scenario(profile, 7);
             cfg.policy = policy;
             let Some(out) = scenarios::run_chaos(cfg, &plan, rt.as_ref()) else {
@@ -42,18 +37,15 @@ fn main() {
     }
     t.print();
 
-    // the matrix harness's scenario universe under the full policy trio —
-    // the same cells `splitplace matrix` gates with goldens
+    // the matrix harness's scenario universe under the artifact-free
+    // policy set (the smoke policies, LatMem/OnlineSplit included) — the
+    // same cells `splitplace matrix` gates with goldens
     let mut t = Table::new(
         "Matrix scenarios (fixed seed 1)",
         &["policy", "scenario", "events", "violations", "completed", "resp ema", "reward"],
     );
     for scenario in Scenario::ALL {
-        for policy in [
-            PolicyKind::ModelCompression,
-            PolicyKind::Gillis,
-            PolicyKind::MabDaso,
-        ] {
+        for policy in scenarios::chaos_table_policies() {
             let (cfg, plan) = scenarios::matrix_scenario(scenario, policy, 1);
             let Some(out) = scenarios::run_chaos(cfg, &plan, rt.as_ref()) else {
                 continue;

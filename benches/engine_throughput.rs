@@ -20,7 +20,13 @@ fn main() {
     let intervals = splitplace::benchlib::scenarios::bench_intervals().max(50);
     let mut results: Vec<Throughput> = Vec::new();
     for tier in throughput::tiers() {
-        match throughput::measure(&tier, intervals, 7, true) {
+        match throughput::measure(
+            &tier,
+            intervals,
+            7,
+            true,
+            splitplace::config::PolicyKind::ModelCompression,
+        ) {
             Ok(r) => {
                 eprintln!(
                     "[engine_throughput] {}: {} workers, {} intervals in {:.0} ms",

@@ -1,9 +1,11 @@
-//! Full Table-4 experiment: all seven policies on the 50-worker Table-3
-//! fleet, Γ=100 intervals of 300 s, Poisson(λ=6) arrivals — the paper's
-//! headline configuration. Prints Table 4 plus the per-application panels
-//! of Fig. 7 and the response-time decomposition of Fig. 8/14.
+//! Full Table-4 experiment: all nine policy stacks (the paper's seven
+//! plus the related-work LatMem and OnlineSplit splitters) on the
+//! 50-worker Table-3 fleet, Γ=100 intervals of 300 s, Poisson(λ=6)
+//! arrivals — the paper's headline configuration. Prints Table 4 plus
+//! the per-application panels of Fig. 7 and the response-time
+//! decomposition of Fig. 8/14.
 //!
-//! This is a long run (seven policies × 100 intervals with PJRT-backed
+//! This is a long run (nine policies × 100 intervals with PJRT-backed
 //! placement). Pass `--quick` for a 25-interval smoke version.
 //!
 //!     make artifacts && cargo run --release --example full_experiment

@@ -19,9 +19,18 @@ pub fn bench_intervals() -> usize {
         .unwrap_or(25)
 }
 
-/// Policies in Table-4 row order.
-pub fn all_policies() -> [PolicyKind; 7] {
+/// Every policy stack: the Table-4 rows plus the related-work splitters
+/// (LatMem, OnlineSplit), weakest-first like [`PolicyKind::all`].
+pub fn all_policies() -> [PolicyKind; 9] {
     PolicyKind::all()
+}
+
+/// The policies the chaos/matrix bench tables chart: exactly the CI
+/// smoke set ([`crate::harness::scenario::SMOKE_POLICIES`] — one source
+/// of truth, so the bench tables always chart what CI gates). Everything
+/// in it runs without built artifacts.
+pub fn chaos_table_policies() -> [PolicyKind; 5] {
+    crate::harness::scenario::SMOKE_POLICIES
 }
 
 /// The ablation subset used by the sensitivity appendices.

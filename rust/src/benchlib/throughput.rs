@@ -71,6 +71,8 @@ pub fn tier_by_name(name: &str) -> Option<TierSpec> {
 #[derive(Clone, Debug)]
 pub struct Throughput {
     pub tier: String,
+    /// Policy slug driving the broker during the measurement.
+    pub policy: String,
     pub workers: usize,
     pub intervals: usize,
     pub seed: u64,
@@ -87,18 +89,21 @@ pub struct Throughput {
 }
 
 /// Run one tier's matrix scenario (chaos-light is the representative
-/// fleet-scale regime) and measure wall-clock throughput. Pure-rust MC
-/// policy so the measurement isolates the engine+broker hot path and runs
-/// without artifacts. Oracle sweeps are deliberately absent: this times
-/// the simulation core, not the audit machinery.
+/// fleet-scale regime) and measure wall-clock throughput. The policy axis
+/// is explicit: the default MC isolates the engine+broker hot path, while
+/// any other stack (latmem, onlinesplit, mab-daso, …) measures its
+/// decision-plane overhead on the same regime — all run without artifacts
+/// (surrogate stacks degrade to best-fit placement). Oracle sweeps are
+/// deliberately absent: this times the simulation core, not the audit
+/// machinery.
 pub fn measure(
     tier: &TierSpec,
     intervals: usize,
     seed: u64,
     chaos: bool,
+    policy: PolicyKind,
 ) -> anyhow::Result<Throughput> {
-    let (cfg, plan) =
-        tier.scenario(chaos).build(PolicyKind::ModelCompression, seed, intervals);
+    let (cfg, plan) = tier.scenario(chaos).build(policy, seed, intervals);
     let n = cfg.cluster.total_workers();
     let opts = ChaosOptions::default();
     let base_lambda = cfg.workload.lambda;
@@ -118,6 +123,7 @@ pub fn measure(
     let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
     Ok(Throughput {
         tier: tier.name.to_string(),
+        policy: crate::harness::policy_slug(policy).to_string(),
         workers: n,
         intervals,
         seed,
@@ -145,6 +151,7 @@ pub fn to_json(results: &[Throughput]) -> Value {
                     .map(|r| {
                         Value::obj(vec![
                             ("tier", Value::Str(r.tier.clone())),
+                            ("policy", Value::Str(r.policy.clone())),
                             ("workers", Value::Num(r.workers as f64)),
                             ("intervals", Value::Num(r.intervals as f64)),
                             ("seed", Value::Str(r.seed.to_string())),
@@ -190,16 +197,32 @@ mod tests {
     #[test]
     fn small_tier_measures_and_serializes() {
         let tier = tier_by_name("small").unwrap();
-        let r = measure(&tier, 6, 1, true).unwrap();
+        let r = measure(&tier, 6, 1, true, PolicyKind::ModelCompression).unwrap();
         assert_eq!(r.workers, 10);
         assert_eq!(r.intervals, 6);
+        assert_eq!(r.policy, "mc");
         assert!(r.admitted > 0, "load must arrive");
         assert!(r.intervals_per_sec > 0.0);
         assert!(r.wall_ms > 0.0);
         let j = to_json(&[r]).to_string();
         assert!(j.contains("\"bench\":\"engine_throughput\""), "{j}");
         assert!(j.contains("\"tier\":\"small\""), "{j}");
+        assert!(j.contains("\"policy\":\"mc\""), "{j}");
         assert!(j.contains("intervals_per_sec"), "{j}");
+    }
+
+    /// The policy axis: any stack drives the measurement, including the
+    /// related-work splitters — same regime, different decision plane.
+    #[test]
+    fn policy_axis_measures_the_new_stacks() {
+        let tier = tier_by_name("small").unwrap();
+        for policy in [PolicyKind::LatMem, PolicyKind::OnlineSplit] {
+            let r = measure(&tier, 6, 1, true, policy).unwrap();
+            assert!(r.admitted > 0, "{policy:?} must carry load");
+            let slug = crate::harness::policy_slug(policy);
+            assert_eq!(r.policy, slug);
+            assert!(to_json(&[r]).to_string().contains(&format!("\"policy\":\"{slug}\"")));
+        }
     }
 
     #[test]
@@ -240,7 +263,7 @@ mod tests {
         }
         let tier = tier_by_name("large").unwrap();
         let t0 = std::time::Instant::now();
-        let r = measure(&tier, 10, 1, true).unwrap();
+        let r = measure(&tier, 10, 1, true, PolicyKind::ModelCompression).unwrap();
         assert_eq!(r.workers, 1000);
         assert!(r.admitted > 100, "large tier must carry real load");
         assert!(

@@ -63,6 +63,112 @@ pub struct Violation {
     pub detail: String,
 }
 
+// ---------------------------------------------------------------------------
+// Scan-vs-index oracle derivations
+//
+// The `chain-precedence` and `crashed-workers-idle` sweeps are the two
+// oracles the ROADMAP plans to migrate from full-pool scans onto the
+// engine's active-set index. Until the migration lands, both derivations
+// are kept public and a property test asserts they agree after every
+// interval of a chaos run — the evidence that switching the sweep to
+// O(active) changes cost, not verdicts, on a correct engine.
+//
+// Equivalence caveat the migration must respect: `crashed-workers-idle`
+// only ever flags non-terminal states, so its index twin is exactly
+// equivalent by construction. `chain-precedence`'s full scan can ALSO
+// flag a Done/Failed container whose `mi_done > 0` predates an unfinished
+// predecessor — a broken engine that lets a successor finish out of order
+// keeps failing the full scan forever, while the index twin only sees the
+// violation while the container is live. Flipping `check_interval` to the
+// indexed twin therefore trades that post-hoc memory for O(active); keep
+// the full scan (or a terminal-transition check) if that memory matters.
+// ---------------------------------------------------------------------------
+
+/// `chain-precedence` details over an arbitrary container visit sequence.
+fn chain_precedence_over<'c>(
+    engine: &Engine,
+    containers: impl Iterator<Item = &'c crate::sim::Container>,
+) -> Vec<String> {
+    let mut out = Vec::new();
+    for c in containers {
+        if let Some(prev) = c.prev {
+            let prev_done = engine.containers()[prev].is_done();
+            if c.mi_done > 0.0 && !prev_done {
+                out.push(format!(
+                    "container {} progressed before predecessor {prev} finished",
+                    c.id
+                ));
+            }
+            if matches!(c.state, ContainerState::Running) && !prev_done {
+                out.push(format!(
+                    "container {} running before predecessor {prev} done",
+                    c.id
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// `chain-precedence` from the full container pool (the current oracle).
+pub fn chain_precedence_full(engine: &Engine) -> Vec<String> {
+    chain_precedence_over(engine, engine.containers().iter())
+}
+
+/// `chain-precedence` from the active-set index: O(active), same id visit
+/// order as the full scan over the LIVE containers. Equivalent to
+/// [`chain_precedence_full`] on a correct engine; see the section comment
+/// for the terminal-container caveat a migration must respect.
+pub fn chain_precedence_indexed(engine: &Engine) -> Vec<String> {
+    chain_precedence_over(
+        engine,
+        engine.active_ids().iter().map(|&cid| &engine.containers()[cid]),
+    )
+}
+
+/// `crashed-workers-idle` details over an arbitrary container visit
+/// sequence: no container may run, stage or migrate on an offline worker.
+fn crashed_workers_idle_over<'c>(
+    engine: &Engine,
+    containers: impl Iterator<Item = &'c crate::sim::Container>,
+) -> Vec<String> {
+    let online = engine.online();
+    let mut out = Vec::new();
+    for c in containers {
+        let offending = match c.state {
+            ContainerState::Running | ContainerState::Transferring { .. } => {
+                c.worker.map(|w| !online[w]).unwrap_or(false)
+            }
+            ContainerState::Migrating { to, .. } => {
+                !online[to] || c.worker.map(|w| !online[w]).unwrap_or(false)
+            }
+            _ => false,
+        };
+        if offending {
+            out.push(format!(
+                "container {} is {:?} on offline worker {:?}",
+                c.id, c.state, c.worker
+            ));
+        }
+    }
+    out
+}
+
+/// `crashed-workers-idle` from the full container pool (the current oracle).
+pub fn crashed_workers_idle_full(engine: &Engine) -> Vec<String> {
+    crashed_workers_idle_over(engine, engine.containers().iter())
+}
+
+/// `crashed-workers-idle` from the active-set index: every offending state
+/// (Running/Transferring/Migrating) is non-terminal, so the index covers
+/// exactly the containers the full scan can flag, in the same id order.
+pub fn crashed_workers_idle_indexed(engine: &Engine) -> Vec<String> {
+    crashed_workers_idle_over(
+        engine,
+        engine.active_ids().iter().map(|&cid| &engine.containers()[cid]),
+    )
+}
+
 impl std::fmt::Display for Violation {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "[{}] interval {}: {}", self.oracle, self.interval, self.detail)
@@ -145,22 +251,10 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
     }
 
     // -- chain-precedence ---------------------------------------------------
-    for c in ctx.engine.containers() {
-        if let Some(prev) = c.prev {
-            let prev_done = ctx.engine.containers()[prev].is_done();
-            if c.mi_done > 0.0 && !prev_done {
-                fail(
-                    "chain-precedence",
-                    format!("container {} progressed before predecessor {prev} finished", c.id),
-                );
-            }
-            if matches!(c.state, ContainerState::Running) && !prev_done {
-                fail(
-                    "chain-precedence",
-                    format!("container {} running before predecessor {prev} done", c.id),
-                );
-            }
-        }
+    // Full-pool derivation; the index-backed twin must agree (see the
+    // scan-vs-index section above and tests/properties.rs).
+    for detail in chain_precedence_full(ctx.engine) {
+        fail("chain-precedence", detail);
     }
 
     // -- task-times-sane ----------------------------------------------------
@@ -217,26 +311,13 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
     }
 
     // -- crashed-workers-idle -----------------------------------------------
-    let online = ctx.engine.online();
-    for c in ctx.engine.containers() {
-        let offending = match c.state {
-            ContainerState::Running | ContainerState::Transferring { .. } => {
-                c.worker.map(|w| !online[w]).unwrap_or(false)
-            }
-            ContainerState::Migrating { to, .. } => {
-                !online[to] || c.worker.map(|w| !online[w]).unwrap_or(false)
-            }
-            _ => false,
-        };
-        if offending {
-            fail(
-                "crashed-workers-idle",
-                format!("container {} is {:?} on offline worker {:?}", c.id, c.state, c.worker),
-            );
-        }
+    // Full-pool derivation; the index-backed twin must agree (see above).
+    for detail in crashed_workers_idle_full(ctx.engine) {
+        fail("crashed-workers-idle", detail);
     }
 
     // -- telemetry-consistent -----------------------------------------------
+    let online = ctx.engine.online();
     let queued_now = ctx
         .engine
         .containers()
@@ -604,5 +685,30 @@ mod tests {
         for o in ORACLES {
             assert_ne!(describe(o), "");
         }
+    }
+
+    /// The scan-vs-index twins agree — on a healthy engine (both empty)
+    /// and on a sabotaged one (both flag the same containers, in the same
+    /// order). Groundwork for the ROADMAP's oracle migration; the
+    /// per-interval sweep lives in tests/properties.rs.
+    #[test]
+    fn indexed_oracle_derivations_match_the_full_scans() {
+        let mut e = engine();
+        e.admit(task(0), SplitDecision::Layer);
+        e.admit(task(1), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 0), (1, 1), (2, 2), (3, 3)]);
+        e.step_interval();
+        assert_eq!(chain_precedence_full(&e), chain_precedence_indexed(&e));
+        assert_eq!(crashed_workers_idle_full(&e), crashed_workers_idle_indexed(&e));
+        assert!(crashed_workers_idle_full(&e).is_empty());
+        // force the bug hook: containers keep working on a dead machine
+        for w in 0..e.workers() {
+            e.apply(EngineCmd::ForceOfflineNoEvict { worker: w });
+        }
+        e.step_interval();
+        let full = crashed_workers_idle_full(&e);
+        assert!(!full.is_empty(), "offline-no-evict must leave offenders");
+        assert_eq!(full, crashed_workers_idle_indexed(&e));
+        assert_eq!(chain_precedence_full(&e), chain_precedence_indexed(&e));
     }
 }

@@ -23,13 +23,24 @@ pub enum PolicyKind {
     Gillis,
     /// BottleNet++-style model compression baseline.
     ModelCompression,
+    /// Latency-memory optimized splitting (arXiv:2107.09123): per-task
+    /// scorer that picks layer vs semantic from the fragments' estimated
+    /// RAM footprint against the fleet's memory and the pipeline latency
+    /// estimate against the task's deadline.
+    LatMem,
+    /// Online model splitting for device-edge co-inference
+    /// (arXiv:2105.13618): online threshold policy over a per-strategy
+    /// deadline-violation EMA with a learned switching cutoff.
+    OnlineSplit,
 }
 
 impl PolicyKind {
-    pub fn all() -> [PolicyKind; 7] {
+    pub fn all() -> [PolicyKind; 9] {
         [
             PolicyKind::ModelCompression,
             PolicyKind::Gillis,
+            PolicyKind::LatMem,
+            PolicyKind::OnlineSplit,
             PolicyKind::SemanticGobi,
             PolicyKind::LayerGobi,
             PolicyKind::RandomDaso,
@@ -47,6 +58,8 @@ impl PolicyKind {
             PolicyKind::SemanticGobi => "Semantic+GOBI",
             PolicyKind::Gillis => "Gillis",
             PolicyKind::ModelCompression => "ModelCompression",
+            PolicyKind::LatMem => "LatMem",
+            PolicyKind::OnlineSplit => "OnlineSplit",
         }
     }
 
@@ -61,6 +74,8 @@ impl PolicyKind {
             }
             "gillis" => PolicyKind::Gillis,
             "mc" | "modelcompression" | "model-compression" => PolicyKind::ModelCompression,
+            "latmem" | "lat-mem" | "latency-memory" => PolicyKind::LatMem,
+            "onlinesplit" | "online-split" | "online" => PolicyKind::OnlineSplit,
             _ => return None,
         })
     }
@@ -550,6 +565,8 @@ mod tests {
         assert_eq!(PolicyKind::parse("splitplace"), Some(PolicyKind::MabDaso));
         assert_eq!(PolicyKind::parse("M+G"), Some(PolicyKind::MabGobi));
         assert_eq!(PolicyKind::parse("mc"), Some(PolicyKind::ModelCompression));
+        assert_eq!(PolicyKind::parse("latency-memory"), Some(PolicyKind::LatMem));
+        assert_eq!(PolicyKind::parse("online-split"), Some(PolicyKind::OnlineSplit));
         assert_eq!(PolicyKind::parse("nope"), None);
         for p in PolicyKind::all() {
             assert_eq!(PolicyKind::parse(p.name()), Some(p));

@@ -19,13 +19,15 @@
 //! it up unchanged.
 
 use crate::baselines::{GillisPolicy, McPolicy};
-use crate::config::{ExperimentConfig, PolicyKind};
+use crate::cluster::build_fleet;
+use crate::config::{ExperimentConfig, MabConfig, PolicyKind};
 use crate::mab::{MabPolicy, Mode};
 use crate::placement::{Assignment, BestFitPlacer, GradientPlacer, Placer, PlacementInput};
 use crate::runtime::{Runtime, Surrogate};
-use crate::sim::{CompletedTask, FailedTask, WorkerSnapshot};
-use crate::splits::SplitDecision;
+use crate::sim::{CompletedTask, FailedTask, WorkerSnapshot, RAM_OVERCOMMIT};
+use crate::splits::{App, Precedence, Registry, SplitDecision, APPS};
 use crate::util::rng::Rng;
+use crate::util::stats::Ema;
 use crate::workload::trace::TraceBuffer;
 use crate::workload::Task;
 
@@ -169,6 +171,274 @@ impl Splitter for McSplitter {
     }
 }
 
+/// Contention factor the latency-memory cost model applies on top of the
+/// zero-queue MIPS estimate (the registry's calibration: nominal response
+/// under typical load is roughly twice the bare compute time).
+const LATMEM_CONTENTION: f64 = 2.0;
+
+/// Latency-memory optimized splitting (arXiv:2107.09123, adapted to the
+/// engine's MIPS/RAM calibration): score both arms per task by (a) the
+/// split plan's estimated resident-RAM footprint against the fleet's
+/// memory and (b) a pipeline-latency estimate against the task's deadline.
+/// Memory-infeasible arms are never picked while a feasible one exists;
+/// among deadline-meeting arms the lighter plan wins, otherwise the faster
+/// one. Latency estimates warm-start from the MIPS cost model and track
+/// observed responses through the interval learning hooks.
+pub struct LatMemSplitter {
+    /// Per (app, arm) response-time EMA in scheduling intervals,
+    /// normalized to a 40k-sample batch like the MAB's R^a estimates.
+    ema: [[Ema; 2]; 3],
+    /// Total physical fleet RAM (MB) — the budget split plans are scored
+    /// against ("free RAM" proxy: the splitter cannot see engine state).
+    fleet_ram_mb: f64,
+    /// Largest worker's RAM × overcommit: a single fragment bigger than
+    /// this fits nowhere, whatever the fleet total says.
+    max_fragment_mb: f64,
+    decisions: u64,
+}
+
+impl LatMemSplitter {
+    pub fn new(cfg: &ExperimentConfig) -> Self {
+        let fleet = build_fleet(&cfg.cluster);
+        let mean_mips = fleet.total_mips() / fleet.len().max(1) as f64;
+        let max_worker_ram =
+            fleet.workers.iter().map(|w| w.spec.ram_mb).fold(0.0, f64::max);
+        let mut ema = [[Ema::new(cfg.mab.phi); 2]; 3];
+        for app in APPS {
+            for d in SplitDecision::ARMS {
+                let prior = Self::cost_model_intervals(
+                    app,
+                    d,
+                    mean_mips,
+                    cfg.sim.interval_seconds,
+                );
+                ema[app.index()][d.arm_index()] = Ema::with_initial(cfg.mab.phi, prior);
+            }
+        }
+        LatMemSplitter {
+            ema,
+            fleet_ram_mb: fleet.total_ram_mb(),
+            max_fragment_mb: max_worker_ram * RAM_OVERCOMMIT,
+            decisions: 0,
+        }
+    }
+
+    /// Zero-state pipeline-latency prior (intervals, 40k batch): critical
+    /// path MI — chain sums fragments, parallel is straggler-bound by the
+    /// heaviest — over the fleet's mean MIPS, under typical contention.
+    fn cost_model_intervals(
+        app: App,
+        d: SplitDecision,
+        mean_mips: f64,
+        interval_s: f64,
+    ) -> f64 {
+        let plan = Registry::plan(app, d);
+        let per_ksample = match plan.precedence {
+            Precedence::Chain => plan.fragments.iter().map(|f| f.mi_per_ksample).sum(),
+            Precedence::Parallel => {
+                plan.fragments.iter().map(|f| f.mi_per_ksample).fold(0.0, f64::max)
+            }
+        };
+        LATMEM_CONTENTION * per_ksample * 40.0 / mean_mips.max(1.0) / interval_s
+    }
+
+    /// Estimated resident RAM of the whole split plan for (app, batch, d)
+    /// and of its largest single fragment, in MB.
+    pub fn estimated_ram_mb(app: App, batch: u64, d: SplitDecision) -> (f64, f64) {
+        let plan = Registry::plan(app, d);
+        let k = batch as f64 / 1000.0;
+        let mut total = 0.0;
+        let mut largest = 0.0f64;
+        for f in &plan.fragments {
+            let ram = f.ram_fixed_mb + f.ram_per_ksample_mb * k;
+            total += ram;
+            largest = largest.max(ram);
+        }
+        (total, largest)
+    }
+
+    /// Does the arm's estimated footprint fit the fleet? The whole plan
+    /// must fit the fleet's total RAM and every fragment must fit on the
+    /// largest worker (with overcommit).
+    pub fn fits_fleet(&self, app: App, batch: u64, d: SplitDecision) -> bool {
+        let (total, largest) = Self::estimated_ram_mb(app, batch, d);
+        total <= self.fleet_ram_mb && largest <= self.max_fragment_mb
+    }
+
+    /// Current latency estimate for (app, arm) scaled to the task's batch.
+    fn latency_estimate(&self, app: App, batch: u64, d: SplitDecision) -> f64 {
+        self.ema[app.index()][d.arm_index()].get_or(0.0) * batch as f64 / 40_000.0
+    }
+}
+
+impl Splitter for LatMemSplitter {
+    fn name(&self) -> &'static str {
+        "latmem"
+    }
+
+    fn decide(&mut self, task: &Task, _ctx: &mut SplitCtx) -> SplitDecision {
+        self.decisions += 1;
+        let any_fits =
+            SplitDecision::ARMS.iter().any(|&d| self.fits_fleet(task.app, task.batch, d));
+        // candidates: memory-feasible arms; every arm only when none fits
+        // (least-bad fallback — the structural guarantee is "never pick an
+        // infeasible arm while a feasible one exists").
+        let mut best: Option<(SplitDecision, bool, f64, f64)> = None;
+        for &d in &SplitDecision::ARMS {
+            if any_fits && !self.fits_fleet(task.app, task.batch, d) {
+                continue;
+            }
+            let lat = self.latency_estimate(task.app, task.batch, d);
+            let (ram, _) = Self::estimated_ram_mb(task.app, task.batch, d);
+            let meets = lat <= task.sla;
+            let better = match best {
+                None => true,
+                Some((_, best_meets, best_lat, best_ram)) => match (meets, best_meets) {
+                    (true, false) => true,
+                    (false, true) => false,
+                    // both meet the deadline: lighter memory footprint wins
+                    (true, true) => ram < best_ram,
+                    // neither meets: faster pipeline wins
+                    (false, false) => lat < best_lat,
+                },
+            };
+            if better {
+                best = Some((d, meets, lat, ram));
+            }
+        }
+        best.map(|(d, ..)| d).unwrap_or(SplitDecision::Layer)
+    }
+
+    fn observe_interval(&mut self, leaving: &[CompletedTask]) -> Option<f64> {
+        for t in leaving {
+            if matches!(t.decision, SplitDecision::Layer | SplitDecision::Semantic) {
+                let size = t.batch as f64 / 40_000.0;
+                self.ema[t.app.index()][t.decision.arm_index()].push(t.response / size);
+            }
+        }
+        None
+    }
+
+    fn observe_failures(&mut self, failed: &[FailedTask]) {
+        // an abandoned task is evidence the arm's pipeline ran long: feed
+        // its age (≥ the timeout) back as a pessimistic response sample
+        for t in failed {
+            if matches!(t.decision, SplitDecision::Layer | SplitDecision::Semantic) {
+                let size = t.batch as f64 / 40_000.0;
+                self.ema[t.app.index()][t.decision.arm_index()].push(t.age / size);
+            }
+        }
+    }
+
+    fn decision_count(&self) -> Option<u64> {
+        Some(self.decisions)
+    }
+}
+
+/// Deterministic probe cadence for [`OnlineSplitSplitter`]: every Nth
+/// decision tries the non-favored arm so its violation EMA stays fresh.
+/// Counter-driven (no RNG), so decision streams replay byte-identically.
+const ONLINE_PROBE_EVERY: u64 = 7;
+/// Hysteresis cap on the learned switching cutoff.
+const ONLINE_CUTOFF_MAX: f64 = 0.5;
+
+/// Online model splitting for device-edge co-inference (arXiv:2105.13618):
+/// track a running deadline-violation EMA per strategy and switch the
+/// favored arm when the current one's violation rate exceeds the other's
+/// by a learned cutoff. The cutoff doubles after every switch (hysteresis
+/// against thrashing) and decays back toward its floor each interval, so
+/// the policy stays reactive in volatile regimes without oscillating.
+pub struct OnlineSplitSplitter {
+    /// Per-arm deadline-violation EMA ∈ [0,1] (failures count as 1).
+    viol: [Ema; 2],
+    /// The arm currently favored (starts at Layer, the accuracy edge).
+    current: SplitDecision,
+    /// Learned switching threshold on the violation-rate gap.
+    cutoff: f64,
+    /// Cutoff floor (initial value, decay target).
+    cutoff0: f64,
+    /// Adaptation rate for cutoff decay (the paper family's k).
+    k: f64,
+    decisions: u64,
+    /// Arm switches taken so far (introspection for tests/benches).
+    pub switches: u64,
+}
+
+impl OnlineSplitSplitter {
+    pub fn new(cfg: &MabConfig) -> Self {
+        OnlineSplitSplitter {
+            // slow EMA: newest sample weighted (1 − φ) so one bad interval
+            // does not flip the strategy
+            viol: [Ema::with_initial(1.0 - cfg.phi, 0.0); 2],
+            current: SplitDecision::Layer,
+            cutoff: cfg.rho0,
+            cutoff0: cfg.rho0,
+            k: cfg.k,
+            decisions: 0,
+            switches: 0,
+        }
+    }
+
+    fn other(d: SplitDecision) -> SplitDecision {
+        match d {
+            SplitDecision::Layer => SplitDecision::Semantic,
+            _ => SplitDecision::Layer,
+        }
+    }
+
+    /// Current violation-rate estimate of an arm (tests/benches).
+    pub fn violation_rate(&self, d: SplitDecision) -> f64 {
+        self.viol[d.arm_index()].get_or(0.0)
+    }
+}
+
+impl Splitter for OnlineSplitSplitter {
+    fn name(&self) -> &'static str {
+        "onlinesplit"
+    }
+
+    fn decide(&mut self, _task: &Task, _ctx: &mut SplitCtx) -> SplitDecision {
+        self.decisions += 1;
+        if self.decisions % ONLINE_PROBE_EVERY == 0 {
+            Self::other(self.current)
+        } else {
+            self.current
+        }
+    }
+
+    fn observe_interval(&mut self, leaving: &[CompletedTask]) -> Option<f64> {
+        for t in leaving {
+            if matches!(t.decision, SplitDecision::Layer | SplitDecision::Semantic) {
+                let violated = if t.response > t.sla { 1.0 } else { 0.0 };
+                self.viol[t.decision.arm_index()].push(violated);
+            }
+        }
+        // cutoff decays toward its floor, then the switch rule fires —
+        // decay first so a long-stable cutoff is cheap to cross again
+        self.cutoff = self.cutoff0.max(self.cutoff * (1.0 - self.k));
+        let cur = self.current.arm_index();
+        let alt = 1 - cur;
+        if self.viol[cur].get_or(0.0) > self.viol[alt].get_or(0.0) + self.cutoff {
+            self.current = Self::other(self.current);
+            self.switches += 1;
+            self.cutoff = (self.cutoff * 2.0).min(ONLINE_CUTOFF_MAX);
+        }
+        None
+    }
+
+    fn observe_failures(&mut self, failed: &[FailedTask]) {
+        for t in failed {
+            if matches!(t.decision, SplitDecision::Layer | SplitDecision::Semantic) {
+                self.viol[t.decision.arm_index()].push(1.0);
+            }
+        }
+    }
+
+    fn decision_count(&self) -> Option<u64> {
+        Some(self.decisions)
+    }
+}
+
 /// One composed policy stack: a splitter and a placer. This is the only
 /// policy state the broker holds.
 pub struct DecisionStack<'rt> {
@@ -276,6 +546,8 @@ impl PolicyKind {
                 policy: GillisPolicy::new(cfg.mab.seed ^ 0x61),
             }),
             PolicyKind::ModelCompression => Box::new(McSplitter::default()),
+            PolicyKind::LatMem => Box::new(LatMemSplitter::new(cfg)),
+            PolicyKind::OnlineSplit => Box::new(OnlineSplitSplitter::new(&cfg.mab)),
         };
 
         let uses_gradient = matches!(
@@ -343,7 +615,12 @@ mod tests {
         ] {
             assert!(policy.stack(&cfg, None, Mode::Test, false).is_err(), "{policy:?}");
         }
-        for policy in [PolicyKind::Gillis, PolicyKind::ModelCompression] {
+        for policy in [
+            PolicyKind::Gillis,
+            PolicyKind::ModelCompression,
+            PolicyKind::LatMem,
+            PolicyKind::OnlineSplit,
+        ] {
             assert!(policy.stack(&cfg, None, Mode::Test, false).is_ok(), "{policy:?}");
         }
     }
@@ -379,6 +656,9 @@ mod tests {
         for _ in 0..20 {
             assert!(SplitDecision::ARMS.contains(&decide(PolicyKind::RandomDaso)));
         }
+        // the related-work splitters stay within the two split arms
+        assert!(SplitDecision::ARMS.contains(&decide(PolicyKind::LatMem)));
+        assert!(SplitDecision::ARMS.contains(&decide(PolicyKind::OnlineSplit)));
     }
 
     #[test]
@@ -402,5 +682,121 @@ mod tests {
         let mc = PolicyKind::ModelCompression.stack(&cfg, None, Mode::Test, true).unwrap();
         assert!(mc.decision_count().is_none());
         assert!(mc.mab().is_none());
+    }
+
+    fn task_of(app: crate::splits::App, batch: u64, sla: f64) -> Task {
+        Task { id: 1, app, batch, sla, arrival_s: 0.0, decision: None }
+    }
+
+    fn done(d: SplitDecision, response: f64, sla: f64) -> CompletedTask {
+        CompletedTask {
+            task_id: 0,
+            app: crate::splits::App::Mnist,
+            decision: d,
+            batch: 40_000,
+            sla,
+            response,
+            wait: 0.0,
+            exec: response,
+            transfer: 0.0,
+            migrate: 0.0,
+            workers: vec![0],
+            accuracy: 0.95,
+        }
+    }
+
+    /// On a fleet where the semantic fan-out's estimated RAM exceeds the
+    /// total fleet RAM but the layer chain fits, LatMem must take the
+    /// chain even though semantic wins on latency — memory feasibility
+    /// overrides the latency preference (never the other way around).
+    #[test]
+    fn latmem_memory_feasibility_overrides_latency() {
+        use crate::config::EnvConstraint;
+        use crate::splits::App;
+        // a CIFAR100 33k batch on one memory-constrained B2ms: semantic
+        // (4 × ~539 MB = ~2156 MB) exceeds the 2147.5 MB fleet RAM, the
+        // layer chain (~2083 MB) fits
+        let mut tight = ExperimentConfig::small();
+        tight.cluster.counts = [1, 0, 0, 0];
+        tight.cluster.constraint = EnvConstraint::Memory;
+        let task = task_of(App::Cifar100, 33_000, 0.5); // deadline unmeetable
+        let mut s = LatMemSplitter::new(&tight);
+        assert!(!s.fits_fleet(App::Cifar100, 33_000, SplitDecision::Semantic));
+        assert!(s.fits_fleet(App::Cifar100, 33_000, SplitDecision::Layer));
+        let mut rng = Rng::new(1);
+        let d = s.decide(&task, &mut SplitCtx { rng: &mut rng });
+        assert_eq!(d, SplitDecision::Layer, "infeasible semantic must not be picked");
+        // same task on the normal small fleet: both fit, neither meets the
+        // 0.5-interval deadline, so the faster semantic fan-out wins
+        let mut roomy = LatMemSplitter::new(&ExperimentConfig::small());
+        let d = roomy.decide(&task, &mut SplitCtx { rng: &mut rng });
+        assert_eq!(d, SplitDecision::Semantic, "latency preference without the squeeze");
+    }
+
+    /// With a generous deadline both arms qualify and the lighter plan
+    /// (semantic for MNIST) wins the memory score.
+    #[test]
+    fn latmem_prefers_lighter_plan_when_both_meet_deadline() {
+        use crate::splits::App;
+        let mut s = LatMemSplitter::new(&ExperimentConfig::small());
+        let mut rng = Rng::new(1);
+        let d = s.decide(&task_of(App::Mnist, 32_000, 50.0), &mut SplitCtx { rng: &mut rng });
+        assert_eq!(d, SplitDecision::Semantic);
+        // learning hook: heavy observed semantic responses push the EMA up
+        let before = s.latency_estimate(App::Mnist, 40_000, SplitDecision::Semantic);
+        s.observe_interval(&[done(SplitDecision::Semantic, 20.0, 5.0)]);
+        assert!(s.latency_estimate(App::Mnist, 40_000, SplitDecision::Semantic) > before);
+    }
+
+    /// The online policy starts on the layer arm, probes the other arm on
+    /// a fixed cadence, and switches once the favored arm's violation EMA
+    /// exceeds the alternative's by the learned cutoff.
+    #[test]
+    fn online_split_switches_on_violation_gap_and_probes() {
+        let cfg = ExperimentConfig::small();
+        let mut s = OnlineSplitSplitter::new(&cfg.mab);
+        let mut rng = Rng::new(1);
+        let t = task_of(crate::splits::App::Mnist, 40_000, 5.0);
+        // decisions 1..6 favor Layer; the 7th probes Semantic
+        for _ in 0..6 {
+            assert_eq!(s.decide(&t, &mut SplitCtx { rng: &mut rng }), SplitDecision::Layer);
+        }
+        assert_eq!(s.decide(&t, &mut SplitCtx { rng: &mut rng }), SplitDecision::Semantic);
+        // violating layer completions drag the layer EMA up until the gap
+        // crosses the cutoff and the policy switches
+        for _ in 0..5 {
+            s.observe_interval(&[done(SplitDecision::Layer, 9.0, 5.0)]);
+        }
+        assert!(s.switches >= 1, "violation gap must trigger a switch");
+        assert!(s.violation_rate(SplitDecision::Layer) > s.violation_rate(SplitDecision::Semantic));
+        assert_eq!(s.decide(&t, &mut SplitCtx { rng: &mut rng }), SplitDecision::Semantic);
+        // failures count as violations for the chosen arm
+        let before = s.violation_rate(SplitDecision::Semantic);
+        s.observe_failures(&[FailedTask {
+            task_id: 9,
+            app: crate::splits::App::Mnist,
+            decision: SplitDecision::Semantic,
+            batch: 40_000,
+            sla: 5.0,
+            age: 40.0,
+        }]);
+        assert!(s.violation_rate(SplitDecision::Semantic) > before);
+    }
+
+    /// Both new stacks keep their own decision counters (the chaos
+    /// `mab-accounting` oracle audits these against broker admissions).
+    #[test]
+    fn new_splitter_stacks_count_decisions() {
+        let cfg = ExperimentConfig::small();
+        for policy in [PolicyKind::LatMem, PolicyKind::OnlineSplit] {
+            let mut stack = policy.stack(&cfg, None, Mode::Test, true).unwrap();
+            assert_eq!(stack.decision_count(), Some(0), "{policy:?}");
+            assert!(stack.mab().is_none(), "{policy:?}");
+            let mut rng = Rng::new(1);
+            let t = task_of(crate::splits::App::Mnist, 32_000, 5.0);
+            stack.decide(&t, &mut SplitCtx { rng: &mut rng });
+            stack.decide(&t, &mut SplitCtx { rng: &mut rng });
+            assert_eq!(stack.decision_count(), Some(2), "{policy:?}");
+        }
     }
 }

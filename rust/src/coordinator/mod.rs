@@ -6,6 +6,8 @@ pub mod oracle;
 pub mod runner;
 
 pub use broker::Broker;
-pub use decision::{DecisionStack, SplitCtx, Splitter};
+pub use decision::{
+    DecisionStack, LatMemSplitter, OnlineSplitSplitter, SplitCtx, Splitter,
+};
 pub use oracle::AccuracyOracle;
 pub use runner::{run_experiment, ExperimentOutput};

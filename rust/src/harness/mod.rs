@@ -36,5 +36,6 @@ pub use cell::CellSummary;
 pub use golden::{drift, GoldenStatus, GoldenStore, Tolerance};
 pub use runner::{persist_violations, run_matrix, CellResult, MatrixOptions, MatrixReport};
 pub use scenario::{
-    matrix_cells, policy_slug, seed_config, Cell, DiffCell, MatrixCell, Scenario, REWARD_SLACK,
+    matrix_cells, policy_slug, seed_config, Cell, DiffCell, MatrixCell, Scenario,
+    REWARD_SLACK, SMOKE_POLICIES,
 };

@@ -220,6 +220,8 @@ pub fn policy_slug(p: PolicyKind) -> &'static str {
         PolicyKind::SemanticGobi => "semantic-gobi",
         PolicyKind::Gillis => "gillis",
         PolicyKind::ModelCompression => "mc",
+        PolicyKind::LatMem => "latmem",
+        PolicyKind::OnlineSplit => "onlinesplit",
     }
 }
 
@@ -360,37 +362,86 @@ fn diff_cells(baselines: &[PolicyKind], seeds: &[u64]) -> Vec<MatrixCell> {
     cells
 }
 
+/// The representative policy set the CI smoke matrix runs on every base
+/// scenario: heuristic MC, RL Gillis, the related-work LatMem and
+/// OnlineSplit stacks, and the full MAB+DASO champion. Single source of
+/// truth — the benchlib chaos tables chart exactly this set
+/// ([`crate::benchlib::scenarios::chaos_table_policies`]), so what the
+/// benches eyeball is what CI gates.
+pub const SMOKE_POLICIES: [PolicyKind; 5] = [
+    PolicyKind::ModelCompression,
+    PolicyKind::Gillis,
+    PolicyKind::LatMem,
+    PolicyKind::OnlineSplit,
+    PolicyKind::MabDaso,
+];
+
+/// Challenger differential pairs: each related-work splitter stack leads a
+/// pair against the MAB+DASO champion (ids `latmem~mab-daso/…`,
+/// `onlinesplit~mab-daso/…`) on a clean run and under light chaos. No
+/// ordering assertion is armed — these cells golden-gate HOW the new
+/// stacks compare against the paper's model, not that they beat it.
+fn challenger_diff_cells(seeds: &[u64]) -> Vec<MatrixCell> {
+    let mut cells = Vec::new();
+    for a in [PolicyKind::LatMem, PolicyKind::OnlineSplit] {
+        for scenario in [Scenario::Clean, Scenario::ChaosLight] {
+            for &seed in seeds {
+                cells.push(MatrixCell::Diff(DiffCell {
+                    a,
+                    b: PolicyKind::MabDaso,
+                    scenario,
+                    seed,
+                    expect_a_reward_ge_b: false,
+                }));
+            }
+        }
+    }
+    cells
+}
+
 /// Enumerate matrix cells for a filter, in a fixed deterministic order.
 ///
-/// * `"smoke"` — the CI subset: 3 representative policies (heuristic MC,
-///   RL Gillis, the full MAB+DASO stack) × every base scenario × the
-///   first seed, the fleet-tier scenarios under the cheap MC policy (the
-///   tier axis stays golden-gated without tripling 1000-worker cells in
-///   CI), plus the MAB+DASO-vs-{MC, Gillis} differential pairs.
-/// * `"full"` / `""` — all 7 policies × every scenario (base AND tier) ×
-///   all seeds, plus MAB+DASO-vs-every-baseline differential pairs.
+/// * `"smoke"` — the CI subset: 5 representative policies (heuristic MC,
+///   RL Gillis, the related-work LatMem and OnlineSplit stacks, the full
+///   MAB+DASO stack) × every base scenario × the first seed — every new
+///   policy rides through chaos-heavy here, as the ROADMAP demands — the
+///   fleet-tier scenarios under the cheap MC policy (the tier axis stays
+///   golden-gated without tripling 1000-worker cells in CI), the
+///   MAB+DASO-vs-{MC, Gillis} differential pairs, and the challenger
+///   pairs `latmem~mab-daso` / `onlinesplit~mab-daso`.
+/// * `"full"` / `""` — all 9 policies × every scenario (base AND tier) ×
+///   all seeds, plus MAB+DASO-vs-baseline differential pairs (the two
+///   related-work stacks excluded: they meet the champion challenger-side
+///   only, so no pair is simulated twice with swapped sides) and the
+///   challenger pairs.
 /// * anything else — substring match against [`MatrixCell::id`] over the
 ///   full cross product (e.g. `"chaos-heavy"`, `"mab-daso/"`, `"/s2"`,
 ///   `"~"` for all differential cells).
 pub fn matrix_cells(filter: &str, seeds: &[u64]) -> Vec<MatrixCell> {
-    let smoke_policies =
-        [PolicyKind::ModelCompression, PolicyKind::Gillis, PolicyKind::MabDaso];
     let full = |seeds: &[u64]| -> Vec<MatrixCell> {
         let mut cells: Vec<MatrixCell> = cross(&PolicyKind::all(), &Scenario::ALL, seeds)
             .into_iter()
             .map(MatrixCell::Single)
             .collect();
+        // the related-work stacks pair with the champion via the
+        // challenger cells below — a champion-led twin of the same clean
+        // coordinates would re-run the identical pair of simulations and
+        // gate the same data with the sign flipped
         let baselines: Vec<PolicyKind> = PolicyKind::all()
             .into_iter()
-            .filter(|&p| p != PolicyKind::MabDaso)
+            .filter(|&p| {
+                p != PolicyKind::MabDaso
+                    && !matches!(p, PolicyKind::LatMem | PolicyKind::OnlineSplit)
+            })
             .collect();
         cells.extend(diff_cells(&baselines, seeds));
+        cells.extend(challenger_diff_cells(seeds));
         cells
     };
     match filter {
         "smoke" => {
             let first = &seeds[..seeds.len().min(1)];
-            let mut cells: Vec<MatrixCell> = cross(&smoke_policies, &Scenario::BASE, first)
+            let mut cells: Vec<MatrixCell> = cross(&SMOKE_POLICIES, &Scenario::BASE, first)
                 .into_iter()
                 .map(MatrixCell::Single)
                 .collect();
@@ -403,6 +454,7 @@ pub fn matrix_cells(filter: &str, seeds: &[u64]) -> Vec<MatrixCell> {
                 &[PolicyKind::ModelCompression, PolicyKind::Gillis],
                 first,
             ));
+            cells.extend(challenger_diff_cells(first));
             cells
         }
         "full" | "" => full(seeds),
@@ -523,11 +575,11 @@ mod tests {
     fn smoke_filter_is_small_and_full_is_the_cross_product() {
         let seeds = [1u64, 2];
         let smoke = matrix_cells("smoke", &seeds);
-        // 3 policies × base scenarios × 1 seed, + MC × tier scenarios,
-        // + 2 baselines × 2 scenarios diff
+        // 5 policies × base scenarios × 1 seed, + MC × tier scenarios,
+        // + 2 baselines × 2 scenarios diff, + 2 challengers × 2 scenarios
         assert_eq!(
             smoke.len(),
-            3 * Scenario::BASE.len() + Scenario::TIERS.len() + 4
+            5 * Scenario::BASE.len() + Scenario::TIERS.len() + 4 + 4
         );
         // the tier axis is present in smoke (golden-gated), MC-only
         for s in Scenario::TIERS {
@@ -540,9 +592,16 @@ mod tests {
         }
         let full = matrix_cells("full", &seeds);
         // singles + MAB+DASO-vs-6-baselines × {clean, chaos-heavy} × seeds
+        // + 2 challengers × {clean, chaos-light} × seeds (the new stacks
+        // pair with the champion ONLY challenger-side — no swapped twins)
         assert_eq!(
             full.len(),
-            7 * Scenario::ALL.len() * seeds.len() + 6 * 2 * seeds.len()
+            9 * Scenario::ALL.len() * seeds.len() + 6 * 2 * seeds.len() + 2 * 2 * seeds.len()
+        );
+        assert!(
+            !full.iter().any(|c| c.id().starts_with("mab-daso~latmem")
+                || c.id().starts_with("mab-daso~onlinesplit")),
+            "champion-led twins of the challenger pairs would duplicate runs"
         );
         let slice = matrix_cells("mab-daso/chaos", &seeds);
         assert!(!slice.is_empty());
@@ -555,6 +614,30 @@ mod tests {
         assert_eq!(ids.len(), full.len());
     }
 
+    /// The ISSUE-5 acceptance shape: smoke carries the new splitter stacks
+    /// as single cells on every base scenario (chaos-heavy included) and
+    /// as challenger differential pairs against the champion.
+    #[test]
+    fn smoke_carries_the_new_splitter_stacks() {
+        let smoke = matrix_cells("smoke", &[1]);
+        for slug in ["latmem", "onlinesplit"] {
+            for scenario in Scenario::BASE {
+                let id = format!("{slug}/{}/s1", scenario.name());
+                assert!(
+                    smoke.iter().any(|c| c.id() == id),
+                    "smoke must include single cell {id}"
+                );
+            }
+            for scenario in ["clean", "chaos-light"] {
+                let id = format!("{slug}~mab-daso/{scenario}/s1");
+                assert!(
+                    smoke.iter().any(|c| c.id() == id),
+                    "smoke must include differential cell {id}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn diff_cells_pair_the_champion_with_baselines() {
         let seeds = [1u64];
@@ -564,8 +647,21 @@ mod tests {
             let MatrixCell::Diff(d) = cell else {
                 panic!("~ filter matched a non-diff cell: {}", cell.id());
             };
-            assert_eq!(d.a, PolicyKind::MabDaso, "champion side is the full stack");
-            assert_ne!(d.b, PolicyKind::MabDaso);
+            // every pair has the full MAB+DASO stack on exactly one side:
+            // champion pairs lead with it, challenger pairs chase it
+            assert!(
+                (d.a == PolicyKind::MabDaso) != (d.b == PolicyKind::MabDaso),
+                "{}: exactly one side must be the champion",
+                cell.id()
+            );
+            if d.a != PolicyKind::MabDaso {
+                assert!(
+                    matches!(d.a, PolicyKind::LatMem | PolicyKind::OnlineSplit),
+                    "{}: only the new stacks lead challenger pairs",
+                    cell.id()
+                );
+                assert!(!d.expect_a_reward_ge_b, "challenger pairs are never armed");
+            }
             assert!(cell.id().contains('~'));
             assert!(!cell.file_stem().contains('/'));
         }
@@ -577,6 +673,7 @@ mod tests {
         assert!(!armed.is_empty(), "at least one cell must assert Table-4 ordering");
         for cell in armed {
             let MatrixCell::Diff(d) = cell else { unreachable!() };
+            assert_eq!(d.a, PolicyKind::MabDaso);
             assert_eq!(d.b, PolicyKind::ModelCompression);
             assert_eq!(d.scenario, Scenario::Clean);
         }

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   run [--policy P] [--intervals N] [--lambda L] [--workers small|full]
 //!       [--alpha A] [--constraint c] [--accuracy measured|manifest]
-//!   compare [--intervals N]        all 7 policies, Table-4 style
+//!   compare [--intervals N]        all 9 policies, Table-4 style
 //!   chaos [--seed S] [--intervals N] [--profile light|heavy] [--policy P]
 //!         [--differential P2] [--plan FILE] [--inject-bug KIND]
 //!         [--task-timeout K]      deterministic fault injection + oracles
@@ -16,10 +16,12 @@
 //!                                  with '~'), parallel cells, golden
 //!                                  gating, Table-4 ordering gate, bug-base
 //!   bench [--tier small|medium|large|all] [--intervals N] [--seed S]
-//!         [--scenario clean|chaos-light] [--out FILE]
+//!         [--scenario clean|chaos-light] [--policy P] [--out FILE]
 //!                                  engine throughput per fleet tier
-//!                                  (10/200/1000 workers), written to
-//!                                  BENCH_engine.json — the perf trajectory
+//!                                  (10/200/1000 workers) under any policy
+//!                                  stack (default mc isolates the engine
+//!                                  hot path), written to BENCH_engine.json
+//!                                  — the perf trajectory
 //!   serve [--addr A] [--threads N] serving front-end
 //!   info                           artifact + cluster inventory
 //!
@@ -481,12 +483,24 @@ fn cmd_bench(flags: std::collections::HashMap<String, String>) -> Result<()> {
         "chaos-light" => true,
         other => bail!("--scenario must be clean|chaos-light, got {other}"),
     };
+    // policy axis: mc (default) times the bare engine hot path; any other
+    // stack (latmem, onlinesplit, mab-daso, …) times its decision-plane
+    // overhead on the same tier regime
+    let policy = match flags.get("policy") {
+        Some(p) => PolicyKind::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown --policy '{p}'"))?,
+        None => PolicyKind::ModelCompression,
+    };
     let out = flags.get("out").cloned().unwrap_or_else(|| "BENCH_engine.json".into());
 
     let mut results = Vec::new();
     for tier in &tiers {
-        eprintln!("bench: {} tier, {intervals} intervals, seed {seed}...", tier.name);
-        results.push(throughput::measure(tier, intervals, seed, chaos)?);
+        eprintln!(
+            "bench: {} tier, {intervals} intervals, seed {seed}, policy {}...",
+            tier.name,
+            policy.name()
+        );
+        results.push(throughput::measure(tier, intervals, seed, chaos, policy)?);
     }
 
     let mut t = Table::new(
@@ -497,6 +511,7 @@ fn cmd_bench(flags: std::collections::HashMap<String, String>) -> Result<()> {
         ),
         &[
             "tier",
+            "policy",
             "workers",
             "wall ms",
             "intervals/s",
@@ -509,6 +524,7 @@ fn cmd_bench(flags: std::collections::HashMap<String, String>) -> Result<()> {
     for r in &results {
         t.row(vec![
             r.tier.clone(),
+            r.policy.clone(),
             r.workers.to_string(),
             format!("{:.0}", r.wall_ms),
             format!("{:.1}", r.intervals_per_sec),

@@ -384,6 +384,14 @@ impl Engine {
         &self.containers
     }
 
+    /// Non-terminal container ids in ascending order — the active-set
+    /// index the O(active) hot path walks. Exposed read-only so the chaos
+    /// oracles can derive their sweeps from the index and cross-check
+    /// against the full-pool scan (the ROADMAP's oracle migration).
+    pub fn active_ids(&self) -> &[ContainerId] {
+        &self.active
+    }
+
     /// Has `id` been abandoned via [`Engine::fail_task`]? Unknown tasks
     /// read as not-failed.
     pub fn task_failed(&self, id: u64) -> bool {

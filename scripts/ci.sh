@@ -27,11 +27,20 @@ echo "== matrix smoke (parallel cells, golden gate, bug-base) =="
 # serial run (review + commit the diff under tests/goldens/). The parallel
 # gate right after must then match byte-for-byte, which exercises the
 # --jobs 1 == --jobs N determinism contract end-to-end on every CI run.
+# The smoke set carries the related-work splitter stacks (latmem,
+# onlinesplit) as single cells on every base scenario — chaos-heavy
+# included — plus their challenger differential cells against the
+# champion (latmem~mab-daso, onlinesplit~mab-daso on clean+chaos-light).
 if ! ls tests/goldens/*.json >/dev/null 2>&1; then
     echo "no goldens recorded yet — bootstrapping (serial, --update-goldens)"
     ./target/release/splitplace matrix --filter smoke --jobs 1 --update-goldens
 fi
 ./target/release/splitplace matrix --filter smoke --jobs 2
+
+# Nightly stanza (uncomment in a scheduled job, not in per-commit CI —
+# the full cross product runs all 9 policies × all 9 scenarios × seeds
+# plus every differential pair, including the 1000-worker tier cells):
+# ./target/release/splitplace matrix --filter full --jobs 4 --seeds 2
 
 echo "== engine throughput bench (smoke: all tiers, short horizon) =="
 # Smoke-mode perf record: every tier, few intervals — recorded in

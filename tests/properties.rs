@@ -7,8 +7,11 @@ use splitplace::chaos::{
 };
 use splitplace::cluster::build_fleet;
 use splitplace::config::{
-    ClusterConfig, ExperimentConfig, MabConfig, PolicyKind, SimConfig, WorkloadConfig,
+    ClusterConfig, EnvConstraint, ExperimentConfig, MabConfig, PolicyKind, SimConfig,
+    WorkloadConfig,
 };
+use splitplace::coordinator::{LatMemSplitter, SplitCtx, Splitter};
+use splitplace::harness::Scenario;
 use splitplace::mab::{Bandit, Context, MabPolicy, Mode};
 use splitplace::placement::{BestFitPlacer, FeatureLayout, Placer, PlacementInput, SlotInfo};
 use splitplace::sim::{CompletedTask, ContainerState, Engine, WorkerSnapshot};
@@ -827,6 +830,257 @@ fn prop_ledger_replay_reproduces_the_fault_surface_under_churn() {
                 if replayed != engine.fault_surface() {
                     return Err(format!("interval {t}: ledger replay diverged"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE-5: both related-work splitter stacks replay byte-identically
+/// under the HEAVY chaos profile (the ROADMAP's bar for every new policy)
+/// and keep all 13 oracles green on a correct engine.
+#[test]
+fn prop_new_splitter_stacks_deterministic_and_green_under_heavy_chaos() {
+    check(
+        "new-splitter-heavy-chaos",
+        3,
+        |rng| rng.next_u64() % 10_000,
+        |seed| {
+            for policy in [PolicyKind::LatMem, PolicyKind::OnlineSplit] {
+                let (cfg, plan) = Scenario::ChaosHeavy.build(policy, *seed, 10);
+                let opts = ChaosOptions::default();
+                let a = chaos::run_chaos(&cfg, &plan, &opts, None).map_err(|e| e.to_string())?;
+                let b = chaos::run_chaos(&cfg, &plan, &opts, None).map_err(|e| e.to_string())?;
+                if a.signatures != b.signatures {
+                    return Err(format!("{policy:?}: heavy-chaos replay diverged (seed {seed})"));
+                }
+                if !a.violations.is_empty() {
+                    return Err(format!("{policy:?} violated: {:?}", a.violations));
+                }
+                if a.admitted == 0 {
+                    return Err(format!("{policy:?}: no load admitted"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE-5: fixed seed ⇒ byte-identical decision sequence, checked at the
+/// splitter level (not just via engine signatures): the same seeded task
+/// and feedback stream must produce the exact same `Vec<SplitDecision>`.
+#[test]
+fn prop_new_splitters_decision_streams_replay_byte_identically() {
+    check(
+        "new-splitter-decision-stream",
+        6,
+        |rng| rng.next_u64() % 100_000,
+        |&seed| {
+            for policy in [PolicyKind::LatMem, PolicyKind::OnlineSplit] {
+                let stream = || -> Result<Vec<SplitDecision>, String> {
+                    let mut cfg = ExperimentConfig::small();
+                    cfg.workload.seed = seed ^ 0x5EED;
+                    let mut stack = policy
+                        .stack(&cfg, None, Mode::Test, true)
+                        .map_err(|e| e.to_string())?;
+                    let mut generator = Generator::new(cfg.workload.clone());
+                    let mut rng = Rng::new(seed ^ 0xDEC1);
+                    let mut decisions = Vec::new();
+                    for t in 0..12 {
+                        let tasks = generator.arrivals(t as f64 * 300.0);
+                        let mut leaving = Vec::new();
+                        for task in &tasks {
+                            let d = stack.decide(task, &mut SplitCtx { rng: &mut rng });
+                            decisions.push(d);
+                            // synthetic feedback drawn from the same seeded
+                            // stream, so both runs observe identical history
+                            leaving.push(CompletedTask {
+                                task_id: task.id,
+                                app: task.app,
+                                decision: d,
+                                batch: task.batch,
+                                sla: task.sla,
+                                response: rng.range(0.5, 12.0),
+                                wait: 0.0,
+                                exec: 1.0,
+                                transfer: 0.0,
+                                migrate: 0.0,
+                                workers: vec![0],
+                                accuracy: 0.9,
+                            });
+                        }
+                        stack.observe_interval(&leaving);
+                    }
+                    Ok(decisions)
+                };
+                let a = stream()?;
+                let b = stream()?;
+                if a.is_empty() {
+                    return Err(format!("{policy:?}: empty decision stream (seed {seed})"));
+                }
+                if a != b {
+                    return Err(format!("{policy:?}: decision stream diverged (seed {seed})"));
+                }
+                if a.iter().any(|d| !SplitDecision::ARMS.contains(d)) {
+                    return Err(format!("{policy:?}: produced a non-arm decision"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE-5 structural property: LatMem never picks a split whose
+/// estimated fragment RAM exceeds the fleet budget while a feasible arm
+/// exists — checked over random fleets (single-worker and
+/// memory-constrained included, where one arm genuinely stops fitting).
+#[test]
+fn prop_latmem_never_picks_a_split_exceeding_fleet_ram() {
+    check(
+        "latmem-ram-budget",
+        25,
+        |rng| {
+            let presets: [[usize; 4]; 3] = [[1, 0, 0, 0], [0, 1, 0, 0], [4, 2, 2, 2]];
+            let counts = presets[rng.below(3) as usize];
+            let memory = rng.chance(0.5);
+            let tasks: Vec<Task> = (0..12)
+                .map(|i| Task {
+                    id: i,
+                    app: rand_app(rng),
+                    batch: rng.int_range(16_000, 64_000) as u64,
+                    sla: rng.range(0.2, 15.0),
+                    arrival_s: 0.0,
+                    decision: None,
+                })
+                .collect();
+            (counts, memory, tasks)
+        },
+        |(counts, memory, tasks)| {
+            let mut cfg = ExperimentConfig::small();
+            cfg.cluster.counts = *counts;
+            if *memory {
+                cfg.cluster.constraint = EnvConstraint::Memory;
+            }
+            let fleet_ram = build_fleet(&cfg.cluster).total_ram_mb();
+            let mut s = LatMemSplitter::new(&cfg);
+            let mut rng = Rng::new(7);
+            for task in tasks {
+                let d = s.decide(task, &mut SplitCtx { rng: &mut rng });
+                let any_fits = SplitDecision::ARMS
+                    .iter()
+                    .any(|&a| s.fits_fleet(task.app, task.batch, a));
+                if any_fits && !s.fits_fleet(task.app, task.batch, d) {
+                    return Err(format!(
+                        "picked infeasible {d:?} for {:?}/{} on a {fleet_ram:.0} MB fleet",
+                        task.app, task.batch
+                    ));
+                }
+                let (total, _) = LatMemSplitter::estimated_ram_mb(task.app, task.batch, d);
+                if any_fits && total > fleet_ram {
+                    return Err(format!(
+                        "{d:?} plan needs {total:.0} MB > fleet {fleet_ram:.0} MB",
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE-5 / ROADMAP oracle migration prep: after every interval of a
+/// faulted run — including moments when the `crashed-workers-idle`
+/// verdict is NON-empty (forced via the no-evict bug hook) — the
+/// full-pool-scan and active-index derivations of `chain-precedence` and
+/// `crashed-workers-idle` must return identical verdict lists.
+#[test]
+fn prop_precedence_and_idle_oracles_agree_scan_vs_index() {
+    use splitplace::chaos::oracle as orc;
+    check(
+        "oracle-scan-vs-index",
+        6,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let cluster = build_fleet(&ClusterConfig::small());
+            let mut engine = Engine::new(cluster, SimConfig::default(), rng.next_u64());
+            let intervals = 12usize;
+            let plan =
+                FaultPlan::generate(rng.next_u64(), intervals, Profile::Heavy, engine.workers());
+            let agree = |engine: &Engine, t: usize| -> Result<(), String> {
+                if orc::chain_precedence_full(engine) != orc::chain_precedence_indexed(engine) {
+                    return Err(format!("interval {t}: chain-precedence derivations diverged"));
+                }
+                if orc::crashed_workers_idle_full(engine)
+                    != orc::crashed_workers_idle_indexed(engine)
+                {
+                    return Err(format!(
+                        "interval {t}: crashed-workers-idle derivations diverged"
+                    ));
+                }
+                Ok(())
+            };
+            let mut next_id = 0u64;
+            let mut forced_nonempty = false;
+            for t in 0..intervals {
+                for e in plan.events_at(t) {
+                    for cmd in e.event.compile(engine.workers()) {
+                        engine.apply(cmd);
+                    }
+                }
+                for _ in 0..1 + rng.below(3) {
+                    let task = Task {
+                        id: next_id,
+                        app: rand_app(&mut rng),
+                        batch: rng.int_range(16_000, 64_000) as u64,
+                        sla: rng.range(1.0, 15.0),
+                        arrival_s: engine.now_s,
+                        decision: None,
+                    };
+                    next_id += 1;
+                    engine.admit(task, rand_decision(&mut rng));
+                }
+                let mut assigns: Vec<(usize, usize)> = Vec::new();
+                for c in engine.placeable() {
+                    if rng.chance(0.8) {
+                        assigns.push((c, rng.below(10) as usize));
+                    }
+                }
+                engine.apply_placement(&assigns);
+                engine.step_interval();
+                agree(&engine, t)?;
+                // in the latter half, sabotage once: take a busy worker
+                // offline WITHOUT evicting, so both derivations must flag
+                // the same offenders — agreement on non-empty verdicts is
+                // the point (first interval with in-flight work wins)
+                if !forced_nonempty && t >= intervals / 2 {
+                    let busy = engine
+                        .containers()
+                        .iter()
+                        .find(|c| {
+                            matches!(
+                                c.state,
+                                ContainerState::Running | ContainerState::Transferring { .. }
+                            )
+                        })
+                        .and_then(|c| c.worker);
+                    if let Some(w) = busy {
+                        engine.apply(splitplace::sim::EngineCmd::ForceOfflineNoEvict {
+                            worker: w,
+                        });
+                        let full = orc::crashed_workers_idle_full(&engine);
+                        if full.is_empty() {
+                            return Err(format!(
+                                "forcing worker {w} offline left no offenders"
+                            ));
+                        }
+                        forced_nonempty = true;
+                        agree(&engine, t)?;
+                        engine.apply(splitplace::sim::EngineCmd::Recover { worker: w });
+                    }
+                }
+            }
+            if !forced_nonempty {
+                return Err("run never exercised a non-empty verdict".into());
             }
             Ok(())
         },
