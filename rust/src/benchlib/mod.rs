@@ -2,6 +2,7 @@
 //! timed iterations, mean/p50/p99 reporting. Used by all `benches/*.rs`
 //! (registered with `harness = false`).
 
+pub mod perfgate;
 pub mod scenarios;
 pub mod throughput;
 

@@ -1,0 +1,278 @@
+//! Perf-trajectory gate: compare a fresh [`Throughput`] run against the
+//! committed `BENCH_engine.json` baseline.
+//!
+//! Two kinds of quantity, two kinds of band (reusing the golden-gate
+//! [`Tolerance`] machinery):
+//!
+//! * **Counters** (`admitted`/`completed`/`failed`/`container_intervals`)
+//!   are deterministic in (tier scenario, policy, seed, intervals) and
+//!   compare with [`Tolerance::EXACT`] — drift there is a behavior change
+//!   hiding inside a perf artifact, not noise.
+//! * **Wall-clock rates** (`intervals_per_sec`,
+//!   `container_intervals_per_sec`) get a wide *regression-only* band:
+//!   speedups always pass, slowdowns beyond
+//!   [`RATE_SLOWDOWN_TOLERANCE`] fail. Wide because CI boxes are noisy —
+//!   the gate catches collapses, not percent-level drift.
+//!
+//! While the committed baseline is still the `measured: false`
+//! placeholder (no toolchain has run the bench yet), or when no baseline
+//! entry shares a fresh run's coordinates, the gate skips with a warning
+//! instead of failing — an absent trajectory is debt, not a regression.
+
+use std::path::Path;
+
+use crate::harness::golden::Tolerance;
+use crate::util::json;
+
+use super::throughput::Throughput;
+
+/// Fractional slowdown tolerated on wall-clock rates before the gate
+/// fails. Regression-only: a faster-than-baseline run always passes.
+pub const RATE_SLOWDOWN_TOLERANCE: f64 = 0.35;
+
+/// Outcome of gating one fresh run against the committed baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PerfGate {
+    /// Baseline unusable or not comparable — carries the reason. CI warns
+    /// and moves on.
+    Skipped(String),
+    /// All comparable tier entries were within bands; carries how many.
+    Pass(usize),
+    /// At least one quantity left its band; one message per failure.
+    Fail(Vec<String>),
+}
+
+impl PerfGate {
+    pub fn is_failure(&self) -> bool {
+        matches!(self, PerfGate::Fail(_))
+    }
+}
+
+/// Pull a numeric field out of a baseline tier entry; `None` when the
+/// field is absent or `null` (placeholder schema).
+fn num(entry: &json::Value, key: &str) -> Option<f64> {
+    entry.get(key).and_then(|v| v.as_f64().ok())
+}
+
+/// Gate `fresh` against the baseline file at `path`. Call BEFORE
+/// overwriting the baseline with the fresh results.
+pub fn gate_against_baseline(path: &Path, fresh: &[Throughput]) -> PerfGate {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => return PerfGate::Skipped(format!("baseline {}: {e}", path.display())),
+    };
+    let v = match json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => {
+            return PerfGate::Skipped(format!("baseline {} unparsable: {e}", path.display()))
+        }
+    };
+    let measured =
+        v.get("measured").and_then(|m| m.as_bool().ok()).unwrap_or(false);
+    if !measured {
+        return PerfGate::Skipped(
+            "baseline is the measured:false placeholder — record a real one with \
+             `splitplace bench` on a toolchain-equipped box"
+                .into(),
+        );
+    }
+    let tiers = match v.req("tiers").and_then(|t| t.as_arr()) {
+        Ok(t) => t,
+        Err(e) => {
+            return PerfGate::Skipped(format!("baseline {}: {e}", path.display()))
+        }
+    };
+
+    let mut failures = Vec::new();
+    let mut compared = 0usize;
+    for r in fresh {
+        // match on the full coordinate tuple; entries from the pre-policy
+        // schema (no "policy" field) count as the default mc stack
+        let Some(base) = tiers.iter().find(|b| {
+            b.get("tier").and_then(|t| t.as_str().ok()) == Some(r.tier.as_str())
+                && b.get("policy").and_then(|p| p.as_str().ok()).unwrap_or("mc")
+                    == r.policy
+                && num(b, "intervals") == Some(r.intervals as f64)
+                && b.get("seed").and_then(|s| s.as_str().ok())
+                    == Some(r.seed.to_string().as_str())
+                && b.get("scenario").and_then(|s| s.as_str().ok())
+                    == Some(if r.chaos { "chaos-light" } else { "clean" })
+        }) else {
+            continue; // no baseline at these coordinates — nothing to gate
+        };
+
+        let exact: [(&str, f64); 4] = [
+            ("admitted", r.admitted as f64),
+            ("completed", r.completed as f64),
+            ("failed", r.failed as f64),
+            ("container_intervals", r.container_intervals as f64),
+        ];
+        let mut usable = true;
+        for (key, got) in exact {
+            match num(base, key) {
+                None => {
+                    usable = false;
+                    break;
+                }
+                Some(want) => {
+                    if !Tolerance::EXACT.accepts(got, want) {
+                        failures.push(format!(
+                            "{}/{}: counter '{key}' drifted: baseline {want}, got {got} \
+                             — a determinism break, not perf noise",
+                            r.tier, r.policy
+                        ));
+                    }
+                }
+            }
+        }
+        if !usable {
+            continue; // placeholder-shaped entry inside a measured file
+        }
+        let rates: [(&str, f64); 2] = [
+            ("intervals_per_sec", r.intervals_per_sec),
+            ("container_intervals_per_sec", r.container_intervals_per_sec),
+        ];
+        for (key, got) in rates {
+            if let Some(want) = num(base, key) {
+                if got < want * (1.0 - RATE_SLOWDOWN_TOLERANCE) {
+                    failures.push(format!(
+                        "{}/{}: rate '{key}' regressed beyond {:.0}%: baseline \
+                         {want:.1}, got {got:.1}",
+                        r.tier,
+                        r.policy,
+                        RATE_SLOWDOWN_TOLERANCE * 100.0
+                    ));
+                }
+            }
+        }
+        compared += 1;
+    }
+
+    if compared == 0 && failures.is_empty() {
+        return PerfGate::Skipped(
+            "no baseline entry shares this run's coordinates (tier/policy/intervals/\
+             seed/scenario) — re-record the baseline"
+                .into(),
+        );
+    }
+    if failures.is_empty() {
+        PerfGate::Pass(compared)
+    } else {
+        PerfGate::Fail(failures)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchlib::throughput::write_json;
+    use std::path::PathBuf;
+
+    fn sample(tier: &str, ips: f64) -> Throughput {
+        Throughput {
+            tier: tier.to_string(),
+            policy: "mc".to_string(),
+            workers: 10,
+            intervals: 12,
+            seed: 7,
+            chaos: true,
+            admitted: 40,
+            completed: 30,
+            failed: 2,
+            container_intervals: 200,
+            wall_ms: 12.0 / ips * 1e3,
+            intervals_per_sec: ips,
+            container_intervals_per_sec: ips * 200.0 / 12.0,
+        }
+    }
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("splitplace-perfgate-{tag}-{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn placeholder_baseline_skips_with_warning() {
+        let path = tmpfile("placeholder");
+        std::fs::write(
+            &path,
+            r#"{"bench":"engine_throughput","measured":false,"tiers":[]}"#,
+        )
+        .unwrap();
+        match gate_against_baseline(&path, &[sample("small", 50.0)]) {
+            PerfGate::Skipped(msg) => assert!(msg.contains("placeholder"), "{msg}"),
+            other => panic!("expected skip, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_baseline_skips() {
+        let gate =
+            gate_against_baseline(Path::new("/nonexistent/bench.json"), &[sample("small", 50.0)]);
+        assert!(matches!(gate, PerfGate::Skipped(_)), "{gate:?}");
+    }
+
+    #[test]
+    fn identical_run_passes_and_speedups_pass() {
+        let path = tmpfile("pass");
+        write_json(&path, &[sample("small", 50.0)]).unwrap();
+        assert_eq!(
+            gate_against_baseline(&path, &[sample("small", 50.0)]),
+            PerfGate::Pass(1)
+        );
+        // 2× faster: regression-only band lets it through
+        assert_eq!(
+            gate_against_baseline(&path, &[sample("small", 100.0)]),
+            PerfGate::Pass(1)
+        );
+        // mild slowdown inside the band passes too
+        assert_eq!(
+            gate_against_baseline(&path, &[sample("small", 50.0 * 0.75)]),
+            PerfGate::Pass(1)
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rate_collapse_fails() {
+        let path = tmpfile("collapse");
+        write_json(&path, &[sample("small", 50.0)]).unwrap();
+        match gate_against_baseline(&path, &[sample("small", 50.0 * 0.5)]) {
+            PerfGate::Fail(msgs) => {
+                assert!(msgs.iter().any(|m| m.contains("intervals_per_sec")), "{msgs:?}")
+            }
+            other => panic!("expected fail, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn counter_drift_fails_exactly() {
+        let path = tmpfile("counter");
+        write_json(&path, &[sample("small", 50.0)]).unwrap();
+        let mut fresh = sample("small", 50.0);
+        fresh.completed += 1;
+        match gate_against_baseline(&path, &[fresh]) {
+            PerfGate::Fail(msgs) => {
+                assert!(msgs.iter().any(|m| m.contains("'completed'")), "{msgs:?}");
+                assert!(msgs.iter().any(|m| m.contains("determinism")), "{msgs:?}");
+            }
+            other => panic!("expected fail, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn different_coordinates_skip_not_fail() {
+        let path = tmpfile("coords");
+        write_json(&path, &[sample("small", 50.0)]).unwrap();
+        let mut fresh = sample("small", 50.0);
+        fresh.seed = 99; // different run coordinates — incomparable
+        assert!(matches!(
+            gate_against_baseline(&path, &[fresh]),
+            PerfGate::Skipped(_)
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -139,6 +139,14 @@ pub struct ChaosOutcome {
     pub admitted: u64,
     pub completed: usize,
     pub failed: usize,
+    /// Traffic-plane counters (see [`crate::traffic`]): arrivals before
+    /// admission control, tasks shed by each verdict, and autoscaler
+    /// actions. `offered == admitted + shed_queue + shed_deadline`.
+    pub offered: u64,
+    pub shed_queue: u64,
+    pub shed_deadline: u64,
+    pub scale_up: u64,
+    pub scale_down: u64,
     /// φ=0.9 EMA of task response times in completion order (NaN when no
     /// task left the system) — the matrix harness's latency headline.
     pub response_ema: f64,
@@ -271,10 +279,12 @@ pub fn run_chaos(
     let mut seen_completed: HashSet<u64> = HashSet::new();
     let mut violations = Vec::new();
     let mut signatures = Vec::with_capacity(cfg.sim.intervals);
-    // Plan-state ledger for the injected-state oracles. Churn lets the
-    // engine toggle availability on its own, so the comparison is only
-    // meaningful on churn-free runs (every chaos config today).
-    let track_plan_state = cfg.cluster.churn_rate == 0.0;
+    // Plan-state ledger for the injected-state oracles. Churn and the
+    // autoscaler both let the engine toggle availability on its own, so
+    // the comparison is only meaningful when neither is active (the
+    // ledger-replay-consistent oracle still audits scaling commands —
+    // they carry the Autoscale origin in the engine's own ledger).
+    let track_plan_state = cfg.cluster.churn_rate == 0.0 && cfg.traffic.autoscale.is_none();
     let n_workers = broker.engine.workers();
     let mut plan_ledger = PlanLedger::new(n_workers);
 
@@ -314,6 +324,11 @@ pub fn run_chaos(
         admitted: broker.admitted,
         completed: broker.engine.completed_task_count(),
         failed: broker.engine.failed_task_count(),
+        offered: broker.offered,
+        shed_queue: broker.shed_queue,
+        shed_deadline: broker.shed_deadline,
+        scale_up: broker.scale_up,
+        scale_down: broker.scale_down,
         response_ema: broker.metrics.response_ema(0.9),
         summary,
     })
@@ -514,6 +529,31 @@ mod tests {
         // the same plan without the bug is green
         let fixed = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
         assert!(fixed.violations.is_empty(), "{:?}", fixed.violations);
+    }
+
+    #[test]
+    fn traffic_plane_under_chaos_stays_green_and_replays() {
+        // Autoscaler + admission + a non-flat arrival model, under a real
+        // fault plan. The plan-state oracles stand down (the autoscaler
+        // legitimately toggles availability), but ledger-replay-consistent
+        // still audits every scaling command via its Autoscale origin.
+        let mut cfg = chaos_cfg(14, 5.0);
+        cfg.traffic.shape = crate::traffic::TrafficShape::Diurnal;
+        cfg.traffic.admission = Some(crate::traffic::AdmissionConfig::default());
+        cfg.traffic.autoscale = Some(crate::traffic::AutoscaleConfig {
+            queue_hi: 2.0,
+            queue_lo: 0.5,
+            min_online: 4,
+        });
+        let plan = FaultPlan::generate(11, 14, Profile::Light, cfg.cluster.total_workers());
+        let out = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        assert!(out.admitted > 0);
+        assert_eq!(out.offered, out.admitted + out.shed_queue + out.shed_deadline);
+        let replay = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
+        assert_eq!(out.signatures, replay.signatures, "traffic plane must replay identically");
+        assert_eq!(out.scale_up, replay.scale_up);
+        assert_eq!(out.scale_down, replay.scale_down);
     }
 
     /// A plan whose corruption events land while transfers are actually

@@ -4,6 +4,7 @@
 //! workload mix, cluster size) lives here so benches and examples build
 //! scenario configs declaratively. JSON round-trip uses [`crate::util::json`].
 
+use crate::traffic::{AdmissionConfig, AutoscaleConfig, TrafficShape};
 use crate::util::json::{self, Value};
 
 /// Which of the paper's policies drives the broker (Table 4 rows).
@@ -285,6 +286,27 @@ impl Default for SimConfig {
     }
 }
 
+/// Traffic-plane settings (`crate::traffic`): which arrival process shapes
+/// the per-interval λ, an optional recorded trace to replay instead of
+/// generating, and optional admission/autoscale policies. The default —
+/// flat Poisson, no trace, no shedding, no scaling — reproduces the
+/// pre-traffic-plane behavior byte-for-byte.
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    pub shape: TrafficShape,
+    /// Path to a recorded trace (see `workload::replay`); when set, the
+    /// trace replaces the generator entirely and `shape` is ignored.
+    pub trace: Option<String>,
+    pub admission: Option<AdmissionConfig>,
+    pub autoscale: Option<AutoscaleConfig>,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig { shape: TrafficShape::Flat, trace: None, admission: None, autoscale: None }
+    }
+}
+
 /// How task inference accuracy `p_i` is obtained.
 #[derive(Clone, Debug, PartialEq)]
 pub enum AccuracyMode {
@@ -304,6 +326,7 @@ pub struct ExperimentConfig {
     pub mab: MabConfig,
     pub placement: PlacementConfig,
     pub sim: SimConfig,
+    pub traffic: TrafficConfig,
     pub accuracy: AccuracyMode,
     /// Artifacts directory (HLO modules + manifest).
     pub artifacts_dir: String,
@@ -318,6 +341,7 @@ impl Default for ExperimentConfig {
             mab: MabConfig::default(),
             placement: PlacementConfig::default(),
             sim: SimConfig::default(),
+            traffic: TrafficConfig::default(),
             accuracy: AccuracyMode::Manifest,
             artifacts_dir: "artifacts".into(),
         }
@@ -396,6 +420,33 @@ impl ExperimentConfig {
                     ("sub_steps", Value::Num(self.sim.sub_steps as f64)),
                 ]),
             ),
+            ("traffic", {
+                let mut fields =
+                    vec![("shape", Value::Str(self.traffic.shape.name().into()))];
+                if let Some(trace) = &self.traffic.trace {
+                    fields.push(("trace", Value::Str(trace.clone())));
+                }
+                if let Some(a) = &self.traffic.admission {
+                    fields.push((
+                        "admission",
+                        Value::obj(vec![
+                            ("max_queue_depth", Value::Num(a.max_queue_depth as f64)),
+                            ("deadline_floor", Value::Num(a.deadline_floor)),
+                        ]),
+                    ));
+                }
+                if let Some(a) = &self.traffic.autoscale {
+                    fields.push((
+                        "autoscale",
+                        Value::obj(vec![
+                            ("queue_hi", Value::Num(a.queue_hi)),
+                            ("queue_lo", Value::Num(a.queue_lo)),
+                            ("min_online", Value::Num(a.min_online as f64)),
+                        ]),
+                    ));
+                }
+                Value::obj(fields)
+            }),
             (
                 "accuracy",
                 Value::Str(
@@ -511,6 +562,39 @@ impl ExperimentConfig {
                 cfg.sim.sub_steps = x.as_usize()?;
             }
         }
+        if let Some(t) = v.get("traffic") {
+            if let Some(x) = t.get("shape") {
+                if let Some(shape) = TrafficShape::parse(x.as_str()?) {
+                    cfg.traffic.shape = shape;
+                }
+            }
+            if let Some(x) = t.get("trace") {
+                cfg.traffic.trace = Some(x.as_str()?.to_string());
+            }
+            if let Some(a) = t.get("admission") {
+                let mut adm = AdmissionConfig::default();
+                if let Some(x) = a.get("max_queue_depth") {
+                    adm.max_queue_depth = x.as_usize()?;
+                }
+                if let Some(x) = a.get("deadline_floor") {
+                    adm.deadline_floor = x.as_f64()?;
+                }
+                cfg.traffic.admission = Some(adm);
+            }
+            if let Some(a) = t.get("autoscale") {
+                let mut sc = AutoscaleConfig::default();
+                if let Some(x) = a.get("queue_hi") {
+                    sc.queue_hi = x.as_f64()?;
+                }
+                if let Some(x) = a.get("queue_lo") {
+                    sc.queue_lo = x.as_f64()?;
+                }
+                if let Some(x) = a.get("min_online") {
+                    sc.min_online = x.as_usize()?;
+                }
+                cfg.traffic.autoscale = Some(sc);
+            }
+        }
         if let Some(x) = v.get("accuracy") {
             cfg.accuracy = if x.as_str()? == "measured" {
                 AccuracyMode::Measured
@@ -571,6 +655,35 @@ mod tests {
         for p in PolicyKind::all() {
             assert_eq!(PolicyKind::parse(p.name()), Some(p));
         }
+    }
+
+    #[test]
+    fn traffic_section_roundtrips_and_defaults_are_inert() {
+        // default: flat shape, no trace/admission/autoscale — the config
+        // that reproduces pre-traffic-plane behavior
+        let d = ExperimentConfig::default();
+        assert_eq!(d.traffic.shape, TrafficShape::Flat);
+        assert!(d.traffic.trace.is_none());
+        assert!(d.traffic.admission.is_none() && d.traffic.autoscale.is_none());
+        let back = ExperimentConfig::from_json(&d.to_json()).unwrap();
+        assert!(back.traffic.admission.is_none() && back.traffic.autoscale.is_none());
+
+        let mut c = ExperimentConfig::default();
+        c.traffic.shape = TrafficShape::Mmpp;
+        c.traffic.trace = Some("tests/traces/edge-burst.json".into());
+        c.traffic.admission =
+            Some(AdmissionConfig { max_queue_depth: 12, deadline_floor: 0.5 });
+        c.traffic.autoscale =
+            Some(AutoscaleConfig { queue_hi: 3.0, queue_lo: 0.1, min_online: 2 });
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.traffic.shape, TrafficShape::Mmpp);
+        assert_eq!(c2.traffic.trace.as_deref(), Some("tests/traces/edge-burst.json"));
+        let a = c2.traffic.admission.unwrap();
+        assert_eq!(a.max_queue_depth, 12);
+        assert!((a.deadline_floor - 0.5).abs() < 1e-12);
+        let s = c2.traffic.autoscale.unwrap();
+        assert_eq!(s.min_online, 2);
+        assert!((s.queue_hi - 3.0).abs() < 1e-12 && (s.queue_lo - 0.1).abs() < 1e-12);
     }
 
     #[test]

@@ -22,8 +22,10 @@ use crate::placement::{BestFitPlacer, Placer, PlacementInput, SlotInfo};
 use crate::runtime::Runtime;
 use crate::sim::{Engine, EngineCmd, WorkerSnapshot, RAM_OVERCOMMIT};
 use crate::splits::SplitDecision;
-use crate::util::rng::Rng;
+use crate::traffic::{self, AdmissionVerdict, Autoscaler, TrafficModel};
+use crate::util::rng::{mix, Rng};
 use crate::workload::generator::Generator;
+use crate::workload::replay::{self, Replay};
 use crate::workload::trace::{TraceBuffer, TraceSample};
 
 use super::decision::{DecisionStack, SplitCtx};
@@ -47,6 +49,24 @@ pub struct Broker<'rt> {
     pub admitted: u64,
     /// Flash-crowd injection: when set, overrides the configured Poisson λ.
     lambda_override: Option<f64>,
+    /// Traffic plane (`crate::traffic`): the arrival-process model shaping
+    /// per-interval λ (flat by default — byte-identical to the raw
+    /// generator stream), an optional recorded trace that replaces
+    /// generation entirely, and the optional autoscaler.
+    traffic_model: Box<dyn TrafficModel>,
+    trace_replay: Option<Replay>,
+    autoscaler: Option<Autoscaler>,
+    /// Previous interval's waiting-queue depth — the backlog signal both
+    /// admission shedding and autoscaling react to.
+    last_queued: usize,
+    /// Traffic-plane counters, surfaced as `CellSummary` metrics.
+    /// `offered` counts every arrival before admission control;
+    /// `offered == admitted_here + shed_queue + shed_deadline`.
+    pub offered: u64,
+    pub shed_queue: u64,
+    pub shed_deadline: u64,
+    pub scale_up: u64,
+    pub scale_down: u64,
 }
 
 impl<'rt> Broker<'rt> {
@@ -96,6 +116,19 @@ impl<'rt> Broker<'rt> {
 
         let metrics = Metrics::new(n_workers, cost_per_hour, cfg.sim.interval_seconds);
         let seed = cfg.workload.seed ^ 0xB0B;
+
+        let traffic_model =
+            cfg.traffic.shape.build(mix(cfg.workload.seed, traffic::TRAFFIC_STREAM_TAG));
+        let trace_replay = match &cfg.traffic.trace {
+            Some(path) => {
+                let resolved = traffic::resolve_trace_path(path);
+                let tasks = replay::load(&resolved)?;
+                Some(Replay::new(tasks, cfg.sim.interval_seconds))
+            }
+            None => None,
+        };
+        let autoscaler = cfg.traffic.autoscale.map(Autoscaler::new);
+
         Ok(Broker {
             cfg,
             engine,
@@ -108,6 +141,15 @@ impl<'rt> Broker<'rt> {
             last_snapshots: vec![WorkerSnapshot::default(); n_workers],
             admitted: 0,
             lambda_override: None,
+            traffic_model,
+            trace_replay,
+            autoscaler,
+            last_queued: 0,
+            offered: 0,
+            shed_queue: 0,
+            shed_deadline: 0,
+            scale_up: 0,
+            scale_down: 0,
         })
     }
 
@@ -173,14 +215,52 @@ impl<'rt> Broker<'rt> {
     pub fn step_report(&mut self) -> (f64, crate::sim::IntervalReport) {
         let t0 = Instant::now();
 
-        // 1. new tasks + split decisions
+        // 0. autoscaling: react to the previous interval's backlog against
+        // the live availability surface. At most one park/unpark per
+        // interval, bus-routed with the Autoscale ledger origin.
+        if let Some(scaler) = &mut self.autoscaler {
+            if let Some(cmd) = scaler.plan(self.last_queued, self.engine.online()) {
+                match cmd {
+                    EngineCmd::WorkerJoin { .. } => self.scale_up += 1,
+                    _ => self.scale_down += 1,
+                }
+                self.engine.apply_scaling(cmd);
+            }
+        }
+
+        // 1. new tasks (replayed trace, or generated under the traffic
+        // model's per-interval λ) + admission control + split decisions
         let now = self.engine.now_s;
-        let tasks = match self.lambda_override {
-            Some(l) => self.generator.arrivals_with(now, l),
-            None => self.generator.arrivals(now),
+        let tasks = match &mut self.trace_replay {
+            Some(r) => r.next_interval(),
+            None => {
+                let base = self.lambda_override.unwrap_or(self.cfg.workload.lambda);
+                let t = (now / self.cfg.sim.interval_seconds).round() as usize;
+                let lambda = self.traffic_model.lambda_at(t, base);
+                let mut tasks = self.generator.arrivals_with(now, lambda);
+                self.traffic_model.shape_tasks(&mut tasks);
+                tasks
+            }
         };
         let mut decisions = Vec::with_capacity(tasks.len());
         for task in tasks {
+            self.offered += 1;
+            // shed BEFORE the split decision: a shed task is never decided,
+            // never admitted to the engine, never seen by the MAB — the
+            // mab-accounting and task-conservation oracles stay exact
+            if let Some(adm) = &self.cfg.traffic.admission {
+                match adm.verdict(&task, self.last_queued) {
+                    AdmissionVerdict::ShedQueueDepth => {
+                        self.shed_queue += 1;
+                        continue;
+                    }
+                    AdmissionVerdict::ShedDeadlineRisk => {
+                        self.shed_deadline += 1;
+                        continue;
+                    }
+                    AdmissionVerdict::Admit => {}
+                }
+            }
             let d = self.decide(&task);
             decisions.push(d);
             self.engine.admit(task, d);
@@ -200,6 +280,7 @@ impl<'rt> Broker<'rt> {
         // 3. simulate the interval
         let mut report = self.engine.step_interval();
         self.last_snapshots = report.snapshots.clone();
+        self.last_queued = report.queued;
 
         // 4. accuracies for leaving tasks
         for t in &mut report.completed {
@@ -377,6 +458,96 @@ mod tests {
         let mut b = Broker::new(cfg, None, Mode::Test).unwrap();
         b.run();
         assert_eq!(b.metrics.layer_fraction.len(), 5);
+    }
+
+    #[test]
+    fn admission_control_sheds_and_counts_exactly() {
+        let mut cfg = ExperimentConfig::small();
+        cfg.policy = PolicyKind::ModelCompression;
+        cfg.sim.intervals = 10;
+        cfg.workload.lambda = 8.0;
+        // aggressive shedding so both verdicts fire at this horizon
+        cfg.traffic.admission = Some(crate::traffic::AdmissionConfig {
+            max_queue_depth: 3,
+            deadline_floor: 0.8,
+        });
+        let mut b = Broker::new(cfg, None, Mode::Test).unwrap();
+        for _ in 0..10 {
+            b.step();
+        }
+        assert!(b.offered > 0);
+        assert_eq!(
+            b.offered,
+            b.admitted + b.shed_queue + b.shed_deadline,
+            "every offered task is admitted or shed, exactly once"
+        );
+        assert!(b.shed_queue + b.shed_deadline > 0, "nothing was ever shed");
+        assert!(b.admitted > 0, "shedding must not starve the run");
+        // shed tasks never reached the engine or the decision stack
+        assert_eq!(b.engine.admitted_task_count() as u64, b.admitted);
+    }
+
+    #[test]
+    fn autoscaler_parks_idle_capacity_through_the_ledger() {
+        let mut cfg = ExperimentConfig::small();
+        cfg.policy = PolicyKind::ModelCompression;
+        cfg.sim.intervals = 12;
+        cfg.workload.lambda = 0.5; // mostly idle fleet
+        cfg.traffic.autoscale = Some(crate::traffic::AutoscaleConfig {
+            queue_hi: 2.0,
+            queue_lo: 0.5,
+            min_online: 4,
+        });
+        let mut b = Broker::new(cfg, None, Mode::Test).unwrap();
+        for _ in 0..12 {
+            b.step();
+        }
+        assert!(b.scale_down > 0, "an idle fleet must shrink");
+        let online = b.engine.online().iter().filter(|&&o| o).count();
+        assert!(online >= 4, "never below min_online");
+        // every scaling action is a ledger-audited Autoscale command
+        let autoscale_cmds = b
+            .engine
+            .ledger()
+            .iter()
+            .filter(|r| r.origin == crate::sim::CmdOrigin::Autoscale)
+            .count() as u64;
+        assert_eq!(autoscale_cmds, b.scale_up + b.scale_down);
+    }
+
+    #[test]
+    fn trace_replay_feeds_the_recorded_stream_verbatim() {
+        let wl = crate::config::WorkloadConfig {
+            lambda: 4.0,
+            ..Default::default()
+        };
+        let tasks =
+            crate::traffic::generate_trace(&wl, crate::traffic::TrafficShape::Flat, 6, 300.0);
+        assert!(!tasks.is_empty());
+        let path = std::env::temp_dir()
+            .join(format!("splitplace_broker_trace_{}.json", std::process::id()));
+        crate::workload::replay::save(&tasks, &path).unwrap();
+
+        let mut cfg = ExperimentConfig::small();
+        cfg.policy = PolicyKind::ModelCompression;
+        cfg.sim.intervals = 6;
+        cfg.traffic.trace = Some(path.to_string_lossy().into_owned());
+        let mut b = Broker::new(cfg, None, Mode::Test).unwrap();
+        for _ in 0..6 {
+            b.step();
+        }
+        assert_eq!(b.offered as usize, tasks.len(), "trace must replay task-for-task");
+        assert_eq!(b.admitted as usize, tasks.len());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_trace_file_errors_with_the_path() {
+        let mut cfg = ExperimentConfig::small();
+        cfg.traffic.trace = Some("/nonexistent/trace-xyz.json".into());
+        cfg.policy = PolicyKind::ModelCompression;
+        let err = Broker::new(cfg, None, Mode::Test).unwrap_err();
+        assert!(format!("{err:#}").contains("trace-xyz"), "{err:#}");
     }
 
     #[test]

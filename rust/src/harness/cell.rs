@@ -39,6 +39,13 @@ impl CellSummary {
         metrics.insert("admitted".into(), out.admitted as f64);
         metrics.insert("completed".into(), out.completed as f64);
         metrics.insert("failed".into(), out.failed as f64);
+        // traffic-plane counters (exact-gated; offered == admitted and the
+        // shed/scale counters are zero when admission/autoscale are off)
+        metrics.insert("offered".into(), out.offered as f64);
+        metrics.insert("shed_queue".into(), out.shed_queue as f64);
+        metrics.insert("shed_deadline".into(), out.shed_deadline as f64);
+        metrics.insert("scale_up".into(), out.scale_up as f64);
+        metrics.insert("scale_down".into(), out.scale_down as f64);
         metrics.insert("oracle_violations".into(), out.violations.len() as f64);
         metrics.insert("response_mean".into(), s.response.0);
         metrics.insert("response_ema".into(), out.response_ema);

@@ -56,7 +56,8 @@ pub fn tolerance_for(metric: &str) -> Tolerance {
         .or_else(|| metric.strip_prefix("b_"))
         .unwrap_or(metric);
     match base {
-        "admitted" | "completed" | "failed" | "oracle_violations" | "ordering_ok" => {
+        "admitted" | "completed" | "failed" | "oracle_violations" | "ordering_ok"
+        | "offered" | "shed_queue" | "shed_deadline" | "scale_up" | "scale_down" => {
             Tolerance::EXACT
         }
         _ => Tolerance::default(),
@@ -263,6 +264,12 @@ mod tests {
         assert_eq!(tolerance_for("a_completed").abs, 0.0);
         assert_eq!(tolerance_for("b_failed").rel, 0.0);
         assert_eq!(tolerance_for("ordering_ok").abs, 0.0);
+        // traffic-plane counters are exact too
+        assert_eq!(tolerance_for("offered").abs, 0.0);
+        assert_eq!(tolerance_for("shed_queue").rel, 0.0);
+        assert_eq!(tolerance_for("shed_deadline").abs, 0.0);
+        assert_eq!(tolerance_for("scale_up").rel, 0.0);
+        assert_eq!(tolerance_for("scale_down").abs, 0.0);
         // continuous metrics keep the band, prefixed or not
         assert!(tolerance_for("a_avg_reward").rel > 0.0);
         assert!(tolerance_for("delta_avg_reward").rel > 0.0);

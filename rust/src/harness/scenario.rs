@@ -51,6 +51,21 @@ pub enum Scenario {
     LargeClean,
     /// Light chaos on the ≈1000-worker tier.
     LargeChaosLight,
+    /// Committed-trace replay: arrivals come verbatim from
+    /// `tests/traces/edge-burst.json` instead of the generator — the
+    /// recorded stream is itself the regression fixture.
+    TraceReplay,
+    /// Headline traffic cell: diurnal λ punctured by flash-crowd bursts
+    /// under light chaos, with admission control and the autoscaler
+    /// active — the regime where scaling and the MAB champion interact.
+    DiurnalFlashCrowd,
+    /// Fig. 13 regime: compute-constrained edge under MMPP burst arrivals
+    /// with admission shedding.
+    ConstrainedEdge,
+    /// Fig. 16 regime: single-application workload (CIFAR-100 only).
+    SingleApp,
+    /// Fig. 18 regime: WAN cloud tier under heavy-tail batch arrivals.
+    CloudTier,
 }
 
 impl Scenario {
@@ -71,7 +86,17 @@ impl Scenario {
         Scenario::LargeChaosLight,
     ];
 
-    pub const ALL: [Scenario; 9] = [
+    /// The traffic-plane regimes (ISSUE-6): trace replay, the
+    /// diurnal-flash-crowd headline, and the paper's Fig. 13/16/18 shapes.
+    pub const TRAFFIC: [Scenario; 5] = [
+        Scenario::TraceReplay,
+        Scenario::DiurnalFlashCrowd,
+        Scenario::ConstrainedEdge,
+        Scenario::SingleApp,
+        Scenario::CloudTier,
+    ];
+
+    pub const ALL: [Scenario; 14] = [
         Scenario::Clean,
         Scenario::ChaosLight,
         Scenario::ChaosHeavy,
@@ -81,6 +106,11 @@ impl Scenario {
         Scenario::MediumChaosLight,
         Scenario::LargeClean,
         Scenario::LargeChaosLight,
+        Scenario::TraceReplay,
+        Scenario::DiurnalFlashCrowd,
+        Scenario::ConstrainedEdge,
+        Scenario::SingleApp,
+        Scenario::CloudTier,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -94,6 +124,11 @@ impl Scenario {
             Scenario::MediumChaosLight => "medium-chaos-light",
             Scenario::LargeClean => "large-clean",
             Scenario::LargeChaosLight => "large-chaos-light",
+            Scenario::TraceReplay => "trace-replay",
+            Scenario::DiurnalFlashCrowd => "diurnal-flash-crowd",
+            Scenario::ConstrainedEdge => "constrained-edge",
+            Scenario::SingleApp => "single-app",
+            Scenario::CloudTier => "cloud-tier",
         }
     }
 
@@ -175,6 +210,68 @@ impl Scenario {
                     profile: "flash-crowd".into(),
                     events,
                 }
+            }
+            Scenario::TraceReplay => {
+                // the committed trace is the arrival stream; resolved
+                // relative to the crate root so any cwd works
+                cfg.traffic.trace = Some("tests/traces/edge-burst.json".into());
+                FaultPlan::empty(seed, intervals)
+            }
+            Scenario::DiurnalFlashCrowd => {
+                cfg.workload.lambda = 3.0;
+                cfg.traffic.shape = crate::traffic::TrafficShape::Diurnal;
+                cfg.traffic.admission = Some(crate::traffic::AdmissionConfig::default());
+                cfg.traffic.autoscale = Some(crate::traffic::AutoscaleConfig::default());
+                // light chaos with two seeded flash bursts riding on top:
+                // the autoscaler must grow into the bursts while the fault
+                // plan churns availability underneath it
+                let mut events =
+                    FaultPlan::generate(seed, intervals, Profile::Light, n).events;
+                let mut rng = Rng::new(mix(seed, 0xD1F1));
+                let mut flash_until = 0usize;
+                for phase in 0..2usize {
+                    let lo = (1 + phase * intervals / 2).max(flash_until);
+                    if lo + 1 >= intervals {
+                        break;
+                    }
+                    let t = lo + rng.below(2) as usize;
+                    let d = 2 + rng.below(3) as usize;
+                    let mult = rng.range(4.0, 8.0);
+                    if t >= intervals {
+                        break;
+                    }
+                    events.push(TimedEvent {
+                        t,
+                        event: ChaosEvent::FlashCrowd { lambda_mult: mult },
+                    });
+                    let end = (t + d).min(intervals - 1).max(t + 1);
+                    if end < intervals {
+                        events.push(TimedEvent { t: end, event: ChaosEvent::FlashCrowdEnd });
+                    }
+                    flash_until = end + 1;
+                }
+                events.sort_by_key(|e| e.t);
+                FaultPlan {
+                    seed,
+                    intervals,
+                    profile: "diurnal-flash-crowd".into(),
+                    events,
+                }
+            }
+            Scenario::ConstrainedEdge => {
+                cfg.cluster.constraint = crate::config::EnvConstraint::Compute;
+                cfg.traffic.shape = crate::traffic::TrafficShape::Mmpp;
+                cfg.traffic.admission = Some(crate::traffic::AdmissionConfig::default());
+                FaultPlan::empty(seed, intervals)
+            }
+            Scenario::SingleApp => {
+                cfg.workload.app_weights = [0.0, 0.0, 1.0];
+                FaultPlan::empty(seed, intervals)
+            }
+            Scenario::CloudTier => {
+                cfg.cluster.tier = crate::config::Tier::Cloud;
+                cfg.traffic.shape = crate::traffic::TrafficShape::HeavyTail;
+                FaultPlan::empty(seed, intervals)
             }
             Scenario::MobilityHeavy => {
                 cfg.cluster.mobile_fraction = 1.0;
@@ -407,6 +504,8 @@ fn challenger_diff_cells(seeds: &[u64]) -> Vec<MatrixCell> {
 ///   policy rides through chaos-heavy here, as the ROADMAP demands — the
 ///   fleet-tier scenarios under the cheap MC policy (the tier axis stays
 ///   golden-gated without tripling 1000-worker cells in CI), the
+///   traffic-plane scenarios under MC plus the headline
+///   `mab-daso/diurnal-flash-crowd` cell (autoscaler × MAB champion), the
 ///   MAB+DASO-vs-{MC, Gillis} differential pairs, and the challenger
 ///   pairs `latmem~mab-daso` / `onlinesplit~mab-daso`.
 /// * `"full"` / `""` — all 9 policies × every scenario (base AND tier) ×
@@ -450,6 +549,21 @@ pub fn matrix_cells(filter: &str, seeds: &[u64]) -> Vec<MatrixCell> {
                     .into_iter()
                     .map(MatrixCell::Single),
             );
+            // the traffic-plane regimes ride smoke on the cheap MC policy…
+            cells.extend(
+                cross(&[PolicyKind::ModelCompression], &Scenario::TRAFFIC, first)
+                    .into_iter()
+                    .map(MatrixCell::Single),
+            );
+            // …plus the one headline cell where the autoscaler and the MAB
+            // champion interact (ISSUE-6 acceptance)
+            if let Some(&s0) = first.first() {
+                cells.push(MatrixCell::Single(Cell {
+                    policy: PolicyKind::MabDaso,
+                    scenario: Scenario::DiurnalFlashCrowd,
+                    seed: s0,
+                }));
+            }
             cells.extend(diff_cells(
                 &[PolicyKind::ModelCompression, PolicyKind::Gillis],
                 first,
@@ -565,10 +679,48 @@ mod tests {
     }
 
     #[test]
-    fn base_and_tiers_partition_all() {
+    fn base_tiers_and_traffic_partition_all() {
         let mut combined: Vec<Scenario> = Scenario::BASE.to_vec();
         combined.extend(Scenario::TIERS);
+        combined.extend(Scenario::TRAFFIC);
         assert_eq!(combined, Scenario::ALL.to_vec());
+    }
+
+    #[test]
+    fn traffic_scenarios_carry_their_regimes() {
+        use crate::config::{EnvConstraint, Tier};
+        use crate::traffic::TrafficShape;
+        let (cfg, plan) = Scenario::TraceReplay.build(PolicyKind::ModelCompression, 1, 8);
+        assert!(cfg.traffic.trace.as_deref().unwrap().ends_with("edge-burst.json"));
+        assert!(plan.events.is_empty(), "trace replay is a fault-free control");
+
+        let (cfg, plan) = Scenario::DiurnalFlashCrowd.build(PolicyKind::MabDaso, 1, 12);
+        assert_eq!(cfg.traffic.shape, TrafficShape::Diurnal);
+        assert!(cfg.traffic.admission.is_some(), "admission control must be active");
+        assert!(cfg.traffic.autoscale.is_some(), "the autoscaler must be active");
+        assert!(
+            plan.events.iter().any(|e| matches!(e.event, ChaosEvent::FlashCrowd { .. })),
+            "headline cell needs its bursts"
+        );
+        assert!(
+            plan.events.iter().any(|e| !matches!(
+                e.event,
+                ChaosEvent::FlashCrowd { .. } | ChaosEvent::FlashCrowdEnd
+            )),
+            "headline cell rides on light chaos, not a clean plan"
+        );
+
+        let (cfg, _) = Scenario::ConstrainedEdge.build(PolicyKind::ModelCompression, 1, 8);
+        assert_eq!(cfg.cluster.constraint, EnvConstraint::Compute);
+        assert_eq!(cfg.traffic.shape, TrafficShape::Mmpp);
+        assert!(cfg.traffic.admission.is_some());
+
+        let (cfg, _) = Scenario::SingleApp.build(PolicyKind::ModelCompression, 1, 8);
+        assert_eq!(cfg.workload.app_weights, [0.0, 0.0, 1.0]);
+
+        let (cfg, _) = Scenario::CloudTier.build(PolicyKind::ModelCompression, 1, 8);
+        assert_eq!(cfg.cluster.tier, Tier::Cloud);
+        assert_eq!(cfg.traffic.shape, TrafficShape::HeavyTail);
     }
 
     #[test]
@@ -576,11 +728,19 @@ mod tests {
         let seeds = [1u64, 2];
         let smoke = matrix_cells("smoke", &seeds);
         // 5 policies × base scenarios × 1 seed, + MC × tier scenarios,
+        // + MC × traffic scenarios + the mab-daso headline traffic cell,
         // + 2 baselines × 2 scenarios diff, + 2 challengers × 2 scenarios
         assert_eq!(
             smoke.len(),
-            5 * Scenario::BASE.len() + Scenario::TIERS.len() + 4 + 4
+            5 * Scenario::BASE.len()
+                + Scenario::TIERS.len()
+                + Scenario::TRAFFIC.len()
+                + 1
+                + 4
+                + 4
         );
+        // the headline autoscaler × champion cell is present
+        assert!(smoke.iter().any(|c| c.id() == "mab-daso/diurnal-flash-crowd/s1"));
         // the tier axis is present in smoke (golden-gated), MC-only
         for s in Scenario::TIERS {
             let with = smoke

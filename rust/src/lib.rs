@@ -35,6 +35,7 @@ pub mod server;
 pub mod sim;
 pub mod splits;
 pub mod testutil;
+pub mod traffic;
 pub mod util;
 pub mod workload;
 

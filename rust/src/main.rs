@@ -17,11 +17,20 @@
 //!                                  gating, Table-4 ordering gate, bug-base
 //!   bench [--tier small|medium|large|all] [--intervals N] [--seed S]
 //!         [--scenario clean|chaos-light] [--policy P] [--out FILE]
-//!                                  engine throughput per fleet tier
+//!         [--gate BASELINE]        engine throughput per fleet tier
 //!                                  (10/200/1000 workers) under any policy
 //!                                  stack (default mc isolates the engine
 //!                                  hot path), written to BENCH_engine.json
-//!                                  — the perf trajectory
+//!                                  — the perf trajectory; --gate compares
+//!                                  against the committed baseline (exact
+//!                                  counters, banded rates) before
+//!                                  overwriting it
+//!   trace record [--out FILE] [--shape flat|diurnal|mmpp|heavy-tail]
+//!         [--intervals N] [--lambda L] [--seed S]
+//!   trace replay --trace FILE [--policy P] [--intervals N]
+//!                                  record a traffic-model arrival stream
+//!                                  to JSON / replay a recorded stream
+//!                                  verbatim through the broker
 //!   serve [--addr A] [--threads N] serving front-end
 //!   info                           artifact + cluster inventory
 //!
@@ -536,10 +545,106 @@ fn cmd_bench(flags: std::collections::HashMap<String, String>) -> Result<()> {
     }
     t.print();
 
+    // perf-trajectory gate: compare against the committed baseline BEFORE
+    // overwriting it with this run (the common case is --gate and --out
+    // naming the same file)
+    let gate = flags.get("gate").map(|baseline| {
+        splitplace::benchlib::perfgate::gate_against_baseline(
+            std::path::Path::new(baseline),
+            &results,
+        )
+    });
+
     throughput::write_json(std::path::Path::new(&out), &results)
         .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
     eprintln!("perf record written to {out}");
+
+    if let Some(gate) = gate {
+        use splitplace::benchlib::perfgate::PerfGate;
+        match gate {
+            PerfGate::Skipped(why) => eprintln!("perf gate SKIPPED: {why}"),
+            PerfGate::Pass(n) => eprintln!("perf gate: {n} tier(s) within bands"),
+            PerfGate::Fail(msgs) => {
+                for m in &msgs {
+                    eprintln!("PERF REGRESSION: {m}");
+                }
+                std::process::exit(1);
+            }
+        }
+    }
     Ok(())
+}
+
+fn cmd_trace(args: &[String], flags: std::collections::HashMap<String, String>) -> Result<()> {
+    use splitplace::config::WorkloadConfig;
+    use splitplace::traffic::{self, TrafficShape};
+    use splitplace::workload::replay;
+
+    match args.get(1).map(String::as_str) {
+        Some("record") => {
+            let shape_name = flags.get("shape").map(String::as_str).unwrap_or("flat");
+            let shape = TrafficShape::parse(shape_name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--shape must be flat|diurnal|mmpp|heavy-tail, got {shape_name}"
+                )
+            })?;
+            let intervals: usize =
+                flags.get("intervals").map(|s| s.parse()).transpose()?.unwrap_or(12);
+            let mut wl = WorkloadConfig::default();
+            if let Some(l) = flags.get("lambda") {
+                wl.lambda = l.parse()?;
+            }
+            if let Some(s) = flags.get("seed") {
+                wl.seed = s.parse()?;
+            }
+            let interval_seconds = ExperimentConfig::default().sim.interval_seconds;
+            let out = flags.get("out").cloned().unwrap_or_else(|| "trace.json".into());
+            let tasks = traffic::generate_trace(&wl, shape, intervals, interval_seconds);
+            replay::save(&tasks, &out)?;
+            eprintln!(
+                "recorded {} tasks (shape {}, λ={}, seed {}) over {} intervals to {}",
+                tasks.len(),
+                shape.name(),
+                wl.lambda,
+                wl.seed,
+                intervals,
+                out
+            );
+            Ok(())
+        }
+        Some("replay") => {
+            let path = flags
+                .get("trace")
+                .ok_or_else(|| anyhow::anyhow!("trace replay needs --trace FILE"))?;
+            let mut cfg = build_config(&flags)?;
+            if !flags.contains_key("workers") {
+                cfg.cluster = ClusterConfig::small();
+            }
+            cfg.traffic.trace = Some(path.clone());
+            let rt = try_runtime();
+            let out = run_experiment(cfg.clone(), rt.as_ref())?;
+            let s = &out.summary;
+            let mut t = Table::new(
+                &format!("{} — trace {path}, {} intervals", s.policy, cfg.sim.intervals),
+                &["metric", "value"],
+            );
+            t.row(vec!["tasks completed".into(), s.tasks.to_string()]);
+            t.row(vec!["avg reward (eq.15)".into(), fnum(s.avg_reward)]);
+            t.row(vec!["accuracy (eq.13)".into(), fnum(s.accuracy)]);
+            t.row(vec!["SLA violations (eq.14)".into(), fnum(s.sla_violations)]);
+            t.row(vec![
+                "response (intervals)".into(),
+                fpm(s.response.0, s.response.1),
+            ]);
+            t.row(vec!["energy (MW-hr)".into(), fnum(s.energy_mwh)]);
+            t.print();
+            Ok(())
+        }
+        other => bail!(
+            "trace needs a mode: record|replay (got '{}')",
+            other.unwrap_or("")
+        ),
+    }
 }
 
 fn cmd_serve(flags: std::collections::HashMap<String, String>) -> Result<()> {
@@ -610,11 +715,13 @@ fn main() -> Result<()> {
         "chaos" => cmd_chaos(flags),
         "matrix" => cmd_matrix(flags),
         "bench" => cmd_bench(flags),
+        "trace" => cmd_trace(&args, flags),
         "serve" => cmd_serve(flags),
         "info" => cmd_info(),
         other => {
             eprintln!(
-                "unknown command '{other}'; try: run, compare, chaos, matrix, bench, serve, info"
+                "unknown command '{other}'; try: run, compare, chaos, matrix, bench, \
+                 trace, serve, info"
             );
             std::process::exit(2);
         }

@@ -27,6 +27,13 @@ pub enum EngineCmd {
     Crash { worker: usize },
     /// Crashed/offline worker rejoins the fleet.
     Recover { worker: usize },
+    /// Autoscaler decision: park a worker (graceful — resident containers
+    /// checkpoint and requeue, like `SetOnline { up: false }`). Issued via
+    /// [`Engine::apply_scaling`] so the ledger origin reads `Autoscale`.
+    WorkerLeave { worker: usize },
+    /// Autoscaler decision: unpark a previously parked worker (`Recover`
+    /// semantics under the `Autoscale` origin).
+    WorkerJoin { worker: usize },
     /// Straggler injection: scale the worker's MIPS by `factor`
     /// (clamped to [0.05, 1]); 1.0 restores full speed.
     SetMipsFactor { worker: usize, factor: f64 },
@@ -70,6 +77,8 @@ impl EngineCmd {
             EngineCmd::SetOnline { worker, .. }
             | EngineCmd::Crash { worker }
             | EngineCmd::Recover { worker }
+            | EngineCmd::WorkerLeave { worker }
+            | EngineCmd::WorkerJoin { worker }
             | EngineCmd::SetMipsFactor { worker, .. }
             | EngineCmd::SetRamFactor { worker, .. }
             | EngineCmd::SetChannelOverride { worker, .. }
@@ -105,6 +114,10 @@ pub enum CmdOrigin {
     /// The engine's own churn process (still bus-routed so the ledger
     /// stays a complete mutation history).
     Churn,
+    /// The traffic plane's autoscaler, through [`Engine::apply_scaling`] —
+    /// capacity changes that are *decisions*, distinguishable in the
+    /// ledger from chaos-origin offline events.
+    Autoscale,
 }
 
 /// One ledger entry: the command, when it landed, and what it did.
@@ -164,7 +177,10 @@ impl FaultSurface {
             EngineCmd::Crash { worker } | EngineCmd::ForceOfflineNoEvict { worker } => {
                 self.online[worker] = false;
             }
-            EngineCmd::Recover { worker } => self.online[worker] = true,
+            EngineCmd::Recover { worker } | EngineCmd::WorkerJoin { worker } => {
+                self.online[worker] = true;
+            }
+            EngineCmd::WorkerLeave { worker } => self.online[worker] = false,
             EngineCmd::SetMipsFactor { worker, factor } => {
                 self.mips_factor[worker] = factor.clamp(0.05, 1.0);
             }
@@ -199,6 +215,13 @@ impl Engine {
     /// only mutation path for the engine's fault/availability surface.
     pub fn apply(&mut self, cmd: EngineCmd) -> Effect {
         self.apply_with_origin(cmd, CmdOrigin::External)
+    }
+
+    /// Apply an autoscaler decision. Same bus, same ledger — the record's
+    /// origin is [`CmdOrigin::Autoscale`], so audit sweeps can tell a
+    /// capacity decision from a chaos-injected fault.
+    pub fn apply_scaling(&mut self, cmd: EngineCmd) -> Effect {
+        self.apply_with_origin(cmd, CmdOrigin::Autoscale)
     }
 
     /// Full command history, in application order.
@@ -250,12 +273,20 @@ impl Engine {
                 self.online[worker] = false;
                 Effect::Evicted { containers: self.evict_worker(worker, true) }
             }
-            EngineCmd::Recover { worker } => {
+            EngineCmd::Recover { worker } | EngineCmd::WorkerJoin { worker } => {
                 if worker >= n || self.online[worker] {
                     return Effect::Noop;
                 }
                 self.online[worker] = true;
                 Effect::Applied
+            }
+            EngineCmd::WorkerLeave { worker } => {
+                // graceful park: identical semantics to SetOnline{up:false}
+                if worker >= n || !self.online[worker] {
+                    return Effect::Noop;
+                }
+                self.online[worker] = false;
+                Effect::Evicted { containers: self.evict_worker(worker, false) }
             }
             EngineCmd::SetMipsFactor { worker, factor } => {
                 if worker >= n {
@@ -695,6 +726,52 @@ mod tests {
         assert_eq!(replayed.mips_factor[1], 0.05);
         assert_eq!(replayed.clock_skew_s[4], 600.0);
         assert_eq!(replayed.churn_rate, 1.0);
+    }
+
+    #[test]
+    fn scaling_commands_park_gracefully_and_tag_their_origin() {
+        let mut e = engine();
+        e.admit(task(1, App::Mnist, 32_000), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 2)]);
+        e.step_interval();
+        let progress = e.containers[0].mi_done;
+        assert!(progress > 0.0);
+        // park: graceful eviction (checkpoint kept), Autoscale origin
+        assert_eq!(
+            e.apply_scaling(EngineCmd::WorkerLeave { worker: 2 }),
+            Effect::Evicted { containers: 1 }
+        );
+        assert!(!e.online()[2]);
+        let c = &e.containers[0];
+        assert_eq!(c.state, ContainerState::Queued);
+        assert!((c.mi_done - progress).abs() < 1e-9, "parking must checkpoint");
+        // unpark
+        assert_eq!(e.apply_scaling(EngineCmd::WorkerJoin { worker: 2 }), Effect::Applied);
+        assert!(e.online()[2]);
+        // idempotence + out-of-range are no-ops
+        assert_eq!(e.apply_scaling(EngineCmd::WorkerJoin { worker: 2 }), Effect::Noop);
+        assert_eq!(e.apply_scaling(EngineCmd::WorkerLeave { worker: 99 }), Effect::Noop);
+        let scaling: Vec<&CmdRecord> = e
+            .ledger()
+            .iter()
+            .filter(|r| r.origin == CmdOrigin::Autoscale)
+            .collect();
+        assert_eq!(scaling.len(), 4, "every scaling command must land in the ledger");
+        assert!(matches!(scaling[0].cmd, EngineCmd::WorkerLeave { worker: 2 }));
+        assert!(matches!(scaling[1].cmd, EngineCmd::WorkerJoin { worker: 2 }));
+    }
+
+    #[test]
+    fn fault_surface_replay_tracks_scaling_commands() {
+        let mut e = engine();
+        e.apply_scaling(EngineCmd::WorkerLeave { worker: 5 });
+        e.apply(EngineCmd::Crash { worker: 1 });
+        e.apply_scaling(EngineCmd::WorkerLeave { worker: 4 });
+        e.apply_scaling(EngineCmd::WorkerJoin { worker: 5 });
+        e.step_interval();
+        let replayed = FaultSurface::replay(e.workers(), e.ledger());
+        assert_eq!(replayed, e.fault_surface());
+        assert!(replayed.online[5] && !replayed.online[4] && !replayed.online[1]);
     }
 
     #[test]

@@ -1,0 +1,552 @@
+//! Traffic plane (ROADMAP item 3, the arXiv:2110.04841 deployment story):
+//! arrival-process models, replayable traces, admission control and
+//! autoscaling as first-class scenario citizens.
+//!
+//! Three pieces, all deterministic:
+//!
+//! * **[`TrafficModel`]** — per-interval arrival-rate shaping over the
+//!   scenario's base λ. Every implementation is a *stateless pure function
+//!   of `(interval, seed)*`: the diurnal phase, every MMPP regime
+//!   transition and every heavy-tail batch draw derive from
+//!   `util::rng::mix` streams keyed by the model seed and the interval (or
+//!   task id), never from call order — so `--jobs 1` ≡ `--jobs N` stays
+//!   byte-identical and a cell can be replayed from its coordinates alone.
+//! * **[`AdmissionConfig`]** — queue-depth / deadline-risk shedding applied
+//!   *before* the split decision, so the MAB accounting and
+//!   task-conservation oracles see only admitted tasks. Shed counts surface
+//!   as `CellSummary` counters (`offered`, `shed_queue`, `shed_deadline`).
+//! * **[`Autoscaler`]** — worker park/unpark as a *decision*: it emits
+//!   typed `EngineCmd::{WorkerLeave,WorkerJoin}` through the engine command
+//!   bus tagged `CmdOrigin::Autoscale`, so every capacity change lands in
+//!   the audit ledger, replays through `ledger-replay-consistent`, and is
+//!   distinguishable from chaos-origin offline events.
+//!
+//! Trace replay rides `workload::replay`: a committed file under
+//! `tests/traces/` becomes the `trace-replay` scenario, and
+//! `splitplace trace record|replay` generates and pins new ones.
+
+use crate::config::WorkloadConfig;
+use crate::sim::EngineCmd;
+use crate::util::rng::{mix, Rng};
+use crate::workload::generator::Generator;
+use crate::workload::Task;
+
+/// Stream tag separating the traffic-model seed from every other consumer
+/// of `cfg.workload.seed`.
+pub const TRAFFIC_STREAM_TAG: u64 = 0x7EA_FF1C;
+
+const DIURNAL_TAG: u64 = 0xD1_0172;
+const MMPP_TAG: u64 = 0x4D4D_5050;
+const HEAVY_TAG: u64 = 0x7A11_BA7C;
+
+/// The arrival-process axis: which [`TrafficModel`] shapes a scenario's
+/// per-interval λ (and, for heavy-tail, its batch sizes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrafficShape {
+    /// The paper's flat Poisson(λ) per interval — byte-identical to the
+    /// pre-traffic-plane arrival stream.
+    Flat,
+    /// Sinusoid-modulated Poisson with a seeded phase (diurnal swing).
+    Diurnal,
+    /// MMPP-style two-regime process: quiet/surge with seeded transitions.
+    Mmpp,
+    /// Flat λ with heavy-tail batch-size inflation (occasional Pareto-ish
+    /// giants), SLA rescaled proportionally.
+    HeavyTail,
+}
+
+impl TrafficShape {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficShape::Flat => "flat",
+            TrafficShape::Diurnal => "diurnal",
+            TrafficShape::Mmpp => "mmpp",
+            TrafficShape::HeavyTail => "heavy-tail",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TrafficShape> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "flat" | "poisson" => TrafficShape::Flat,
+            "diurnal" | "sinusoid" => TrafficShape::Diurnal,
+            "mmpp" | "burst" => TrafficShape::Mmpp,
+            "heavy-tail" | "heavytail" | "pareto" => TrafficShape::HeavyTail,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [TrafficShape; 4] {
+        [TrafficShape::Flat, TrafficShape::Diurnal, TrafficShape::Mmpp, TrafficShape::HeavyTail]
+    }
+
+    /// Build the model for this shape. `seed` is the traffic-stream seed
+    /// (callers derive it as `mix(workload_seed, TRAFFIC_STREAM_TAG)`).
+    pub fn build(&self, seed: u64) -> Box<dyn TrafficModel> {
+        match self {
+            TrafficShape::Flat => Box::new(FlatPoisson),
+            TrafficShape::Diurnal => Box::new(DiurnalPoisson::new(seed)),
+            TrafficShape::Mmpp => Box::new(MmppBurst::new(seed)),
+            TrafficShape::HeavyTail => Box::new(HeavyTailBatch::new(seed)),
+        }
+    }
+}
+
+/// A deterministic arrival process. Implementations hold only their seed
+/// and constants — `lambda_at` and `shape_tasks` must be pure functions of
+/// `(t, seed)` / `(task.id, seed)` so replay never depends on call order.
+pub trait TrafficModel: Send {
+    fn name(&self) -> &'static str;
+
+    /// Arrival rate for scheduling interval `t`, given the scenario's base
+    /// λ (post any chaos flash-crowd override).
+    fn lambda_at(&self, t: usize, base: f64) -> f64;
+
+    /// Post-generation task shaping (heavy-tail batch inflation). Default
+    /// is the identity, leaving the generator's stream untouched.
+    fn shape_tasks(&self, _tasks: &mut [Task]) {}
+}
+
+/// The paper's flat Poisson process.
+pub struct FlatPoisson;
+
+impl TrafficModel for FlatPoisson {
+    fn name(&self) -> &'static str {
+        "flat"
+    }
+
+    fn lambda_at(&self, _t: usize, base: f64) -> f64 {
+        base
+    }
+}
+
+/// Diurnal sinusoid: λ(t) = base · (1 + depth · sin(2π(t + φ)/period)),
+/// with the phase φ drawn once from the model seed.
+pub struct DiurnalPoisson {
+    phase: usize,
+    period: usize,
+    depth: f64,
+}
+
+impl DiurnalPoisson {
+    pub fn new(seed: u64) -> Self {
+        let period = 24;
+        let phase = Rng::new(mix(seed, DIURNAL_TAG)).below(period as u64) as usize;
+        DiurnalPoisson { phase, period, depth: 0.6 }
+    }
+}
+
+impl TrafficModel for DiurnalPoisson {
+    fn name(&self) -> &'static str {
+        "diurnal"
+    }
+
+    fn lambda_at(&self, t: usize, base: f64) -> f64 {
+        let angle =
+            2.0 * std::f64::consts::PI * ((t + self.phase) as f64) / self.period as f64;
+        (base * (1.0 + self.depth * angle.sin())).max(0.0)
+    }
+}
+
+/// MMPP-style two-regime process: quiet (λ·1) and surge (λ·surge_mult),
+/// with per-interval seeded transition draws. The regime at interval `t`
+/// is recomputed by walking the transition chain from interval 0 — each
+/// step's draw comes from its own `mix(seed, mix(MMPP_TAG, i))` stream, so
+/// the walk is a pure function of `(t, seed)` however often it is queried.
+pub struct MmppBurst {
+    seed: u64,
+    surge_mult: f64,
+    p_enter: f64,
+    p_exit: f64,
+}
+
+impl MmppBurst {
+    pub fn new(seed: u64) -> Self {
+        MmppBurst { seed, surge_mult: 4.0, p_enter: 0.15, p_exit: 0.5 }
+    }
+
+    /// Regime at interval `t` (true = surge).
+    pub fn surge_at(&self, t: usize) -> bool {
+        let mut surge = false;
+        for i in 0..=t {
+            let mut r = Rng::new(mix(self.seed, mix(MMPP_TAG, i as u64)));
+            if surge {
+                if r.chance(self.p_exit) {
+                    surge = false;
+                }
+            } else if r.chance(self.p_enter) {
+                surge = true;
+            }
+        }
+        surge
+    }
+}
+
+impl TrafficModel for MmppBurst {
+    fn name(&self) -> &'static str {
+        "mmpp"
+    }
+
+    fn lambda_at(&self, t: usize, base: f64) -> f64 {
+        if self.surge_at(t) {
+            base * self.surge_mult
+        } else {
+            base
+        }
+    }
+}
+
+/// Flat λ with heavy-tail batches: a seeded per-task draw occasionally
+/// inflates the batch by a truncated Pareto factor (α = 1.5, cap 4×), with
+/// the SLA rescaled proportionally so deadline pressure per sample is
+/// unchanged. Applied *after* generation, keyed by task id — the
+/// generator's own streams (and every flat-shape golden) stay untouched.
+pub struct HeavyTailBatch {
+    seed: u64,
+    p_giant: f64,
+}
+
+impl HeavyTailBatch {
+    pub fn new(seed: u64) -> Self {
+        HeavyTailBatch { seed, p_giant: 0.12 }
+    }
+}
+
+impl TrafficModel for HeavyTailBatch {
+    fn name(&self) -> &'static str {
+        "heavy-tail"
+    }
+
+    fn lambda_at(&self, _t: usize, base: f64) -> f64 {
+        base
+    }
+
+    fn shape_tasks(&self, tasks: &mut [Task]) {
+        for task in tasks {
+            let mut r = Rng::new(mix(mix(self.seed, HEAVY_TAG), task.id));
+            if r.chance(self.p_giant) {
+                let factor = (1.0 - r.f64()).powf(-1.0 / 1.5).min(4.0);
+                let old = task.batch;
+                task.batch = ((old as f64 * factor) as u64).min(256_000);
+                task.sla *= task.batch as f64 / old as f64;
+            }
+        }
+    }
+}
+
+/// Admission-control policy: shed on queue depth or deadline risk before
+/// the split decision is taken (shed tasks are never admitted to the
+/// engine, never decided by the splitter, and never counted by the MAB
+/// accounting oracle).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionConfig {
+    /// Previous-interval waiting-queue depth at and above which every new
+    /// arrival is shed.
+    pub max_queue_depth: usize,
+    /// Deadline-risk floor: shed a task when its SLA (in intervals) falls
+    /// below `deadline_floor · (1 + queued)` — a short deadline that the
+    /// current backlog makes unservable.
+    pub deadline_floor: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { max_queue_depth: 64, deadline_floor: 0.25 }
+    }
+}
+
+/// Per-task admission verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionVerdict {
+    Admit,
+    ShedQueueDepth,
+    ShedDeadlineRisk,
+}
+
+impl AdmissionConfig {
+    pub fn verdict(&self, task: &Task, queued: usize) -> AdmissionVerdict {
+        if queued >= self.max_queue_depth {
+            return AdmissionVerdict::ShedQueueDepth;
+        }
+        if task.sla < self.deadline_floor * (1.0 + queued as f64) {
+            return AdmissionVerdict::ShedDeadlineRisk;
+        }
+        AdmissionVerdict::Admit
+    }
+}
+
+/// Autoscaling thresholds (queue depth relative to online capacity).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Unpark a worker when queued > queue_hi × online.
+    pub queue_hi: f64,
+    /// Park a worker when queued < queue_lo × online.
+    pub queue_lo: f64,
+    /// Never park below this many online workers.
+    pub min_online: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig { queue_hi: 2.0, queue_lo: 0.25, min_online: 4 }
+    }
+}
+
+/// Worker park/unpark as a decision: at most one action per interval,
+/// driven by the previous interval's queue depth against the live
+/// availability surface. Emits `EngineCmd::{WorkerLeave,WorkerJoin}` —
+/// the caller applies them via `Engine::apply_scaling` so every action is
+/// ledger-audited with `CmdOrigin::Autoscale`.
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    /// LIFO stack of workers this autoscaler parked (most recent last).
+    parked: Vec<usize>,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        Autoscaler { cfg, parked: Vec::new() }
+    }
+
+    pub fn parked(&self) -> &[usize] {
+        &self.parked
+    }
+
+    /// Plan at most one scaling command for this interval. `queued` is the
+    /// previous interval's waiting-queue depth; `online` is the engine's
+    /// live availability slice (so chaos crashes are seen, not assumed).
+    pub fn plan(&mut self, queued: usize, online: &[bool]) -> Option<EngineCmd> {
+        let up = online.iter().filter(|&&o| o).count();
+        if queued as f64 > self.cfg.queue_hi * up.max(1) as f64 {
+            // scale up: unpark the most recently parked worker that is
+            // still offline (a chaos recover may have beaten us to one —
+            // such entries are spent and dropped)
+            while let Some(w) = self.parked.pop() {
+                if w < online.len() && !online[w] {
+                    return Some(EngineCmd::WorkerJoin { worker: w });
+                }
+            }
+            return None;
+        }
+        if up > self.cfg.min_online && (queued as f64) < self.cfg.queue_lo * up as f64 {
+            // scale down: park the highest-index online worker (graceful —
+            // its containers are checkpointed and requeued by the engine)
+            if let Some(w) = (0..online.len()).rev().find(|&w| online[w]) {
+                self.parked.push(w);
+                return Some(EngineCmd::WorkerLeave { worker: w });
+            }
+        }
+        None
+    }
+}
+
+/// Resolve a trace path: absolute paths and paths that exist relative to
+/// the current directory are used as-is; anything else is resolved against
+/// the crate root, so committed traces under `tests/traces/` load from any
+/// working directory.
+pub fn resolve_trace_path(p: &str) -> std::path::PathBuf {
+    let path = std::path::PathBuf::from(p);
+    if path.is_absolute() || path.exists() {
+        return path;
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(p)
+}
+
+/// Generate a recordable arrival stream: `intervals` windows of the given
+/// workload config under `shape`, exactly as the broker would see them
+/// (generation, then λ shaping, then batch shaping). Used by
+/// `splitplace trace record` and the record→replay round-trip property.
+pub fn generate_trace(
+    workload: &WorkloadConfig,
+    shape: TrafficShape,
+    intervals: usize,
+    interval_seconds: f64,
+) -> Vec<Task> {
+    let model = shape.build(mix(workload.seed, TRAFFIC_STREAM_TAG));
+    let mut generator = Generator::new(workload.clone());
+    let mut out = Vec::new();
+    for t in 0..intervals {
+        let lambda = model.lambda_at(t, workload.lambda);
+        let mut tasks = generator.arrivals_with(t as f64 * interval_seconds, lambda);
+        model.shape_tasks(&mut tasks);
+        out.extend(tasks);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(shape: TrafficShape, seed: u64, base: f64) -> Vec<f64> {
+        let m = shape.build(seed);
+        (0..48).map(|t| m.lambda_at(t, base)).collect()
+    }
+
+    #[test]
+    fn shape_names_roundtrip() {
+        for s in TrafficShape::all() {
+            assert_eq!(TrafficShape::parse(s.name()), Some(s));
+        }
+        assert_eq!(TrafficShape::parse("poisson"), Some(TrafficShape::Flat));
+        assert_eq!(TrafficShape::parse("nope"), None);
+    }
+
+    #[test]
+    fn flat_is_identity_on_lambda() {
+        assert!(stream(TrafficShape::Flat, 1, 6.0).iter().all(|&l| l == 6.0));
+    }
+
+    #[test]
+    fn diurnal_oscillates_and_stays_nonnegative() {
+        let s = stream(TrafficShape::Diurnal, 3, 6.0);
+        let lo = s.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = s.iter().cloned().fold(0.0, f64::max);
+        assert!(hi > 6.0 * 1.3, "peak {hi} too flat");
+        assert!(lo < 6.0 * 0.7, "trough {lo} too flat");
+        assert!(lo >= 0.0);
+        // different seeds shift the phase
+        assert_ne!(s, stream(TrafficShape::Diurnal, 4, 6.0));
+    }
+
+    #[test]
+    fn mmpp_visits_both_regimes() {
+        let s = stream(TrafficShape::Mmpp, 7, 5.0);
+        assert!(s.iter().any(|&l| l == 5.0), "never quiet");
+        assert!(s.iter().any(|&l| l > 5.0), "never surged");
+    }
+
+    #[test]
+    fn mmpp_regime_is_order_independent() {
+        let m = MmppBurst::new(11);
+        // query out of order, then in order: same regimes
+        let backwards: Vec<bool> = (0..30).rev().map(|t| m.surge_at(t)).collect();
+        let forwards: Vec<bool> = (0..30).map(|t| m.surge_at(t)).collect();
+        assert_eq!(backwards.into_iter().rev().collect::<Vec<_>>(), forwards);
+    }
+
+    #[test]
+    fn models_are_deterministic_per_seed() {
+        for shape in TrafficShape::all() {
+            assert_eq!(
+                stream(shape, 42, 6.0),
+                stream(shape, 42, 6.0),
+                "{} stream not replayable",
+                shape.name()
+            );
+        }
+    }
+
+    #[test]
+    fn heavy_tail_inflates_some_batches_and_rescales_sla() {
+        let wl = WorkloadConfig { lambda: 8.0, ..Default::default() };
+        let tasks = generate_trace(&wl, TrafficShape::HeavyTail, 10, 300.0);
+        let flat = generate_trace(&wl, TrafficShape::Flat, 10, 300.0);
+        assert_eq!(tasks.len(), flat.len(), "heavy-tail must not change arrival counts");
+        let mut inflated = 0;
+        for (h, f) in tasks.iter().zip(&flat) {
+            assert!(h.batch >= f.batch);
+            assert!(h.batch <= 256_000);
+            if h.batch > f.batch {
+                inflated += 1;
+                let ratio = h.batch as f64 / f.batch as f64;
+                assert!((h.sla / f.sla - ratio).abs() < 1e-9, "sla must scale with batch");
+            }
+        }
+        assert!(inflated > 0, "no batch was ever inflated");
+    }
+
+    #[test]
+    fn admission_sheds_on_depth_then_risk() {
+        let cfg = AdmissionConfig { max_queue_depth: 10, deadline_floor: 0.5 };
+        let task = |sla: f64| Task {
+            id: 0,
+            app: crate::splits::APPS[0],
+            batch: 32_000,
+            sla,
+            arrival_s: 0.0,
+            decision: None,
+        };
+        assert_eq!(cfg.verdict(&task(5.0), 0), AdmissionVerdict::Admit);
+        assert_eq!(cfg.verdict(&task(5.0), 10), AdmissionVerdict::ShedQueueDepth);
+        // sla 1.0 < 0.5 * (1 + 4) = 2.5 → deadline risk
+        assert_eq!(cfg.verdict(&task(1.0), 4), AdmissionVerdict::ShedDeadlineRisk);
+        assert_eq!(cfg.verdict(&task(3.0), 4), AdmissionVerdict::Admit);
+    }
+
+    #[test]
+    fn autoscaler_parks_and_unparks_lifo() {
+        let mut a = Autoscaler::new(AutoscaleConfig {
+            queue_hi: 2.0,
+            queue_lo: 0.5,
+            min_online: 2,
+        });
+        let mut online = vec![true; 4];
+        // idle → park highest-index worker
+        match a.plan(0, &online) {
+            Some(EngineCmd::WorkerLeave { worker }) => {
+                assert_eq!(worker, 3);
+                online[3] = false;
+            }
+            other => panic!("expected leave, got {other:?}"),
+        }
+        match a.plan(0, &online) {
+            Some(EngineCmd::WorkerLeave { worker }) => {
+                assert_eq!(worker, 2);
+                online[2] = false;
+            }
+            other => panic!("expected leave, got {other:?}"),
+        }
+        // at min_online → no further parking
+        assert!(a.plan(0, &online).is_none());
+        assert_eq!(a.parked(), &[3, 2]);
+        // surge → unpark most recently parked first
+        match a.plan(100, &online) {
+            Some(EngineCmd::WorkerJoin { worker }) => {
+                assert_eq!(worker, 2);
+                online[2] = true;
+            }
+            other => panic!("expected join, got {other:?}"),
+        }
+        match a.plan(100, &online) {
+            Some(EngineCmd::WorkerJoin { worker }) => assert_eq!(worker, 3),
+            other => panic!("expected join, got {other:?}"),
+        }
+        // stack drained → surge plans nothing
+        assert!(a.plan(100, &online).is_none());
+    }
+
+    #[test]
+    fn autoscaler_skips_entries_chaos_already_recovered() {
+        let mut a = Autoscaler::new(AutoscaleConfig::default());
+        let mut online = vec![true; 6];
+        let w = match a.plan(0, &online) {
+            Some(EngineCmd::WorkerLeave { worker }) => worker,
+            other => panic!("expected leave, got {other:?}"),
+        };
+        online[w] = false;
+        // chaos recovers the parked worker behind our back
+        online[w] = true;
+        // surge: the stale entry is spent; nothing to unpark
+        assert!(a.plan(1000, &online).is_none());
+        assert!(a.parked().is_empty());
+    }
+
+    #[test]
+    fn generate_trace_flat_matches_generator_stream() {
+        // the flat shape must reproduce the raw generator stream exactly —
+        // the guarantee that default-config cells stay byte-identical
+        let wl = WorkloadConfig::default();
+        let via_traffic = generate_trace(&wl, TrafficShape::Flat, 6, 300.0);
+        let mut g = Generator::new(wl);
+        let mut direct = Vec::new();
+        for t in 0..6 {
+            direct.extend(g.arrivals(t as f64 * 300.0));
+        }
+        assert_eq!(via_traffic.len(), direct.len());
+        for (a, b) in via_traffic.iter().zip(&direct) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.batch, b.batch);
+            assert_eq!(a.sla.to_bits(), b.sla.to_bits());
+        }
+    }
+}

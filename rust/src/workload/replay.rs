@@ -28,18 +28,31 @@ pub fn to_json(tasks: &[Task]) -> Value {
     )
 }
 
-/// Parse a recorded trace.
+/// Parse a recorded trace. Errors name the offending entry index and
+/// field, so a hand-edited or truncated trace file is debuggable from the
+/// message alone.
 pub fn from_json(v: &Value) -> Result<Vec<Task>> {
     v.as_arr()?
         .iter()
-        .map(|t| {
+        .enumerate()
+        .map(|(i, t)| {
+            let num = |field: &'static str| -> Result<f64> {
+                t.req(field)
+                    .and_then(|v| v.as_f64())
+                    .with_context(|| format!("trace entry {i}: field '{field}'"))
+            };
+            let app_name = t
+                .req("app")
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("trace entry {i}: field 'app'"))?;
             Ok(Task {
-                id: t.req("id")?.as_f64()? as u64,
-                app: App::from_name(t.req("app")?.as_str()?)
-                    .context("unknown app in trace")?,
-                batch: t.req("batch")?.as_f64()? as u64,
-                sla: t.req("sla")?.as_f64()?,
-                arrival_s: t.req("arrival_s")?.as_f64()?,
+                id: num("id")? as u64,
+                app: App::from_name(app_name).with_context(|| {
+                    format!("trace entry {i}: unknown app '{app_name}' (field 'app')")
+                })?,
+                batch: num("batch")? as u64,
+                sla: num("sla")?,
+                arrival_s: num("arrival_s")?,
                 decision: None,
             })
         })
@@ -52,10 +65,14 @@ pub fn save(tasks: &[Task], path: impl AsRef<std::path::Path>) -> Result<()> {
     Ok(())
 }
 
-/// Load a trace file.
+/// Load a trace file. Errors carry the path.
 pub fn load(path: impl AsRef<std::path::Path>) -> Result<Vec<Task>> {
-    let text = std::fs::read_to_string(path)?;
-    from_json(&json::parse(&text)?)
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let v = json::parse(&text)
+        .with_context(|| format!("parsing trace {}", path.display()))?;
+    from_json(&v).with_context(|| format!("decoding trace {}", path.display()))
 }
 
 /// Replay iterator: yields the tasks arriving within each interval.
@@ -149,5 +166,28 @@ mod tests {
     fn bad_trace_rejected() {
         assert!(from_json(&json::parse(r#"[{"id":1}]"#).unwrap()).is_err());
         assert!(from_json(&json::parse(r#"[{"id":1,"app":"bogus","batch":1,"sla":1,"arrival_s":0}]"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn bad_trace_errors_name_entry_and_field() {
+        let err = from_json(&json::parse(r#"[{"id":1}]"#).unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("trace entry 0"), "{msg}");
+        assert!(msg.contains("'app'"), "{msg}");
+
+        let err = from_json(
+            &json::parse(
+                r#"[{"id":1,"app":"mnist","batch":1,"sla":1,"arrival_s":0},
+                    {"id":2,"app":"bogus","batch":1,"sla":1,"arrival_s":0}]"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("trace entry 1"), "{msg}");
+        assert!(msg.contains("unknown app 'bogus'"), "{msg}");
+
+        let err = load("/nonexistent/path/edge.json").unwrap_err();
+        assert!(format!("{err:#}").contains("/nonexistent/path/edge.json"));
     }
 }

@@ -30,7 +30,11 @@ echo "== matrix smoke (parallel cells, golden gate, bug-base) =="
 # The smoke set carries the related-work splitter stacks (latmem,
 # onlinesplit) as single cells on every base scenario — chaos-heavy
 # included — plus their challenger differential cells against the
-# champion (latmem~mab-daso, onlinesplit~mab-daso on clean+chaos-light).
+# champion (latmem~mab-daso, onlinesplit~mab-daso on clean+chaos-light),
+# and the traffic-plane cells: trace-replay (committed
+# tests/traces/edge-burst.json), diurnal-flash-crowd (headline:
+# admission + autoscaler + MAB champion under light chaos),
+# constrained-edge, single-app and cloud-tier under MC.
 if ! ls tests/goldens/*.json >/dev/null 2>&1; then
     echo "no goldens recorded yet — bootstrapping (serial, --update-goldens)"
     ./target/release/splitplace matrix --filter smoke --jobs 1 --update-goldens
@@ -38,17 +42,24 @@ fi
 ./target/release/splitplace matrix --filter smoke --jobs 2
 
 # Nightly stanza (uncomment in a scheduled job, not in per-commit CI —
-# the full cross product runs all 9 policies × all 9 scenarios × seeds
-# plus every differential pair, including the 1000-worker tier cells):
+# the full cross product runs all 9 policies × all 14 scenarios × seeds,
+# including the 1000-worker tier cells and the traffic plane's Fig-13/16/18
+# regimes (constrained-edge, single-app, cloud-tier), plus every
+# differential pair):
 # ./target/release/splitplace matrix --filter full --jobs 4 --seeds 2
 
 echo "== engine throughput bench (smoke: all tiers, short horizon) =="
-# Smoke-mode perf record: every tier, few intervals — recorded in
-# BENCH_engine.json (the perf trajectory), not yet regression-gated. Any
-# panic here fails CI. The full ≥50-interval measurement is
-# `./target/release/splitplace bench` (or `cargo bench --bench
-# engine_throughput`).
-./target/release/splitplace bench --tier all --intervals 12 --out BENCH_engine.json
+# Smoke-mode perf record AND perf-trajectory gate: every tier, few
+# intervals. --gate compares against the committed baseline before
+# overwriting it — counters exactly (a drift there is a determinism
+# break), wall-clock rates with a wide regression-only band. While the
+# committed BENCH_engine.json is still the measured:false placeholder the
+# gate skips with a warning; once a toolchain-equipped box records a real
+# baseline, a throughput collapse fails CI here. The full ≥50-interval
+# measurement is `./target/release/splitplace bench` (or `cargo bench
+# --bench engine_throughput`).
+./target/release/splitplace bench --tier all --intervals 12 \
+    --gate BENCH_engine.json --out BENCH_engine.json
 
 # Lints run after the functional gates so a formatting nit never blocks
 # the golden bootstrap above; they still fail the script.
