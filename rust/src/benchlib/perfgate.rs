@@ -87,11 +87,16 @@ pub fn gate_against_baseline(path: &Path, fresh: &[Throughput]) -> PerfGate {
     let mut compared = 0usize;
     for r in fresh {
         // match on the full coordinate tuple; entries from the pre-policy
-        // schema (no "policy" field) count as the default mc stack
+        // schema (no "policy" field) count as the default mc stack, and
+        // entries from the pre-shards schema count as the serial 1-shard
+        // run — counters are shard-independent by construction, but the
+        // wall-clock rates are exactly what sharding moves, so the shard
+        // count is a coordinate, not a detail
         let Some(base) = tiers.iter().find(|b| {
             b.get("tier").and_then(|t| t.as_str().ok()) == Some(r.tier.as_str())
                 && b.get("policy").and_then(|p| p.as_str().ok()).unwrap_or("mc")
                     == r.policy
+                && num(b, "shards").unwrap_or(1.0) == r.shards as f64
                 && num(b, "intervals") == Some(r.intervals as f64)
                 && b.get("seed").and_then(|s| s.as_str().ok())
                     == Some(r.seed.to_string().as_str())
@@ -176,6 +181,7 @@ mod tests {
             intervals: 12,
             seed: 7,
             chaos: true,
+            shards: 1,
             admitted: 40,
             completed: 30,
             failed: 2,
@@ -273,6 +279,28 @@ mod tests {
             gate_against_baseline(&path, &[fresh]),
             PerfGate::Skipped(_)
         ));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shard_count_is_a_coordinate() {
+        let path = tmpfile("shards");
+        write_json(&path, &[sample("small", 50.0)]).unwrap();
+        // a sharded run never compares against the serial baseline (its
+        // rates legitimately differ), even when every counter matches
+        let mut fresh = sample("small", 120.0);
+        fresh.shards = 4;
+        assert!(matches!(
+            gate_against_baseline(&path, &[fresh]),
+            PerfGate::Skipped(_)
+        ));
+        // a pre-shards baseline entry (field absent) gates the serial run
+        let text = std::fs::read_to_string(&path).unwrap().replace("\"shards\": 1,", "");
+        std::fs::write(&path, text).unwrap();
+        assert_eq!(
+            gate_against_baseline(&path, &[sample("small", 50.0)]),
+            PerfGate::Pass(1)
+        );
         let _ = std::fs::remove_file(&path);
     }
 }

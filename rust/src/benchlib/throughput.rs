@@ -1,8 +1,8 @@
 //! Engine-throughput measurement across fleet tiers.
 //!
 //! Seeds the perf trajectory for the O(active) engine core: one
-//! chaos-light (or clean) run per tier (small/medium/large — 10/200/1000
-//! workers), measuring scheduling **intervals/sec** and
+//! chaos-light (or clean) run per tier (small through hyperscale —
+//! 10/200/1000/5000/25 000 workers), measuring scheduling **intervals/sec** and
 //! **active-container-intervals/sec** (Σ per-interval active-set size over
 //! wall-clock — the unit the hot path actually scales with). Results
 //! serialize to `BENCH_engine.json`; `scripts/ci.sh` records a smoke run
@@ -42,7 +42,7 @@ impl TierSpec {
     }
 }
 
-/// The three fleet tiers, smallest first.
+/// The five fleet tiers, smallest first.
 pub fn tiers() -> Vec<TierSpec> {
     vec![
         TierSpec {
@@ -59,6 +59,16 @@ pub fn tiers() -> Vec<TierSpec> {
             name: "large",
             clean: Scenario::LargeClean,
             chaos_light: Scenario::LargeChaosLight,
+        },
+        TierSpec {
+            name: "huge",
+            clean: Scenario::HugeClean,
+            chaos_light: Scenario::HugeChaosLight,
+        },
+        TierSpec {
+            name: "hyperscale",
+            clean: Scenario::HyperscaleClean,
+            chaos_light: Scenario::HyperscaleChaosLight,
         },
     ]
 }
@@ -77,6 +87,9 @@ pub struct Throughput {
     pub intervals: usize,
     pub seed: u64,
     pub chaos: bool,
+    /// Intra-interval CPU-phase shard count (1 = serial). Results are
+    /// byte-identical at any value; only wall-clock moves.
+    pub shards: usize,
     pub admitted: u64,
     pub completed: usize,
     pub failed: usize,
@@ -102,9 +115,12 @@ pub fn measure(
     seed: u64,
     chaos: bool,
     policy: PolicyKind,
+    shards: usize,
 ) -> anyhow::Result<Throughput> {
-    let (cfg, plan) = tier.scenario(chaos).build(policy, seed, intervals);
+    let (mut cfg, plan) = tier.scenario(chaos).build(policy, seed, intervals);
+    cfg.sim.shards = shards.max(1);
     let n = cfg.cluster.total_workers();
+    let shards = cfg.sim.shards;
     let opts = ChaosOptions::default();
     let base_lambda = cfg.workload.lambda;
     let timeout_s = opts.task_timeout_intervals as f64 * cfg.sim.interval_seconds;
@@ -128,6 +144,7 @@ pub fn measure(
         intervals,
         seed,
         chaos,
+        shards,
         admitted: broker.admitted,
         completed: broker.engine.completed_task_count(),
         failed: broker.engine.failed_task_count(),
@@ -161,6 +178,7 @@ pub fn to_json(results: &[Throughput]) -> Value {
                                     if r.chaos { "chaos-light" } else { "clean" }.into(),
                                 ),
                             ),
+                            ("shards", Value::Num(r.shards as f64)),
                             ("admitted", Value::Num(r.admitted as f64)),
                             ("completed", Value::Num(r.completed as f64)),
                             ("failed", Value::Num(r.failed as f64)),
@@ -197,10 +215,11 @@ mod tests {
     #[test]
     fn small_tier_measures_and_serializes() {
         let tier = tier_by_name("small").unwrap();
-        let r = measure(&tier, 6, 1, true, PolicyKind::ModelCompression).unwrap();
+        let r = measure(&tier, 6, 1, true, PolicyKind::ModelCompression, 2).unwrap();
         assert_eq!(r.workers, 10);
         assert_eq!(r.intervals, 6);
         assert_eq!(r.policy, "mc");
+        assert_eq!(r.shards, 2);
         assert!(r.admitted > 0, "load must arrive");
         assert!(r.intervals_per_sec > 0.0);
         assert!(r.wall_ms > 0.0);
@@ -208,6 +227,7 @@ mod tests {
         assert!(j.contains("\"bench\":\"engine_throughput\""), "{j}");
         assert!(j.contains("\"tier\":\"small\""), "{j}");
         assert!(j.contains("\"policy\":\"mc\""), "{j}");
+        assert!(j.contains("\"shards\":2"), "{j}");
         assert!(j.contains("intervals_per_sec"), "{j}");
     }
 
@@ -217,7 +237,7 @@ mod tests {
     fn policy_axis_measures_the_new_stacks() {
         let tier = tier_by_name("small").unwrap();
         for policy in [PolicyKind::LatMem, PolicyKind::OnlineSplit] {
-            let r = measure(&tier, 6, 1, true, policy).unwrap();
+            let r = measure(&tier, 6, 1, true, policy, 1).unwrap();
             assert!(r.admitted > 0, "{policy:?} must carry load");
             let slug = crate::harness::policy_slug(policy);
             assert_eq!(r.policy, slug);
@@ -228,15 +248,17 @@ mod tests {
     #[test]
     fn tier_lookup_and_order() {
         let ts = tiers();
-        assert_eq!(ts.len(), 3);
+        assert_eq!(ts.len(), 5);
         let workers = |t: &TierSpec| {
             let (cfg, _) = t.scenario(true).build(PolicyKind::ModelCompression, 1, 4);
             cfg.cluster.total_workers()
         };
         assert!(ts.windows(2).all(|w| workers(&w[0]) < workers(&w[1])));
         assert!(tier_by_name("LARGE").is_some());
-        assert!(tier_by_name("huge").is_none());
+        assert!(tier_by_name("galactic").is_none());
         assert_eq!(workers(&tier_by_name("large").unwrap()), 1000);
+        assert_eq!(workers(&tier_by_name("huge").unwrap()), 5_000);
+        assert_eq!(workers(&tier_by_name("hyperscale").unwrap()), 25_000);
         // clean and chaos-light share the tier's fleet; only the plan differs
         for t in &ts {
             let (cfg_a, plan_a) = t.scenario(false).build(PolicyKind::ModelCompression, 1, 4);
@@ -263,7 +285,7 @@ mod tests {
         }
         let tier = tier_by_name("large").unwrap();
         let t0 = std::time::Instant::now();
-        let r = measure(&tier, 10, 1, true, PolicyKind::ModelCompression).unwrap();
+        let r = measure(&tier, 10, 1, true, PolicyKind::ModelCompression, 1).unwrap();
         assert_eq!(r.workers, 1000);
         assert!(r.admitted > 100, "large tier must carry real load");
         assert!(

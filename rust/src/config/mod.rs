@@ -145,13 +145,16 @@ impl Default for ClusterConfig {
 
 impl ClusterConfig {
     /// λ the fleet-tier scenarios AND the throughput bench pair with each
-    /// preset (small/medium/large) — one source of truth, so the matrix
-    /// cells and the BENCH_engine.json perf trajectory always measure the
-    /// same regime. Scaled sub-linearly with the fleet: the active set
-    /// grows with n without saturating the wait queue at matrix horizons.
+    /// preset (small/medium/large/huge/hyperscale) — one source of truth,
+    /// so the matrix cells and the BENCH_engine.json perf trajectory
+    /// always measure the same regime. Scaled sub-linearly with the fleet:
+    /// the active set grows with n without saturating the wait queue at
+    /// matrix horizons.
     pub const SMALL_TIER_LAMBDA: f64 = 3.0;
     pub const MEDIUM_TIER_LAMBDA: f64 = 12.0;
     pub const LARGE_TIER_LAMBDA: f64 = 40.0;
+    pub const HUGE_TIER_LAMBDA: f64 = 120.0;
+    pub const HYPERSCALE_TIER_LAMBDA: f64 = 400.0;
 
     pub fn small() -> Self {
         // 10-worker variant matching the h10_m16 surrogate artifact.
@@ -171,6 +174,21 @@ impl ClusterConfig {
     /// `total_workers()` automatically.
     pub fn large() -> Self {
         ClusterConfig { counts: [400, 200, 200, 200], ..Default::default() }
+    }
+
+    /// 5000-worker fleet tier (100× the paper's testbed, Table-3
+    /// proportions) — the regime the shard-parallel integrator targets:
+    /// at this n the CPU phase dominates the interval and fans out across
+    /// rack shards.
+    pub fn huge() -> Self {
+        ClusterConfig { counts: [2000, 1000, 1000, 1000], ..Default::default() }
+    }
+
+    /// 25 000-worker fleet tier (500× the paper's testbed, Table-3
+    /// proportions). The hyperscale headline cell: flash-crowd chaos over
+    /// a fleet no single-threaded interval loop could sweep.
+    pub fn hyperscale() -> Self {
+        ClusterConfig { counts: [10_000, 5_000, 5_000, 5_000], ..Default::default() }
     }
 
     pub fn total_workers(&self) -> usize {
@@ -278,11 +296,17 @@ pub struct SimConfig {
     pub interval_seconds: f64,
     /// Sub-steps per interval for the progress integrator.
     pub sub_steps: usize,
+    /// Rack shards for the intra-interval CPU phase: the integrator fans
+    /// the per-worker fair-share pass out over this many threads and joins
+    /// through the order-free accumulator, so any value ≥ 1 produces
+    /// byte-identical trajectories (1 = the serial walk, no threads
+    /// spawned). Clamped to the worker count at run time.
+    pub shards: usize,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { intervals: 100, interval_seconds: 300.0, sub_steps: 10 }
+        SimConfig { intervals: 100, interval_seconds: 300.0, sub_steps: 10, shards: 1 }
     }
 }
 
@@ -418,6 +442,7 @@ impl ExperimentConfig {
                     ("intervals", Value::Num(self.sim.intervals as f64)),
                     ("interval_seconds", Value::Num(self.sim.interval_seconds)),
                     ("sub_steps", Value::Num(self.sim.sub_steps as f64)),
+                    ("shards", Value::Num(self.sim.shards as f64)),
                 ]),
             ),
             ("traffic", {
@@ -561,6 +586,9 @@ impl ExperimentConfig {
             if let Some(x) = s.get("sub_steps") {
                 cfg.sim.sub_steps = x.as_usize()?;
             }
+            if let Some(x) = s.get("shards") {
+                cfg.sim.shards = x.as_usize()?.max(1);
+            }
         }
         if let Some(t) = v.get("traffic") {
             if let Some(x) = t.get("shape") {
@@ -697,10 +725,14 @@ mod tests {
         let small = ClusterConfig::small();
         let medium = ClusterConfig::medium();
         let large = ClusterConfig::large();
+        let huge = ClusterConfig::huge();
+        let hyperscale = ClusterConfig::hyperscale();
         assert_eq!(medium.total_workers(), 200);
         assert_eq!(large.total_workers(), 1000);
+        assert_eq!(huge.total_workers(), 5000);
+        assert_eq!(hyperscale.total_workers(), 25_000);
         // same mix as the paper's default [20,10,10,10] → [2,1,1,1] ratios
-        for cfg in [&small, &medium, &large] {
+        for cfg in [&small, &medium, &large, &huge, &hyperscale] {
             let [a, b, c, d] = cfg.counts;
             assert_eq!(a, 2 * b);
             assert_eq!(b, c);
@@ -709,5 +741,27 @@ mod tests {
         // non-fleet knobs stay at defaults so tier cells differ only in n
         assert_eq!(medium.mobile_fraction, large.mobile_fraction);
         assert_eq!(medium.churn_rate, 0.0);
+        assert_eq!(hyperscale.churn_rate, 0.0);
+        // λ/n shrinks monotonically up the tiers (sub-linear λ scaling)
+        let ratios = [
+            ClusterConfig::SMALL_TIER_LAMBDA / small.total_workers() as f64,
+            ClusterConfig::MEDIUM_TIER_LAMBDA / medium.total_workers() as f64,
+            ClusterConfig::LARGE_TIER_LAMBDA / large.total_workers() as f64,
+            ClusterConfig::HUGE_TIER_LAMBDA / huge.total_workers() as f64,
+            ClusterConfig::HYPERSCALE_TIER_LAMBDA / hyperscale.total_workers() as f64,
+        ];
+        for pair in ratios.windows(2) {
+            assert!(pair[1] < pair[0], "λ/n must shrink up the tiers: {ratios:?}");
+        }
+    }
+
+    #[test]
+    fn shards_roundtrip_and_default_to_serial() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.sim.shards, 1, "serial by default");
+        let mut c = ExperimentConfig::default();
+        c.sim.shards = 8;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.sim.shards, 8);
     }
 }

@@ -219,7 +219,11 @@ impl<'rt> Broker<'rt> {
         // the live availability surface. At most one park/unpark per
         // interval, bus-routed with the Autoscale ledger origin.
         if let Some(scaler) = &mut self.autoscaler {
-            if let Some(cmd) = scaler.plan(self.last_queued, self.engine.online()) {
+            if let Some(cmd) = scaler.plan(
+                self.last_queued,
+                self.engine.online(),
+                self.engine.offline_origins(),
+            ) {
                 match cmd {
                     EngineCmd::WorkerJoin { .. } => self.scale_up += 1,
                     _ => self.scale_down += 1,

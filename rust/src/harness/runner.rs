@@ -31,6 +31,10 @@ pub struct MatrixOptions {
     pub jobs: usize,
     /// Scheduling intervals per cell.
     pub intervals: usize,
+    /// Intra-interval CPU-phase shards per cell (≥1). Like `jobs`, results
+    /// are byte-identical at any value — this is the second, orthogonal
+    /// parallelism axis (within a cell rather than across cells).
+    pub shards: usize,
     /// Stop scheduling new cells after the first failing one.
     pub fail_fast: bool,
     /// Record goldens instead of gating against them.
@@ -48,6 +52,7 @@ impl Default for MatrixOptions {
         MatrixOptions {
             jobs: 1,
             intervals: 12,
+            shards: 1,
             fail_fast: false,
             update_goldens: false,
             goldens: None,
@@ -150,7 +155,8 @@ struct DiffRun {
 /// point `chaos --differential` uses, so matrix diff cells and the CLI
 /// measure exactly the same thing.
 fn run_diff(d: &DiffCell, opts: &MatrixOptions) -> Result<DiffRun, String> {
-    let (cfg_a, plan) = d.scenario.build(d.a, d.seed, opts.intervals);
+    let (mut cfg_a, plan) = d.scenario.build(d.a, d.seed, opts.intervals);
+    cfg_a.sim.shards = opts.shards.max(1);
     let (a, b) = chaos::run_differential(&cfg_a, d.b, &plan, &opts.chaos, None)
         .map_err(|e| format!("{e:#}"))?;
 
@@ -192,7 +198,8 @@ fn run_cell(cell: &MatrixCell, opts: &MatrixOptions) -> CellResult {
     let t0 = Instant::now();
     let (summary, violations, cfg, plan, ordering_failures, error) = match cell {
         MatrixCell::Single(c) => {
-            let (cfg, plan) = c.scenario.build(c.policy, c.seed, opts.intervals);
+            let (mut cfg, plan) = c.scenario.build(c.policy, c.seed, opts.intervals);
+            cfg.sim.shards = opts.shards.max(1);
             match chaos::run_chaos(&cfg, &plan, &opts.chaos, None) {
                 Ok(out) => (
                     CellSummary::from_outcome(c, opts.intervals, &out),
@@ -453,6 +460,33 @@ mod tests {
             assert!((ra - rb - dl).abs() < 1e-12);
         } else {
             assert!(dl.is_nan());
+        }
+    }
+
+    /// The tentpole contract at the harness layer: the CPU-phase shard
+    /// count, like the job count, never shows up in the summaries. A
+    /// chaos-heavy cell keeps the fleet churning so the sharded integrator
+    /// sees offline workers, evictions, and ragged resident sets.
+    #[test]
+    fn matrix_summaries_are_byte_identical_across_shards() {
+        let cells = vec![
+            single(PolicyKind::ModelCompression, Scenario::ChaosHeavy, 1),
+            single(PolicyKind::MabDaso, Scenario::ChaosHeavy, 2),
+        ];
+        let serial = run_matrix(
+            &cells,
+            &MatrixOptions { jobs: 1, intervals: 8, shards: 1, ..Default::default() },
+        );
+        for shards in [2, 5] {
+            let sharded = run_matrix(
+                &cells,
+                &MatrixOptions { jobs: 2, intervals: 8, shards, ..Default::default() },
+            );
+            assert_eq!(
+                serial.summaries_json().to_string(),
+                sharded.summaries_json().to_string(),
+                "{shards} shards drifted from serial"
+            );
         }
     }
 

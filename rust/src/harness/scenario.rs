@@ -51,6 +51,15 @@ pub enum Scenario {
     LargeClean,
     /// Light chaos on the ≈1000-worker tier.
     LargeChaosLight,
+    /// Fault-free run on the 5000-worker tier.
+    HugeClean,
+    /// Light chaos on the 5000-worker tier.
+    HugeChaosLight,
+    /// Fault-free run on the 25 000-worker tier.
+    HyperscaleClean,
+    /// Light chaos on the 25 000-worker tier — the shard-parallel
+    /// integrator's headline regime.
+    HyperscaleChaosLight,
     /// Committed-trace replay: arrivals come verbatim from
     /// `tests/traces/edge-burst.json` instead of the generator — the
     /// recorded stream is itself the regression fixture.
@@ -78,12 +87,16 @@ impl Scenario {
         Scenario::MobilityHeavy,
     ];
 
-    /// The fleet-tier regimes (200/1000-worker fleets).
-    pub const TIERS: [Scenario; 4] = [
+    /// The fleet-tier regimes (200/1000/5000/25 000-worker fleets).
+    pub const TIERS: [Scenario; 8] = [
         Scenario::MediumClean,
         Scenario::MediumChaosLight,
         Scenario::LargeClean,
         Scenario::LargeChaosLight,
+        Scenario::HugeClean,
+        Scenario::HugeChaosLight,
+        Scenario::HyperscaleClean,
+        Scenario::HyperscaleChaosLight,
     ];
 
     /// The traffic-plane regimes (ISSUE-6): trace replay, the
@@ -96,7 +109,7 @@ impl Scenario {
         Scenario::CloudTier,
     ];
 
-    pub const ALL: [Scenario; 14] = [
+    pub const ALL: [Scenario; 18] = [
         Scenario::Clean,
         Scenario::ChaosLight,
         Scenario::ChaosHeavy,
@@ -106,6 +119,10 @@ impl Scenario {
         Scenario::MediumChaosLight,
         Scenario::LargeClean,
         Scenario::LargeChaosLight,
+        Scenario::HugeClean,
+        Scenario::HugeChaosLight,
+        Scenario::HyperscaleClean,
+        Scenario::HyperscaleChaosLight,
         Scenario::TraceReplay,
         Scenario::DiurnalFlashCrowd,
         Scenario::ConstrainedEdge,
@@ -124,6 +141,10 @@ impl Scenario {
             Scenario::MediumChaosLight => "medium-chaos-light",
             Scenario::LargeClean => "large-clean",
             Scenario::LargeChaosLight => "large-chaos-light",
+            Scenario::HugeClean => "huge-clean",
+            Scenario::HugeChaosLight => "huge-chaos-light",
+            Scenario::HyperscaleClean => "hyperscale-clean",
+            Scenario::HyperscaleChaosLight => "hyperscale-chaos-light",
             Scenario::TraceReplay => "trace-replay",
             Scenario::DiurnalFlashCrowd => "diurnal-flash-crowd",
             Scenario::ConstrainedEdge => "constrained-edge",
@@ -161,17 +182,29 @@ impl Scenario {
                 cfg.cluster = crate::config::ClusterConfig::large();
                 cfg.workload.lambda = crate::config::ClusterConfig::LARGE_TIER_LAMBDA;
             }
+            Scenario::HugeClean | Scenario::HugeChaosLight => {
+                cfg.cluster = crate::config::ClusterConfig::huge();
+                cfg.workload.lambda = crate::config::ClusterConfig::HUGE_TIER_LAMBDA;
+            }
+            Scenario::HyperscaleClean | Scenario::HyperscaleChaosLight => {
+                cfg.cluster = crate::config::ClusterConfig::hyperscale();
+                cfg.workload.lambda = crate::config::ClusterConfig::HYPERSCALE_TIER_LAMBDA;
+            }
             _ => {}
         }
         seed_config(&mut cfg, seed);
         let n = cfg.cluster.total_workers();
         let plan = match self {
-            Scenario::Clean | Scenario::MediumClean | Scenario::LargeClean => {
-                FaultPlan::empty(seed, intervals)
-            }
+            Scenario::Clean
+            | Scenario::MediumClean
+            | Scenario::LargeClean
+            | Scenario::HugeClean
+            | Scenario::HyperscaleClean => FaultPlan::empty(seed, intervals),
             Scenario::ChaosLight
             | Scenario::MediumChaosLight
-            | Scenario::LargeChaosLight => {
+            | Scenario::LargeChaosLight
+            | Scenario::HugeChaosLight
+            | Scenario::HyperscaleChaosLight => {
                 FaultPlan::generate(seed, intervals, Profile::Light, n)
             }
             Scenario::ChaosHeavy => FaultPlan::generate(seed, intervals, Profile::Heavy, n),
@@ -673,6 +706,20 @@ mod tests {
         // clean tier cells are fault-free controls
         let (_, plan_clean) = Scenario::LargeClean.build(PolicyKind::ModelCompression, 2, 12);
         assert!(plan_clean.events.is_empty());
+        // the hyperscale tiers swap in the big presets and scale λ with them
+        let (cfg_h, _) = Scenario::HugeChaosLight.build(PolicyKind::ModelCompression, 2, 12);
+        assert_eq!(cfg_h.cluster.total_workers(), 5_000);
+        let (cfg_hs, plan_hs) =
+            Scenario::HyperscaleChaosLight.build(PolicyKind::ModelCompression, 2, 12);
+        assert_eq!(cfg_hs.cluster.total_workers(), 25_000);
+        assert!(cfg_hs.workload.lambda > cfg_h.workload.lambda);
+        for e in &plan_hs.events {
+            if let Some(w) = e.event.worker() {
+                assert!(w < 25_000);
+            }
+        }
+        let (_, plan_hc) = Scenario::HyperscaleClean.build(PolicyKind::ModelCompression, 2, 12);
+        assert!(plan_hc.events.is_empty());
         // same coordinates, different tier ⇒ different fleet, same seeds
         assert_eq!(cfg_m.workload.seed, cfg_l.workload.seed);
         assert_eq!(plan_m.intervals, plan_l.intervals);

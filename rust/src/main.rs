@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   run [--policy P] [--intervals N] [--lambda L] [--workers small|full]
 //!       [--alpha A] [--constraint c] [--accuracy measured|manifest]
+//!       [--shards N]               shard the CPU phase across N threads
+//!                                  (byte-identical results at any N)
 //!   compare [--intervals N]        all 9 policies, Table-4 style
 //!   chaos [--seed S] [--intervals N] [--profile light|heavy] [--policy P]
 //!         [--differential P2] [--plan FILE] [--inject-bug KIND]
@@ -10,15 +12,17 @@
 //!   matrix [--filter smoke|full|SUBSTR] [--jobs N] [--seeds K]
 //!          [--intervals N] [--update-goldens] [--fail-fast] [--list]
 //!          [--goldens DIR] [--bugbase DIR] [--inject-bug KIND]
+//!          [--shards N]
 //!                                  policy × scenario × seed cross product
 //!                                  plus differential policy-pair cells
 //!                                  (ids like mab-daso~mc/clean/s1; filter
 //!                                  with '~'), parallel cells, golden
 //!                                  gating, Table-4 ordering gate, bug-base
-//!   bench [--tier small|medium|large|all] [--intervals N] [--seed S]
-//!         [--scenario clean|chaos-light] [--policy P] [--out FILE]
+//!   bench [--tier small|medium|large|huge|hyperscale|all] [--intervals N]
+//!         [--seed S] [--scenario clean|chaos-light] [--policy P]
+//!         [--shards N] [--out FILE]
 //!         [--gate BASELINE]        engine throughput per fleet tier
-//!                                  (10/200/1000 workers) under any policy
+//!                                  (10/200/1000/5000/25 000 workers) under any policy
 //!                                  stack (default mc isolates the engine
 //!                                  hot path), written to BENCH_engine.json
 //!                                  — the perf trajectory; --gate compares
@@ -101,6 +105,9 @@ fn build_config(flags: &std::collections::HashMap<String, String>) -> Result<Exp
             "measured" => AccuracyMode::Measured,
             _ => AccuracyMode::Manifest,
         };
+    }
+    if let Some(s) = flags.get("shards") {
+        cfg.sim.shards = s.parse::<usize>()?.max(1);
     }
     cfg.artifacts_dir = artifacts_dir();
     Ok(cfg)
@@ -374,9 +381,12 @@ fn cmd_matrix(flags: std::collections::HashMap<String, String>) -> Result<()> {
 
     let goldens_dir = flags.get("goldens").cloned().unwrap_or_else(|| "tests/goldens".into());
     let bugbase_dir = flags.get("bugbase").cloned().unwrap_or_else(|| "tests/bugbase".into());
+    let shards: usize =
+        flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let opts = MatrixOptions {
         jobs,
         intervals,
+        shards,
         fail_fast: flags.contains_key("fail-fast"),
         update_goldens: flags.contains_key("update-goldens"),
         goldens: Some(GoldenStore::new(&goldens_dir)),
@@ -481,8 +491,9 @@ fn cmd_bench(flags: std::collections::HashMap<String, String>) -> Result<()> {
     let tier_flag = flags.get("tier").map(String::as_str).unwrap_or("all");
     let tiers: Vec<throughput::TierSpec> = match tier_flag {
         "all" => throughput::tiers(),
-        name => vec![throughput::tier_by_name(name)
-            .ok_or_else(|| anyhow::anyhow!("--tier must be small|medium|large|all, got {name}"))?],
+        name => vec![throughput::tier_by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("--tier must be small|medium|large|huge|hyperscale|all, got {name}")
+        })?],
     };
     let intervals: usize =
         flags.get("intervals").map(|s| s.parse()).transpose()?.unwrap_or(50);
@@ -500,16 +511,18 @@ fn cmd_bench(flags: std::collections::HashMap<String, String>) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown --policy '{p}'"))?,
         None => PolicyKind::ModelCompression,
     };
+    let shards: usize =
+        flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let out = flags.get("out").cloned().unwrap_or_else(|| "BENCH_engine.json".into());
 
     let mut results = Vec::new();
     for tier in &tiers {
         eprintln!(
-            "bench: {} tier, {intervals} intervals, seed {seed}, policy {}...",
+            "bench: {} tier, {intervals} intervals, seed {seed}, policy {}, {shards} shard(s)...",
             tier.name,
             policy.name()
         );
-        results.push(throughput::measure(tier, intervals, seed, chaos, policy)?);
+        results.push(throughput::measure(tier, intervals, seed, chaos, policy, shards)?);
     }
 
     let mut t = Table::new(

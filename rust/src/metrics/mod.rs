@@ -144,15 +144,11 @@ impl Metrics {
         if n == 0 {
             return 0.0;
         }
-        let sum: f64 = self
-            .completed
-            .iter()
-            .map(|t| {
-                let ok = if t.response <= t.sla { 1.0 } else { 0.0 };
-                let p = if t.accuracy.is_finite() { t.accuracy } else { 0.0 };
-                (ok + p) / 2.0
-            })
-            .sum();
+        let sum = crate::util::accum::sum(self.completed.iter().map(|t| {
+            let ok = if t.response <= t.sla { 1.0 } else { 0.0 };
+            let p = if t.accuracy.is_finite() { t.accuracy } else { 0.0 };
+            (ok + p) / 2.0
+        }));
         sum / n as f64
     }
 
@@ -192,7 +188,7 @@ impl Metrics {
         let n = self.completed.len().max(1);
         Summary {
             policy: policy.to_string(),
-            energy_mwh: self.energy_wh.iter().sum::<f64>() / 1e6,
+            energy_mwh: crate::util::accum::sum(self.energy_wh.iter().copied()) / 1e6,
             sched_time_s: (stats::mean(&self.sched_s), stats::std(&self.sched_s)),
             fairness: self.fairness(),
             wait: (wait_m, wait_s),
@@ -233,7 +229,7 @@ impl Metrics {
     pub fn decomposition(&self) -> [f64; 5] {
         let n = self.completed.len().max(1) as f64;
         let sched_per_task =
-            self.sched_s.iter().sum::<f64>() / n / self.interval_seconds;
+            crate::util::accum::sum(self.sched_s.iter().copied()) / n / self.interval_seconds;
         [
             self.dist(|t| t.wait).0,
             self.dist(|t| t.exec).0,

@@ -243,6 +243,28 @@ impl Engine {
 
     pub(super) fn apply_with_origin(&mut self, cmd: EngineCmd, origin: CmdOrigin) -> Effect {
         let effect = self.execute(&cmd);
+        if effect != Effect::Noop {
+            // keep the offline-ownership record in lockstep with `online`:
+            // a command that takes a worker down stamps its origin; a
+            // command that brings one up clears it. Noops (already in that
+            // state, out-of-range) must not reassign ownership — a chaos
+            // crash followed by a redundant autoscaler park stays
+            // chaos-owned.
+            match cmd {
+                EngineCmd::SetOnline { worker, up } => {
+                    self.offline_origin[worker] = if up { None } else { Some(origin) };
+                }
+                EngineCmd::Crash { worker }
+                | EngineCmd::WorkerLeave { worker }
+                | EngineCmd::ForceOfflineNoEvict { worker } => {
+                    self.offline_origin[worker] = Some(origin);
+                }
+                EngineCmd::Recover { worker } | EngineCmd::WorkerJoin { worker } => {
+                    self.offline_origin[worker] = None;
+                }
+                _ => {}
+            }
+        }
         self.cmd_ledger.push(CmdRecord {
             interval: self.interval,
             origin,
@@ -759,6 +781,35 @@ mod tests {
         assert_eq!(scaling.len(), 4, "every scaling command must land in the ledger");
         assert!(matches!(scaling[0].cmd, EngineCmd::WorkerLeave { worker: 2 }));
         assert!(matches!(scaling[1].cmd, EngineCmd::WorkerJoin { worker: 2 }));
+    }
+
+    #[test]
+    fn offline_origin_tracks_who_owns_each_offline_worker() {
+        let mut e = engine();
+        assert!(e.offline_origins().iter().all(Option::is_none), "all online at start");
+        // autoscaler parks worker 2 → Autoscale-owned offline state
+        e.apply_scaling(EngineCmd::WorkerLeave { worker: 2 });
+        assert_eq!(e.offline_origins()[2], Some(CmdOrigin::Autoscale));
+        // chaos recovers it → ownership cleared
+        e.apply(EngineCmd::Recover { worker: 2 });
+        assert_eq!(e.offline_origins()[2], None);
+        // chaos crashes it → External-owned; a redundant autoscaler park
+        // is a Noop and MUST NOT steal ownership of the offline state
+        e.apply(EngineCmd::Crash { worker: 2 });
+        assert_eq!(e.offline_origins()[2], Some(CmdOrigin::External));
+        assert_eq!(e.apply_scaling(EngineCmd::WorkerLeave { worker: 2 }), Effect::Noop);
+        assert_eq!(
+            e.offline_origins()[2],
+            Some(CmdOrigin::External),
+            "a noop park must not relabel a chaos crash"
+        );
+        // graceful SetOnline toggles stamp and clear like the rest
+        e.apply(EngineCmd::SetOnline { worker: 3, up: false });
+        assert_eq!(e.offline_origins()[3], Some(CmdOrigin::External));
+        e.apply(EngineCmd::SetOnline { worker: 3, up: true });
+        assert_eq!(e.offline_origins()[3], None);
+        // out-of-range commands are noops and leave the record untouched
+        assert_eq!(e.apply(EngineCmd::Crash { worker: 99 }), Effect::Noop);
     }
 
     #[test]

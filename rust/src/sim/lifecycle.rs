@@ -21,12 +21,30 @@
 
 use crate::cluster::energy;
 use crate::splits::{Precedence, Registry, SplitDecision};
+use crate::util::accum::Accum;
 use crate::workload::Task;
 
 use super::container::{Container, ContainerId, ContainerState};
 use super::state::{
     CompletedTask, Engine, FailedTask, IntervalReport, TaskEntry, WorkerSnapshot, THRASH_FLOOR,
 };
+
+/// Deltas computed by one rack shard of the CPU integration phase
+/// ([`Engine::cpu_shard`]): read-only over a contiguous worker range,
+/// applied serially after the join. Workers partition across shards and a
+/// running container belongs to exactly one worker's residency index, so
+/// shard results are disjoint — the join is concatenation in shard order
+/// (= worker-ascending, the serial walk's order), and every float that
+/// crosses a shard boundary goes through the order-free
+/// [`crate::util::accum::Accum`].
+struct CpuShard {
+    /// `(worker, busy-seconds increment)` for each worker that ran work.
+    busy: Vec<(usize, f64)>,
+    /// `(container, mi increment)` for every Running container visited.
+    exec: Vec<(ContainerId, f64)>,
+    /// Containers whose increment finishes them this sub-step.
+    done: Vec<ContainerId>,
+}
 
 impl Engine {
     /// Admit a task whose split decision has been taken: create one
@@ -194,14 +212,16 @@ impl Engine {
             self.collect_completions(&mut completed);
         }
 
-        // energy over the interval from busy time per worker
-        let mut energy_wh = 0.0;
+        // energy over the interval from busy time per worker — summed
+        // order-free so the total is independent of worker visit order
+        let mut energy = Accum::ZERO;
         let mut utils = Vec::with_capacity(n);
         for (w, worker) in self.cluster.workers.iter().enumerate() {
             let util = (self.busy_s[w] / self.cfg.interval_seconds).clamp(0.0, 1.0);
             utils.push(util);
-            energy_wh += energy::energy_wh(&worker.spec, util, self.cfg.interval_seconds);
+            energy.add(energy::energy_wh(&worker.spec, util, self.cfg.interval_seconds));
         }
+        let energy_wh = energy.value();
         let specs: Vec<&crate::cluster::node::NodeType> =
             self.cluster.workers.iter().map(|w| &w.spec).collect();
         let aec = energy::normalized_aec(&specs, &utils, self.cfg.interval_seconds);
@@ -248,8 +268,12 @@ impl Engine {
 
     /// One integrator sub-step, O(active + workers): every loop below
     /// walks the active list or the per-worker residency index (both
-    /// id-sorted, matching the old full pool scan's visit order so float
-    /// accumulation is bit-identical), never the whole container pool.
+    /// id-sorted), never the whole container pool. Phases 1 (transfers)
+    /// and 3 (chain unblock) walk the global active list and stay serial;
+    /// phase 2 (fair-share CPU) is per-worker-independent and fans out
+    /// across `cfg.shards` rack shards — with every reduction order-free
+    /// ([`crate::util::accum`]), the result is byte-identical at any
+    /// shard count.
     fn sub_step(&mut self, dt: f64) {
         let t_end = self.now_s + dt;
 
@@ -288,55 +312,47 @@ impl Engine {
         }
 
         // 2. fair-share CPU with RAM-pressure slowdown: per worker, the
-        //    Running members of its residency index (filtered in id order,
-        //    exactly the per-worker running set the old scan built).
+        //    Running members of its residency index. The phase is a pure
+        //    function of pre-phase state (each running container belongs
+        //    to exactly one worker), so it fans out across contiguous
+        //    worker shards ([`Engine::cpu_shard`]) and the deltas are
+        //    applied serially in shard order — byte-identical to the
+        //    single-shard walk at any shard count.
         let n = self.cluster.len();
-        let mut running: Vec<ContainerId> = Vec::new();
-        for w in 0..n {
-            if self.resident_idx[w].is_empty() {
-                continue;
+        let shards = self.cfg.shards.max(1).min(n.max(1));
+        let results: Vec<CpuShard> = if shards <= 1 {
+            vec![self.cpu_shard(0..n, dt)]
+        } else {
+            let eng: &Engine = self;
+            let chunk = (n + shards - 1) / shards;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..shards)
+                    .map(|s| {
+                        let lo = (s * chunk).min(n);
+                        let hi = ((s + 1) * chunk).min(n);
+                        scope.spawn(move || eng.cpu_shard(lo..hi, dt))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("cpu shard panicked"))
+                    .collect()
+            })
+        };
+        // apply in shard-index order = worker-ascending, container-id
+        // ascending within each worker — the serial walk's exact order
+        for shard in &results {
+            for &(w, busy) in &shard.busy {
+                self.busy_s[w] += busy;
             }
-            running.clear();
-            let mut resident = 0.0f64;
-            for &cid in &self.resident_idx[w] {
-                let c = &self.containers[cid];
-                if matches!(c.state, ContainerState::Running) {
-                    running.push(cid);
-                    resident += c.ram_mb;
-                }
+            for &(cid, inc) in &shard.exec {
+                let c = &mut self.containers[cid];
+                c.mi_done += inc;
+                c.t_exec += dt;
             }
-            if running.is_empty() {
-                continue;
-            }
-            let spec = &self.cluster.workers[w].spec;
-            // Straggler injection scales the whole node's throughput.
-            let mips = spec.mips * self.mips_factor[w];
-            // Per-container rate is capped at two cores' worth: every
-            // Table-3 node has the same per-core speed ("Intel i3 2.4 GHz
-            // cores" for all types), so a bigger node hosts more
-            // containers rather than running one container faster. This
-            // keeps layer response times tight (paper: 9.92±0.91).
-            let per_core = mips / spec.cores as f64;
-            let share = (mips / running.len() as f64).min(per_core * 2.0);
-            let ram_cap = self.effective_ram_mb(w);
-            let thrash = if resident > ram_cap {
-                (ram_cap / resident).max(THRASH_FLOOR)
-            } else {
-                1.0
-            };
-            let used: f64 = share * running.len() as f64;
-            self.busy_s[w] += dt * (used / mips).min(1.0);
-            for &cid in &running {
-                let done = {
-                    let c = &mut self.containers[cid];
-                    c.mi_done += share * thrash * dt;
-                    c.t_exec += dt;
-                    c.mi_done >= c.mi_total
-                };
-                if done {
-                    let worker = self.containers[cid].worker;
-                    self.set_container(cid, ContainerState::Done { at_s: t_end }, worker);
-                }
+            for &cid in &shard.done {
+                let worker = self.containers[cid].worker;
+                self.set_container(cid, ContainerState::Done { at_s: t_end }, worker);
             }
         }
 
@@ -376,6 +392,63 @@ impl Engine {
         }
 
         self.now_s = t_end;
+    }
+
+    /// One rack shard of the CPU integration phase: fair-share CPU with
+    /// RAM-pressure slowdown over the contiguous worker range, computed
+    /// READ-ONLY against pre-phase state. The per-worker resident sum
+    /// reduces through the order-free accumulator, so the numbers cannot
+    /// depend on how the fleet is sliced into shards; completion is
+    /// detected as `mi_done + inc >= mi_total`, exactly the value the
+    /// serial `+=` would have compared.
+    fn cpu_shard(&self, workers: std::ops::Range<usize>, dt: f64) -> CpuShard {
+        let mut out = CpuShard { busy: Vec::new(), exec: Vec::new(), done: Vec::new() };
+        let mut running: Vec<ContainerId> = Vec::new();
+        for w in workers {
+            if self.resident_idx[w].is_empty() {
+                continue;
+            }
+            running.clear();
+            let mut resident = Accum::ZERO;
+            for &cid in &self.resident_idx[w] {
+                let c = &self.containers[cid];
+                if matches!(c.state, ContainerState::Running) {
+                    running.push(cid);
+                    resident.add(c.ram_mb);
+                }
+            }
+            if running.is_empty() {
+                continue;
+            }
+            let resident = resident.value();
+            let spec = &self.cluster.workers[w].spec;
+            // Straggler injection scales the whole node's throughput.
+            let mips = spec.mips * self.mips_factor[w];
+            // Per-container rate is capped at two cores' worth: every
+            // Table-3 node has the same per-core speed ("Intel i3 2.4 GHz
+            // cores" for all types), so a bigger node hosts more
+            // containers rather than running one container faster. This
+            // keeps layer response times tight (paper: 9.92±0.91).
+            let per_core = mips / spec.cores as f64;
+            let share = (mips / running.len() as f64).min(per_core * 2.0);
+            let ram_cap = self.effective_ram_mb(w);
+            let thrash = if resident > ram_cap {
+                (ram_cap / resident).max(THRASH_FLOOR)
+            } else {
+                1.0
+            };
+            let used: f64 = share * running.len() as f64;
+            out.busy.push((w, dt * (used / mips).min(1.0)));
+            for &cid in &running {
+                let inc = share * thrash * dt;
+                out.exec.push((cid, inc));
+                let c = &self.containers[cid];
+                if c.mi_done + inc >= c.mi_total {
+                    out.done.push(cid);
+                }
+            }
+        }
+        out
     }
 
     /// Drain tasks whose remaining-fragment counter hit zero this
@@ -418,7 +491,7 @@ impl Engine {
             workers.sort_unstable();
             workers.dedup();
             let sum = |f: fn(&Container) -> f64| -> f64 {
-                cids.iter().map(|&c| f(&self.containers[c])).sum::<f64>()
+                crate::util::accum::sum(cids.iter().map(|&c| f(&self.containers[c])))
             };
             out.push(CompletedTask {
                 task_id: id,
@@ -650,6 +723,64 @@ mod tests {
         assert_eq!(e.active_task_count(), 0);
         // a later report does not re-announce the failure
         assert!(e.step_interval().failed.is_empty());
+    }
+
+    #[test]
+    fn sharded_cpu_phase_is_byte_identical_to_serial() {
+        // the tentpole contract at engine level: any shard count yields
+        // the exact trajectory bits the serial walk yields — reports,
+        // snapshots, per-container progress, everything
+        let run = |shards: usize| -> Vec<u64> {
+            let cluster = build_fleet(&ClusterConfig::small());
+            let cfg = SimConfig { intervals: 12, shards, ..Default::default() };
+            let mut e = Engine::new(cluster, cfg, 1);
+            let apps = [App::Mnist, App::FashionMnist, App::Cifar100];
+            let decisions = [
+                SplitDecision::Layer,
+                SplitDecision::Semantic,
+                SplitDecision::Compressed,
+            ];
+            for i in 0..6u64 {
+                e.admit(
+                    task(i, apps[i as usize % 3], 16_000 + 8_000 * i),
+                    decisions[i as usize % 3],
+                );
+            }
+            let mut bits = Vec::new();
+            for round in 0..12 {
+                let assigns: Vec<(ContainerId, usize)> = e
+                    .placeable()
+                    .into_iter()
+                    .filter(|&c| matches!(e.containers[c].state, ContainerState::Queued))
+                    .map(|c| (c, (c + round) % e.workers()))
+                    .collect();
+                e.apply_placement(&assigns);
+                let r = e.step_interval();
+                bits.push(r.energy_wh.to_bits());
+                bits.push(r.aec.to_bits());
+                for s in &r.snapshots {
+                    bits.push(s.cpu.to_bits());
+                    bits.push(s.ram.to_bits());
+                    bits.push(s.net.to_bits());
+                }
+                for t in &r.completed {
+                    bits.push(t.task_id);
+                    bits.push(t.response.to_bits());
+                    bits.push(t.exec.to_bits());
+                }
+                e.verify_indices().unwrap();
+            }
+            for c in e.containers() {
+                bits.push(c.mi_done.to_bits());
+                bits.push(c.t_exec.to_bits());
+            }
+            bits
+        };
+        let serial = run(1);
+        // 64 > worker count exercises the clamp; 3 leaves a ragged tail
+        for shards in [2, 3, 8, 64] {
+            assert_eq!(run(shards), serial, "shards={shards} diverged from serial");
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::splits::SplitDecision;
 use crate::workload::Task;
 
 use super::container::{Container, ContainerId, ContainerState};
-use super::faults::CmdRecord;
+use super::faults::{CmdOrigin, CmdRecord};
 
 /// Allowed RAM overcommit at allocation time (swap headroom): a worker
 /// accepts a container while resident demand stays under this × RAM.
@@ -135,6 +135,11 @@ pub struct Engine {
     /// stamped with the interval it landed in. Chaos oracles audit this
     /// instead of re-deriving state.
     pub(super) cmd_ledger: Vec<CmdRecord>,
+    /// Who owns each worker's *current* offline state (`None` while
+    /// online). Maintained by the command bus alongside `online`, so the
+    /// autoscaler can tell "offline because I parked it" from "offline
+    /// because chaos crashed it" without replaying the ledger.
+    pub(super) offline_origin: Vec<Option<CmdOrigin>>,
     // scratch: per-worker busy seconds within the current interval
     pub(super) busy_s: Vec<f64>,
     pub(super) xfer_s: Vec<f64>,
@@ -212,6 +217,7 @@ impl Engine {
             clock_skew_s: vec![0.0; n],
             pending_failed: Vec::new(),
             cmd_ledger: Vec::new(),
+            offline_origin: vec![None; n],
             busy_s: vec![0.0; n],
             xfer_s: vec![0.0; n],
             active: Vec::new(),
@@ -313,14 +319,18 @@ impl Engine {
                 self.resident_idx[w], want_res[w]
             ));
         }
-        // resident-RAM totals must be BIT-identical to the old full-scan
-        // derivation (same terms, same order), not merely approximately so
-        let mut want_ram = vec![0.0f64; self.cluster.len()];
+        // resident-RAM totals must be BIT-identical to the full-scan
+        // derivation, not merely approximately so. Both sides reduce
+        // through the order-free accumulator, so the comparison holds
+        // regardless of visit order (full pool scan here vs id-sorted
+        // residency index there).
+        let mut want_ram = vec![crate::util::accum::Accum::ZERO; self.cluster.len()];
         for c in &self.containers {
             if let Some(w) = Self::residency(&c.state, c.worker) {
-                want_ram[w] += c.ram_mb;
+                want_ram[w].add(c.ram_mb);
             }
         }
+        let want_ram: Vec<f64> = want_ram.iter().map(|a| a.value()).collect();
         let got_ram = self.resident_ram();
         for (w, (want, got)) in want_ram.iter().zip(&got_ram).enumerate() {
             if want.to_bits() != got.to_bits() {
@@ -414,25 +424,33 @@ impl Engine {
     /// a reservation consumes capacity so the later unblock (which starts
     /// its transfer unconditionally) can never breach the overcommit cap.
     ///
-    /// Summed from the per-worker residency index in container-id order —
-    /// the same terms in the same order as the old full scan, so the
-    /// result is bit-identical, in O(workers + resident).
+    /// Summed from the per-worker residency index through the order-free
+    /// [`crate::util::accum::Accum`], so the result is bit-identical to
+    /// the full-scan derivation whatever order the terms are visited in —
+    /// in O(workers + resident).
     pub fn resident_ram(&self) -> Vec<f64> {
         (0..self.cluster.len()).map(|w| self.resident_ram_of(w)).collect()
     }
 
     /// Resident RAM demand of one worker (see [`Engine::resident_ram`]).
     pub fn resident_ram_of(&self, w: usize) -> f64 {
-        let mut ram = 0.0;
-        for &cid in &self.resident_idx[w] {
-            ram += self.containers[cid].ram_mb;
-        }
-        ram
+        crate::util::accum::sum(
+            self.resident_idx[w].iter().map(|&cid| self.containers[cid].ram_mb),
+        )
     }
 
     /// Worker availability (false = offline under churn).
     pub fn online(&self) -> &[bool] {
         &self.online
+    }
+
+    /// Per-worker owner of the current offline state (`None` while the
+    /// worker is online). `Some(CmdOrigin::Autoscale)` means the traffic
+    /// plane parked it and may rejoin it; any other origin means chaos or
+    /// the harness took it down and the autoscaler must keep its hands
+    /// off.
+    pub fn offline_origins(&self) -> &[Option<CmdOrigin>] {
+        &self.offline_origin
     }
 
     /// Currently applied clock skew of worker `w`, in seconds.

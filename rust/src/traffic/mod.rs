@@ -26,7 +26,7 @@
 //! `splitplace trace record|replay` generates and pins new ones.
 
 use crate::config::WorkloadConfig;
-use crate::sim::EngineCmd;
+use crate::sim::{CmdOrigin, EngineCmd};
 use crate::util::rng::{mix, Rng};
 use crate::workload::generator::Generator;
 use crate::workload::Task;
@@ -149,35 +149,60 @@ impl TrafficModel for DiurnalPoisson {
 
 /// MMPP-style two-regime process: quiet (λ·1) and surge (λ·surge_mult),
 /// with per-interval seeded transition draws. The regime at interval `t`
-/// is recomputed by walking the transition chain from interval 0 — each
+/// is the result of walking the transition chain from interval 0 — each
 /// step's draw comes from its own `mix(seed, mix(MMPP_TAG, i))` stream, so
 /// the walk is a pure function of `(t, seed)` however often it is queried.
+///
+/// The walk is memoized in a prefix cache: querying `t` extends the cache
+/// from its current frontier instead of re-walking from interval 0, taking
+/// a full run's regime queries from O(T²) to O(T) total (the quadratic
+/// walk was re-paid by both trace generation and the broker). The cache is
+/// pure memoization — each chain step replays the identical per-`i` draw
+/// the uncached walk would make, so cached and uncached answers (and every
+/// λ stream built from them) are byte-identical, in any query order.
 pub struct MmppBurst {
     seed: u64,
     surge_mult: f64,
     p_enter: f64,
     p_exit: f64,
+    /// `regimes.borrow()[i]` = regime after the interval-`i` transition.
+    /// RefCell (not Mutex): models are owned per broker and only need
+    /// `Send`, and `lambda_at` takes `&self` by the pure-function
+    /// contract.
+    regimes: std::cell::RefCell<Vec<bool>>,
 }
 
 impl MmppBurst {
     pub fn new(seed: u64) -> Self {
-        MmppBurst { seed, surge_mult: 4.0, p_enter: 0.15, p_exit: 0.5 }
+        MmppBurst {
+            seed,
+            surge_mult: 4.0,
+            p_enter: 0.15,
+            p_exit: 0.5,
+            regimes: std::cell::RefCell::new(Vec::new()),
+        }
     }
 
     /// Regime at interval `t` (true = surge).
     pub fn surge_at(&self, t: usize) -> bool {
-        let mut surge = false;
-        for i in 0..=t {
-            let mut r = Rng::new(mix(self.seed, mix(MMPP_TAG, i as u64)));
-            if surge {
-                if r.chance(self.p_exit) {
-                    surge = false;
+        let mut cache = self.regimes.borrow_mut();
+        if cache.len() <= t {
+            // resume the chain at the cache frontier; before interval 0
+            // the process starts quiet
+            let mut surge = cache.last().copied().unwrap_or(false);
+            for i in cache.len()..=t {
+                let mut r = Rng::new(mix(self.seed, mix(MMPP_TAG, i as u64)));
+                if surge {
+                    if r.chance(self.p_exit) {
+                        surge = false;
+                    }
+                } else if r.chance(self.p_enter) {
+                    surge = true;
                 }
-            } else if r.chance(self.p_enter) {
-                surge = true;
+                cache.push(surge);
             }
         }
-        surge
+        cache[t]
     }
 }
 
@@ -226,7 +251,14 @@ impl TrafficModel for HeavyTailBatch {
             if r.chance(self.p_giant) {
                 let factor = (1.0 - r.f64()).powf(-1.0 / 1.5).min(4.0);
                 let old = task.batch;
-                task.batch = ((old as f64 * factor) as u64).min(256_000);
+                if old == 0 {
+                    // nothing to inflate, and old==0 would divide the SLA
+                    // rescale by zero (NaN SLA poisons CellSummary goldens)
+                    continue;
+                }
+                // round (not truncate) and clamp to [1, 256_000]: truncation
+                // could hand the next consumer a zero batch
+                task.batch = ((old as f64 * factor).round() as u64).clamp(1, 256_000);
                 task.sla *= task.batch as f64 / old as f64;
             }
         }
@@ -313,15 +345,32 @@ impl Autoscaler {
 
     /// Plan at most one scaling command for this interval. `queued` is the
     /// previous interval's waiting-queue depth; `online` is the engine's
-    /// live availability slice (so chaos crashes are seen, not assumed).
-    pub fn plan(&mut self, queued: usize, online: &[bool]) -> Option<EngineCmd> {
+    /// live availability slice (so chaos crashes are seen, not assumed);
+    /// `offline_origin` is the engine's per-worker record of *who* took
+    /// each offline worker down (`Engine::offline_origins`).
+    ///
+    /// The parked stack has set semantics (a worker chaos recovered and
+    /// re-parked is moved, not duplicated), and scale-up only rejoins a
+    /// worker whose offline state this autoscaler owns
+    /// (`CmdOrigin::Autoscale`) — a stale entry for a worker that is now
+    /// offline because chaos *crashed* it is spent, never silently
+    /// resurrected as fresh capacity.
+    pub fn plan(
+        &mut self,
+        queued: usize,
+        online: &[bool],
+        offline_origin: &[Option<CmdOrigin>],
+    ) -> Option<EngineCmd> {
         let up = online.iter().filter(|&&o| o).count();
         if queued as f64 > self.cfg.queue_hi * up.max(1) as f64 {
             // scale up: unpark the most recently parked worker that is
-            // still offline (a chaos recover may have beaten us to one —
-            // such entries are spent and dropped)
+            // still offline *because we parked it* (a chaos recover may
+            // have beaten us to one, or a chaos crash may have replaced
+            // our graceful park — such entries are spent and dropped)
             while let Some(w) = self.parked.pop() {
-                if w < online.len() && !online[w] {
+                let ours = offline_origin.get(w).copied().flatten()
+                    == Some(CmdOrigin::Autoscale);
+                if w < online.len() && !online[w] && ours {
                     return Some(EngineCmd::WorkerJoin { worker: w });
                 }
             }
@@ -331,6 +380,9 @@ impl Autoscaler {
             // scale down: park the highest-index online worker (graceful —
             // its containers are checkpointed and requeued by the engine)
             if let Some(w) = (0..online.len()).rev().find(|&w| online[w]) {
+                // set semantics: if chaos recovered w and we park it again,
+                // move the entry to the top instead of duplicating it
+                self.parked.retain(|&p| p != w);
                 self.parked.push(w);
                 return Some(EngineCmd::WorkerLeave { worker: w });
             }
@@ -473,6 +525,44 @@ mod tests {
         assert_eq!(cfg.verdict(&task(3.0), 4), AdmissionVerdict::Admit);
     }
 
+    /// Test double for the engine's availability surface: applies the
+    /// autoscaler's own commands the way `Engine::apply_scaling` would,
+    /// keeping `online` and `offline_origin` in lockstep.
+    struct FleetView {
+        online: Vec<bool>,
+        origin: Vec<Option<CmdOrigin>>,
+    }
+
+    impl FleetView {
+        fn new(n: usize) -> Self {
+            FleetView { online: vec![true; n], origin: vec![None; n] }
+        }
+
+        fn apply(&mut self, cmd: &EngineCmd) {
+            match *cmd {
+                EngineCmd::WorkerLeave { worker } => {
+                    self.online[worker] = false;
+                    self.origin[worker] = Some(CmdOrigin::Autoscale);
+                }
+                EngineCmd::WorkerJoin { worker } => {
+                    self.online[worker] = true;
+                    self.origin[worker] = None;
+                }
+                _ => panic!("autoscaler planned a non-scaling command: {cmd:?}"),
+            }
+        }
+
+        fn chaos_crash(&mut self, worker: usize) {
+            self.online[worker] = false;
+            self.origin[worker] = Some(CmdOrigin::Churn);
+        }
+
+        fn chaos_recover(&mut self, worker: usize) {
+            self.online[worker] = true;
+            self.origin[worker] = None;
+        }
+    }
+
     #[test]
     fn autoscaler_parks_and_unparks_lifo() {
         let mut a = Autoscaler::new(AutoscaleConfig {
@@ -480,55 +570,165 @@ mod tests {
             queue_lo: 0.5,
             min_online: 2,
         });
-        let mut online = vec![true; 4];
+        let mut fleet = FleetView::new(4);
         // idle → park highest-index worker
-        match a.plan(0, &online) {
+        match a.plan(0, &fleet.online, &fleet.origin) {
             Some(EngineCmd::WorkerLeave { worker }) => {
                 assert_eq!(worker, 3);
-                online[3] = false;
+                fleet.apply(&EngineCmd::WorkerLeave { worker });
             }
             other => panic!("expected leave, got {other:?}"),
         }
-        match a.plan(0, &online) {
+        match a.plan(0, &fleet.online, &fleet.origin) {
             Some(EngineCmd::WorkerLeave { worker }) => {
                 assert_eq!(worker, 2);
-                online[2] = false;
+                fleet.apply(&EngineCmd::WorkerLeave { worker });
             }
             other => panic!("expected leave, got {other:?}"),
         }
         // at min_online → no further parking
-        assert!(a.plan(0, &online).is_none());
+        assert!(a.plan(0, &fleet.online, &fleet.origin).is_none());
         assert_eq!(a.parked(), &[3, 2]);
         // surge → unpark most recently parked first
-        match a.plan(100, &online) {
+        match a.plan(100, &fleet.online, &fleet.origin) {
             Some(EngineCmd::WorkerJoin { worker }) => {
                 assert_eq!(worker, 2);
-                online[2] = true;
+                fleet.apply(&EngineCmd::WorkerJoin { worker });
             }
             other => panic!("expected join, got {other:?}"),
         }
-        match a.plan(100, &online) {
+        match a.plan(100, &fleet.online, &fleet.origin) {
             Some(EngineCmd::WorkerJoin { worker }) => assert_eq!(worker, 3),
             other => panic!("expected join, got {other:?}"),
         }
         // stack drained → surge plans nothing
-        assert!(a.plan(100, &online).is_none());
+        assert!(a.plan(100, &fleet.online, &fleet.origin).is_none());
     }
 
     #[test]
     fn autoscaler_skips_entries_chaos_already_recovered() {
         let mut a = Autoscaler::new(AutoscaleConfig::default());
-        let mut online = vec![true; 6];
-        let w = match a.plan(0, &online) {
-            Some(EngineCmd::WorkerLeave { worker }) => worker,
+        let mut fleet = FleetView::new(6);
+        let w = match a.plan(0, &fleet.online, &fleet.origin) {
+            Some(EngineCmd::WorkerLeave { worker }) => {
+                fleet.apply(&EngineCmd::WorkerLeave { worker });
+                worker
+            }
             other => panic!("expected leave, got {other:?}"),
         };
-        online[w] = false;
         // chaos recovers the parked worker behind our back
-        online[w] = true;
+        fleet.chaos_recover(w);
         // surge: the stale entry is spent; nothing to unpark
-        assert!(a.plan(1000, &online).is_none());
+        assert!(a.plan(1000, &fleet.online, &fleet.origin).is_none());
         assert!(a.parked().is_empty());
+    }
+
+    /// Regression for the parked-stack staleness bug: park w → chaos
+    /// recovers w → park w again must not duplicate the entry, and after
+    /// chaos *crashes* w a surge must not `WorkerJoin` it — the offline
+    /// state belongs to chaos, not to the autoscaler. The pre-fix `plan`
+    /// pushed the duplicate and happily resurrected the crashed worker.
+    #[test]
+    fn autoscaler_never_rejoins_chaos_crashed_worker() {
+        let mut a = Autoscaler::new(AutoscaleConfig {
+            queue_hi: 2.0,
+            queue_lo: 0.5,
+            min_online: 2,
+        });
+        let mut fleet = FleetView::new(4);
+        // 1. idle → park worker 3
+        let cmd = a.plan(0, &fleet.online, &fleet.origin).expect("park");
+        assert_eq!(cmd, EngineCmd::WorkerLeave { worker: 3 });
+        fleet.apply(&cmd);
+        // 2. chaos recovers worker 3 behind the autoscaler's back
+        fleet.chaos_recover(3);
+        // 3. still idle → parks worker 3 again; set semantics keep one entry
+        let cmd = a.plan(0, &fleet.online, &fleet.origin).expect("re-park");
+        assert_eq!(cmd, EngineCmd::WorkerLeave { worker: 3 });
+        fleet.apply(&cmd);
+        assert_eq!(a.parked(), &[3], "re-park must move, not duplicate");
+        // 4. chaos recovers again, then *crashes* worker 3: it is offline,
+        //    but the offline state is chaos-owned now
+        fleet.chaos_recover(3);
+        fleet.chaos_crash(3);
+        // 5. surge: worker 3 is offline and on the stack, but its origin is
+        //    not Autoscale — the entry is spent, no WorkerJoin is issued
+        assert!(
+            a.plan(100, &fleet.online, &fleet.origin).is_none(),
+            "must not resurrect a chaos-crashed worker"
+        );
+        assert!(a.parked().is_empty(), "spent entries are dropped");
+    }
+
+    #[test]
+    fn heavy_tail_zero_batch_keeps_sla_finite() {
+        // a zero-batch task used to yield 0/0 → NaN SLA; now it passes
+        // through untouched, and shaped batches are always ≥ 1
+        let h = HeavyTailBatch::new(9);
+        // scan task ids until we hit one that draws the giant branch, so
+        // the guard (not just the p_giant miss) is what protects the task
+        let mut shaped_giant = false;
+        for id in 0..400 {
+            let mut probe = [Task {
+                id,
+                app: crate::splits::APPS[0],
+                batch: 1,
+                sla: 2.0,
+                arrival_s: 0.0,
+                decision: None,
+            }];
+            h.shape_tasks(&mut probe);
+            let giant = probe[0].batch > 1;
+            let mut tasks = [Task {
+                id,
+                app: crate::splits::APPS[0],
+                batch: 0,
+                sla: 2.0,
+                arrival_s: 0.0,
+                decision: None,
+            }];
+            h.shape_tasks(&mut tasks);
+            assert!(tasks[0].sla.is_finite(), "NaN SLA for zero-batch task {id}");
+            assert_eq!(tasks[0].batch, 0, "zero batch must pass through unshaped");
+            if giant {
+                shaped_giant = true;
+                assert_eq!(tasks[0].sla.to_bits(), 2.0_f64.to_bits());
+            }
+        }
+        assert!(shaped_giant, "no probed id ever drew the giant branch");
+    }
+
+    #[test]
+    fn mmpp_cache_matches_uncached_walk_byte_for_byte() {
+        // the λ stream after memoization must equal an uncached
+        // from-scratch walk, whatever order the cache was filled in
+        let uncached: Vec<f64> = {
+            let mut out = Vec::new();
+            for t in 0..64 {
+                let mut surge = false;
+                for i in 0..=t {
+                    let mut r = Rng::new(mix(21, mix(MMPP_TAG, i as u64)));
+                    if surge {
+                        if r.chance(0.5) {
+                            surge = false;
+                        }
+                    } else if r.chance(0.15) {
+                        surge = true;
+                    }
+                }
+                out.push(if surge { 5.0 * 4.0 } else { 5.0 });
+            }
+            out
+        };
+        // fill the cache out of order: far query first, then scattered
+        let m = MmppBurst::new(21);
+        m.surge_at(40);
+        m.surge_at(7);
+        m.surge_at(63);
+        let cached: Vec<f64> = (0..64).map(|t| m.lambda_at(t, 5.0)).collect();
+        for (t, (a, b)) in uncached.iter().zip(&cached).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "λ stream diverged at t={t}");
+        }
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Order-free deterministic float accumulation.
+//!
+//! Every float reduction on the engine's hot path used to be pinned to
+//! container-id visit order: IEEE-754 addition is not associative, so
+//! `a + b + c` and `a + c + b` can differ in the last bit, and a golden
+//! recorded against one visit order breaks under any other. That ordering
+//! constraint is exactly what blocked intra-interval parallelism.
+//!
+//! [`Accum`] breaks the dependence deliberately with **fixed-point**
+//! accumulation (the `eu4sim-core` approach, rebuilt from first
+//! principles): each `f64` term is scaled by 2^64 and added into an
+//! `i128`. Integer addition is exact, commutative and associative, so
+//!
+//! * `sum(perm(xs)) == sum(xs)` **bit-for-bit**, for every permutation;
+//! * per-worker shards of the active set can be reduced independently and
+//!   [`Accum::merge`]d in any order with bit-identical results — the join
+//!   operation behind `Engine::sub_step`'s rack-sharded parallelism.
+//!
+//! Chosen over compensated (Neumaier) summation because compensation
+//! shrinks the error but keeps it order-dependent; only an exact
+//! commutative representation gives the bit-for-bit permutation contract
+//! the shard-vs-serial property is stated over.
+//!
+//! ## Precision and range
+//!
+//! A finite `f64` is `m × 2^e` with a 53-bit significand, so `x × 2^64`
+//! is an *exact* integer whenever the value's ulp is ≥ 2^-64 — every
+//! |x| ≥ 2^-11 (≈ 4.9e-4) converts losslessly; smaller magnitudes are
+//! truncated at the 2^-64 quantum (absolute error < 5.5e-20 per term).
+//! The accumulated sum is exact over those fixed-point terms and rounds
+//! to `f64` exactly once on [`Accum::value`], which is *more* accurate
+//! than sequential f64 addition, not less.
+//!
+//! Magnitude budget: the i128 holds sums up to 2^63 (≈ 9.2e18) in value
+//! units — far past any engine quantity (resident MB, busy seconds,
+//! watt-hours, reward terms). Additions use wrapping arithmetic, which
+//! stays commutative/associative even at the (unreachable) boundary, so
+//! the permutation contract never silently degrades into UB or panics on
+//! the hot path. Non-finite terms follow Rust's saturating `as` cast
+//! (NaN → 0); reductions that can legitimately see NaN (the response-time
+//! EMA, which is order-*sensitive* by design) must not route through
+//! here — debug builds assert finiteness.
+
+/// Exponent of the fixed-point scale: terms are stored as `x × 2^64`.
+const SCALE_BITS: u32 = 64;
+
+/// Order-free fixed-point accumulator over `f64` terms.
+///
+/// ```text
+/// let mut a = Accum::ZERO;
+/// a.add(0.1); a.add(0.2); a.add(0.3);
+/// // any permutation of the adds yields the same a.value() bits
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Accum {
+    raw: i128,
+}
+
+impl Accum {
+    pub const ZERO: Accum = Accum { raw: 0 };
+
+    /// Convert one term to fixed point. Multiplying a finite f64 by a
+    /// power of two is exact (significand unchanged), and `as i128`
+    /// truncates deterministically toward zero; the cast saturates at the
+    /// i128 range and maps NaN to 0 (both documented Rust semantics).
+    #[inline]
+    fn to_fixed(x: f64) -> i128 {
+        debug_assert!(x.is_finite(), "non-finite term {x} in an order-free reduction");
+        (x * (SCALE_BITS as f64).exp2()) as i128
+    }
+
+    /// Add one term.
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        self.raw = self.raw.wrapping_add(Self::to_fixed(x));
+    }
+
+    /// Subtract one term (exact inverse of [`Accum::add`] of the same
+    /// value — incremental bookkeeping like resident-RAM deltas cannot
+    /// drift the way f64 `+=`/`-=` pairs do).
+    #[inline]
+    pub fn sub(&mut self, x: f64) {
+        self.raw = self.raw.wrapping_sub(Self::to_fixed(x));
+    }
+
+    /// Join another accumulator — the shard merge. Commutative and
+    /// associative, so shards can land in any completion order.
+    #[inline]
+    pub fn merge(&mut self, other: Accum) {
+        self.raw = self.raw.wrapping_add(other.raw);
+    }
+
+    /// Round the exact fixed-point sum to `f64` (one rounding, at the
+    /// end).
+    #[inline]
+    pub fn value(&self) -> f64 {
+        (self.raw as f64) * (-(SCALE_BITS as f64)).exp2()
+    }
+
+    /// The raw fixed-point payload, for bit-level assertions in tests.
+    pub fn raw(&self) -> i128 {
+        self.raw
+    }
+}
+
+impl std::iter::FromIterator<f64> for Accum {
+    fn from_iter<I: IntoIterator<Item = f64>>(iter: I) -> Accum {
+        let mut a = Accum::ZERO;
+        for x in iter {
+            a.add(x);
+        }
+        a
+    }
+}
+
+/// Order-free sum of an iterator of terms — the drop-in replacement for
+/// `xs.iter().sum::<f64>()` on reductions that must be shard-mergeable.
+pub fn sum<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    xs.into_iter().collect::<Accum>().value()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The tentpole contract: summing any permutation yields the same
+    /// bits. Exercised over adversarial magnitude spreads where naive f64
+    /// summation is provably order-dependent.
+    #[test]
+    fn permutation_invariance_is_bit_exact() {
+        let mut rng = Rng::new(0xACC);
+        for round in 0..20 {
+            let n = 50 + round * 13;
+            let xs: Vec<f64> = (0..n)
+                .map(|i| {
+                    // mix tiny and large magnitudes: worst case for
+                    // order-dependent rounding
+                    let scale = [1e-3, 1.0, 1e3, 1e6][i % 4];
+                    rng.range(-1.0, 1.0) * scale
+                })
+                .collect();
+            let want = sum(xs.iter().copied());
+            let mut perm = xs.clone();
+            for _ in 0..5 {
+                rng.shuffle(&mut perm);
+                let got = sum(perm.iter().copied());
+                assert_eq!(
+                    want.to_bits(),
+                    got.to_bits(),
+                    "permuted sum drifted: {want} vs {got}"
+                );
+            }
+            // naive f64 summation does NOT have this property on these
+            // inputs — confirm the test would catch an accumulator that
+            // secretly fell back to sequential adds
+            let naive: f64 = xs.iter().sum();
+            let naive_rev: f64 = xs.iter().rev().sum();
+            if naive.to_bits() != naive_rev.to_bits() {
+                return; // witnessed the order dependence at least once
+            }
+        }
+        panic!("inputs never exposed f64 order dependence — strengthen the generator");
+    }
+
+    #[test]
+    fn shard_merge_is_order_free() {
+        let mut rng = Rng::new(0x5AA);
+        let xs: Vec<f64> = (0..997).map(|_| rng.range(-1e4, 1e4)).collect();
+        let serial: Accum = xs.iter().copied().collect();
+        // split into uneven shards, merge in reversed and rotated orders
+        let shards: Vec<Accum> = xs.chunks(101).map(|c| c.iter().copied().collect()).collect();
+        for rotation in 0..shards.len() {
+            let mut merged = Accum::ZERO;
+            for i in 0..shards.len() {
+                merged.merge(shards[(i + rotation) % shards.len()]);
+            }
+            assert_eq!(merged, serial, "shard merge must be bit-identical at rotation {rotation}");
+            assert_eq!(merged.value().to_bits(), serial.value().to_bits());
+        }
+    }
+
+    #[test]
+    fn values_at_engine_magnitudes_convert_exactly() {
+        // ram_mb, busy seconds, watt-hours, MI: all ≥ 2^-11, so the
+        // fixed-point conversion is lossless and a singleton sum returns
+        // the input bits unchanged
+        for &x in &[8192.0, 0.05, 300.0, 1.5e9, 2.4e-3, -7.25] {
+            let mut a = Accum::ZERO;
+            a.add(x);
+            assert_eq!(a.value().to_bits(), x.to_bits(), "{x} must round-trip exactly");
+        }
+    }
+
+    #[test]
+    fn add_sub_round_trips_incremental_bookkeeping() {
+        let mut a = Accum::ZERO;
+        let terms = [4096.5, 123.0625, 0.75, 9000.125];
+        for &t in &terms {
+            a.add(t);
+        }
+        for &t in &terms[1..] {
+            a.sub(t);
+        }
+        // exactly the first term remains — no f64 +=/-= residue
+        assert_eq!(a.value().to_bits(), terms[0].to_bits());
+        a.sub(terms[0]);
+        assert_eq!(a, Accum::ZERO);
+    }
+
+    #[test]
+    fn sum_matches_exact_rational_result() {
+        // 0.1 is inexact in binary; ten of them sum to exactly 1.0 only
+        // under exact accumulation with a single final rounding
+        let got = sum(std::iter::repeat(0.1).take(10));
+        assert!((got - 1.0).abs() < 1e-15, "got {got}");
+        // integers are exact at any count
+        let got = sum((1..=1000).map(|i| i as f64));
+        assert_eq!(got, 500_500.0);
+    }
+}

@@ -4,6 +4,7 @@
 //! `xla` closure, so the usual `rand`/`serde`/`log` dependencies are
 //! re-implemented here (see DESIGN.md §8).
 
+pub mod accum;
 pub mod json;
 pub mod log;
 pub mod rng;

@@ -1,4 +1,12 @@
 //! Statistics helpers: running moments, percentiles, EMA, Jain fairness.
+//!
+//! The slice reductions ([`mean`], [`std`], [`jain_fairness`]) run their
+//! sums through the order-free [`crate::util::accum::Accum`], so callers
+//! that assemble their inputs from parallel shards get bit-identical
+//! results regardless of merge order. [`Welford`] and [`Ema`] stay
+//! sequential on purpose — they are order-*sensitive* recurrences.
+
+use super::accum;
 
 /// Welford online mean/variance accumulator.
 #[derive(Clone, Debug, Default)]
@@ -100,7 +108,7 @@ pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         0.0
     } else {
-        xs.iter().sum::<f64>() / xs.len() as f64
+        accum::sum(xs.iter().copied()) / xs.len() as f64
     }
 }
 
@@ -109,7 +117,7 @@ pub fn std(xs: &[f64]) -> f64 {
         return 0.0;
     }
     let m = mean(xs);
-    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+    (accum::sum(xs.iter().map(|x| (x - m) * (x - m))) / (xs.len() - 1) as f64).sqrt()
 }
 
 /// Jain's fairness index: `(sum x)^2 / (n * sum x^2)`; 1.0 = perfectly fair.
@@ -117,8 +125,8 @@ pub fn jain_fairness(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 1.0;
     }
-    let s: f64 = xs.iter().sum();
-    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    let s = accum::sum(xs.iter().copied());
+    let s2 = accum::sum(xs.iter().map(|x| x * x));
     if s2 == 0.0 {
         1.0
     } else {
@@ -187,5 +195,14 @@ mod tests {
     fn mean_std() {
         assert_eq!(mean(&[]), 0.0);
         assert!((std(&[2.0, 4.0]) - std(&[4.0, 2.0])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slice_reductions_are_order_free_bit_for_bit() {
+        let xs = [1e6, 1e-3, -7.25, 300.0, 0.1, 8192.0, 2.4e-3];
+        let rev: Vec<f64> = xs.iter().rev().copied().collect();
+        assert_eq!(mean(&xs).to_bits(), mean(&rev).to_bits());
+        assert_eq!(std(&xs).to_bits(), std(&rev).to_bits());
+        assert_eq!(jain_fairness(&xs).to_bits(), jain_fairness(&rev).to_bits());
     }
 }

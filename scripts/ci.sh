@@ -41,9 +41,18 @@ if ! ls tests/goldens/*.json >/dev/null 2>&1; then
 fi
 ./target/release/splitplace matrix --filter smoke --jobs 2
 
+echo "== matrix smoke (sharded integrator vs the serial goldens) =="
+# Second parallelism axis: --shards N fans the CPU phase of every interval
+# across N threads INSIDE each cell. The order-free accumulator makes the
+# sharded walk byte-identical to the serial one, so both runs gate against
+# the exact goldens the serial bootstrap recorded — under --jobs 1 and
+# --jobs N, per the shard-determinism contract. Any drift fails here.
+./target/release/splitplace matrix --filter smoke --jobs 1 --shards 4
+./target/release/splitplace matrix --filter smoke --jobs 2 --shards 4
+
 # Nightly stanza (uncomment in a scheduled job, not in per-commit CI —
-# the full cross product runs all 9 policies × all 14 scenarios × seeds,
-# including the 1000-worker tier cells and the traffic plane's Fig-13/16/18
+# the full cross product runs all 9 policies × all 18 scenarios × seeds,
+# including the 1000/5000/25 000-worker tier cells and the traffic plane's Fig-13/16/18
 # regimes (constrained-edge, single-app, cloud-tier), plus every
 # differential pair):
 # ./target/release/splitplace matrix --filter full --jobs 4 --seeds 2

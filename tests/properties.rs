@@ -11,7 +11,7 @@ use splitplace::config::{
     WorkloadConfig,
 };
 use splitplace::coordinator::{LatMemSplitter, SplitCtx, Splitter};
-use splitplace::harness::Scenario;
+use splitplace::harness::{Cell, CellSummary, Scenario};
 use splitplace::mab::{Bandit, Context, MabPolicy, Mode};
 use splitplace::placement::{BestFitPlacer, FeatureLayout, Placer, PlacementInput, SlotInfo};
 use splitplace::sim::{CompletedTask, ContainerState, Engine, WorkerSnapshot};
@@ -859,6 +859,54 @@ fn prop_new_splitter_stacks_deterministic_and_green_under_heavy_chaos() {
                 }
                 if a.admitted == 0 {
                     return Err(format!("{policy:?}: no load admitted"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE-7 tentpole contract at the cell level: the intra-interval shard
+/// count is invisible in every observable — the full `CellSummary` JSON
+/// (response EMA, violation rate, reward, energy, …) and the engine's
+/// replay signatures are byte-identical whether the CPU phase ran serially
+/// or fanned out across threads. Chaos-heavy on purpose: crashes,
+/// evictions and rejoins keep the resident sets ragged, so shard
+/// boundaries constantly cut through non-uniform worker ranges.
+#[test]
+fn prop_sharded_cells_summarize_byte_identically_to_serial() {
+    check(
+        "shard-vs-serial-cell-summary",
+        3,
+        |rng| rng.next_u64() % 10_000,
+        |&seed| {
+            let cell = Cell {
+                policy: PolicyKind::ModelCompression,
+                scenario: Scenario::ChaosHeavy,
+                seed,
+            };
+            let opts = ChaosOptions::default();
+            let run = |shards: usize| -> Result<(String, Vec<chaos::IntervalSig>), String> {
+                let (mut cfg, plan) = cell.scenario.build(cell.policy, cell.seed, 10);
+                cfg.sim.shards = shards;
+                let out = chaos::run_chaos(&cfg, &plan, &opts, None)
+                    .map_err(|e| e.to_string())?;
+                let summary = CellSummary::from_outcome(&cell, 10, &out);
+                Ok((summary.to_json().to_string(), out.signatures))
+            };
+            let (serial_json, serial_sigs) = run(1)?;
+            for shards in [2usize, 7] {
+                let (json, sigs) = run(shards)?;
+                if json != serial_json {
+                    return Err(format!(
+                        "seed {seed}: {shards}-shard summary drifted from serial:\n  \
+                         serial  {serial_json}\n  sharded {json}"
+                    ));
+                }
+                if sigs != serial_sigs {
+                    return Err(format!(
+                        "seed {seed}: {shards}-shard signatures diverged from serial"
+                    ));
                 }
             }
             Ok(())
