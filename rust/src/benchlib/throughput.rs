@@ -20,6 +20,7 @@ use crate::harness::Scenario;
 use crate::mab::Mode;
 use crate::sim::EngineCmd;
 use crate::util::json::Value;
+use crate::util::phase_timer::PhaseBreakdown;
 
 /// One measurable fleet tier, named by its pair of matrix tier scenarios —
 /// the bench derives its whole regime (cluster preset, tier λ, plan) from
@@ -99,6 +100,12 @@ pub struct Throughput {
     pub wall_ms: f64,
     pub intervals_per_sec: f64,
     pub container_intervals_per_sec: f64,
+    /// Where the wall-clock went, per phase (cpu/network/decision/oracle/
+    /// traffic ms). Informational only: the perf gate never bands these —
+    /// see `perfgate` — they exist so a recorded baseline says *which*
+    /// phase moved when a rate does. Oracle is 0.0 here by construction
+    /// (the bench runs no oracle sweeps).
+    pub phases: PhaseBreakdown,
 }
 
 /// Run one tier's matrix scenario (chaos-light is the representative
@@ -119,6 +126,10 @@ pub fn measure(
 ) -> anyhow::Result<Throughput> {
     let (mut cfg, plan) = tier.scenario(chaos).build(policy, seed, intervals);
     cfg.sim.shards = shards.max(1);
+    // always profile here: the timer's clock reads never feed back into
+    // simulation state, so counters stay identical and the breakdown is
+    // free signal on a box that is already paying for the measurement
+    cfg.sim.profile_phases = true;
     let n = cfg.cluster.total_workers();
     let shards = cfg.sim.shards;
     let opts = ChaosOptions::default();
@@ -137,6 +148,7 @@ pub fn measure(
         container_intervals += broker.engine.active_container_count() as u64;
     }
     let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let phases = broker.engine.phases().snapshot();
     Ok(Throughput {
         tier: tier.name.to_string(),
         policy: crate::harness::policy_slug(policy).to_string(),
@@ -152,6 +164,7 @@ pub fn measure(
         wall_ms: wall_s * 1e3,
         intervals_per_sec: intervals as f64 / wall_s,
         container_intervals_per_sec: container_intervals as f64 / wall_s,
+        phases,
     })
 }
 
@@ -192,6 +205,14 @@ pub fn to_json(results: &[Throughput]) -> Value {
                                 "container_intervals_per_sec",
                                 Value::Num(r.container_intervals_per_sec),
                             ),
+                            // per-phase breakdown: informational, never
+                            // gated (absent in pre-phase baselines — the
+                            // gate treats absent as "nothing to compare")
+                            ("cpu_ms", Value::Num(r.phases.cpu_ms)),
+                            ("network_ms", Value::Num(r.phases.network_ms)),
+                            ("decision_ms", Value::Num(r.phases.decision_ms)),
+                            ("oracle_ms", Value::Num(r.phases.oracle_ms)),
+                            ("traffic_ms", Value::Num(r.phases.traffic_ms)),
                         ])
                     })
                     .collect(),
@@ -223,12 +244,22 @@ mod tests {
         assert!(r.admitted > 0, "load must arrive");
         assert!(r.intervals_per_sec > 0.0);
         assert!(r.wall_ms > 0.0);
+        assert_eq!(r.phases.oracle_ms, 0.0, "bench runs no oracle sweeps");
+        let phase_sum = r.phases.cpu_ms
+            + r.phases.network_ms
+            + r.phases.decision_ms
+            + r.phases.traffic_ms;
+        assert!(phase_sum > 0.0, "profiling is always on in measure()");
+        assert!(phase_sum <= r.wall_ms, "phases are a partition of the wall");
         let j = to_json(&[r]).to_string();
         assert!(j.contains("\"bench\":\"engine_throughput\""), "{j}");
         assert!(j.contains("\"tier\":\"small\""), "{j}");
         assert!(j.contains("\"policy\":\"mc\""), "{j}");
         assert!(j.contains("\"shards\":2"), "{j}");
         assert!(j.contains("intervals_per_sec"), "{j}");
+        for key in ["cpu_ms", "network_ms", "decision_ms", "oracle_ms", "traffic_ms"] {
+            assert!(j.contains(&format!("\"{key}\"")), "{key} missing: {j}");
+        }
     }
 
     /// The policy axis: any stack drives the measurement, including the

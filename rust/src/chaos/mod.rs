@@ -27,8 +27,6 @@ pub mod oracle;
 pub mod plan;
 pub mod shrink;
 
-use std::collections::HashSet;
-
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
@@ -38,7 +36,7 @@ use crate::runtime::Runtime;
 use crate::sim::{EngineCmd, IntervalReport};
 
 pub use events::{ChaosEvent, TimedEvent};
-pub use oracle::{check_interval, OracleCtx, Violation, ORACLES};
+pub use oracle::{check_interval, OracleCtx, OracleState, Violation, ORACLES};
 pub use plan::{FaultPlan, Profile};
 pub use shrink::{shrink_plan, ShrinkResult};
 
@@ -92,11 +90,16 @@ pub struct ChaosOptions {
     /// Fail tasks older than this many intervals (starvation guard under
     /// crash storms); 0 disables the guard.
     pub task_timeout_intervals: usize,
+    /// Run the retained full-scan oracle twins side by side with the
+    /// O(active) indexed derivations every interval, and fail the run on
+    /// any verdict divergence (`paranoid-divergence` violations). Restores
+    /// the pre-migration oracle cost — a CI cross-check, not a default.
+    pub paranoid: bool,
 }
 
 impl Default for ChaosOptions {
     fn default() -> Self {
-        ChaosOptions { bug: None, task_timeout_intervals: 40 }
+        ChaosOptions { bug: None, task_timeout_intervals: 40, paranoid: false }
     }
 }
 
@@ -276,7 +279,7 @@ pub fn run_chaos(
     let mut broker = Broker::new_with_fallback(cfg.clone(), runtime, crate::mab::Mode::Test)?;
     let mab_baseline = broker.decision_count().unwrap_or(0);
     let base_lambda = cfg.workload.lambda;
-    let mut seen_completed: HashSet<u64> = HashSet::new();
+    let mut oracle_state = OracleState::new();
     let mut violations = Vec::new();
     let mut signatures = Vec::with_capacity(cfg.sim.intervals);
     // Plan-state ledger for the injected-state oracles. Churn and the
@@ -304,16 +307,19 @@ pub fn run_chaos(
         }
         let (_o_p, report) = broker.step_report();
         let mab_decisions = broker.decision_count().map(|c| c - mab_baseline);
+        let tok = broker.engine.phases().start();
         let mut ctx = OracleCtx {
             engine: &broker.engine,
             report: &report,
             admitted: broker.admitted,
             mab_decisions,
-            seen_completed: &mut seen_completed,
+            state: &mut oracle_state,
             expected_offline: track_plan_state.then_some(plan_ledger.offline.as_slice()),
             expected_skew: track_plan_state.then_some(plan_ledger.skew.as_slice()),
+            paranoid: opts.paranoid,
         };
         violations.extend(check_interval(&mut ctx));
+        broker.engine.phases_mut().stop(crate::util::phase_timer::Phase::Oracle, tok);
         signatures.push(IntervalSig::of(&report));
     }
 
@@ -529,6 +535,38 @@ mod tests {
         // the same plan without the bug is green
         let fixed = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
         assert!(fixed.violations.is_empty(), "{:?}", fixed.violations);
+    }
+
+    #[test]
+    fn paranoid_mode_is_green_and_divergence_free_even_under_bugs() {
+        // paranoid re-runs the full-scan twins next to the indexed oracle
+        // plane: a clean heavy run must stay green, and a SABOTAGED run
+        // must violate the real oracle while scan and index still agree
+        // on what the wrongness is (no paranoid-divergence)
+        let cfg = chaos_cfg(10, 4.0);
+        let plan = FaultPlan::generate(7, 10, Profile::Heavy, cfg.cluster.total_workers());
+        let opts = ChaosOptions { paranoid: true, ..Default::default() };
+        let out = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+
+        let n = cfg.cluster.total_workers();
+        let crash_plan = FaultPlan::empty(4, 10).with_events(
+            (0..n)
+                .map(|w| TimedEvent { t: 2, event: ChaosEvent::Crash { worker: w } })
+                .collect(),
+        );
+        let opts = ChaosOptions {
+            bug: Some(BugKind::SkipCrashRequeue),
+            paranoid: true,
+            ..Default::default()
+        };
+        let out = run_chaos(&cfg, &crash_plan, &opts, None).unwrap();
+        assert!(out.violated_oracles().contains(&"crashed-workers-idle"), "{:?}", out.violated_oracles());
+        assert!(
+            !out.violated_oracles().contains(&"paranoid-divergence"),
+            "scan and index must agree even on a sabotaged engine: {:?}",
+            out.violated_oracles()
+        );
     }
 
     #[test]

@@ -5,11 +5,22 @@
 //! Any violation is a bug — either in the simulator/broker or in a fault
 //! hook — and carries enough detail to debug it; the harness then shrinks
 //! the fault plan to a minimal reproduction (see [`super::shrink`]).
+//!
+//! **The hot path is O(active).** [`check_interval`] never scans the full
+//! container pool or the full command ledger: container sweeps walk
+//! [`Engine::active_ids`] (plus the chain-precedence terminal latch),
+//! capacity checks read the per-worker residency sums, and the two
+//! ledger-audit oracles fold only the records appended since the previous
+//! interval through a cursor carried in [`OracleState`]. The retained
+//! `*_full` twins re-derive each verdict from a full scan; they run only
+//! under `--paranoid` (see [`OracleCtx::paranoid`]) and in the
+//! scan-vs-index property tests.
 
 use std::collections::HashSet;
 
 use crate::sim::{
-    ContainerState, Effect, Engine, EngineCmd, FaultSurface, IntervalReport, RAM_OVERCOMMIT,
+    Container, ContainerState, Effect, Engine, EngineCmd, FaultSurface, IntervalReport,
+    RAM_OVERCOMMIT,
 };
 
 /// All invariant names, in evaluation order.
@@ -51,6 +62,10 @@ pub fn describe(oracle: &str) -> &'static str {
             "replaying the engine's own command ledger onto a fresh surface reproduces its \
              online/mips/ram/skew state"
         }
+        "paranoid-divergence" => {
+            "full-scan and index-backed oracle derivations returned different verdicts \
+             (--paranoid cross-check; not one of the 13 invariants)"
+        }
         _ => "unknown invariant",
     }
 }
@@ -64,30 +79,33 @@ pub struct Violation {
 }
 
 // ---------------------------------------------------------------------------
-// Scan-vs-index oracle derivations
+// Scan-vs-index oracle twins
 //
-// The `chain-precedence` and `crashed-workers-idle` sweeps are the two
-// oracles the ROADMAP plans to migrate from full-pool scans onto the
-// engine's active-set index. Until the migration lands, both derivations
-// are kept public and a property test asserts they agree after every
-// interval of a chaos run — the evidence that switching the sweep to
-// O(active) changes cost, not verdicts, on a correct engine.
+// Every container-sweep oracle exists in two derivations: the `*_full`
+// twin re-scans the entire pool (every container ever admitted — the
+// pre-migration oracles), the `*_indexed` twin walks the engine's
+// O(active) indexes in the same ascending-id order. `check_interval`
+// runs ONLY the indexed twins; the full twins survive for the
+// `--paranoid` side-by-side cross-check and the property tests in
+// tests/properties.rs.
 //
-// Equivalence caveat the migration must respect: `crashed-workers-idle`
-// only ever flags non-terminal states, so its index twin is exactly
-// equivalent by construction. `chain-precedence`'s full scan can ALSO
-// flag a Done/Failed container whose `mi_done > 0` predates an unfinished
-// predecessor — a broken engine that lets a successor finish out of order
-// keeps failing the full scan forever, while the index twin only sees the
-// violation while the container is live. Flipping `check_interval` to the
-// indexed twin therefore trades that post-hoc memory for O(active); keep
-// the full scan (or a terminal-transition check) if that memory matters.
+// `chain-precedence` is the one oracle whose full scan sees state the
+// active set cannot: a Done/Failed container whose `mi_done > 0` predates
+// an unfinished predecessor keeps failing the full scan after it leaves
+// the active list. The engine closes that gap with a terminal-transition
+// latch (`Engine::chain_suspects`): `set_container` records, at the
+// moment a container goes terminal, whether it got ahead of an unfinished
+// predecessor — predecessor done-ness is monotone, so latching at the
+// transition captures exactly the offenders the full scan can ever flag
+// post-hoc. The indexed sweep visits the merge of the active list and the
+// latch and is therefore *exactly* equal to the full scan, terminal
+// memory included, on correct and sabotaged engines alike.
 // ---------------------------------------------------------------------------
 
 /// `chain-precedence` details over an arbitrary container visit sequence.
 fn chain_precedence_over<'c>(
     engine: &Engine,
-    containers: impl Iterator<Item = &'c crate::sim::Container>,
+    containers: impl Iterator<Item = &'c Container>,
 ) -> Vec<String> {
     let mut out = Vec::new();
     for c in containers {
@@ -110,27 +128,42 @@ fn chain_precedence_over<'c>(
     out
 }
 
-/// `chain-precedence` from the full container pool (the current oracle).
+/// `chain-precedence` from the full container pool (the paranoid twin).
 pub fn chain_precedence_full(engine: &Engine) -> Vec<String> {
     chain_precedence_over(engine, engine.containers().iter())
 }
 
-/// `chain-precedence` from the active-set index: O(active), same id visit
-/// order as the full scan over the LIVE containers. Equivalent to
-/// [`chain_precedence_full`] on a correct engine; see the section comment
-/// for the terminal-container caveat a migration must respect.
+/// `chain-precedence` from the active-set index merged with the
+/// terminal-transition latch, in ascending id order — the hot-path
+/// derivation. Exactly equal to [`chain_precedence_full`] (see the
+/// section comment): live offenders come from the active list, terminal
+/// offenders from [`Engine::chain_suspects`], and both lists are
+/// id-sorted and disjoint so the merge reproduces the full scan's visit
+/// order over every container that can produce a detail.
 pub fn chain_precedence_indexed(engine: &Engine) -> Vec<String> {
-    chain_precedence_over(
-        engine,
-        engine.active_ids().iter().map(|&cid| &engine.containers()[cid]),
-    )
+    let active = engine.active_ids();
+    let latched = engine.chain_suspects();
+    let mut merged = Vec::with_capacity(active.len() + latched.len());
+    let (mut i, mut j) = (0, 0);
+    while i < active.len() && j < latched.len() {
+        if active[i] < latched[j] {
+            merged.push(active[i]);
+            i += 1;
+        } else {
+            merged.push(latched[j]);
+            j += 1;
+        }
+    }
+    merged.extend_from_slice(&active[i..]);
+    merged.extend_from_slice(&latched[j..]);
+    chain_precedence_over(engine, merged.iter().map(|&cid| &engine.containers()[cid]))
 }
 
 /// `crashed-workers-idle` details over an arbitrary container visit
 /// sequence: no container may run, stage or migrate on an offline worker.
 fn crashed_workers_idle_over<'c>(
     engine: &Engine,
-    containers: impl Iterator<Item = &'c crate::sim::Container>,
+    containers: impl Iterator<Item = &'c Container>,
 ) -> Vec<String> {
     let online = engine.online();
     let mut out = Vec::new();
@@ -154,7 +187,7 @@ fn crashed_workers_idle_over<'c>(
     out
 }
 
-/// `crashed-workers-idle` from the full container pool (the current oracle).
+/// `crashed-workers-idle` from the full container pool (the paranoid twin).
 pub fn crashed_workers_idle_full(engine: &Engine) -> Vec<String> {
     crashed_workers_idle_over(engine, engine.containers().iter())
 }
@@ -169,14 +202,216 @@ pub fn crashed_workers_idle_indexed(engine: &Engine) -> Vec<String> {
     )
 }
 
+/// Where a `(state, worker)` pair holds resident RAM, if anywhere — the
+/// oracle-side mirror of the engine's residency rule, so the full-scan
+/// capacity twin re-derives per-worker demand without engine internals.
+fn resident_home(c: &Container) -> Option<usize> {
+    match c.state {
+        ContainerState::Running
+        | ContainerState::Transferring { .. }
+        | ContainerState::Blocked => c.worker,
+        ContainerState::Migrating { to, .. } => Some(to),
+        _ => None,
+    }
+}
+
+/// `allocation-capacity` details given per-worker resident-RAM demand.
+fn allocation_capacity_over(engine: &Engine, resident: &[f64]) -> Vec<String> {
+    let mut out = Vec::new();
+    for (w, worker) in engine.cluster.workers.iter().enumerate() {
+        let cap = worker.spec.ram_mb * RAM_OVERCOMMIT;
+        if resident[w] > cap + 1e-6 {
+            out.push(format!("worker {w}: resident {:.0} MB > cap {cap:.0} MB", resident[w]));
+        }
+    }
+    out
+}
+
+/// `allocation-capacity` from a full pool scan (the paranoid twin): sums
+/// resident demand per worker over every container ever admitted, through
+/// the order-free accumulator — bit-identical to the residency-index sums
+/// whatever order the terms are visited in.
+pub fn allocation_capacity_full(engine: &Engine) -> Vec<String> {
+    let mut sums = vec![crate::util::accum::Accum::ZERO; engine.workers()];
+    for c in engine.containers() {
+        if let Some(w) = resident_home(c) {
+            sums[w].add(c.ram_mb);
+        }
+    }
+    let resident: Vec<f64> = sums.iter().map(|a| a.value()).collect();
+    allocation_capacity_over(engine, &resident)
+}
+
+/// `allocation-capacity` from the per-worker residency indexes — the
+/// hot-path derivation, O(workers + resident).
+pub fn allocation_capacity_indexed(engine: &Engine) -> Vec<String> {
+    allocation_capacity_over(engine, &engine.resident_ram())
+}
+
+/// `task-conservation` container-side details from a full pool scan (the
+/// paranoid twin): the pool must reference exactly the admitted task set.
+/// Strictly broader than the indexed twin — it also counts distinct task
+/// ids across terminal containers, which no O(active) derivation can see;
+/// `--paranoid` treats anything the full scan catches that the hot path
+/// missed as a divergence.
+pub fn task_conservation_full(engine: &Engine) -> Vec<String> {
+    let mut out = Vec::new();
+    let admitted = engine.admitted_task_count();
+    let container_tasks: HashSet<u64> =
+        engine.containers().iter().map(|c| c.task_id).collect();
+    if container_tasks.len() != admitted {
+        out.push(format!(
+            "containers reference {} distinct tasks but {admitted} were admitted",
+            container_tasks.len()
+        ));
+    }
+    for id in &container_tasks {
+        if engine.task(*id).is_none() {
+            out.push(format!("container references unknown task {id}"));
+        }
+    }
+    out
+}
+
+/// `task-conservation` container-side details from the active-set index:
+/// every in-flight container must reference a known task (first offense
+/// per task id, ascending container order). O(active).
+pub fn task_conservation_indexed(engine: &Engine) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut flagged: HashSet<u64> = HashSet::new();
+    for &cid in engine.active_ids() {
+        let id = engine.containers()[cid].task_id;
+        if engine.task(id).is_none() && flagged.insert(id) {
+            out.push(format!("container references unknown task {id}"));
+        }
+    }
+    out
+}
+
+/// Queued-container count from a full pool scan (the paranoid twin).
+pub fn telemetry_queued_full(engine: &Engine) -> usize {
+    engine
+        .containers()
+        .iter()
+        .filter(|c| matches!(c.state, ContainerState::Queued))
+        .count()
+}
+
+/// Queued-container count from the active-set index: `Queued` is a
+/// non-terminal state, so the active list holds every queued container.
+pub fn telemetry_queued_indexed(engine: &Engine) -> usize {
+    engine
+        .active_ids()
+        .iter()
+        .filter(|&&cid| matches!(engine.containers()[cid].state, ContainerState::Queued))
+        .count()
+}
+
+/// `payload-corruption-handled` details from a full ledger walk (the
+/// paranoid twin): every task any corruption record affected must be
+/// failed by now.
+pub fn payload_corruption_full(engine: &Engine) -> Vec<String> {
+    let mut out = Vec::new();
+    for rec in engine.ledger() {
+        let corrupting = matches!(
+            rec.cmd,
+            EngineCmd::CorruptPayload { .. } | EngineCmd::CorruptPayloadSwallowed { .. }
+        );
+        if !corrupting {
+            continue;
+        }
+        let Effect::Affected { tasks } = &rec.effect else {
+            continue;
+        };
+        for &id in tasks {
+            if !engine.task_failed(id) {
+                out.push(corruption_detail(id, rec.interval));
+            }
+        }
+    }
+    out
+}
+
+fn corruption_detail(task: u64, at: usize) -> String {
+    format!("task {task}: payload corrupted at interval {at} but the task is not failed")
+}
+
+/// `ledger-replay-consistent` detail for a replayed-vs-live surface
+/// mismatch; `None` when the surfaces agree. Shared by the incremental
+/// hot path and the full-replay paranoid twin so both emit the same text.
+fn surface_divergence_detail(engine: &Engine, replayed: &FaultSurface) -> Option<String> {
+    let live = engine.fault_surface();
+    if *replayed == live {
+        return None;
+    }
+    let diff = (0..engine.workers())
+        .find_map(|w| {
+            let fields = [
+                ("online", replayed.online[w] != live.online[w]),
+                ("mips", replayed.mips_factor[w] != live.mips_factor[w]),
+                ("ram", replayed.ram_factor[w] != live.ram_factor[w]),
+                ("skew", replayed.clock_skew_s[w] != live.clock_skew_s[w]),
+            ];
+            fields.iter().find(|(_, d)| *d).map(|(name, _)| format!("worker {w}: {name}"))
+        })
+        .unwrap_or_else(|| "churn rate".into());
+    Some(format!(
+        "replaying {} ledger commands does not reproduce the fault surface ({diff})",
+        engine.ledger().len()
+    ))
+}
+
+/// `ledger-replay-consistent` from a full from-scratch replay (the
+/// paranoid twin).
+pub fn ledger_replay_full(engine: &Engine) -> Vec<String> {
+    let replayed = FaultSurface::replay(engine.workers(), engine.ledger());
+    surface_divergence_detail(engine, &replayed).into_iter().collect()
+}
+
 impl std::fmt::Display for Violation {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "[{}] interval {}: {}", self.oracle, self.interval, self.detail)
     }
 }
 
-/// Everything an interval check can see. `seen_completed` persists across
-/// intervals (the harness owns it) so duplicate completions are caught.
+/// Cross-interval oracle memory, owned by the harness for the lifetime of
+/// one run. Besides the duplicate-completion set this carries the ledger
+/// cursor that makes the two ledger-audit oracles incremental: each
+/// interval folds only the records appended since the last check into a
+/// persistent replay surface and a pending-corruption list, turning two
+/// O(ledger) walks per interval into O(new records).
+#[derive(Debug, Default)]
+pub struct OracleState {
+    /// Task ids already seen in a completion report.
+    seen_completed: HashSet<u64>,
+    /// Ledger records `[..cursor]` have been absorbed.
+    ledger_cursor: usize,
+    /// Corrupted-but-not-yet-failed `(task, interval)` pairs, in ledger
+    /// order; entries leave when the task fails (tasks never un-fail), so
+    /// the per-interval sweep reproduces the full ledger walk's details
+    /// exactly.
+    corrupted_pending: Vec<(u64, usize)>,
+    /// Incremental replay of the command ledger (`None` until the first
+    /// check initializes it with the run's worker count).
+    replayed: Option<FaultSurface>,
+}
+
+impl OracleState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completion observation; returns false if `task_id` was
+    /// already seen (the duplicate the oracle flags). Exposed so tests can
+    /// pre-seed the set.
+    pub fn note_completed(&mut self, task_id: u64) -> bool {
+        self.seen_completed.insert(task_id)
+    }
+}
+
+/// Everything an interval check can see. `state` persists across
+/// intervals (the harness owns it): duplicate-completion memory plus the
+/// incremental ledger cursor.
 pub struct OracleCtx<'a> {
     pub engine: &'a Engine,
     pub report: &'a IntervalReport,
@@ -185,7 +420,7 @@ pub struct OracleCtx<'a> {
     /// MAB decisions recorded by the bandit since harness start (current
     /// count sum minus the warm-start baseline); None for non-MAB policies.
     pub mab_decisions: Option<u64>,
-    pub seen_completed: &'a mut HashSet<u64>,
+    pub state: &'a mut OracleState,
     /// Per-worker offline expectation replayed from the fault plan's
     /// bug-free compiled commands (see [`super::PlanLedger`]). None when
     /// the engine can legitimately toggle availability on its own (churn
@@ -194,9 +429,19 @@ pub struct OracleCtx<'a> {
     /// Per-worker clock-skew seconds the plan currently holds active
     /// (post-clamp); None disables the check.
     pub expected_skew: Option<&'a [f64]>,
+    /// Run the retained full-scan twins side by side with the indexed
+    /// derivations and emit a `paranoid-divergence` violation on any
+    /// verdict mismatch. Costs the pre-migration O(pool + ledger) per
+    /// interval — a correctness cross-check, not a mode to leave on.
+    pub paranoid: bool,
 }
 
 /// Evaluate every oracle; returns all violations found this interval.
+///
+/// Hot-path complexity: O(active + workers + new ledger records) — no
+/// full-pool container scan, no full-ledger walk. The `--paranoid` mode
+/// re-adds the full scans purely to diff them against the indexed
+/// verdicts.
 pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
     let mut out = Vec::new();
     let t = ctx.report.interval;
@@ -205,10 +450,11 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
     };
 
     // -- task-conservation --------------------------------------------------
-    // Cross-structure checks (the task-map partition active/completed/
-    // failed is exhaustive by construction, so comparing those counts to
-    // each other would be a tautology): the broker's admission count, the
-    // engine's task map, and the container pool must all agree.
+    // O(1) registry checks plus an O(active) sweep: the broker's admission
+    // count must match the engine's task registry, and every in-flight
+    // container must reference a known task. The full-pool twin
+    // (`task_conservation_full`) additionally audits terminal containers
+    // and the distinct-task count; it runs under --paranoid only.
     let admitted = ctx.engine.admitted_task_count();
     if admitted as u64 != ctx.admitted {
         fail(
@@ -216,21 +462,8 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
             format!("engine tracks {admitted} tasks but broker admitted {}", ctx.admitted),
         );
     }
-    let container_tasks: HashSet<u64> =
-        ctx.engine.containers().iter().map(|c| c.task_id).collect();
-    if container_tasks.len() != admitted {
-        fail(
-            "task-conservation",
-            format!(
-                "containers reference {} distinct tasks but {admitted} were admitted",
-                container_tasks.len()
-            ),
-        );
-    }
-    for id in &container_tasks {
-        if ctx.engine.task(*id).is_none() {
-            fail("task-conservation", format!("container references unknown task {id}"));
-        }
+    for detail in task_conservation_indexed(ctx.engine) {
+        fail("task-conservation", detail);
     }
 
     // -- allocation-capacity ------------------------------------------------
@@ -239,21 +472,14 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
     // that already counts), and squeezes only shrink the effective cap
     // below the physical one — so resident demand must NEVER exceed the
     // physical overcommit cap, not even by a single container.
-    let resident = ctx.engine.resident_ram();
-    for (w, worker) in ctx.engine.cluster.workers.iter().enumerate() {
-        let cap = worker.spec.ram_mb * RAM_OVERCOMMIT;
-        if resident[w] > cap + 1e-6 {
-            fail(
-                "allocation-capacity",
-                format!("worker {w}: resident {:.0} MB > cap {cap:.0} MB", resident[w]),
-            );
-        }
+    for detail in allocation_capacity_indexed(ctx.engine) {
+        fail("allocation-capacity", detail);
     }
 
     // -- chain-precedence ---------------------------------------------------
-    // Full-pool derivation; the index-backed twin must agree (see the
-    // scan-vs-index section above and tests/properties.rs).
-    for detail in chain_precedence_full(ctx.engine) {
+    // Active set + terminal-transition latch; exactly the full scan's
+    // verdicts, post-hoc memory included (see the twins section above).
+    for detail in chain_precedence_indexed(ctx.engine) {
         fail("chain-precedence", detail);
     }
 
@@ -311,19 +537,15 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
     }
 
     // -- crashed-workers-idle -----------------------------------------------
-    // Full-pool derivation; the index-backed twin must agree (see above).
-    for detail in crashed_workers_idle_full(ctx.engine) {
+    // Active-set derivation; exactly the full scan (every offending state
+    // is non-terminal).
+    for detail in crashed_workers_idle_indexed(ctx.engine) {
         fail("crashed-workers-idle", detail);
     }
 
     // -- telemetry-consistent -----------------------------------------------
     let online = ctx.engine.online();
-    let queued_now = ctx
-        .engine
-        .containers()
-        .iter()
-        .filter(|c| matches!(c.state, ContainerState::Queued))
-        .count();
+    let queued_now = telemetry_queued_indexed(ctx.engine);
     if queued_now != ctx.report.queued {
         fail(
             "telemetry-consistent",
@@ -371,33 +593,53 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
         }
     }
 
-    // -- payload-corruption-handled -----------------------------------------
-    // Audits the engine's own command ledger: every task a corruption
-    // command reported as affected must be failed by now — a "swallowed"
-    // corruption (missing checksum) leaves it active or lets it complete,
-    // and keeps this firing every interval until fixed.
-    for rec in ctx.engine.ledger() {
+    // -- incremental ledger absorption --------------------------------------
+    // One pass over the records appended since the previous check feeds
+    // BOTH ledger-audit oracles: the replay surface folds every new
+    // command (the exact fold `FaultSurface::replay` performs from
+    // scratch), and corruption records enqueue their affected tasks. The
+    // cursor makes each of these O(new records) instead of O(ledger).
+    let ledger = ctx.engine.ledger();
+    if ctx.state.replayed.is_none() {
+        ctx.state.replayed = Some(FaultSurface::baseline(ctx.engine.workers()));
+    }
+    let replayed = ctx.state.replayed.as_mut().unwrap();
+    for rec in &ledger[ctx.state.ledger_cursor..] {
+        replayed.absorb(&rec.cmd);
         let corrupting = matches!(
             rec.cmd,
             EngineCmd::CorruptPayload { .. } | EngineCmd::CorruptPayloadSwallowed { .. }
         );
-        if !corrupting {
-            continue;
-        }
-        let Effect::Affected { tasks } = &rec.effect else {
-            continue;
-        };
-        for &id in tasks {
-            if !ctx.engine.task_failed(id) {
-                fail(
-                    "payload-corruption-handled",
-                    format!(
-                        "task {id}: payload corrupted at interval {} but the task is not failed",
-                        rec.interval
-                    ),
-                );
+        if corrupting {
+            if let Effect::Affected { tasks } = &rec.effect {
+                for &id in tasks {
+                    ctx.state.corrupted_pending.push((id, rec.interval));
+                }
             }
         }
+    }
+    ctx.state.ledger_cursor = ledger.len();
+
+    // -- payload-corruption-handled -----------------------------------------
+    // Audits the engine's own command ledger: every task a corruption
+    // command reported as affected must be failed by now — a "swallowed"
+    // corruption (missing checksum) leaves it active or lets it complete,
+    // and keeps this firing every interval until fixed. Failed tasks leave
+    // the pending list for good (tasks never un-fail), so the surviving
+    // entries — still in ledger order — are exactly what the full ledger
+    // walk would flag.
+    let mut corruption_details = Vec::new();
+    let engine = ctx.engine;
+    ctx.state.corrupted_pending.retain(|&(id, at)| {
+        if engine.task_failed(id) {
+            false
+        } else {
+            corruption_details.push(corruption_detail(id, at));
+            true
+        }
+    });
+    for detail in &corruption_details {
+        fail("payload-corruption-handled", detail.clone());
     }
 
     // -- completion-unique --------------------------------------------------
@@ -408,7 +650,7 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
                 format!("completion for unknown task {}", task.task_id),
             );
         }
-        if !ctx.seen_completed.insert(task.task_id) {
+        if !ctx.state.note_completed(task.task_id) {
             fail(
                 "completion-unique",
                 format!("task {} completed twice", task.task_id),
@@ -418,32 +660,86 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
 
     // -- ledger-replay-consistent -------------------------------------------
     // The command bus is the ONLY mutation path for the fault surface, so
-    // a fresh replay of the engine's own ledger (churn toggles included —
-    // they are bus-routed) must land on exactly the live surface. A
-    // command that mutated state without recording it, or recorded an
-    // effect it did not apply, diverges here. Float fields compare exactly:
-    // replay mirrors the engine's own clamp arithmetic.
-    let replayed = FaultSurface::replay(ctx.engine.workers(), ctx.engine.ledger());
-    let live = ctx.engine.fault_surface();
-    if replayed != live {
-        let diff = (0..ctx.engine.workers())
-            .find_map(|w| {
-                let fields = [
-                    ("online", replayed.online[w] != live.online[w]),
-                    ("mips", replayed.mips_factor[w] != live.mips_factor[w]),
-                    ("ram", replayed.ram_factor[w] != live.ram_factor[w]),
-                    ("skew", replayed.clock_skew_s[w] != live.clock_skew_s[w]),
-                ];
-                fields.iter().find(|(_, d)| *d).map(|(name, _)| format!("worker {w}: {name}"))
-            })
-            .unwrap_or_else(|| "churn rate".into());
-        fail(
-            "ledger-replay-consistent",
-            format!(
-                "replaying {} ledger commands does not reproduce the fault surface ({diff})",
-                ctx.engine.ledger().len()
+    // the incrementally maintained replay (the same absorb fold a fresh
+    // `FaultSurface::replay` performs over the whole ledger) must land on
+    // exactly the live surface. A command that mutated state without
+    // recording it, or recorded an effect it did not apply, diverges here.
+    // Float fields compare exactly: replay mirrors the engine's own clamp
+    // arithmetic.
+    if let Some(detail) =
+        surface_divergence_detail(ctx.engine, ctx.state.replayed.as_ref().unwrap())
+    {
+        fail("ledger-replay-consistent", detail);
+    }
+
+    // -- paranoid: full-scan twins vs the indexed verdicts --------------------
+    // Re-derives every migrated verdict from the pre-migration full scans
+    // and hard-fails on ANY difference — including a full scan catching
+    // something the hot path missed (for task-conservation the full twin
+    // is deliberately broader; see its doc).
+    if ctx.paranoid {
+        let eng = ctx.engine;
+        let twins: [(&'static str, Vec<String>, Vec<String>); 4] = [
+            ("chain-precedence", chain_precedence_full(eng), chain_precedence_indexed(eng)),
+            (
+                "crashed-workers-idle",
+                crashed_workers_idle_full(eng),
+                crashed_workers_idle_indexed(eng),
             ),
-        );
+            (
+                "allocation-capacity",
+                allocation_capacity_full(eng),
+                allocation_capacity_indexed(eng),
+            ),
+            ("payload-corruption-handled", payload_corruption_full(eng), corruption_details),
+        ];
+        for (oracle, full, indexed) in twins {
+            if full != indexed {
+                fail(
+                    "paranoid-divergence",
+                    format!(
+                        "{oracle}: full scan found {} detail(s), indexed derivation {} \
+                         (first full: {:?}, first indexed: {:?})",
+                        full.len(),
+                        indexed.len(),
+                        full.first(),
+                        indexed.first()
+                    ),
+                );
+            }
+        }
+        // task-conservation's full twin iterates a HashSet — order-free
+        // compare; any verdict the full scan has that the sweep lacks
+        // (or vice versa) is a divergence
+        let mut full = task_conservation_full(eng);
+        full.sort();
+        let mut indexed = task_conservation_indexed(eng);
+        indexed.sort();
+        if full != indexed {
+            fail(
+                "paranoid-divergence",
+                format!(
+                    "task-conservation: full scan found {} detail(s), indexed sweep {}",
+                    full.len(),
+                    indexed.len()
+                ),
+            );
+        }
+        let (q_full, q_indexed) = (telemetry_queued_full(eng), telemetry_queued_indexed(eng));
+        if q_full != q_indexed {
+            fail(
+                "paranoid-divergence",
+                format!("telemetry queued count: full scan {q_full}, indexed {q_indexed}"),
+            );
+        }
+        let from_scratch = FaultSurface::replay(eng.workers(), eng.ledger());
+        if Some(&from_scratch) != ctx.state.replayed.as_ref() {
+            fail(
+                "paranoid-divergence",
+                "ledger replay: from-scratch surface differs from the incremental fold"
+                    .to_string(),
+            );
+        }
     }
 
     out
@@ -452,10 +748,12 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chaos::plan::{FaultPlan, Profile};
     use crate::cluster::build_fleet;
     use crate::config::{ClusterConfig, SimConfig};
     use crate::sim::Engine;
     use crate::splits::{App, SplitDecision};
+    use crate::util::rng::Rng;
     use crate::workload::Task;
 
     fn engine() -> Engine {
@@ -472,15 +770,16 @@ mod tests {
         e.admit(task(0), SplitDecision::Compressed);
         e.apply_placement(&[(0, 0)]);
         let report = e.step_interval();
-        let mut seen = HashSet::new();
+        let mut state = OracleState::new();
         let mut ctx = OracleCtx {
             engine: &e,
             report: &report,
             admitted: 1,
             mab_decisions: None,
-            seen_completed: &mut seen,
+            state: &mut state,
             expected_offline: None,
             expected_skew: None,
+            paranoid: true,
         };
         let v = check_interval(&mut ctx);
         assert!(v.is_empty(), "unexpected violations: {v:?}");
@@ -491,15 +790,16 @@ mod tests {
         let mut e = engine();
         e.admit(task(0), SplitDecision::Compressed);
         let report = e.step_interval();
-        let mut seen = HashSet::new();
+        let mut state = OracleState::new();
         let mut ctx = OracleCtx {
             engine: &e,
             report: &report,
             admitted: 5, // broker claims more than the engine holds
             mab_decisions: None,
-            seen_completed: &mut seen,
+            state: &mut state,
             expected_offline: None,
             expected_skew: None,
+            paranoid: false,
         };
         let v = check_interval(&mut ctx);
         assert!(v.iter().any(|v| v.oracle == "task-conservation"), "{v:?}");
@@ -514,18 +814,22 @@ mod tests {
         // the deliberate bug hook: offline without evicting
         e.apply(EngineCmd::ForceOfflineNoEvict { worker: 0 });
         let report = e.step_interval();
-        let mut seen = HashSet::new();
+        let mut state = OracleState::new();
         let mut ctx = OracleCtx {
             engine: &e,
             report: &report,
             admitted: 1,
             mab_decisions: None,
-            seen_completed: &mut seen,
+            state: &mut state,
             expected_offline: None,
             expected_skew: None,
+            paranoid: true,
         };
         let v = check_interval(&mut ctx);
         assert!(v.iter().any(|v| v.oracle == "crashed-workers-idle"), "{v:?}");
+        // the sabotaged engine diverges scan-vs-index nowhere: both twins
+        // see the same wrongness
+        assert!(v.iter().all(|v| v.oracle != "paranoid-divergence"), "{v:?}");
     }
 
     #[test]
@@ -542,16 +846,17 @@ mod tests {
             }
         }
         let report = report.expect("compressed task completes");
-        let mut seen = HashSet::new();
-        seen.insert(report.completed[0].task_id); // pretend we saw it before
+        let mut state = OracleState::new();
+        state.note_completed(report.completed[0].task_id); // pretend we saw it before
         let mut ctx = OracleCtx {
             engine: &e,
             report: &report,
             admitted: 1,
             mab_decisions: None,
-            seen_completed: &mut seen,
+            state: &mut state,
             expected_offline: None,
             expected_skew: None,
+            paranoid: false,
         };
         let v = check_interval(&mut ctx);
         assert!(v.iter().any(|v| v.oracle == "completion-unique"), "{v:?}");
@@ -562,7 +867,7 @@ mod tests {
         let mut e = engine();
         e.apply(EngineCmd::Crash { worker: 1 });
         let report = e.step_interval();
-        let mut seen = HashSet::new();
+        let mut state = OracleState::new();
         // plan ledger says workers 1 AND 2 should be down — a rack failure
         // that only took one member offline
         let mut expected = vec![false; e.workers()];
@@ -573,9 +878,10 @@ mod tests {
             report: &report,
             admitted: 0,
             mab_decisions: None,
-            seen_completed: &mut seen,
+            state: &mut state,
             expected_offline: Some(&expected),
             expected_skew: None,
+            paranoid: false,
         };
         let v = check_interval(&mut ctx);
         assert!(v.iter().any(|v| v.oracle == "offline-matches-plan"), "{v:?}");
@@ -593,29 +899,31 @@ mod tests {
         let mut expected = vec![0.0; e.workers()];
         expected[3] = 42.0;
         {
-            let mut seen = HashSet::new();
+            let mut state = OracleState::new();
             let mut ctx = OracleCtx {
                 engine: &e,
                 report: &report,
                 admitted: 0,
                 mab_decisions: None,
-                seen_completed: &mut seen,
+                state: &mut state,
                 expected_offline: None,
                 expected_skew: Some(&expected),
+                paranoid: false,
             };
             let v = check_interval(&mut ctx);
             assert!(v.is_empty(), "matching skew must stay green: {v:?}");
         }
         expected[3] = 0.0; // plan says the episode ended; engine still skewed
-        let mut seen = HashSet::new();
+        let mut state = OracleState::new();
         let mut ctx = OracleCtx {
             engine: &e,
             report: &report,
             admitted: 0,
             mab_decisions: None,
-            seen_completed: &mut seen,
+            state: &mut state,
             expected_offline: None,
             expected_skew: Some(&expected),
+            paranoid: false,
         };
         let v = check_interval(&mut ctx);
         assert!(v.iter().any(|v| v.oracle == "clock-skew-applied"), "{v:?}");
@@ -633,15 +941,16 @@ mod tests {
                 e.apply(EngineCmd::CorruptPayload { worker: 0 });
             }
             let report = e.step_interval();
-            let mut seen = HashSet::new();
+            let mut state = OracleState::new();
             let mut ctx = OracleCtx {
                 engine: &e,
                 report: &report,
                 admitted: 1,
                 mab_decisions: None,
-                seen_completed: &mut seen,
+                state: &mut state,
                 expected_offline: None,
                 expected_skew: None,
+                paranoid: true,
             };
             check_interval(&mut ctx)
         };
@@ -652,6 +961,42 @@ mod tests {
             v.iter().any(|v| v.oracle == "payload-corruption-handled"),
             "swallowed corruption must be caught: {v:?}"
         );
+        // the incremental pending sweep and the full ledger walk flag the
+        // same tasks — a swallowed corruption produces no divergence
+        assert!(v.iter().all(|v| v.oracle != "paranoid-divergence"), "{v:?}");
+    }
+
+    #[test]
+    fn corruption_pending_persists_across_intervals_like_the_full_walk() {
+        // the incremental oracle must keep firing on later intervals (the
+        // full walk re-derived this each time; the pending list carries it)
+        let mut e = engine();
+        e.admit(task(0), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 0)]);
+        e.apply(EngineCmd::CorruptPayloadSwallowed { worker: 0 });
+        let mut state = OracleState::new();
+        for round in 0..3 {
+            let report = e.step_interval();
+            let mut ctx = OracleCtx {
+                engine: &e,
+                report: &report,
+                admitted: 1,
+                mab_decisions: None,
+                state: &mut state,
+                expected_offline: None,
+                expected_skew: None,
+                paranoid: true,
+            };
+            let v = check_interval(&mut ctx);
+            assert!(
+                v.iter().any(|v| v.oracle == "payload-corruption-handled"),
+                "round {round}: swallowed corruption must keep firing: {v:?}"
+            );
+            assert!(
+                v.iter().all(|v| v.oracle != "paranoid-divergence"),
+                "round {round}: {v:?}"
+            );
+        }
     }
 
     #[test]
@@ -661,15 +1006,16 @@ mod tests {
         e.apply(EngineCmd::SetMipsFactor { worker: 2, factor: 0.4 });
         e.apply(EngineCmd::SetClockSkew { worker: 3, skew_s: 42.0 });
         let report = e.step_interval();
-        let mut seen = HashSet::new();
+        let mut state = OracleState::new();
         let mut ctx = OracleCtx {
             engine: &e,
             report: &report,
             admitted: 0,
             mab_decisions: None,
-            seen_completed: &mut seen,
+            state: &mut state,
             expected_offline: None,
             expected_skew: None,
+            paranoid: true,
         };
         let v = check_interval(&mut ctx);
         assert!(v.is_empty(), "bus-routed mutations must replay cleanly: {v:?}");
@@ -685,21 +1031,28 @@ mod tests {
         for o in ORACLES {
             assert_ne!(describe(o), "");
         }
+        // the paranoid cross-check label is describable but is NOT one of
+        // the 13 invariants (it names a twin divergence, not an engine bug)
+        assert!(!ORACLES.contains(&"paranoid-divergence"));
+        assert_ne!(describe("paranoid-divergence"), "unknown invariant");
     }
 
     /// The scan-vs-index twins agree — on a healthy engine (both empty)
     /// and on a sabotaged one (both flag the same containers, in the same
-    /// order). Groundwork for the ROADMAP's oracle migration; the
-    /// per-interval sweep lives in tests/properties.rs.
+    /// order). This is the migration's evidence base: a seeded sweep of
+    /// chaos-heavy random plans checks every migrated twin pair after
+    /// every interval, a `ForceOfflineNoEvict` leg forces a non-empty
+    /// verdict, and a sabotaged out-of-order terminal transition exercises
+    /// the chain-precedence latch's post-hoc memory.
     #[test]
     fn indexed_oracle_derivations_match_the_full_scans() {
+        // deterministic smoke leg (the original scenario)
         let mut e = engine();
         e.admit(task(0), SplitDecision::Layer);
         e.admit(task(1), SplitDecision::Compressed);
         e.apply_placement(&[(0, 0), (1, 1), (2, 2), (3, 3)]);
         e.step_interval();
-        assert_eq!(chain_precedence_full(&e), chain_precedence_indexed(&e));
-        assert_eq!(crashed_workers_idle_full(&e), crashed_workers_idle_indexed(&e));
+        assert_twins_agree(&e, "smoke");
         assert!(crashed_workers_idle_full(&e).is_empty());
         // force the bug hook: containers keep working on a dead machine
         for w in 0..e.workers() {
@@ -709,6 +1062,139 @@ mod tests {
         let full = crashed_workers_idle_full(&e);
         assert!(!full.is_empty(), "offline-no-evict must leave offenders");
         assert_eq!(full, crashed_workers_idle_indexed(&e));
+        assert_twins_agree(&e, "smoke-offline");
+
+        // property leg: random chaos-heavy plans, twins checked after
+        // every interval
+        for seed in 0..4u64 {
+            let mut rng = Rng::new(0xD1CE ^ seed);
+            let mut e = engine();
+            let intervals = 10usize;
+            let plan =
+                FaultPlan::generate(rng.next_u64(), intervals, Profile::Heavy, e.workers());
+            let mut next_id = 0u64;
+            for t in 0..intervals {
+                for ev in plan.events_at(t) {
+                    for cmd in ev.event.compile(e.workers()) {
+                        e.apply(cmd);
+                    }
+                }
+                for _ in 0..1 + rng.below(3) {
+                    e.admit(task(next_id), SplitDecision::Layer);
+                    next_id += 1;
+                }
+                let mut assigns: Vec<(usize, usize)> = Vec::new();
+                for c in e.placeable() {
+                    if rng.chance(0.8) {
+                        assigns.push((c, rng.below(10) as usize));
+                    }
+                }
+                e.apply_placement(&assigns);
+                e.step_interval();
+                assert_twins_agree(&e, &format!("seed {seed} interval {t}"));
+            }
+        }
+    }
+
+    /// The chain-precedence latch: a container driven terminal *ahead of
+    /// an unfinished predecessor* (a transition no correct engine
+    /// performs — forced through the test-only sabotage hook) must keep
+    /// failing the indexed sweep exactly as long as the full scan does,
+    /// including after it leaves the active set, and must stop when the
+    /// predecessor eventually finishes.
+    #[test]
+    fn terminal_transition_latch_preserves_post_hoc_memory() {
+        let mut e = engine();
+        e.admit(task(0), SplitDecision::Layer); // chain of fragments
+        let succ = e
+            .containers()
+            .iter()
+            .find(|c| c.prev.is_some())
+            .map(|c| c.id)
+            .expect("layer split admits a chain successor");
+        let prev = e.containers()[succ].prev.unwrap();
+        assert!(!e.containers()[prev].is_done(), "predecessor starts unfinished");
+        // sanity: nothing latched, twins agree and are quiet
+        assert!(e.chain_suspects().is_empty());
         assert_eq!(chain_precedence_full(&e), chain_precedence_indexed(&e));
+
+        e.sabotage_out_of_order_terminal(succ);
+        assert_eq!(e.chain_suspects(), &[succ], "latch fires at the transition");
+        let full = chain_precedence_full(&e);
+        assert!(
+            full.iter().any(|d| d.contains(&format!("container {succ} progressed"))),
+            "full scan must flag the terminal offender: {full:?}"
+        );
+        assert_eq!(full, chain_precedence_indexed(&e), "latch keeps the twins exact");
+        e.verify_indices().expect("latch is index-consistent");
+
+        // the memory is post-hoc: the offender stays flagged on later
+        // intervals even though it is no longer active
+        for _ in 0..3 {
+            e.step_interval();
+            let full = chain_precedence_full(&e);
+            assert!(
+                full.iter().any(|d| d.contains(&format!("container {succ} "))),
+                "terminal offender must keep failing the full scan: {full:?}"
+            );
+            assert_eq!(full, chain_precedence_indexed(&e));
+        }
+        // place + run the chain until the predecessor finishes: both
+        // derivations must go quiet about the (now-ordered) offender in
+        // lockstep — the latch entry stays but produces no details
+        e.apply_placement(&[(0, 0), (1, 1), (2, 2), (3, 3)]);
+        for _ in 0..60 {
+            e.step_interval();
+            assert_eq!(chain_precedence_full(&e), chain_precedence_indexed(&e));
+            if e.containers()[prev].is_done() {
+                break;
+            }
+        }
+        if e.containers()[prev].is_done() {
+            assert!(
+                !chain_precedence_full(&e)
+                    .iter()
+                    .any(|d| d.contains(&format!("container {succ} progressed"))),
+                "a finished predecessor un-flags the offender in BOTH twins"
+            );
+            assert_eq!(e.chain_suspects(), &[succ], "stale latch entries are kept, inert");
+        }
+    }
+
+    /// Every migrated twin pair, compared after an interval step.
+    fn assert_twins_agree(e: &Engine, tag: &str) {
+        assert_eq!(
+            chain_precedence_full(e),
+            chain_precedence_indexed(e),
+            "chain-precedence diverged at {tag}"
+        );
+        assert_eq!(
+            crashed_workers_idle_full(e),
+            crashed_workers_idle_indexed(e),
+            "crashed-workers-idle diverged at {tag}"
+        );
+        assert_eq!(
+            allocation_capacity_full(e),
+            allocation_capacity_indexed(e),
+            "allocation-capacity diverged at {tag}"
+        );
+        let mut tc_full = task_conservation_full(e);
+        tc_full.sort();
+        let mut tc_idx = task_conservation_indexed(e);
+        tc_idx.sort();
+        assert_eq!(tc_full, tc_idx, "task-conservation diverged at {tag}");
+        assert_eq!(
+            telemetry_queued_full(e),
+            telemetry_queued_indexed(e),
+            "telemetry queued count diverged at {tag}"
+        );
+        assert_eq!(
+            ledger_replay_full(e),
+            {
+                let replayed = FaultSurface::replay(e.workers(), e.ledger());
+                surface_divergence_detail(e, &replayed).into_iter().collect::<Vec<_>>()
+            },
+            "ledger-replay twin must be self-consistent at {tag}"
+        );
     }
 }

@@ -302,11 +302,23 @@ pub struct SimConfig {
     /// byte-identical trajectories (1 = the serial walk, no threads
     /// spawned). Clamped to the worker count at run time.
     pub shards: usize,
+    /// Per-phase interval profiling (`util::phase_timer`): when true the
+    /// engine/broker accumulate wall-ms per phase (cpu/network/decision/
+    /// oracle/traffic) for the bench breakdown. Timing reads never feed
+    /// back into simulation state, so this knob cannot change any
+    /// trajectory; off by default and zero-cost when off.
+    pub profile_phases: bool,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { intervals: 100, interval_seconds: 300.0, sub_steps: 10, shards: 1 }
+        SimConfig {
+            intervals: 100,
+            interval_seconds: 300.0,
+            sub_steps: 10,
+            shards: 1,
+            profile_phases: false,
+        }
     }
 }
 
@@ -436,15 +448,20 @@ impl ExperimentConfig {
                     ("finetune_steps", Value::Num(self.placement.finetune_steps as f64)),
                 ]),
             ),
-            (
-                "sim",
-                Value::obj(vec![
+            ("sim", {
+                let mut fields = vec![
                     ("intervals", Value::Num(self.sim.intervals as f64)),
                     ("interval_seconds", Value::Num(self.sim.interval_seconds)),
                     ("sub_steps", Value::Num(self.sim.sub_steps as f64)),
                     ("shards", Value::Num(self.sim.shards as f64)),
-                ]),
-            ),
+                ];
+                // emitted only when set so default configs serialize
+                // byte-identically to the pre-profiler schema
+                if self.sim.profile_phases {
+                    fields.push(("profile_phases", Value::Bool(true)));
+                }
+                Value::obj(fields)
+            }),
             ("traffic", {
                 let mut fields =
                     vec![("shape", Value::Str(self.traffic.shape.name().into()))];
@@ -588,6 +605,11 @@ impl ExperimentConfig {
             }
             if let Some(x) = s.get("shards") {
                 cfg.sim.shards = x.as_usize()?.max(1);
+            }
+            // absent → false: baselines and configs recorded before the
+            // profiler existed parse unchanged
+            if let Some(x) = s.get("profile_phases") {
+                cfg.sim.profile_phases = x.as_bool()?;
             }
         }
         if let Some(t) = v.get("traffic") {
@@ -753,6 +775,23 @@ mod tests {
         for pair in ratios.windows(2) {
             assert!(pair[1] < pair[0], "λ/n must shrink up the tiers: {ratios:?}");
         }
+    }
+
+    #[test]
+    fn profile_phases_roundtrips_and_stays_out_of_default_json() {
+        let d = ExperimentConfig::default();
+        assert!(!d.sim.profile_phases, "profiler off by default");
+        // the default config serializes byte-identically to the
+        // pre-profiler schema: no profile_phases key at all
+        let sim = d.to_json();
+        let sim = sim.get("sim").unwrap();
+        assert!(sim.get("profile_phases").is_none());
+        // absent key parses back to false; explicit true round-trips
+        assert!(!ExperimentConfig::from_json(&d.to_json()).unwrap().sim.profile_phases);
+        let mut c = ExperimentConfig::default();
+        c.sim.profile_phases = true;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert!(c2.sim.profile_phases);
     }
 
     #[test]

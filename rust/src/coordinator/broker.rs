@@ -214,6 +214,11 @@ impl<'rt> Broker<'rt> {
     /// report so callers (the chaos harness) can audit what happened.
     pub fn step_report(&mut self) -> (f64, crate::sim::IntervalReport) {
         let t0 = Instant::now();
+        // phase profiling (inert unless cfg.sim.profile_phases): the
+        // broker charges its traffic and decision phases to the engine's
+        // timer so one breakdown covers the whole interval. Timing reads
+        // never feed back into scheduling state.
+        let tok = self.engine.phases().start();
 
         // 0. autoscaling: react to the previous interval's backlog against
         // the live availability surface. At most one park/unpark per
@@ -246,6 +251,8 @@ impl<'rt> Broker<'rt> {
                 tasks
             }
         };
+        self.engine.phases_mut().stop(crate::util::phase_timer::Phase::Traffic, tok);
+        let tok = self.engine.phases().start();
         let mut decisions = Vec::with_capacity(tasks.len());
         for task in tasks {
             self.offered += 1;
@@ -279,6 +286,7 @@ impl<'rt> Broker<'rt> {
         drop(input);
         self.last_snapshots = snapshots;
         self.engine.apply_placement(&assignment);
+        self.engine.phases_mut().stop(crate::util::phase_timer::Phase::Decision, tok);
         let sched_s = t0.elapsed().as_secs_f64();
 
         // 3. simulate the interval

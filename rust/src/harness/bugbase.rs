@@ -132,6 +132,9 @@ impl BugRecord {
         let opts = ChaosOptions {
             bug: self.bug,
             task_timeout_intervals: self.task_timeout_intervals,
+            // replay under the exact oracle regime the artifact was
+            // recorded with — paranoid twin-auditing stays off
+            paranoid: false,
         };
         let out = chaos::run_chaos(&cfg, &self.plan, &opts, None)
             .map_err(|e| format!("{}: replay failed to run: {e:#}", self.id))?;

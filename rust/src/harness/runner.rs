@@ -42,8 +42,10 @@ pub struct MatrixOptions {
     /// Golden store; None disables gating entirely.
     pub goldens: Option<GoldenStore>,
     /// Chaos knobs threaded into every cell (bug injection, starvation
-    /// guard) — `--inject-bug` works through the matrix too, which is how
-    /// the golden/bug-base machinery itself gets exercised.
+    /// guard, `--paranoid` scan-vs-index oracle auditing) — `--inject-bug`
+    /// works through the matrix too, which is how the golden/bug-base
+    /// machinery itself gets exercised, and `--paranoid` re-runs every
+    /// indexed oracle's full-scan twin in every cell.
     pub chaos: ChaosOptions,
 }
 

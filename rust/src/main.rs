@@ -8,11 +8,15 @@
 //!   compare [--intervals N]        all 9 policies, Table-4 style
 //!   chaos [--seed S] [--intervals N] [--profile light|heavy] [--policy P]
 //!         [--differential P2] [--plan FILE] [--inject-bug KIND]
-//!         [--task-timeout K]      deterministic fault injection + oracles
+//!         [--task-timeout K] [--paranoid]
+//!                                  deterministic fault injection + oracles
+//!                                  (--paranoid re-runs every indexed
+//!                                  oracle's full-scan twin each interval
+//!                                  and flags any divergence)
 //!   matrix [--filter smoke|full|SUBSTR] [--jobs N] [--seeds K]
 //!          [--intervals N] [--update-goldens] [--fail-fast] [--list]
 //!          [--goldens DIR] [--bugbase DIR] [--inject-bug KIND]
-//!          [--shards N]
+//!          [--shards N] [--paranoid]
 //!                                  policy × scenario × seed cross product
 //!                                  plus differential policy-pair cells
 //!                                  (ids like mab-daso~mc/clean/s1; filter
@@ -202,6 +206,7 @@ fn chaos_options_from_flags(
             .map(|s| s.parse())
             .transpose()?
             .unwrap_or(40),
+        paranoid: flags.contains_key("paranoid"),
     })
 }
 
@@ -554,6 +559,28 @@ fn cmd_bench(flags: std::collections::HashMap<String, String>) -> Result<()> {
             r.admitted.to_string(),
             r.completed.to_string(),
             r.failed.to_string(),
+        ]);
+    }
+    t.print();
+
+    // where the wall went: per-phase breakdown (informational — written
+    // to the JSON record but never gated; oracle is 0 here because the
+    // bench runs no oracle sweeps)
+    let mut t = Table::new(
+        "Phase breakdown (wall ms)",
+        &["tier", "cpu", "network", "decision", "traffic", "oracle", "untimed"],
+    );
+    for r in &results {
+        let p = &r.phases;
+        let timed = p.cpu_ms + p.network_ms + p.decision_ms + p.traffic_ms + p.oracle_ms;
+        t.row(vec![
+            r.tier.clone(),
+            format!("{:.0}", p.cpu_ms),
+            format!("{:.0}", p.network_ms),
+            format!("{:.0}", p.decision_ms),
+            format!("{:.0}", p.traffic_ms),
+            format!("{:.0}", p.oracle_ms),
+            format!("{:.0}", (r.wall_ms - timed).max(0.0)),
         ]);
     }
     t.print();

@@ -36,14 +36,15 @@ use super::state::{
 /// shard results are disjoint — the join is concatenation in shard order
 /// (= worker-ascending, the serial walk's order), and every float that
 /// crosses a shard boundary goes through the order-free
-/// [`crate::util::accum::Accum`].
-struct CpuShard {
+/// [`crate::util::accum::Accum`]. `pub(super)` so the persistent lane
+/// pool ([`super::pool`]) can carry one per reply.
+pub(super) struct CpuShard {
     /// `(worker, busy-seconds increment)` for each worker that ran work.
-    busy: Vec<(usize, f64)>,
+    pub(super) busy: Vec<(usize, f64)>,
     /// `(container, mi increment)` for every Running container visited.
-    exec: Vec<(ContainerId, f64)>,
+    pub(super) exec: Vec<(ContainerId, f64)>,
     /// Containers whose increment finishes them this sub-step.
-    done: Vec<ContainerId>,
+    pub(super) done: Vec<ContainerId>,
 }
 
 impl Engine {
@@ -276,6 +277,7 @@ impl Engine {
     /// shard count.
     fn sub_step(&mut self, dt: f64) {
         let t_end = self.now_s + dt;
+        let tok = self.phases.start();
 
         // 1. transfers & migrations that finish within this sub-step.
         //    No transition in this phase is terminal or changes residency
@@ -317,27 +319,23 @@ impl Engine {
         //    to exactly one worker), so it fans out across contiguous
         //    worker shards ([`Engine::cpu_shard`]) and the deltas are
         //    applied serially in shard order — byte-identical to the
-        //    single-shard walk at any shard count.
+        //    single-shard walk at any shard count. The fan-out goes to the
+        //    engine-owned persistent lane pool ([`super::pool`]): threads
+        //    spawn on the first sharded sub-step of the run and are fed
+        //    ranges over channels thereafter, instead of a scoped
+        //    spawn/join cycle per sub-step.
+        self.phases.stop(crate::util::phase_timer::Phase::Network, tok);
+        let tok = self.phases.start();
         let n = self.cluster.len();
         let shards = self.cfg.shards.max(1).min(n.max(1));
         let results: Vec<CpuShard> = if shards <= 1 {
             vec![self.cpu_shard(0..n, dt)]
         } else {
-            let eng: &Engine = self;
+            self.ensure_pool(shards);
             let chunk = (n + shards - 1) / shards;
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..shards)
-                    .map(|s| {
-                        let lo = (s * chunk).min(n);
-                        let hi = ((s + 1) * chunk).min(n);
-                        scope.spawn(move || eng.cpu_shard(lo..hi, dt))
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("cpu shard panicked"))
-                    .collect()
-            })
+            let ranges =
+                (0..shards).map(|s| (s * chunk).min(n)..((s + 1) * chunk).min(n));
+            self.pool.as_ref().expect("pool just ensured").dispatch(self, dt, ranges)
         };
         // apply in shard-index order = worker-ascending, container-id
         // ascending within each worker — the serial walk's exact order
@@ -355,6 +353,8 @@ impl Engine {
                 self.set_container(cid, ContainerState::Done { at_s: t_end }, worker);
             }
         }
+        self.phases.stop(crate::util::phase_timer::Phase::Cpu, tok);
+        let tok = self.phases.start();
 
         // 3. unblock chain successors of containers that just finished.
         //    Pre-placed successors (worker reserved at placement time)
@@ -390,6 +390,7 @@ impl Engine {
                 }
             }
         }
+        self.phases.stop(crate::util::phase_timer::Phase::Network, tok);
 
         self.now_s = t_end;
     }
@@ -400,8 +401,9 @@ impl Engine {
     /// reduces through the order-free accumulator, so the numbers cannot
     /// depend on how the fleet is sliced into shards; completion is
     /// detected as `mi_done + inc >= mi_total`, exactly the value the
-    /// serial `+=` would have compared.
-    fn cpu_shard(&self, workers: std::ops::Range<usize>, dt: f64) -> CpuShard {
+    /// serial `+=` would have compared. `pub(super)` so the persistent
+    /// lane pool can run it on its worker threads.
+    pub(super) fn cpu_shard(&self, workers: std::ops::Range<usize>, dt: f64) -> CpuShard {
         let mut out = CpuShard { busy: Vec::new(), exec: Vec::new(), done: Vec::new() };
         let mut running: Vec<ContainerId> = Vec::new();
         for w in workers {
@@ -781,6 +783,27 @@ mod tests {
         for shards in [2, 3, 8, 64] {
             assert_eq!(run(shards), serial, "shards={shards} diverged from serial");
         }
+    }
+
+    #[test]
+    fn shard_pool_threads_spawn_once_per_run() {
+        let cluster = build_fleet(&ClusterConfig::small());
+        let cfg = SimConfig { intervals: 10, shards: 4, ..Default::default() };
+        let mut e = Engine::new(cluster, cfg, 1);
+        assert!(e.pool.is_none(), "no lanes before the first sharded sub-step");
+        e.admit(task(1, App::Mnist, 32_000), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 0)]);
+        e.step_interval();
+        let ids = e.pool.as_ref().expect("sharded run builds the pool").thread_ids();
+        assert_eq!(ids.len(), 4);
+        for _ in 0..5 {
+            e.step_interval();
+        }
+        assert_eq!(
+            e.pool.as_ref().unwrap().thread_ids(),
+            ids,
+            "lanes must be reused across intervals, never respawned"
+        );
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod container;
 pub mod faults;
 pub mod lifecycle;
 pub mod network;
+mod pool;
 pub mod state;
 
 pub use container::{Container, ContainerId, ContainerState};

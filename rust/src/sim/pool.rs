@@ -1,0 +1,180 @@
+//! Persistent CPU-shard worker pool.
+//!
+//! The sharded CPU phase used to fan out through `std::thread::scope`,
+//! paying a full spawn/join cycle per **sub-step** — `sub_steps ×
+//! intervals` spawns per run (10 × intervals by default), pure overhead
+//! that grows with the horizon while the work per spawn shrinks with the
+//! fleet's idle fraction. This pool spawns each lane's OS thread once,
+//! the first time the engine integrates a sharded sub-step, and feeds it
+//! work orders over a channel for the rest of the run: spawn cost drops
+//! from per-sub-step to per-run, and the shard results are byte-identical
+//! because the work function ([`Engine::cpu_shard`]) and the
+//! apply-in-shard-order join are untouched.
+//!
+//! # Safety
+//!
+//! Lanes receive a raw `*const Engine` per job instead of a borrowed
+//! reference, because a long-lived thread cannot hold a borrow of an
+//! engine that lives on the caller's stack. The pointer is sound to
+//! dereference under the dispatch protocol:
+//!
+//! * [`ShardPool::dispatch`] takes `&Engine`, sends every job, and does
+//!   not return until it has received one reply per job — so the pointer
+//!   is only ever dereferenced while the caller's borrow is live;
+//! * the work function is `Engine::cpu_shard(&self, ..)` — read-only, no
+//!   interior mutability on anything it touches (containers, residency
+//!   indexes, cluster specs, fault factors, config are all plain data);
+//! * lanes never touch `Engine::pool` itself, so the one field that is
+//!   not `Sync` (channel endpoints) is never shared.
+//!
+//! Dropping the pool closes the job channels, which ends each lane's
+//! receive loop; the drop then joins the threads, so no lane outlives the
+//! engine that owns the pool.
+
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::lifecycle::CpuShard;
+use super::state::Engine;
+
+/// One CPU-phase work order: integrate the contiguous worker range
+/// against the engine snapshot behind `engine`.
+struct Job {
+    engine: EnginePtr,
+    workers: Range<usize>,
+    dt: f64,
+}
+
+/// Send-wrapper for the engine pointer; see the module-level safety
+/// argument for why moving it across threads is sound.
+struct EnginePtr(*const Engine);
+unsafe impl Send for EnginePtr {}
+
+/// One long-lived worker thread plus its job/result channels.
+struct Lane {
+    /// `Option` so `Drop` can hang up the job channel before joining.
+    tx: Option<Sender<Job>>,
+    rx: Receiver<CpuShard>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Lane {
+    fn spawn(idx: usize) -> Lane {
+        let (job_tx, job_rx) = channel::<Job>();
+        let (res_tx, res_rx) = channel::<CpuShard>();
+        let handle = std::thread::Builder::new()
+            .name(format!("cpu-shard-{idx}"))
+            .spawn(move || {
+                while let Ok(job) = job_rx.recv() {
+                    // SAFETY: dispatch holds `&Engine` and blocks on our
+                    // reply before returning (module doc), so the pointer
+                    // is live and the engine unmutated for the read-only
+                    // cpu_shard call.
+                    let engine = unsafe { &*job.engine.0 };
+                    let shard = engine.cpu_shard(job.workers, job.dt);
+                    if res_tx.send(shard).is_err() {
+                        break; // pool dropped mid-reply: shut down
+                    }
+                }
+            })
+            .expect("spawn cpu-shard lane");
+        Lane { tx: Some(job_tx), rx: res_rx, handle: Some(handle) }
+    }
+}
+
+impl Drop for Lane {
+    fn drop(&mut self) {
+        self.tx = None; // hang up: ends the lane's recv loop
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Engine-owned pool of persistent CPU-shard lanes, sized once from the
+/// run's shard count ([`Engine::ensure_pool`] rebuilds only if the count
+/// changes, which a fixed `SimConfig` never does — threads spawn at most
+/// once per run).
+pub(super) struct ShardPool {
+    lanes: Vec<Lane>,
+}
+
+impl ShardPool {
+    pub(super) fn new(lanes: usize) -> ShardPool {
+        ShardPool { lanes: (0..lanes).map(Lane::spawn).collect() }
+    }
+
+    pub(super) fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Test probe: the OS thread identity of every lane, in lane order —
+    /// lets tests prove lanes are reused across intervals, not respawned.
+    #[cfg(test)]
+    pub(super) fn thread_ids(&self) -> Vec<std::thread::ThreadId> {
+        self.lanes
+            .iter()
+            .map(|l| l.handle.as_ref().expect("lane alive").thread().id())
+            .collect()
+    }
+
+    /// Run one CPU phase: ship `ranges[i]` to lane `i`, then collect the
+    /// replies **in lane order** — the same shard order the scoped join
+    /// produced, so the serial delta application downstream sees an
+    /// identical sequence.
+    pub(super) fn dispatch(
+        &self,
+        engine: &Engine,
+        dt: f64,
+        ranges: impl ExactSizeIterator<Item = Range<usize>>,
+    ) -> Vec<CpuShard> {
+        let n = ranges.len();
+        assert!(n <= self.lanes.len(), "dispatch wider than the pool");
+        for (lane, workers) in self.lanes.iter().zip(ranges) {
+            let job = Job { engine: EnginePtr(engine as *const Engine), workers, dt };
+            lane.tx.as_ref().expect("lane alive").send(job).expect("lane hung up");
+        }
+        // one blocking recv per job, in lane order: this is the barrier
+        // the safety argument relies on — dispatch cannot return (and the
+        // engine borrow cannot end) before every lane has replied
+        self.lanes[..n]
+            .iter()
+            .map(|lane| lane.rx.recv().expect("lane died mid-phase"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::build_fleet;
+    use crate::config::{ClusterConfig, SimConfig};
+    use crate::sim::Engine;
+
+    #[test]
+    fn pool_spawns_joins_and_survives_reuse() {
+        let e = Engine::new(build_fleet(&ClusterConfig::small()), SimConfig::default(), 1);
+        let pool = ShardPool::new(3);
+        assert_eq!(pool.lanes(), 3);
+        let n = e.workers();
+        let chunk = (n + 2) / 3;
+        for _ in 0..5 {
+            let ranges =
+                (0..3).map(|s| (s * chunk).min(n)..((s + 1) * chunk).min(n));
+            let shards = pool.dispatch(&e, 30.0, ranges);
+            assert_eq!(shards.len(), 3);
+            // idle fleet: every shard is empty, but the protocol ran
+            assert!(shards.iter().all(|s| s.busy.is_empty() && s.exec.is_empty()));
+        }
+        drop(pool); // must hang up + join without deadlock
+    }
+
+    #[test]
+    fn narrow_dispatch_uses_a_prefix_of_lanes() {
+        let e = Engine::new(build_fleet(&ClusterConfig::small()), SimConfig::default(), 1);
+        let pool = ShardPool::new(4);
+        let shards = pool.dispatch(&e, 30.0, (0..2).map(|s| s * 5..(s + 1) * 5));
+        assert_eq!(shards.len(), 2);
+    }
+}

@@ -164,6 +164,25 @@ pub struct Engine {
     pub(super) active_tasks: BTreeSet<u64>,
     pub(super) n_completed: usize,
     pub(super) n_failed: usize,
+    /// Chain-precedence terminal-transition latch, ascending by id:
+    /// containers that reached Done/Failed *while their predecessor was
+    /// still unfinished* and had already made progress. The indexed
+    /// `chain-precedence` oracle sweeps the merge of this set with the
+    /// active list, giving it the full pool scan's post-hoc memory of
+    /// terminal offenders without ever walking the terminal pool. Entries
+    /// whose predecessor later finishes simply stop producing details
+    /// (the sweep re-checks predecessor done-ness), exactly like the full
+    /// scan — so stale entries are harmless and never pruned. On a
+    /// correct engine this stays empty.
+    pub(super) chain_suspects: Vec<ContainerId>,
+    /// Per-phase wall-clock profiler (`cfg.profile_phases`); inert and
+    /// clock-free when disabled. Timing reads never feed back into
+    /// simulation state.
+    pub(super) phases: crate::util::phase_timer::PhaseTimer,
+    /// Persistent CPU-shard lanes (see [`super::pool`]): spawned lazily by
+    /// the first sharded sub-step, reused for the rest of the run. `None`
+    /// until then and forever on single-shard runs.
+    pub(super) pool: Option<super::pool::ShardPool>,
 }
 
 #[derive(Clone, Debug)]
@@ -199,6 +218,7 @@ impl Engine {
         let n = cluster.len();
         let mut mobility = MobilityModel::new(&flags, seed);
         let channels = mobility.step();
+        let profile_phases = cfg.profile_phases;
         Engine {
             cluster,
             mobility,
@@ -226,6 +246,19 @@ impl Engine {
             active_tasks: BTreeSet::new(),
             n_completed: 0,
             n_failed: 0,
+            chain_suspects: Vec::new(),
+            phases: crate::util::phase_timer::PhaseTimer::new(profile_phases),
+            pool: None,
+        }
+    }
+
+    /// Make sure the persistent CPU-shard pool exists with `lanes` lanes.
+    /// The shard count is fixed for a run (it comes from `cfg.shards`), so
+    /// the spawn happens exactly once — the whole point of the pool.
+    pub(super) fn ensure_pool(&mut self, lanes: usize) {
+        let rebuild = self.pool.as_ref().map(|p| p.lanes() != lanes).unwrap_or(true);
+        if rebuild {
+            self.pool = Some(super::pool::ShardPool::new(lanes));
         }
     }
 
@@ -278,6 +311,20 @@ impl Engine {
         debug_assert!(!was_terminal || is_terminal, "terminal containers never revive");
         if !was_terminal && is_terminal {
             remove_sorted(&mut self.active, cid);
+            // chain-precedence latch: this container is leaving the active
+            // sweep's view forever — if it got ahead of an unfinished
+            // predecessor, remember it NOW so the indexed oracle keeps the
+            // full scan's post-hoc memory. Predecessor done-ness is
+            // monotone (terminal containers never revive), so anything
+            // flaggable later is flaggable at this instant.
+            {
+                let c = &self.containers[cid];
+                if let Some(prev) = c.prev {
+                    if c.mi_done > 0.0 && !self.containers[prev].is_done() {
+                        insert_sorted(&mut self.chain_suspects, cid);
+                    }
+                }
+            }
             if matches!(state, ContainerState::Done { .. }) {
                 let tid = self.containers[cid].task_id;
                 if let Some(e) = self.tasks.get_mut(&tid) {
@@ -372,6 +419,36 @@ impl Engine {
                 self.pending_done
             ));
         }
+        // chain-precedence latch: every terminal container the full scan
+        // would flag right now (progressed, predecessor still unfinished)
+        // must have been latched at its terminal transition; and nothing
+        // enters the latch without having been a progressed chain
+        // successor that went terminal. Entries whose predecessor later
+        // finished legitimately remain (they just stop producing details),
+        // so the reverse check does not require the predecessor to still
+        // be unfinished.
+        for c in &self.containers {
+            let terminal = !c.is_active();
+            if let Some(prev) = c.prev {
+                if terminal && c.mi_done > 0.0 && !self.containers[prev].is_done()
+                    && self.chain_suspects.binary_search(&c.id).is_err()
+                {
+                    return Err(format!(
+                        "container {} is a terminal chain offender but was never latched",
+                        c.id
+                    ));
+                }
+            }
+        }
+        for &cid in &self.chain_suspects {
+            let c = &self.containers[cid];
+            if c.is_active() || c.prev.is_none() || c.mi_done <= 0.0 {
+                return Err(format!(
+                    "container {cid} sits in the chain-suspect latch but is not a \
+                     terminal progressed chain successor"
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -400,6 +477,41 @@ impl Engine {
     /// against the full-pool scan (the ROADMAP's oracle migration).
     pub fn active_ids(&self) -> &[ContainerId] {
         &self.active
+    }
+
+    /// Terminal containers latched at the moment they went Done/Failed
+    /// ahead of an unfinished predecessor, ascending by id (see the field
+    /// doc). The indexed `chain-precedence` oracle merges this with
+    /// [`Engine::active_ids`]; empty on a correct engine.
+    pub fn chain_suspects(&self) -> &[ContainerId] {
+        &self.chain_suspects
+    }
+
+    /// Per-phase wall-clock profiler (read side). Enabled via
+    /// `SimConfig::profile_phases`; inert otherwise.
+    pub fn phases(&self) -> &crate::util::phase_timer::PhaseTimer {
+        &self.phases
+    }
+
+    /// Per-phase profiler, mutable — the broker charges its decision and
+    /// traffic phases here so one timer owns the whole interval breakdown.
+    pub fn phases_mut(&mut self) -> &mut crate::util::phase_timer::PhaseTimer {
+        &mut self.phases
+    }
+
+    /// Test-only sabotage: drive `cid` terminal RIGHT NOW, with fake
+    /// progress, through the normal `set_container` choke point — the
+    /// out-of-order terminal transition no correct engine ever performs
+    /// (successors only progress after their predecessor is Done, and
+    /// Done is permanent). This is the only way to manufacture the state
+    /// the chain-precedence terminal latch exists to remember, so the
+    /// oracle tests use it to prove the latch keeps the indexed sweep
+    /// equal to the full scan post-hoc. Not part of the engine API.
+    #[cfg(test)]
+    pub(crate) fn sabotage_out_of_order_terminal(&mut self, cid: ContainerId) {
+        self.containers[cid].mi_done += 1.0;
+        let worker = self.containers[cid].worker;
+        self.set_container(cid, ContainerState::Failed, worker);
     }
 
     /// Has `id` been abandoned via [`Engine::fail_task`]? Unknown tasks

@@ -7,6 +7,7 @@
 pub mod accum;
 pub mod json;
 pub mod log;
+pub mod phase_timer;
 pub mod rng;
 pub mod stats;
 pub mod table;

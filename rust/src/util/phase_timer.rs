@@ -1,0 +1,173 @@
+//! Per-phase interval profiler: wall-clock millisecond counters for the
+//! five hot phases of a run (CPU integration, network/transfer walk,
+//! decision plane, oracle sweep, traffic shaping + autoscaling).
+//!
+//! Designed to be **zero-cost when disabled**: [`PhaseTimer::start`]
+//! returns `None` without ever calling `Instant::now()`, and
+//! [`PhaseTimer::stop`] on `None` is a no-op — a disabled timer adds two
+//! branch checks per phase, no clock reads, no allocation. Timing reads
+//! never feed back into simulation state, so enabling the profiler
+//! cannot perturb trajectories: goldens, signatures and parity files are
+//! byte-identical with the profiler on or off.
+//!
+//! The start/stop token pattern (rather than a closure-wrapping `time(f)`)
+//! keeps borrows simple at call sites that need `&mut self` inside the
+//! timed region.
+
+use std::time::Instant;
+
+/// The five profiled phases of one scheduling interval.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Fair-share CPU integration (the sharded phase of `sub_step`).
+    Cpu,
+    /// Transfer/migration walk + chain unblocking (payload movement).
+    Network,
+    /// Admission verdicts, split decisions + placement (the policy
+    /// stack's share; admission rides here because the broker interleaves
+    /// the verdict with the decision per task).
+    Decision,
+    /// The chaos oracle sweep (`check_interval`), zero outside chaos runs.
+    Oracle,
+    /// Arrival generation/shaping + autoscaling.
+    Traffic,
+}
+
+/// All phases, in the order their counters are laid out.
+pub const PHASES: [Phase; 5] =
+    [Phase::Cpu, Phase::Network, Phase::Decision, Phase::Oracle, Phase::Traffic];
+
+impl Phase {
+    fn idx(self) -> usize {
+        match self {
+            Phase::Cpu => 0,
+            Phase::Network => 1,
+            Phase::Decision => 2,
+            Phase::Oracle => 3,
+            Phase::Traffic => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Cpu => "cpu",
+            Phase::Network => "network",
+            Phase::Decision => "decision",
+            Phase::Oracle => "oracle",
+            Phase::Traffic => "traffic",
+        }
+    }
+}
+
+/// Accumulated wall-clock milliseconds per phase.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimer {
+    enabled: bool,
+    ms: [f64; 5],
+}
+
+impl PhaseTimer {
+    pub fn new(enabled: bool) -> Self {
+        PhaseTimer { enabled, ms: [0.0; 5] }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Begin timing a phase. `None` when disabled — no clock read happens.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Credit the elapsed time since `start` to `phase`; no-op on `None`.
+    #[inline]
+    pub fn stop(&mut self, phase: Phase, started: Option<Instant>) {
+        if let Some(t0) = started {
+            self.ms[phase.idx()] += t0.elapsed().as_secs_f64() * 1e3;
+        }
+    }
+
+    pub fn ms(&self, phase: Phase) -> f64 {
+        self.ms[phase.idx()]
+    }
+
+    /// Copy the counters into a plain value (for bench records).
+    pub fn snapshot(&self) -> PhaseBreakdown {
+        PhaseBreakdown {
+            cpu_ms: self.ms(Phase::Cpu),
+            network_ms: self.ms(Phase::Network),
+            decision_ms: self.ms(Phase::Decision),
+            oracle_ms: self.ms(Phase::Oracle),
+            traffic_ms: self.ms(Phase::Traffic),
+        }
+    }
+}
+
+/// Flat per-phase breakdown, in milliseconds. Informational only: the
+/// perf gate never bands these (wall-clock phase splits are the noisiest
+/// numbers a CI box produces), they exist so a measured
+/// `BENCH_engine.json` can say exactly where each interval's time went.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    pub cpu_ms: f64,
+    pub network_ms: f64,
+    pub decision_ms: f64,
+    pub oracle_ms: f64,
+    pub traffic_ms: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_timer_reads_no_clock_and_stays_zero() {
+        let mut t = PhaseTimer::new(false);
+        let tok = t.start();
+        assert!(tok.is_none(), "disabled start must not touch the clock");
+        t.stop(Phase::Cpu, tok);
+        for p in PHASES {
+            assert_eq!(t.ms(p), 0.0);
+        }
+        assert_eq!(t.snapshot(), PhaseBreakdown::default());
+    }
+
+    #[test]
+    fn enabled_timer_accumulates_per_phase() {
+        let mut t = PhaseTimer::new(true);
+        let tok = t.start();
+        assert!(tok.is_some());
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.stop(Phase::Oracle, tok);
+        assert!(t.ms(Phase::Oracle) > 0.0);
+        assert_eq!(t.ms(Phase::Cpu), 0.0, "other phases untouched");
+        // second measurement adds, never resets
+        let before = t.ms(Phase::Oracle);
+        let tok = t.start();
+        t.stop(Phase::Oracle, tok);
+        assert!(t.ms(Phase::Oracle) >= before);
+        let snap = t.snapshot();
+        assert_eq!(snap.oracle_ms, t.ms(Phase::Oracle));
+    }
+
+    #[test]
+    fn default_is_disabled() {
+        let t = PhaseTimer::default();
+        assert!(!t.enabled());
+        assert!(t.start().is_none());
+    }
+
+    #[test]
+    fn phase_names_are_stable_bench_schema() {
+        // these strings become BENCH_engine.json field prefixes — renaming
+        // one is a schema change, not a refactor
+        let names: Vec<&str> = PHASES.iter().map(|p| p.name()).collect();
+        assert_eq!(names, ["cpu", "network", "decision", "oracle", "traffic"]);
+    }
+}

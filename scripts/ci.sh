@@ -50,6 +50,14 @@ echo "== matrix smoke (sharded integrator vs the serial goldens) =="
 ./target/release/splitplace matrix --filter smoke --jobs 1 --shards 4
 ./target/release/splitplace matrix --filter smoke --jobs 2 --shards 4
 
+echo "== matrix smoke (paranoid: indexed oracles vs full-scan twins) =="
+# The oracle plane runs O(active) index-backed derivations on the hot
+# path; --paranoid re-runs every full-pool scan twin each interval and
+# reports any scan-vs-index divergence as its own oracle violation. The
+# goldens must still match byte-for-byte: paranoia only audits, never
+# perturbs.
+./target/release/splitplace matrix --filter smoke --jobs 1 --paranoid
+
 # Nightly stanza (uncomment in a scheduled job, not in per-commit CI —
 # the full cross product runs all 9 policies × all 18 scenarios × seeds,
 # including the 1000/5000/25 000-worker tier cells and the traffic plane's Fig-13/16/18

@@ -1035,11 +1035,14 @@ fn prop_latmem_never_picks_a_split_exceeding_fleet_ram() {
     );
 }
 
-/// ISSUE-5 / ROADMAP oracle migration prep: after every interval of a
+/// The oracle-plane migration contract: after every interval of a
 /// faulted run — including moments when the `crashed-workers-idle`
 /// verdict is NON-empty (forced via the no-evict bug hook) — the
-/// full-pool-scan and active-index derivations of `chain-precedence` and
-/// `crashed-workers-idle` must return identical verdict lists.
+/// full-pool-scan and active-index derivations of EVERY migrated oracle
+/// must return identical verdict lists: chain-precedence (terminal latch
+/// included), crashed-workers-idle, allocation-capacity,
+/// task-conservation (order-free — the full twin iterates a hash set),
+/// and the telemetry queued count.
 #[test]
 fn prop_precedence_and_idle_oracles_agree_scan_vs_index() {
     use splitplace::chaos::oracle as orc;
@@ -1064,6 +1067,25 @@ fn prop_precedence_and_idle_oracles_agree_scan_vs_index() {
                     return Err(format!(
                         "interval {t}: crashed-workers-idle derivations diverged"
                     ));
+                }
+                if orc::allocation_capacity_full(engine)
+                    != orc::allocation_capacity_indexed(engine)
+                {
+                    return Err(format!(
+                        "interval {t}: allocation-capacity derivations diverged"
+                    ));
+                }
+                let mut tc_full = orc::task_conservation_full(engine);
+                tc_full.sort();
+                let mut tc_idx = orc::task_conservation_indexed(engine);
+                tc_idx.sort();
+                if tc_full != tc_idx {
+                    return Err(format!(
+                        "interval {t}: task-conservation derivations diverged"
+                    ));
+                }
+                if orc::telemetry_queued_full(engine) != orc::telemetry_queued_indexed(engine) {
+                    return Err(format!("interval {t}: queued-count derivations diverged"));
                 }
                 Ok(())
             };
@@ -1129,6 +1151,35 @@ fn prop_precedence_and_idle_oracles_agree_scan_vs_index() {
             }
             if !forced_nonempty {
                 return Err("run never exercised a non-empty verdict".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// End-to-end paranoid gate: full chaos runs (broker + traffic + oracle
+/// plane) over random heavy plans with `paranoid: true` must stay
+/// completely green — in particular no `paranoid-divergence` — proving
+/// the O(active) oracle plane and the retained full-scan twins agree
+/// interval by interval on the real pipeline, not just on hand-driven
+/// engines.
+#[test]
+fn prop_paranoid_chaos_runs_have_no_scan_index_divergence() {
+    check(
+        "paranoid-divergence-free",
+        4,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut cfg = ExperimentConfig::small();
+            cfg.policy = PolicyKind::ModelCompression;
+            cfg.sim.intervals = 10;
+            cfg.workload.lambda = 4.0;
+            let plan =
+                FaultPlan::generate(seed, 10, Profile::Heavy, cfg.cluster.total_workers());
+            let opts = ChaosOptions { paranoid: true, ..Default::default() };
+            let out = chaos::run_chaos(&cfg, &plan, &opts, None).map_err(|e| e.to_string())?;
+            if !out.violations.is_empty() {
+                return Err(format!("paranoid run not green: {:?}", out.violations));
             }
             Ok(())
         },
