@@ -86,8 +86,9 @@ fn main() {
         resident_ram: vec![1000.0; 50],
         overcommit: 2.0,
     };
+    let mut best_fit = BestFitPlacer::new();
     results.push(bench("L3 best-fit placement (48 slots, 50 workers)", 10, 200, || {
-        black_box(BestFitPlacer.place(&input));
+        black_box(best_fit.place(&input));
     }));
 
     // ---- runtime: PJRT calls ---------------------------------------------

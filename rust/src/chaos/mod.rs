@@ -277,6 +277,10 @@ pub fn run_chaos(
     runtime: Option<&Runtime>,
 ) -> Result<ChaosOutcome> {
     let mut broker = Broker::new_with_fallback(cfg.clone(), runtime, crate::mab::Mode::Test)?;
+    // paranoid mode also arms the decision-plane twin: the placer re-runs
+    // its retired full-fleet scan beside every indexed query and the loop
+    // below drains any mismatch into `paranoid-divergence` violations.
+    broker.set_placement_paranoid(opts.paranoid);
     let mab_baseline = broker.decision_count().unwrap_or(0);
     let base_lambda = cfg.workload.lambda;
     let mut oracle_state = OracleState::new();
@@ -319,6 +323,13 @@ pub fn run_chaos(
             paranoid: opts.paranoid,
         };
         violations.extend(check_interval(&mut ctx));
+        for detail in broker.take_placement_divergences() {
+            violations.push(Violation {
+                oracle: "paranoid-divergence",
+                interval: t,
+                detail: format!("best-fit placement twin: {detail}"),
+            });
+        }
         broker.engine.phases_mut().stop(crate::util::phase_timer::Phase::Oracle, tok);
         signatures.push(IntervalSig::of(&report));
     }

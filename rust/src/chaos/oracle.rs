@@ -740,6 +740,12 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
                     .to_string(),
             );
         }
+        // Sub-step state partitions (phase-1 transit, phase-3 blocked) and
+        // every other incremental engine index: the full-pool
+        // recomputation inside `verify_indices` IS their twin.
+        if let Err(e) = eng.verify_indices() {
+            fail("paranoid-divergence", format!("engine index cross-check: {e}"));
+        }
     }
 
     out

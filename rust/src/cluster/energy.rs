@@ -28,18 +28,36 @@ pub fn energy_wh(spec: &NodeType, util: f64, seconds: f64) -> f64 {
 
 /// Interval energy for a whole fleet given per-worker utilizations.
 pub fn fleet_energy_wh(specs: &[&NodeType], utils: &[f64], seconds: f64) -> f64 {
-    specs
-        .iter()
-        .zip(utils)
-        .map(|(s, &u)| energy_wh(s, u, seconds))
-        .sum()
+    fleet_energy_wh_over(specs.iter().copied(), utils, seconds)
+}
+
+/// Iterator-generic fleet energy: same left-to-right `sum()` fold as the
+/// slice form (bit-identical for the same spec sequence), but callers can
+/// feed worker specs straight from their own storage without building a
+/// per-interval `Vec<&NodeType>`.
+pub fn fleet_energy_wh_over<'a>(
+    specs: impl Iterator<Item = &'a NodeType>,
+    utils: &[f64],
+    seconds: f64,
+) -> f64 {
+    specs.zip(utils).map(|(s, &u)| energy_wh(s, u, seconds)).sum()
 }
 
 /// Normalized average energy consumption (AEC ∈ [0,1]) for the reward in
 /// eq. 10: actual energy over the maximum possible (all workers at peak).
 pub fn normalized_aec(specs: &[&NodeType], utils: &[f64], seconds: f64) -> f64 {
-    let actual = fleet_energy_wh(specs, utils, seconds);
-    let max: f64 = specs.iter().map(|s| s.peak_watts * seconds / 3600.0).sum();
+    normalized_aec_over(specs.iter().copied(), utils, seconds)
+}
+
+/// Iterator-generic AEC (see [`fleet_energy_wh_over`]): both the actual
+/// and the peak-power fold keep the slice form's exact order.
+pub fn normalized_aec_over<'a>(
+    specs: impl Iterator<Item = &'a NodeType> + Clone,
+    utils: &[f64],
+    seconds: f64,
+) -> f64 {
+    let actual = fleet_energy_wh_over(specs.clone(), utils, seconds);
+    let max: f64 = specs.map(|s| s.peak_watts * seconds / 3600.0).sum();
     if max == 0.0 {
         0.0
     } else {

@@ -67,6 +67,13 @@ pub struct Broker<'rt> {
     pub shed_deadline: u64,
     pub scale_up: u64,
     pub scale_down: u64,
+    /// `PlacementInput` assembly scratch (slots, per-worker capacity,
+    /// resident RAM): taken before each `place` call and reclaimed from
+    /// the input afterwards, so steady-state intervals assemble the
+    /// decision input without heap churn.
+    place_slots: Vec<SlotInfo>,
+    place_caps: Vec<f64>,
+    place_resident: Vec<f64>,
 }
 
 impl<'rt> Broker<'rt> {
@@ -150,6 +157,9 @@ impl<'rt> Broker<'rt> {
             shed_deadline: 0,
             scale_up: 0,
             scale_down: 0,
+            place_slots: Vec::new(),
+            place_caps: Vec::new(),
+            place_resident: Vec::new(),
         })
     }
 
@@ -175,33 +185,55 @@ impl<'rt> Broker<'rt> {
         self.stack.decide(task, &mut SplitCtx { rng: &mut self.rng })
     }
 
+    /// Assemble the interval's `PlacementInput` from the engine into the
+    /// broker's scratch buffers (passed in taken-out, returned inside the
+    /// input — [`Broker::reclaim_input`] hands them back). Slot order is
+    /// `Engine::placeable`'s ascending-id order, unchanged.
     fn placement_input<'s>(
         engine: &Engine,
         snapshots: &'s [WorkerSnapshot],
+        mut slots: Vec<SlotInfo>,
+        mut caps: Vec<f64>,
+        mut resident: Vec<f64>,
     ) -> PlacementInput<'s> {
-        let slots: Vec<SlotInfo> = engine
-            .placeable()
-            .into_iter()
-            .map(|cid| {
-                let c = &engine.containers()[cid];
-                SlotInfo {
-                    cid,
-                    prev_worker: c.worker,
-                    decision: c.decision,
-                    mi_remaining: c.mi_total - c.mi_done,
-                    ram_mb: c.ram_mb,
-                    input_mb: c.input_mb,
-                    remaining_frac: c.remaining_fraction(),
-                }
-            })
-            .collect();
+        slots.clear();
+        slots.extend(
+            engine
+                .active_ids()
+                .iter()
+                .copied()
+                .filter(|&cid| engine.containers()[cid].is_placeable())
+                .map(|cid| {
+                    let c = &engine.containers()[cid];
+                    SlotInfo {
+                        cid,
+                        prev_worker: c.worker,
+                        decision: c.decision,
+                        mi_remaining: c.mi_total - c.mi_done,
+                        ram_mb: c.ram_mb,
+                        input_mb: c.input_mb,
+                        remaining_frac: c.remaining_fraction(),
+                    }
+                }),
+        );
+        caps.clear();
+        caps.extend(engine.cluster.workers.iter().map(|w| w.spec.ram_mb));
+        engine.resident_ram_into(&mut resident);
         PlacementInput {
             snapshots,
             slots,
-            ram_capacity: engine.cluster.workers.iter().map(|w| w.spec.ram_mb).collect(),
-            resident_ram: engine.resident_ram(),
+            ram_capacity: caps,
+            resident_ram: resident,
             overcommit: RAM_OVERCOMMIT,
         }
+    }
+
+    /// Reclaim the scratch buffers a spent `PlacementInput` owns.
+    fn reclaim_input(&mut self, input: PlacementInput) {
+        let PlacementInput { slots, ram_capacity, resident_ram, .. } = input;
+        self.place_slots = slots;
+        self.place_caps = ram_capacity;
+        self.place_resident = resident_ram;
     }
 
     /// One scheduling interval (Algorithm 1 body). Returns the interval's
@@ -281,9 +313,15 @@ impl<'rt> Broker<'rt> {
 
         // 2. placement
         let snapshots = std::mem::take(&mut self.last_snapshots);
-        let input = Self::placement_input(&self.engine, &snapshots);
+        let input = Self::placement_input(
+            &self.engine,
+            &snapshots,
+            std::mem::take(&mut self.place_slots),
+            std::mem::take(&mut self.place_caps),
+            std::mem::take(&mut self.place_resident),
+        );
         let assignment = self.stack.place(&input);
-        drop(input);
+        self.reclaim_input(input);
         self.last_snapshots = snapshots;
         self.engine.apply_placement(&assignment);
         self.engine.phases_mut().stop(crate::util::phase_timer::Phase::Decision, tok);
@@ -364,9 +402,15 @@ impl<'rt> Broker<'rt> {
                 self.admitted += 1;
             }
             let snapshots = std::mem::take(&mut self.last_snapshots);
-            let input = Self::placement_input(&self.engine, &snapshots);
-            let assignment = BestFitPlacer.place(&input);
-            drop(input);
+            let input = Self::placement_input(
+                &self.engine,
+                &snapshots,
+                std::mem::take(&mut self.place_slots),
+                std::mem::take(&mut self.place_caps),
+                std::mem::take(&mut self.place_resident),
+            );
+            let assignment = BestFitPlacer::new().place(&input);
+            self.reclaim_input(input);
             self.last_snapshots = snapshots;
             self.engine.apply_placement(&assignment);
             let mut report = self.engine.step_interval();
@@ -392,6 +436,19 @@ impl<'rt> Broker<'rt> {
     /// Telemetry from the gradient placer (perf + Fig. 6-style debugging).
     pub fn placer_stats(&self) -> Option<(usize, f32)> {
         self.stack.placer_stats()
+    }
+
+    /// `--paranoid` wiring for the decision plane: make the placer re-run
+    /// its retired full-fleet scan beside every indexed query and record
+    /// any mismatch (drained by [`Broker::take_placement_divergences`]).
+    pub fn set_placement_paranoid(&mut self, on: bool) {
+        self.stack.set_placer_paranoid(on);
+    }
+
+    /// Drain index-vs-scan placement divergences recorded since the last
+    /// call. Always empty outside paranoid mode and on a correct index.
+    pub fn take_placement_divergences(&mut self) -> Vec<String> {
+        self.stack.take_placer_divergences()
     }
 }
 

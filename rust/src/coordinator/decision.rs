@@ -513,6 +513,17 @@ impl<'rt> DecisionStack<'rt> {
     pub fn placer_stats(&self) -> Option<(usize, f32)> {
         self.placer.stats()
     }
+
+    /// Forward the `--paranoid` twin switch to the placer (see
+    /// [`Placer::set_paranoid`]).
+    pub fn set_placer_paranoid(&mut self, on: bool) {
+        self.placer.set_paranoid(on);
+    }
+
+    /// Drain the placer's recorded index-vs-scan divergences.
+    pub fn take_placer_divergences(&mut self) -> Vec<String> {
+        self.placer.take_paranoid_divergences()
+    }
 }
 
 impl PolicyKind {
@@ -575,12 +586,12 @@ impl PolicyKind {
                         "policy {:?}: PJRT runtime unavailable, degrading to best-fit placement",
                         self
                     );
-                    Box::new(BestFitPlacer)
+                    Box::new(BestFitPlacer::new())
                 }
                 None => anyhow::bail!("policy {:?} needs the PJRT runtime (artifacts)", self),
             }
         } else {
-            Box::new(BestFitPlacer)
+            Box::new(BestFitPlacer::new())
         };
 
         Ok(DecisionStack { splitter, placer })

@@ -41,7 +41,7 @@ impl<'rt> GradientPlacer<'rt> {
             layout,
             cfg,
             decision_aware,
-            fallback: BestFitPlacer,
+            fallback: BestFitPlacer::new(),
             last_iters: 0,
             last_score: 0.0,
             last_features: Vec::new(),
@@ -244,6 +244,16 @@ impl<'rt> Placer for GradientPlacer<'rt> {
 
     fn stats(&self) -> Option<(usize, f32)> {
         Some((self.last_iters, self.last_score))
+    }
+
+    /// The gradient placer itself has no index to distrust; the paranoid
+    /// twin covers its best-fit overflow fallback.
+    fn set_paranoid(&mut self, on: bool) {
+        self.fallback.set_paranoid(on);
+    }
+
+    fn take_paranoid_divergences(&mut self) -> Vec<String> {
+        self.fallback.take_paranoid_divergences()
     }
 }
 

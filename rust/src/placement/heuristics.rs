@@ -2,7 +2,7 @@
 //! the baselines' schedulers and the fallback path when gradient placement
 //! leaves a container unassigned.
 
-use super::{PlacementInput, Placer};
+use super::{Assignment, PlacementInput, Placer, SlotInfo};
 use crate::sim::ContainerId;
 use crate::util::rng::Rng;
 
@@ -88,50 +88,262 @@ impl Placer for RoundRobinPlacer {
     }
 }
 
+/// Leftmost-argmax tournament tree over the worker axis — the decision
+/// plane's answer to the sim core's O(active) indexes. Each internal node
+/// stores, over its leaf range, (a) the maximum of a *conservative upper
+/// bound* on RAM headroom and (b) the maximum of the *exact* best-fit
+/// score. A query descends left-child-first, pruning subtrees that
+/// provably hold no feasible worker (headroom bound below the slot's
+/// demand) or no score strictly above the incumbent (exact max — under
+/// strict-`>` a tied subtree can never win), and re-checks the exact
+/// `PlacementInput::fits` predicate plus the exact score update at every
+/// leaf it reaches. Leaves are therefore visited in ascending worker
+/// order with the serial scan's own comparisons deciding everything — the
+/// winner is bit-identical to the retired left-to-right scan, in
+/// O(log W + pruned-fringe) instead of O(W) per slot.
+#[derive(Default)]
+struct BestFitTree {
+    /// Leaf capacity, `workers.next_power_of_two()`; leaf `w` sits at
+    /// `base + w`, padding leaves carry −∞ in both keys.
+    base: usize,
+    workers: usize,
+    head: Vec<f64>,
+    score: Vec<f64>,
+}
+
+impl BestFitTree {
+    /// Per-worker keys. `score` is the serial scan's expression verbatim
+    /// (same operands, same order — the float is bit-identical). `head`
+    /// over-approximates the headroom `fits` compares against: the exact
+    /// predicate is `fl(fl(resident+extra)+ram) ≤ fl(cap·overcommit)`,
+    /// which is NOT bitwise equivalent to any rearrangement, so the bound
+    /// adds a relative-1e-9 margin that dwarfs the ≤3-ulp (≈7e-16
+    /// relative) gap between `fl(C−s)` and the largest `ram` the exact
+    /// predicate can accept. A pruned subtree thus never hides a feasible
+    /// worker; an unpruned infeasible leaf fails the exact check at the
+    /// leaf, exactly like the serial scan.
+    fn key(input: &PlacementInput, w: usize, extra_w: f64) -> (f64, f64) {
+        let free_ram = (input.ram_capacity[w] - input.resident_ram[w] - extra_w)
+            / input.ram_capacity[w].max(1.0);
+        let score = free_ram - 0.5 * input.snapshots[w].cpu;
+        let cap = input.ram_capacity[w] * input.overcommit;
+        let used = input.resident_ram[w] + extra_w;
+        let head = (cap - used) + 1e-9 * (cap.abs() + used.abs()) + 1e-9;
+        (head, score)
+    }
+
+    /// O(W) rebuild from scratch — once per `place()` call.
+    fn rebuild(&mut self, input: &PlacementInput, extra: &[f64]) {
+        let n = input.workers();
+        self.workers = n;
+        self.base = n.next_power_of_two().max(1);
+        self.head.clear();
+        self.head.resize(2 * self.base, f64::NEG_INFINITY);
+        self.score.clear();
+        self.score.resize(2 * self.base, f64::NEG_INFINITY);
+        for w in 0..n {
+            let (h, s) = Self::key(input, w, extra[w]);
+            self.head[self.base + w] = h;
+            self.score[self.base + w] = s;
+        }
+        for i in (1..self.base).rev() {
+            self.pull(i);
+        }
+    }
+
+    fn pull(&mut self, i: usize) {
+        self.head[i] = self.head[2 * i].max(self.head[2 * i + 1]);
+        self.score[i] = self.score[2 * i].max(self.score[2 * i + 1]);
+    }
+
+    /// O(log W) re-key of one worker after its `extra` commitment grows.
+    fn update(&mut self, input: &PlacementInput, w: usize, extra_w: f64) {
+        let (h, s) = Self::key(input, w, extra_w);
+        let mut i = self.base + w;
+        self.head[i] = h;
+        self.score[i] = s;
+        while i > 1 {
+            i /= 2;
+            self.pull(i);
+        }
+    }
+
+    /// Leftmost maximum-score feasible worker for `slot` under the
+    /// round's committed `extra` — `None` if no worker fits. Only called
+    /// for fresh slots (`prev_worker == None`), where `fits` is the pure
+    /// headroom predicate the `head` bound over-approximates.
+    fn query(
+        &self,
+        input: &PlacementInput,
+        slot: &SlotInfo,
+        extra: &[f64],
+    ) -> Option<(usize, f64)> {
+        let mut best = None;
+        self.descend(1, input, slot, extra, &mut best);
+        best
+    }
+
+    fn descend(
+        &self,
+        node: usize,
+        input: &PlacementInput,
+        slot: &SlotInfo,
+        extra: &[f64],
+        best: &mut Option<(usize, f64)>,
+    ) {
+        if !(self.head[node] >= slot.ram_mb) {
+            return; // provably infeasible everywhere below
+        }
+        if let Some((_, b)) = *best {
+            if !(self.score[node] > b) {
+                return; // nothing below beats the strict-> incumbent
+            }
+        }
+        if node >= self.base {
+            let w = node - self.base;
+            if w < self.workers && input.fits(slot, w, extra[w]) {
+                let s = self.score[node];
+                if best.map(|(_, b)| s > b).unwrap_or(true) {
+                    *best = Some((w, s));
+                }
+            }
+            return;
+        }
+        self.descend(2 * node, input, slot, extra, best);
+        self.descend(2 * node + 1, input, slot, extra, best);
+    }
+}
+
 /// Best-fit-decreasing: biggest containers first, each to the feasible
 /// worker with the most free RAM and lowest CPU (weighted score). This is
-/// the scheduler the Gillis/MC baselines use.
-pub struct BestFitPlacer;
+/// the scheduler the Gillis/MC baselines use. Since the index migration
+/// the per-slot winner comes from a [`BestFitTree`] query (O(log W)
+/// amortized) instead of a full-fleet scan; the retired scan survives as
+/// [`BestFitPlacer::scan_best`], re-run per slot under paranoid mode and
+/// compared bit-for-bit.
+pub struct BestFitPlacer {
+    tree: BestFitTree,
+    extra: Vec<f64>,
+    order: Vec<usize>,
+    paranoid: bool,
+    divergences: Vec<String>,
+}
 
-impl Placer for BestFitPlacer {
-    fn place(&mut self, input: &PlacementInput) -> Vec<(ContainerId, usize)> {
-        let n = input.workers();
-        let mut extra = vec![0.0f64; n];
+impl BestFitPlacer {
+    pub fn new() -> Self {
+        BestFitPlacer {
+            tree: BestFitTree::default(),
+            extra: Vec::new(),
+            order: Vec::new(),
+            paranoid: false,
+            divergences: Vec::new(),
+        }
+    }
+
+    /// One slot of the retired serial derivation: left-to-right scan over
+    /// all workers, exact `fits`, strict-`>` score update. Shared by the
+    /// paranoid twin and [`BestFitPlacer::reference_place`]; never on the
+    /// hot path.
+    fn scan_best(
+        input: &PlacementInput,
+        slot: &SlotInfo,
+        extra: &[f64],
+    ) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for w in 0..input.workers() {
+            if !input.fits(slot, w, extra[w]) {
+                continue;
+            }
+            let free_ram = (input.ram_capacity[w] - input.resident_ram[w] - extra[w])
+                / input.ram_capacity[w].max(1.0);
+            let score = free_ram - 0.5 * input.snapshots[w].cpu;
+            if best.map(|(_, s)| score > s).unwrap_or(true) {
+                best = Some((w, score));
+            }
+        }
+        best
+    }
+
+    /// The whole retired derivation (decreasing sort + per-slot full
+    /// scan), kept as the reference the assignment-identity property pins
+    /// the tree against. Produces exactly what the pre-index
+    /// `BestFitPlacer::place` produced.
+    pub fn reference_place(input: &PlacementInput) -> Assignment {
+        let mut extra = vec![0.0f64; input.workers()];
         let mut order: Vec<usize> = (0..input.slots.len()).collect();
-        order.sort_by(|&a, &b| {
-            input.slots[b]
-                .ram_mb
-                .partial_cmp(&input.slots[a].ram_mb)
-                .unwrap()
-        });
+        order.sort_by(|&a, &b| input.slots[b].ram_mb.total_cmp(&input.slots[a].ram_mb));
         let mut out = Vec::new();
         for i in order {
             let slot = &input.slots[i];
             if slot.prev_worker.is_some() {
                 continue;
             }
-            let mut best: Option<(usize, f64)> = None;
-            for w in 0..n {
-                if !input.fits(slot, w, extra[w]) {
-                    continue;
-                }
-                let free_ram = (input.ram_capacity[w] - input.resident_ram[w] - extra[w])
-                    / input.ram_capacity[w].max(1.0);
-                let score = free_ram - 0.5 * input.snapshots[w].cpu;
-                if best.map(|(_, s)| score > s).unwrap_or(true) {
-                    best = Some((w, score));
-                }
-            }
-            if let Some((w, _)) = best {
+            if let Some((w, _)) = Self::scan_best(input, slot, &extra) {
                 extra[w] += slot.ram_mb;
                 out.push((slot.cid, w));
             }
         }
         out
     }
+}
+
+impl Default for BestFitPlacer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Placer for BestFitPlacer {
+    fn place(&mut self, input: &PlacementInput) -> Vec<(ContainerId, usize)> {
+        let n = input.workers();
+        let mut extra = std::mem::take(&mut self.extra);
+        extra.clear();
+        extra.resize(n, 0.0);
+        let mut order = std::mem::take(&mut self.order);
+        order.clear();
+        order.extend(0..input.slots.len());
+        // decreasing by RAM; total_cmp orders every non-NaN float exactly
+        // like the old partial_cmp().unwrap() did, without the panic path
+        order.sort_by(|&a, &b| input.slots[b].ram_mb.total_cmp(&input.slots[a].ram_mb));
+        self.tree.rebuild(input, &extra);
+        let mut out = Vec::new();
+        for &i in &order {
+            let slot = &input.slots[i];
+            if slot.prev_worker.is_some() {
+                continue;
+            }
+            let best = self.tree.query(input, slot, &extra);
+            if self.paranoid {
+                let full = Self::scan_best(input, slot, &extra);
+                let bits = |r: Option<(usize, f64)>| r.map(|(w, s)| (w, s.to_bits()));
+                if bits(full) != bits(best) {
+                    self.divergences.push(format!(
+                        "slot cid={} ram={}MB: full scan chose {:?}, tree chose {:?}",
+                        slot.cid, slot.ram_mb, full, best
+                    ));
+                }
+            }
+            if let Some((w, _)) = best {
+                extra[w] += slot.ram_mb;
+                self.tree.update(input, w, extra[w]);
+                out.push((slot.cid, w));
+            }
+        }
+        self.extra = extra;
+        self.order = order;
+        out
+    }
 
     fn name(&self) -> &'static str {
         "best-fit"
+    }
+
+    fn set_paranoid(&mut self, on: bool) {
+        self.paranoid = on;
+    }
+
+    fn take_paranoid_divergences(&mut self) -> Vec<String> {
+        std::mem::take(&mut self.divergences)
     }
 }
 
@@ -202,7 +414,7 @@ mod tests {
 
     #[test]
     fn best_fit_prefers_free_ram() {
-        let mut p = BestFitPlacer;
+        let mut p = BestFitPlacer::new();
         let inp = input(
             vec![slot(0, 1000.0)],
             vec![8000.0, 8000.0],
@@ -214,7 +426,7 @@ mod tests {
 
     #[test]
     fn best_fit_packs_decreasing() {
-        let mut p = BestFitPlacer;
+        let mut p = BestFitPlacer::new();
         // two big (6000) and two small (100); caps allow one big each
         let inp = input(
             vec![slot(0, 100.0), slot(1, 6000.0), slot(2, 6000.0), slot(3, 100.0)],
@@ -239,13 +451,64 @@ mod tests {
         let inp = input(vec![s], vec![8000.0; 4], vec![0.0; 4]);
         assert!(RandomPlacer::new(2).place(&inp).is_empty());
         assert!(RoundRobinPlacer::new().place(&inp).is_empty());
-        assert!(BestFitPlacer.place(&inp).is_empty());
+        assert!(BestFitPlacer::new().place(&inp).is_empty());
     }
 
     #[test]
     fn oversized_container_left_queued() {
         let inp = input(vec![slot(0, 50_000.0)], vec![8000.0; 2], vec![0.0; 2]);
-        assert!(BestFitPlacer.place(&inp).is_empty());
+        assert!(BestFitPlacer::new().place(&inp).is_empty());
         assert!(RandomPlacer::new(3).place(&inp).is_empty());
+    }
+
+    #[test]
+    fn tree_matches_reference_on_tie_and_edge_cases() {
+        // equal-score workers: leftmost must win (serial strict-> keeps
+        // the first maximum it sees)
+        let tie = input(vec![slot(0, 100.0)], vec![4000.0; 4], vec![0.0; 4]);
+        assert_eq!(BestFitPlacer::new().place(&tie), BestFitPlacer::reference_place(&tie));
+        assert_eq!(BestFitPlacer::new().place(&tie), vec![(0, 0)]);
+
+        // infeasible everywhere
+        let none = input(vec![slot(0, 50_000.0)], vec![4000.0; 3], vec![0.0; 3]);
+        assert_eq!(BestFitPlacer::new().place(&none), BestFitPlacer::reference_place(&none));
+        assert!(BestFitPlacer::new().place(&none).is_empty());
+
+        // exact overcommit boundary: demand == cap·overcommit − resident,
+        // feasible on <= semantics, and only on worker 1
+        let edge = input(
+            vec![slot(0, 7000.0)],
+            vec![4000.0, 4000.0],
+            vec![2000.0, 1000.0],
+        );
+        assert_eq!(BestFitPlacer::new().place(&edge), BestFitPlacer::reference_place(&edge));
+        assert_eq!(BestFitPlacer::new().place(&edge), vec![(0, 1)]);
+
+        // single-worker fleet (degenerate tree base)
+        let one = input(vec![slot(0, 10.0), slot(1, 20.0)], vec![4000.0], vec![0.0]);
+        assert_eq!(BestFitPlacer::new().place(&one), BestFitPlacer::reference_place(&one));
+
+        // multi-slot packing where earlier commitments shift later winners
+        let pack = input(
+            (0..6).map(|i| slot(i, 2500.0 + 10.0 * i as f64)).collect(),
+            vec![4000.0, 4100.0, 3900.0],
+            vec![100.0, 0.0, 50.0],
+        );
+        assert_eq!(BestFitPlacer::new().place(&pack), BestFitPlacer::reference_place(&pack));
+    }
+
+    #[test]
+    fn paranoid_best_fit_records_no_divergence() {
+        let mut p = BestFitPlacer::new();
+        p.set_paranoid(true);
+        let inp = input(
+            (0..8).map(|i| slot(i, 500.0 * (1 + i % 4) as f64)).collect(),
+            vec![4000.0, 2000.0, 6000.0, 1000.0],
+            vec![500.0, 0.0, 3000.0, 900.0],
+        );
+        let a = p.place(&inp);
+        assert_eq!(a, BestFitPlacer::reference_place(&inp));
+        assert!(p.take_paranoid_divergences().is_empty());
+        assert!(p.take_paranoid_divergences().is_empty(), "drain is one-shot");
     }
 }

@@ -104,4 +104,19 @@ pub trait Placer {
     fn stats(&self) -> Option<(usize, f32)> {
         None
     }
+
+    /// Enable the placer's full-scan twin (the `--paranoid` discipline the
+    /// oracle plane uses): indexed placers re-derive every decision with
+    /// the retired serial scan and record mismatches instead of trusting
+    /// the index. No-op for placers with no index to distrust.
+    fn set_paranoid(&mut self, on: bool) {
+        let _ = on;
+    }
+
+    /// Drain index-vs-scan divergences recorded since the last call (one
+    /// human-readable line each). Always empty outside paranoid mode and
+    /// on a correct index.
+    fn take_paranoid_divergences(&mut self) -> Vec<String> {
+        Vec::new()
+    }
 }

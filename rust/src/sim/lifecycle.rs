@@ -88,8 +88,13 @@ impl Engine {
             });
             ids.push(id);
             // ids are allocated in ascending order, so a plain push keeps
-            // the active list id-sorted
+            // the active list — and the state partitions below — id-sorted
             self.active.push(id);
+            if prev.is_some() {
+                self.blocked.push(id);
+            } else {
+                self.transit.push(id);
+            }
         }
         self.active_tasks.insert(task.id);
         let remaining = ids.len();
@@ -214,22 +219,31 @@ impl Engine {
         }
 
         // energy over the interval from busy time per worker — summed
-        // order-free so the total is independent of worker visit order
+        // order-free so the total is independent of worker visit order.
+        // The utilization and container-count buffers are engine-owned
+        // scratch (taken, refilled, restored) so steady-state intervals
+        // allocate nothing here.
         let mut energy = Accum::ZERO;
-        let mut utils = Vec::with_capacity(n);
+        let mut utils = std::mem::take(&mut self.utils_scratch);
+        utils.clear();
+        utils.reserve(n);
         for (w, worker) in self.cluster.workers.iter().enumerate() {
             let util = (self.busy_s[w] / self.cfg.interval_seconds).clamp(0.0, 1.0);
             utils.push(util);
             energy.add(energy::energy_wh(&worker.spec, util, self.cfg.interval_seconds));
         }
         let energy_wh = energy.value();
-        let specs: Vec<&crate::cluster::node::NodeType> =
-            self.cluster.workers.iter().map(|w| &w.spec).collect();
-        let aec = energy::normalized_aec(&specs, &utils, self.cfg.interval_seconds);
+        let aec = energy::normalized_aec_over(
+            self.cluster.workers.iter().map(|w| &w.spec),
+            &utils,
+            self.cfg.interval_seconds,
+        );
 
         // snapshots — derived from the active index, O(workers + active)
         let resident = self.resident_ram();
-        let mut counts = vec![0usize; n];
+        let mut counts = std::mem::take(&mut self.counts_scratch);
+        counts.clear();
+        counts.resize(n, 0);
         for &cid in &self.active {
             if let Some(w) = self.containers[cid].worker {
                 counts[w] += 1;
@@ -244,9 +258,13 @@ impl Engine {
                 containers: counts[w],
             })
             .collect();
+        self.utils_scratch = utils;
+        self.counts_scratch = counts;
 
+        // Queued ⊆ transit, so the count walks the O(in-transit) state
+        // partition instead of the whole active list.
         let queued = self
-            .active
+            .transit
             .iter()
             .filter(|&&cid| matches!(self.containers[cid].state, ContainerState::Queued))
             .count();
@@ -267,24 +285,36 @@ impl Engine {
         report
     }
 
-    /// One integrator sub-step, O(active + workers): every loop below
-    /// walks the active list or the per-worker residency index (both
-    /// id-sorted), never the whole container pool. Phases 1 (transfers)
-    /// and 3 (chain unblock) walk the global active list and stay serial;
-    /// phase 2 (fair-share CPU) is per-worker-independent and fans out
-    /// across `cfg.shards` rack shards — with every reduction order-free
-    /// ([`crate::util::accum`]), the result is byte-identical at any
-    /// shard count.
+    /// One integrator sub-step, O(in-state + workers): every loop below
+    /// walks a per-state partition of the active set or the per-worker
+    /// residency index (all id-sorted), never the whole container pool —
+    /// and phases 1/3 no longer even walk the whole active list. Phase 1
+    /// (transfers) sweeps the `transit` partition and phase 3 (chain
+    /// unblock) the `blocked` partition, each via a frozen pre-phase
+    /// snapshot; phase 2 (fair-share CPU) is per-worker-independent and
+    /// fans out across `cfg.shards` rack shards — with every reduction
+    /// order-free ([`crate::util::accum`]), the result is byte-identical
+    /// at any shard count.
     fn sub_step(&mut self, dt: f64) {
         let t_end = self.now_s + dt;
         let tok = self.phases.start();
+        let mut walk = std::mem::take(&mut self.walk_scratch);
 
-        // 1. transfers & migrations that finish within this sub-step.
-        //    No transition in this phase is terminal or changes residency
-        //    (Transferring→Running and Migrating→Running keep their home),
-        //    so indexing into the active list stays stable.
-        for i in 0..self.active.len() {
-            let cid = self.active[i];
+        // 1. transfers & migrations that finish within this sub-step —
+        //    sweep the frozen transit partition (Queued ∪ Transferring ∪
+        //    Migrating, ascending id): exactly the subsequence of the
+        //    active list the old full filter matched, in its order. The
+        //    sweep copies the index first because a finishing transfer
+        //    removes the visited entry from `transit` mid-sweep; each
+        //    visit mutates only its own container and no phase-1
+        //    transition ADDS transit membership, so the snapshot sees
+        //    precisely the states the live active-list walk saw. No
+        //    transition here is terminal or changes residency
+        //    (Transferring→Running and Migrating→Running keep their home).
+        walk.clear();
+        walk.extend_from_slice(&self.transit);
+        for i in 0..walk.len() {
+            let cid = walk[i];
             match self.containers[cid].state {
                 ContainerState::Transferring { until_s } => {
                     let spent = (until_s.min(t_end) - self.now_s).max(0.0).min(dt);
@@ -356,13 +386,18 @@ impl Engine {
         self.phases.stop(crate::util::phase_timer::Phase::Cpu, tok);
         let tok = self.phases.start();
 
-        // 3. unblock chain successors of containers that just finished.
-        //    Pre-placed successors (worker reserved at placement time)
-        //    start their input transfer immediately; unreserved ones fall
-        //    back to the wait queue for the next placement round. Neither
-        //    transition is terminal, so the active list stays stable.
-        for i in 0..self.active.len() {
-            let cid = self.active[i];
+        // 3. unblock chain successors of containers that just finished —
+        //    sweep the frozen blocked partition (ascending id), the exact
+        //    subsequence of the active list the old filter matched. An
+        //    unblocking visit removes its entry from `blocked` (hence the
+        //    snapshot); it mutates only its own container, never produces
+        //    a Done state, and nothing in this phase creates new Blocked
+        //    members — so later entries see predecessor done-ness exactly
+        //    as the live walk did. Neither transition is terminal.
+        walk.clear();
+        walk.extend_from_slice(&self.blocked);
+        for i in 0..walk.len() {
+            let cid = walk[i];
             if !matches!(self.containers[cid].state, ContainerState::Blocked) {
                 continue;
             }
@@ -391,6 +426,7 @@ impl Engine {
             }
         }
         self.phases.stop(crate::util::phase_timer::Phase::Network, tok);
+        self.walk_scratch = walk;
 
         self.now_s = t_end;
     }
@@ -804,6 +840,32 @@ mod tests {
             ids,
             "lanes must be reused across intervals, never respawned"
         );
+    }
+
+    #[test]
+    fn state_partitions_track_every_transition() {
+        let mut e = engine();
+        e.admit(task(1, App::Mnist, 16_000), SplitDecision::Layer);
+        // chain of 3: fragment 0 Queued, successors Blocked
+        assert_eq!(e.transit_ids().to_vec(), vec![0]);
+        assert_eq!(e.blocked_ids().to_vec(), vec![1, 2]);
+        e.verify_indices().unwrap();
+        // reserving a worker for a Blocked successor is a membership no-op
+        e.apply_placement(&[(0, 0), (1, 1), (2, 2)]);
+        assert_eq!(e.transit_ids().to_vec(), vec![0]);
+        assert_eq!(e.blocked_ids().to_vec(), vec![1, 2]);
+        let mut done = false;
+        for _ in 0..40 {
+            let r = e.step_interval();
+            e.verify_indices().unwrap();
+            if !r.completed.is_empty() {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "pre-reserved chain must complete");
+        assert!(e.transit_ids().is_empty(), "terminal chain left transit entries");
+        assert!(e.blocked_ids().is_empty(), "terminal chain left blocked entries");
     }
 
     #[test]

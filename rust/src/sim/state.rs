@@ -156,6 +156,28 @@ pub struct Engine {
     /// (Running/Transferring/Blocked at `worker`, Migrating at `to`),
     /// ascending by id for the same summation-order guarantee.
     pub(super) resident_idx: Vec<Vec<ContainerId>>,
+    /// State partition of the active set, phase-1 side: containers in a
+    /// payload-movement or queue-wait state (Queued ∪ Transferring ∪
+    /// Migrating), ascending by id. `sub_step` phase 1 walks this instead
+    /// of filtering the whole active list — O(in-transit), same visit
+    /// order, byte-identical accumulation. Maintained exclusively by
+    /// [`Engine::set_container`] (admission pushes the initial state).
+    pub(super) transit: Vec<ContainerId>,
+    /// State partition of the active set, phase-3 side: Blocked chain
+    /// successors awaiting their predecessor, ascending by id. `sub_step`
+    /// phase 3 walks this — O(blocked) — in the active-list filter's
+    /// exact order.
+    pub(super) blocked: Vec<ContainerId>,
+    /// Walk scratch for sub-step phases 1 and 3: the phases mutate the
+    /// very index they sweep (a finished transfer leaves `transit`, an
+    /// unblocked successor leaves `blocked`), so each phase copies its
+    /// index here and iterates the frozen snapshot — which is exactly the
+    /// pre-phase membership the old active-list filter visited.
+    pub(super) walk_scratch: Vec<ContainerId>,
+    /// Per-interval report scratch (utilizations, per-worker container
+    /// counts): reused across intervals instead of reallocated.
+    pub(super) utils_scratch: Vec<f64>,
+    pub(super) counts_scratch: Vec<usize>,
     /// Tasks whose remaining-fragment counter hit zero this sub-step;
     /// drained (in task-id order) by completion collection.
     pub(super) pending_done: Vec<u64>,
@@ -242,6 +264,11 @@ impl Engine {
             xfer_s: vec![0.0; n],
             active: Vec::new(),
             resident_idx: vec![Vec::new(); n],
+            transit: Vec::new(),
+            blocked: Vec::new(),
+            walk_scratch: Vec::new(),
+            utils_scratch: Vec::new(),
+            counts_scratch: Vec::new(),
             pending_done: Vec::new(),
             active_tasks: BTreeSet::new(),
             n_completed: 0,
@@ -275,9 +302,24 @@ impl Engine {
         }
     }
 
+    /// Does `state` belong to the phase-1 transit partition? Membership is
+    /// a pure function of the state variant, so [`Engine::set_container`]
+    /// can maintain the `transit` index with two variant tests — and a
+    /// Queued→Transferring or Transferring→Migrating transition is a
+    /// membership no-op.
+    pub(super) fn in_transit(state: &ContainerState) -> bool {
+        matches!(
+            state,
+            ContainerState::Queued
+                | ContainerState::Transferring { .. }
+                | ContainerState::Migrating { .. }
+        )
+    }
+
     /// The choke point for container state/worker mutation: updates the
-    /// container AND the active list, residency index, remaining-fragment
-    /// counter and completion queue in one place. Everything that mutates
+    /// container AND the active list, residency index, per-state sub-step
+    /// partitions (`transit`/`blocked`), remaining-fragment counter and
+    /// completion queue in one place. Everything that mutates
     /// `state`/`worker` must route through here — a direct field write
     /// desynchronizes the indexes (caught by [`Engine::verify_indices`]).
     pub(super) fn set_container(
@@ -303,6 +345,26 @@ impl Engine {
             }
             if let Some(w) = new_home {
                 insert_sorted(&mut self.resident_idx[w], cid);
+            }
+        }
+        // Sub-step state partitions: membership depends only on the state
+        // variant, so same-partition transitions cost nothing.
+        let was_transit = Self::in_transit(&old_state);
+        let is_transit = Self::in_transit(&state);
+        if was_transit != is_transit {
+            if was_transit {
+                remove_sorted(&mut self.transit, cid);
+            } else {
+                insert_sorted(&mut self.transit, cid);
+            }
+        }
+        let was_blocked = matches!(old_state, ContainerState::Blocked);
+        let is_blocked = matches!(state, ContainerState::Blocked);
+        if was_blocked != is_blocked {
+            if was_blocked {
+                remove_sorted(&mut self.blocked, cid);
+            } else {
+                insert_sorted(&mut self.blocked, cid);
             }
         }
         let was_terminal =
@@ -349,6 +411,32 @@ impl Engine {
                 "active list diverged: index has {} entries, full scan {}",
                 self.active.len(),
                 want_active.len()
+            ));
+        }
+        let want_transit: Vec<ContainerId> = self
+            .containers
+            .iter()
+            .filter(|c| Self::in_transit(&c.state))
+            .map(|c| c.id)
+            .collect();
+        if want_transit != self.transit {
+            return Err(format!(
+                "transit partition diverged: index has {} entries, full scan {}",
+                self.transit.len(),
+                want_transit.len()
+            ));
+        }
+        let want_blocked: Vec<ContainerId> = self
+            .containers
+            .iter()
+            .filter(|c| matches!(c.state, ContainerState::Blocked))
+            .map(|c| c.id)
+            .collect();
+        if want_blocked != self.blocked {
+            return Err(format!(
+                "blocked partition diverged: index has {} entries, full scan {}",
+                self.blocked.len(),
+                want_blocked.len()
             ));
         }
         let mut want_res: Vec<Vec<ContainerId>> = vec![Vec::new(); self.cluster.len()];
@@ -479,6 +567,19 @@ impl Engine {
         &self.active
     }
 
+    /// Phase-1 state partition (Queued ∪ Transferring ∪ Migrating),
+    /// ascending by id — exposed read-only so property tests can pin the
+    /// index against a full-pool recomputation.
+    pub fn transit_ids(&self) -> &[ContainerId] {
+        &self.transit
+    }
+
+    /// Phase-3 state partition (Blocked), ascending by id — read-only, see
+    /// [`Engine::transit_ids`].
+    pub fn blocked_ids(&self) -> &[ContainerId] {
+        &self.blocked
+    }
+
     /// Terminal containers latched at the moment they went Done/Failed
     /// ahead of an unfinished predecessor, ascending by id (see the field
     /// doc). The indexed `chain-precedence` oracle merges this with
@@ -542,6 +643,14 @@ impl Engine {
     /// in O(workers + resident).
     pub fn resident_ram(&self) -> Vec<f64> {
         (0..self.cluster.len()).map(|w| self.resident_ram_of(w)).collect()
+    }
+
+    /// [`Engine::resident_ram`] into a caller-owned buffer — same values,
+    /// no per-call allocation (the broker feeds its placement-input
+    /// scratch through here every interval).
+    pub fn resident_ram_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend((0..self.cluster.len()).map(|w| self.resident_ram_of(w)));
     }
 
     /// Resident RAM demand of one worker (see [`Engine::resident_ram`]).

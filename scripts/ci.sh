@@ -53,10 +53,22 @@ echo "== matrix smoke (sharded integrator vs the serial goldens) =="
 echo "== matrix smoke (paranoid: indexed oracles vs full-scan twins) =="
 # The oracle plane runs O(active) index-backed derivations on the hot
 # path; --paranoid re-runs every full-pool scan twin each interval and
-# reports any scan-vs-index divergence as its own oracle violation. The
-# goldens must still match byte-for-byte: paranoia only audits, never
-# perturbs.
+# reports any scan-vs-index divergence as its own oracle violation. Since
+# the sub-step/placement index migration the paranoid sweep also covers
+# the phase-1/phase-3 state partitions (via the engine's full-scan
+# verify_indices) and the tournament-tree best-fit placer (per-slot
+# full-fleet scan twin). The goldens must still match byte-for-byte:
+# paranoia only audits, never perturbs.
 ./target/release/splitplace matrix --filter smoke --jobs 1 --paranoid
+
+echo "== chaos smoke (paranoid: placement + phase-index twins, heavy) =="
+# A best-fit-backed policy under a heavy fault plan with --paranoid: every
+# interval re-derives each placement decision with the retired full-fleet
+# scan and cross-checks every engine index (transit/blocked partitions
+# included) against full-pool recomputations. Any mismatch surfaces as a
+# paranoid-divergence violation and fails the run.
+./target/release/splitplace chaos --seed 7 --profile heavy --intervals 10 \
+    --policy mc --paranoid
 
 # Nightly stanza (uncomment in a scheduled job, not in per-commit CI —
 # the full cross product runs all 9 policies × all 18 scenarios × seeds,
@@ -77,6 +89,15 @@ echo "== engine throughput bench (smoke: all tiers, short horizon) =="
 # --bench engine_throughput`).
 ./target/release/splitplace bench --tier all --intervals 12 \
     --gate BENCH_engine.json --out BENCH_engine.json
+
+echo "== bench phase breakdown (large tier, informational) =="
+# Per-phase wall-ms attribution (decision_ms/network_ms/...) on the
+# 1000-worker tier: after the sub-step/placement index migration this is
+# where the decision- and network-phase costs are read off. Writes to a
+# scratch file — informational only, the committed baseline and the perf
+# gate above are untouched.
+./target/release/splitplace bench --tier large --intervals 12 \
+    --out "$(mktemp -t bench_phases.XXXXXX.json)"
 
 # Lints run after the functional gates so a formatting nit never blocks
 # the golden bootstrap above; they still fail the script.

@@ -346,7 +346,7 @@ fn prop_placement_outputs_feasible_and_unique() {
                 resident_ram: resident.clone(),
                 overcommit: 2.0,
             };
-            let mut placer = BestFitPlacer;
+            let mut placer = BestFitPlacer::new();
             let out = placer.place(&input);
             // no duplicate containers
             let mut seen = std::collections::HashSet::new();
@@ -1180,6 +1180,175 @@ fn prop_paranoid_chaos_runs_have_no_scan_index_divergence() {
             let out = chaos::run_chaos(&cfg, &plan, &opts, None).map_err(|e| e.to_string())?;
             if !out.violations.is_empty() {
                 return Err(format!("paranoid run not green: {:?}", out.violations));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The decision-plane index migration's contract: over randomized fleets
+/// and slot mixes — quantized values so score/RAM ties are common,
+/// deliberately infeasible slots, slots sitting exactly on the overcommit
+/// boundary, already-placed slots — the tournament-tree `BestFitPlacer`
+/// must produce the assignment the retired full scan produces, pair for
+/// pair, and its paranoid self-check must record zero divergences.
+#[test]
+fn prop_tournament_best_fit_assignment_identical_to_full_scan() {
+    check(
+        "best-fit-tree-vs-scan",
+        60,
+        |rng| {
+            let n = rng.int_range(1, 40) as usize;
+            // quantized caps/resident/cpu: equal free-RAM fractions and
+            // equal scores happen constantly, exercising the strict->
+            // leftmost tie-break
+            let caps: Vec<f64> =
+                (0..n).map(|_| 1000.0 * rng.int_range(2, 9) as f64).collect();
+            let resident: Vec<f64> = caps
+                .iter()
+                .map(|c| 500.0 * rng.below(1 + (*c as u64) / 1000) as f64)
+                .collect();
+            let cpus: Vec<f64> = (0..n).map(|_| 0.1 * rng.below(5) as f64).collect();
+            let m = rng.int_range(1, 30) as usize;
+            let mut slots: Vec<SlotInfo> = (0..m)
+                .map(|i| SlotInfo {
+                    cid: i,
+                    prev_worker: rng.chance(0.15).then(|| rng.below(n as u64) as usize),
+                    decision: SplitDecision::Layer,
+                    mi_remaining: rng.range(1e5, 5e6),
+                    ram_mb: 50.0 * rng.int_range(1, 120) as f64,
+                    input_mb: rng.range(1.0, 300.0),
+                    remaining_frac: rng.f64(),
+                })
+                .collect();
+            // sprinkle pathological demands: infeasible-everywhere and
+            // exactly-at-the-overcommit-edge of a random worker
+            for s in &mut slots {
+                if rng.chance(0.1) {
+                    s.ram_mb = 50_000.0;
+                } else if rng.chance(0.1) {
+                    let w = rng.below(n as u64) as usize;
+                    s.ram_mb = caps[w] * 2.0 - resident[w];
+                }
+            }
+            (slots, caps, resident, cpus)
+        },
+        |(slots, caps, resident, cpus)| {
+            let snaps: Vec<WorkerSnapshot> = cpus
+                .iter()
+                .map(|&cpu| WorkerSnapshot { cpu, ram: 0.5, net: 0.0, disk: 0.0, containers: 0 })
+                .collect();
+            let input = PlacementInput {
+                snapshots: &snaps,
+                slots: slots.clone(),
+                ram_capacity: caps.clone(),
+                resident_ram: resident.clone(),
+                overcommit: 2.0,
+            };
+            let reference = BestFitPlacer::reference_place(&input);
+            let mut placer = BestFitPlacer::new();
+            placer.set_paranoid(true);
+            let indexed = placer.place(&input);
+            if indexed != reference {
+                return Err(format!(
+                    "assignments diverged: tree {indexed:?} vs full scan {reference:?}"
+                ));
+            }
+            let div = placer.take_paranoid_divergences();
+            if !div.is_empty() {
+                return Err(format!("paranoid twin recorded divergences: {div:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The sub-step index migration's contract, chaos-heavy: drive an engine
+/// through random fault plans, admissions and placements, and after every
+/// interval (a) `verify_indices` must hold — it now recomputes the
+/// phase-1 `transit` and phase-3 `blocked` partitions from a full pool
+/// scan — and (b) the exposed partitions must equal an independent
+/// recomputation here, so the test does not lean on the engine's own
+/// cross-check alone.
+#[test]
+fn prop_state_partitions_match_full_scan_under_chaos() {
+    check(
+        "state-partitions-vs-scan",
+        8,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let cluster = build_fleet(&ClusterConfig::small());
+            let mut engine = Engine::new(cluster, SimConfig::default(), rng.next_u64());
+            let intervals = 14usize;
+            let plan =
+                FaultPlan::generate(rng.next_u64(), intervals, Profile::Heavy, engine.workers());
+            let mut next_id = 0u64;
+            for t in 0..intervals {
+                for e in plan.events_at(t) {
+                    for cmd in e.event.compile(engine.workers()) {
+                        engine.apply(cmd);
+                    }
+                }
+                for _ in 0..1 + rng.below(3) {
+                    let task = Task {
+                        id: next_id,
+                        app: rand_app(&mut rng),
+                        batch: rng.int_range(16_000, 64_000) as u64,
+                        sla: rng.range(1.0, 15.0),
+                        arrival_s: engine.now_s,
+                        decision: None,
+                    };
+                    next_id += 1;
+                    engine.admit(task, rand_decision(&mut rng));
+                }
+                let mut assigns: Vec<(usize, usize)> = Vec::new();
+                for c in engine.placeable() {
+                    if rng.chance(0.8) {
+                        assigns.push((c, rng.below(10) as usize));
+                    }
+                }
+                engine.apply_placement(&assigns);
+                if rng.chance(0.3) {
+                    engine.apply(splitplace::sim::EngineCmd::FailTasksOlderThan {
+                        age_s: 3.0 * engine.interval_seconds(),
+                    });
+                }
+                engine.step_interval();
+                engine
+                    .verify_indices()
+                    .map_err(|e| format!("interval {t}: {e}"))?;
+                let want_transit: Vec<usize> = engine
+                    .containers()
+                    .iter()
+                    .filter(|c| {
+                        matches!(
+                            c.state,
+                            ContainerState::Queued
+                                | ContainerState::Transferring { .. }
+                                | ContainerState::Migrating { .. }
+                        )
+                    })
+                    .map(|c| c.id)
+                    .collect();
+                if want_transit != engine.transit_ids() {
+                    return Err(format!(
+                        "interval {t}: transit partition {:?} != full scan {want_transit:?}",
+                        engine.transit_ids()
+                    ));
+                }
+                let want_blocked: Vec<usize> = engine
+                    .containers()
+                    .iter()
+                    .filter(|c| matches!(c.state, ContainerState::Blocked))
+                    .map(|c| c.id)
+                    .collect();
+                if want_blocked != engine.blocked_ids() {
+                    return Err(format!(
+                        "interval {t}: blocked partition {:?} != full scan {want_blocked:?}",
+                        engine.blocked_ids()
+                    ));
+                }
             }
             Ok(())
         },
