@@ -23,6 +23,20 @@ pub fn rack_members(n_workers: usize, rack: usize) -> std::ops::Range<usize> {
     (r * n_workers / RACKS)..((r + 1) * n_workers / RACKS)
 }
 
+/// Initial rack of every worker — the contiguous-quarter assignment of
+/// [`rack_members`] as a per-worker vector. Single source for the engine's
+/// live `rack_of` state and the plan ledger's expected-rack mirror, so a
+/// handoff oracle compares two structures seeded identically.
+pub fn initial_racks(n_workers: usize) -> Vec<usize> {
+    let mut racks = vec![0; n_workers];
+    for r in 0..RACKS {
+        for w in rack_members(n_workers, r) {
+            racks[w] = r;
+        }
+    }
+    racks
+}
+
 /// One injectable fault.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ChaosEvent {
@@ -60,6 +74,15 @@ pub enum ChaosEvent {
     /// end-to-end checksum). A corrupted transfer cannot produce valid
     /// output: the owning task must fail-and-penalize, never complete.
     PayloadCorruption { worker: usize },
+    /// Mobility handoff: the worker migrates between topology racks
+    /// mid-interval (a vehicle crossing cell boundaries re-associates with
+    /// a new edge site). The worker stays online and keeps its containers,
+    /// but it re-homes to `to_rack` and every in-flight transfer touching
+    /// it stretches through the re-association (see
+    /// [`crate::sim::EngineCmd::Handoff`]). A no-op unless the worker is
+    /// currently in `from_rack` — stale handoffs from a reordered plan
+    /// must not teleport workers.
+    Handoff { worker: usize, from_rack: usize, to_rack: usize },
 }
 
 impl ChaosEvent {
@@ -77,6 +100,7 @@ impl ChaosEvent {
             ChaosEvent::RackRecover { .. } => "rack-recover",
             ChaosEvent::ClockSkew { .. } => "clock-skew",
             ChaosEvent::PayloadCorruption { .. } => "payload-corruption",
+            ChaosEvent::Handoff { .. } => "handoff",
         }
     }
 
@@ -122,6 +146,9 @@ impl ChaosEvent {
             ChaosEvent::PayloadCorruption { worker } => {
                 vec![EngineCmd::CorruptPayload { worker }]
             }
+            ChaosEvent::Handoff { worker, from_rack, to_rack } => {
+                vec![EngineCmd::Handoff { worker, from_rack, to_rack }]
+            }
         }
     }
 
@@ -135,7 +162,8 @@ impl ChaosEvent {
             | ChaosEvent::Blackout { worker }
             | ChaosEvent::BlackoutEnd { worker }
             | ChaosEvent::ClockSkew { worker, .. }
-            | ChaosEvent::PayloadCorruption { worker } => Some(*worker),
+            | ChaosEvent::PayloadCorruption { worker }
+            | ChaosEvent::Handoff { worker, .. } => Some(*worker),
             _ => None,
         }
     }
@@ -168,6 +196,10 @@ impl ChaosEvent {
             ChaosEvent::ClockSkew { offset_s, .. } => {
                 kv.push(("offset_s", Value::Num(*offset_s)));
             }
+            ChaosEvent::Handoff { from_rack, to_rack, .. } => {
+                kv.push(("from_rack", Value::Num(*from_rack as f64)));
+                kv.push(("to_rack", Value::Num(*to_rack as f64)));
+            }
             _ => {}
         }
         Value::obj(kv)
@@ -195,6 +227,11 @@ impl ChaosEvent {
                 offset_s: v.req("offset_s")?.as_f64()?,
             },
             "payload-corruption" => ChaosEvent::PayloadCorruption { worker: worker()? },
+            "handoff" => ChaosEvent::Handoff {
+                worker: worker()?,
+                from_rack: v.req("from_rack")?.as_usize()?,
+                to_rack: v.req("to_rack")?.as_usize()?,
+            },
             _ => return Err(JsonError::Type("known chaos event kind")),
         })
     }
@@ -241,6 +278,7 @@ mod tests {
             ChaosEvent::RackRecover { rack: 2 },
             ChaosEvent::ClockSkew { worker: 4, offset_s: 37.5 },
             ChaosEvent::PayloadCorruption { worker: 6 },
+            ChaosEvent::Handoff { worker: 5, from_rack: 2, to_rack: 0 },
         ];
         for (i, e) in events.iter().enumerate() {
             let te = TimedEvent { t: i, event: *e };
@@ -260,6 +298,8 @@ mod tests {
         assert!(TimedEvent::from_json(&v).is_err(), "rack failure needs a rack");
         let v = json::parse(r#"{"t":0,"kind":"clock-skew","worker":1}"#).unwrap();
         assert!(TimedEvent::from_json(&v).is_err(), "clock skew needs an offset");
+        let v = json::parse(r#"{"t":0,"kind":"handoff","worker":1,"from_rack":0}"#).unwrap();
+        assert!(TimedEvent::from_json(&v).is_err(), "handoff needs both racks");
     }
 
     #[test]
@@ -297,9 +337,17 @@ mod tests {
         let rack = ChaosEvent::CorrelatedRackFailure { rack: 0 }.compile(8);
         assert_eq!(rack.len(), rack_members(8, 0).len());
         assert!(rack.iter().all(|c| matches!(c, EngineCmd::Crash { .. })));
+        // handoffs compile to the single typed command, racks included
+        assert_eq!(
+            ChaosEvent::Handoff { worker: 4, from_rack: 1, to_rack: 3 }.compile(10),
+            vec![EngineCmd::Handoff { worker: 4, from_rack: 1, to_rack: 3 }]
+        );
         // broker-scoped and out-of-range events compile to nothing
         assert!(ChaosEvent::FlashCrowd { lambda_mult: 4.0 }.compile(10).is_empty());
         assert!(ChaosEvent::FlashCrowdEnd.compile(10).is_empty());
         assert!(ChaosEvent::Crash { worker: 50 }.compile(10).is_empty());
+        assert!(
+            ChaosEvent::Handoff { worker: 50, from_rack: 0, to_rack: 1 }.compile(10).is_empty()
+        );
     }
 }

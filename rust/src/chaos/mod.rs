@@ -8,7 +8,7 @@
 //! 1. [`plan::FaultPlan`] — a seeded, serializable per-interval schedule of
 //!    [`events::ChaosEvent`]s: worker crash/recover, stragglers, network
 //!    blackouts, RAM squeezes, flash-crowd bursts, rack failures, clock
-//!    skew, payload corruption.
+//!    skew, payload corruption, mobility handoffs.
 //! 2. [`run_chaos`] compiles each event to typed
 //!    [`crate::sim::EngineCmd`]s and applies them through the engine's
 //!    single `apply` entry point — the engine's command ledger records
@@ -59,6 +59,9 @@ pub enum BugKind {
     /// the corrupted transfer completes as if nothing happened instead of
     /// failing the task.
     SwallowCorruption,
+    /// Mobility handoffs are silently dropped — the worker keeps its old
+    /// rack home (and channel state) while the plan says it moved.
+    DropHandoff,
 }
 
 impl BugKind {
@@ -68,6 +71,7 @@ impl BugKind {
             BugKind::ForgetRackMember => "forget-rack-member",
             BugKind::DropClockSkew => "drop-clock-skew",
             BugKind::SwallowCorruption => "swallow-corruption",
+            BugKind::DropHandoff => "drop-handoff",
         }
     }
 
@@ -77,6 +81,7 @@ impl BugKind {
             "forget-rack-member" => Some(BugKind::ForgetRackMember),
             "drop-clock-skew" => Some(BugKind::DropClockSkew),
             "swallow-corruption" => Some(BugKind::SwallowCorruption),
+            "drop-handoff" => Some(BugKind::DropHandoff),
             _ => None,
         }
     }
@@ -153,6 +158,12 @@ pub struct ChaosOutcome {
     /// φ=0.9 EMA of task response times in completion order (NaN when no
     /// task left the system) — the matrix harness's latency headline.
     pub response_ema: f64,
+    /// Total fleet energy over the run, watt-hours (offline workers draw
+    /// 0 W) — the energy-gated headline.
+    pub energy_wh: f64,
+    /// Mean per-interval normalized AEC (eq. 10's energy term); 0 on a
+    /// zero-interval run.
+    pub mean_aec: f64,
     /// Standard experiment summary (Table-4 quantities) for the run.
     pub summary: Summary,
 }
@@ -179,11 +190,19 @@ impl ChaosOutcome {
 pub struct PlanLedger {
     pub offline: Vec<bool>,
     pub skew: Vec<f64>,
+    /// Per-worker rack homes — starts at [`events::initial_racks`] (the
+    /// same single source the engine seeds `rack_of` from) and moves only
+    /// through absorbed handoff commands.
+    pub racks: Vec<usize>,
 }
 
 impl PlanLedger {
     pub fn new(n_workers: usize) -> PlanLedger {
-        PlanLedger { offline: vec![false; n_workers], skew: vec![0.0; n_workers] }
+        PlanLedger {
+            offline: vec![false; n_workers],
+            skew: vec![0.0; n_workers],
+            racks: events::initial_racks(n_workers),
+        }
     }
 
     /// Absorb one bug-free compiled command. Mirrors the engine's own
@@ -205,6 +224,15 @@ impl PlanLedger {
             EngineCmd::SetOnline { worker, up } => self.offline[worker] = !up,
             EngineCmd::SetClockSkew { worker, skew_s } => {
                 self.skew[worker] = skew_s.clamp(0.0, 600.0);
+            }
+            EngineCmd::Handoff { worker, from_rack, to_rack } => {
+                // exactly the engine's guard: stale handoffs (wrong
+                // from_rack) and self-handoffs are no-ops, to_rack is
+                // normalized into the rack ring
+                let to = to_rack % events::RACKS;
+                if self.racks[worker] == from_rack && to != from_rack {
+                    self.racks[worker] = to;
+                }
             }
             _ => {}
         }
@@ -236,6 +264,7 @@ fn sabotage(event: &ChaosEvent, cmds: Vec<EngineCmd>, bug: BugKind) -> Vec<Engin
                 other => other,
             })
             .collect(),
+        (BugKind::DropHandoff, ChaosEvent::Handoff { .. }) => Vec::new(),
         _ => cmds,
     }
 }
@@ -291,7 +320,11 @@ pub fn run_chaos(
     // the comparison is only meaningful when neither is active (the
     // ledger-replay-consistent oracle still audits scaling commands —
     // they carry the Autoscale origin in the engine's own ledger).
-    let track_plan_state = cfg.cluster.churn_rate == 0.0 && cfg.traffic.autoscale.is_none();
+    // (Battery exhaustion likewise crashes workers outside the plan, so a
+    // battery-powered fleet stands the availability comparison down.)
+    let track_plan_state = cfg.cluster.churn_rate == 0.0
+        && cfg.traffic.autoscale.is_none()
+        && cfg.cluster.battery_wh.is_none();
     let n_workers = broker.engine.workers();
     let mut plan_ledger = PlanLedger::new(n_workers);
 
@@ -320,6 +353,7 @@ pub fn run_chaos(
             state: &mut oracle_state,
             expected_offline: track_plan_state.then_some(plan_ledger.offline.as_slice()),
             expected_skew: track_plan_state.then_some(plan_ledger.skew.as_slice()),
+            expected_racks: track_plan_state.then_some(plan_ledger.racks.as_slice()),
             paranoid: opts.paranoid,
         };
         violations.extend(check_interval(&mut ctx));
@@ -335,6 +369,13 @@ pub fn run_chaos(
     }
 
     let summary = broker.metrics.summary(cfg.policy.name());
+    let energy_wh = crate::util::accum::sum(broker.metrics.energy_wh.iter().copied());
+    let mean_aec = if broker.metrics.aec.is_empty() {
+        0.0
+    } else {
+        crate::util::accum::sum(broker.metrics.aec.iter().copied())
+            / broker.metrics.aec.len() as f64
+    };
     Ok(ChaosOutcome {
         violations,
         signatures,
@@ -347,6 +388,8 @@ pub fn run_chaos(
         scale_up: broker.scale_up,
         scale_down: broker.scale_down,
         response_ema: broker.metrics.response_ema(0.9),
+        energy_wh,
+        mean_aec,
         summary,
     })
 }
@@ -546,6 +589,78 @@ mod tests {
         // the same plan without the bug is green
         let fixed = run_chaos(&cfg, &plan, &ChaosOptions::default(), None).unwrap();
         assert!(fixed.violations.is_empty(), "{:?}", fixed.violations);
+    }
+
+    #[test]
+    fn handoff_run_is_green_deterministic_and_dropped_handoffs_are_caught() {
+        let cfg = chaos_cfg(8, 2.0);
+        let n = cfg.cluster.total_workers();
+        let racks = events::initial_racks(n);
+        // re-home three workers mid-run, one of them twice
+        let plan = FaultPlan::empty(9, 8).with_events(vec![
+            TimedEvent {
+                t: 1,
+                event: ChaosEvent::Handoff {
+                    worker: 0,
+                    from_rack: racks[0],
+                    to_rack: (racks[0] + 1) % events::RACKS,
+                },
+            },
+            TimedEvent {
+                t: 2,
+                event: ChaosEvent::Handoff {
+                    worker: n - 1,
+                    from_rack: racks[n - 1],
+                    to_rack: (racks[n - 1] + 2) % events::RACKS,
+                },
+            },
+            TimedEvent {
+                t: 4,
+                event: ChaosEvent::Handoff {
+                    worker: 0,
+                    from_rack: (racks[0] + 1) % events::RACKS,
+                    to_rack: racks[0],
+                },
+            },
+        ]);
+        let opts = ChaosOptions { paranoid: true, ..Default::default() };
+        let out = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        assert!(out.violations.is_empty(), "faithful handoffs stay green: {:?}", out.violations);
+        assert!(out.admitted > 0);
+        let replay = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        assert_eq!(out.signatures, replay.signatures, "handoff runs must replay identically");
+
+        // sabotage: the handoff command list is emptied — the engine's
+        // rack map diverges from the plan ledger's mirror
+        let opts = ChaosOptions { bug: Some(BugKind::DropHandoff), ..Default::default() };
+        let out = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        assert!(
+            out.violated_oracles().contains(&"handoff-preserves-progress"),
+            "dropped handoff must be caught: {:?}",
+            out.violated_oracles()
+        );
+    }
+
+    #[test]
+    fn battery_fleet_dies_for_good_and_replays_identically() {
+        let mut cfg = chaos_cfg(10, 2.0);
+        cfg.cluster.battery_wh = Some(30.0);
+        let plan = FaultPlan::empty(3, 10);
+        let opts = ChaosOptions { paranoid: true, ..Default::default() };
+        let out = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        // battery deaths are engine-initiated: the plan-state oracles
+        // stand down and the run stays green
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        let last = out.signatures.last().unwrap();
+        assert!(last.offline > 0, "a 30 Wh battery must exhaust within 10 idle-ish intervals");
+        // offline counts are monotone: nothing resurrects a dead battery
+        for pair in out.signatures.windows(2) {
+            assert!(pair[1].offline >= pair[0].offline, "battery deaths must be permanent");
+        }
+        assert!(out.energy_wh > 0.0);
+        assert!(out.mean_aec > 0.0 && out.mean_aec < 1.0);
+        let replay = run_chaos(&cfg, &plan, &opts, None).unwrap();
+        assert_eq!(out.signatures, replay.signatures, "battery runs must replay identically");
     }
 
     #[test]

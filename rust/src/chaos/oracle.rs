@@ -19,12 +19,12 @@
 use std::collections::HashSet;
 
 use crate::sim::{
-    Container, ContainerState, Effect, Engine, EngineCmd, FaultSurface, IntervalReport,
-    RAM_OVERCOMMIT,
+    Container, ContainerState, Effect, Engine, EngineCmd, FaultSurface, HandoffAudit,
+    IntervalReport, RAM_OVERCOMMIT,
 };
 
 /// All invariant names, in evaluation order.
-pub const ORACLES: [&str; 13] = [
+pub const ORACLES: [&str; 14] = [
     "task-conservation",
     "allocation-capacity",
     "chain-precedence",
@@ -38,6 +38,7 @@ pub const ORACLES: [&str; 13] = [
     "clock-skew-applied",
     "payload-corruption-handled",
     "ledger-replay-consistent",
+    "handoff-preserves-progress",
 ];
 
 pub fn describe(oracle: &str) -> &'static str {
@@ -62,9 +63,13 @@ pub fn describe(oracle: &str) -> &'static str {
             "replaying the engine's own command ledger onto a fresh surface reproduces its \
              online/mips/ram/skew state"
         }
+        "handoff-preserves-progress" => {
+            "mobility handoffs keep rack state in lockstep with the plan, audit cleanly, \
+             and never lose recorded container progress"
+        }
         "paranoid-divergence" => {
             "full-scan and index-backed oracle derivations returned different verdicts \
-             (--paranoid cross-check; not one of the 13 invariants)"
+             (--paranoid cross-check; not one of the 14 invariants)"
         }
         _ => "unknown invariant",
     }
@@ -368,6 +373,124 @@ pub fn ledger_replay_full(engine: &Engine) -> Vec<String> {
     surface_divergence_detail(engine, &replayed).into_iter().collect()
 }
 
+/// Permanent `handoff-preserves-progress` details of one audit record:
+/// structural well-formedness plus duplicate detection against `seen`.
+/// Everything checked here is immutable after the audit is taken (worker
+/// count, rack geometry, container↦task ownership, `mi_total`), so a
+/// malformed or duplicate audit never heals: the indexed path accumulates
+/// these details once at absorption and re-emits them every interval,
+/// exactly what the full-log twin re-derives from scratch.
+fn handoff_audit_details(
+    engine: &Engine,
+    a: &HandoffAudit,
+    seen: &mut HashSet<(usize, usize, usize, usize)>,
+    out: &mut Vec<String>,
+) {
+    let racks = crate::chaos::events::RACKS;
+    if a.worker >= engine.workers() {
+        out.push(format!(
+            "handoff audit at interval {}: unknown worker {}",
+            a.interval, a.worker
+        ));
+    }
+    if a.from_rack >= racks || a.to_rack >= racks || a.from_rack == a.to_rack {
+        out.push(format!(
+            "handoff audit at interval {} (worker {}): bad rack pair {} -> {}",
+            a.interval, a.worker, a.from_rack, a.to_rack
+        ));
+    }
+    for pair in a.residents.windows(2) {
+        if pair[0].0 >= pair[1].0 {
+            out.push(format!(
+                "handoff audit at interval {} (worker {}): residents not ascending by id",
+                a.interval, a.worker
+            ));
+            break;
+        }
+    }
+    for &(cid, task_id, mi_at) in &a.residents {
+        let Some(c) = engine.containers().get(cid) else {
+            out.push(format!(
+                "handoff audit at interval {} (worker {}): unknown container {cid}",
+                a.interval, a.worker
+            ));
+            continue;
+        };
+        if c.task_id != task_id {
+            out.push(format!(
+                "handoff audit at interval {} (worker {}): container {cid} belongs to \
+                 task {}, audit charged task {task_id}",
+                a.interval, a.worker, c.task_id
+            ));
+        }
+        if !mi_at.is_finite() || mi_at < 0.0 || mi_at > c.mi_total + 1e-9 {
+            out.push(format!(
+                "handoff audit at interval {} (worker {}): container {cid} recorded \
+                 {mi_at} MI outside [0, {}]",
+                a.interval, a.worker, c.mi_total
+            ));
+        }
+    }
+    if !seen.insert((a.interval, a.worker, a.from_rack, a.to_rack)) {
+        out.push(format!(
+            "duplicate handoff audit: worker {} {} -> {} applied twice at interval {} \
+             (the second application is stale and must Noop)",
+            a.worker, a.from_rack, a.to_rack, a.interval
+        ));
+    }
+}
+
+/// Fresh `handoff-preserves-progress` details: every resident recorded at
+/// a **this-interval** handoff must still hold at least its recorded
+/// progress — a re-home that loses completed work shows up here.
+/// Residents no longer on the audited worker (evicted by a later crash in
+/// the same interval) are skipped unless Done: their progress loss is the
+/// crash's, not the handoff's. Past-interval audits cannot be re-derived
+/// (progress legitimately moves on), so both twins evaluate only
+/// `now`-interval audits and stay exactly equal.
+fn handoff_progress_over<'a>(
+    engine: &Engine,
+    audits: impl Iterator<Item = &'a HandoffAudit>,
+    now: usize,
+    out: &mut Vec<String>,
+) {
+    for a in audits {
+        if a.interval != now {
+            continue;
+        }
+        for &(cid, task_id, mi_at) in &a.residents {
+            let Some(c) = engine.containers().get(cid) else {
+                continue;
+            };
+            if c.worker != Some(a.worker) && !c.is_done() {
+                continue;
+            }
+            if c.mi_done + 1e-9 < mi_at {
+                out.push(format!(
+                    "handoff of worker {} at interval {now} lost progress: container \
+                     {cid} (task {task_id}) had {mi_at} MI recorded, holds {} now",
+                    a.worker, c.mi_done
+                ));
+            }
+        }
+    }
+}
+
+/// `handoff-preserves-progress` from the whole audit log (the paranoid
+/// twin): re-derives every permanent detail with a fresh duplicate set,
+/// then the fresh progress details for `now`-interval audits — the exact
+/// sequence the indexed accumulation emits (permanent details in audit
+/// order, then fresh ones).
+pub fn handoff_audit_full(engine: &Engine, now: usize) -> Vec<String> {
+    let mut seen = HashSet::new();
+    let mut out = Vec::new();
+    for a in engine.handoff_audits() {
+        handoff_audit_details(engine, a, &mut seen, &mut out);
+    }
+    handoff_progress_over(engine, engine.handoff_audits().iter(), now, &mut out);
+    out
+}
+
 impl std::fmt::Display for Violation {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "[{}] interval {}: {}", self.oracle, self.interval, self.detail)
@@ -394,6 +517,16 @@ pub struct OracleState {
     /// Incremental replay of the command ledger (`None` until the first
     /// check initializes it with the run's worker count).
     replayed: Option<FaultSurface>,
+    /// Handoff audits `[..audit_cursor]` have been absorbed.
+    audit_cursor: usize,
+    /// `(interval, worker, from, to)` keys of absorbed handoff audits —
+    /// a repeat means one handoff applied twice (impossible on a correct
+    /// engine: the second application is stale and Noops unaudited).
+    handoff_seen: HashSet<(usize, usize, usize, usize)>,
+    /// Permanent handoff-audit details (malformed or duplicate audits
+    /// never heal), in audit order; re-emitted every interval exactly as
+    /// the full-log twin re-derives them.
+    handoff_bad: Vec<String>,
 }
 
 impl OracleState {
@@ -429,6 +562,11 @@ pub struct OracleCtx<'a> {
     /// Per-worker clock-skew seconds the plan currently holds active
     /// (post-clamp); None disables the check.
     pub expected_skew: Option<&'a [f64]>,
+    /// Per-worker rack homes replayed from the fault plan's handoff
+    /// ledger (see [`super::PlanLedger`]); None when plan tracking is off
+    /// (churn, autoscaling or battery can re-shape availability, though
+    /// racks themselves only ever move through handoff commands).
+    pub expected_racks: Option<&'a [usize]>,
     /// Run the retained full-scan twins side by side with the indexed
     /// derivations and emit a `paranoid-divergence` violation on any
     /// verdict mismatch. Costs the pre-migration O(pool + ledger) per
@@ -672,6 +810,44 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
         fail("ledger-replay-consistent", detail);
     }
 
+    // -- handoff-preserves-progress -------------------------------------------
+    // Audits the engine's handoff log incrementally: new audits since the
+    // cursor are checked for permanent defects (malformed geometry,
+    // mis-charged tasks, duplicates — none of which heal, so they keep
+    // firing like the full-log walk would), and every resident recorded
+    // at a this-interval handoff must still hold its recorded progress —
+    // a re-home that loses completed work or double-charges a task fails
+    // here. With plan tracking on, the engine's rack map must equal the
+    // plan's replayed handoff ledger: a dropped handoff diverges even
+    // when the worker carried no containers.
+    let audits = ctx.engine.handoff_audits();
+    let fresh_from = ctx.state.audit_cursor;
+    for a in &audits[fresh_from..] {
+        handoff_audit_details(
+            ctx.engine,
+            a,
+            &mut ctx.state.handoff_seen,
+            &mut ctx.state.handoff_bad,
+        );
+    }
+    ctx.state.audit_cursor = audits.len();
+    let mut handoff_details = ctx.state.handoff_bad.clone();
+    handoff_progress_over(ctx.engine, audits[fresh_from..].iter(), t, &mut handoff_details);
+    for detail in &handoff_details {
+        fail("handoff-preserves-progress", detail.clone());
+    }
+    if let Some(expected) = ctx.expected_racks {
+        let racks = ctx.engine.rack_of();
+        for (w, (&exp, &got)) in expected.iter().zip(racks).enumerate() {
+            if exp != got {
+                fail(
+                    "handoff-preserves-progress",
+                    format!("worker {w}: plan homes it in rack {exp}, engine holds rack {got}"),
+                );
+            }
+        }
+    }
+
     // -- paranoid: full-scan twins vs the indexed verdicts --------------------
     // Re-derives every migrated verdict from the pre-migration full scans
     // and hard-fails on ANY difference — including a full scan catching
@@ -679,7 +855,7 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
     // is deliberately broader; see its doc).
     if ctx.paranoid {
         let eng = ctx.engine;
-        let twins: [(&'static str, Vec<String>, Vec<String>); 4] = [
+        let twins: [(&'static str, Vec<String>, Vec<String>); 5] = [
             ("chain-precedence", chain_precedence_full(eng), chain_precedence_indexed(eng)),
             (
                 "crashed-workers-idle",
@@ -692,6 +868,7 @@ pub fn check_interval(ctx: &mut OracleCtx) -> Vec<Violation> {
                 allocation_capacity_indexed(eng),
             ),
             ("payload-corruption-handled", payload_corruption_full(eng), corruption_details),
+            ("handoff-preserves-progress", handoff_audit_full(eng, t), handoff_details),
         ];
         for (oracle, full, indexed) in twins {
             if full != indexed {
@@ -785,6 +962,7 @@ mod tests {
             state: &mut state,
             expected_offline: None,
             expected_skew: None,
+            expected_racks: None,
             paranoid: true,
         };
         let v = check_interval(&mut ctx);
@@ -805,6 +983,7 @@ mod tests {
             state: &mut state,
             expected_offline: None,
             expected_skew: None,
+            expected_racks: None,
             paranoid: false,
         };
         let v = check_interval(&mut ctx);
@@ -829,6 +1008,7 @@ mod tests {
             state: &mut state,
             expected_offline: None,
             expected_skew: None,
+            expected_racks: None,
             paranoid: true,
         };
         let v = check_interval(&mut ctx);
@@ -862,6 +1042,7 @@ mod tests {
             state: &mut state,
             expected_offline: None,
             expected_skew: None,
+            expected_racks: None,
             paranoid: false,
         };
         let v = check_interval(&mut ctx);
@@ -887,6 +1068,7 @@ mod tests {
             state: &mut state,
             expected_offline: Some(&expected),
             expected_skew: None,
+            expected_racks: None,
             paranoid: false,
         };
         let v = check_interval(&mut ctx);
@@ -914,6 +1096,7 @@ mod tests {
                 state: &mut state,
                 expected_offline: None,
                 expected_skew: Some(&expected),
+                expected_racks: None,
                 paranoid: false,
             };
             let v = check_interval(&mut ctx);
@@ -929,6 +1112,7 @@ mod tests {
             state: &mut state,
             expected_offline: None,
             expected_skew: Some(&expected),
+            expected_racks: None,
             paranoid: false,
         };
         let v = check_interval(&mut ctx);
@@ -956,6 +1140,7 @@ mod tests {
                 state: &mut state,
                 expected_offline: None,
                 expected_skew: None,
+                expected_racks: None,
                 paranoid: true,
             };
             check_interval(&mut ctx)
@@ -991,6 +1176,7 @@ mod tests {
                 state: &mut state,
                 expected_offline: None,
                 expected_skew: None,
+                expected_racks: None,
                 paranoid: true,
             };
             let v = check_interval(&mut ctx);
@@ -1021,6 +1207,7 @@ mod tests {
             state: &mut state,
             expected_offline: None,
             expected_skew: None,
+            expected_racks: None,
             paranoid: true,
         };
         let v = check_interval(&mut ctx);
@@ -1033,12 +1220,139 @@ mod tests {
     }
 
     #[test]
+    fn handoff_oracle_green_on_correct_engine_and_catches_plan_divergence() {
+        use crate::chaos::events::initial_racks;
+        let mut e = engine();
+        e.admit(task(0), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 0)]); // transferring toward worker 0, rack 0
+        let from = e.rack_of()[0];
+        let to = (from + 1) % crate::chaos::events::RACKS;
+        e.apply(EngineCmd::Handoff { worker: 0, from_rack: from, to_rack: to });
+        let mut expected = initial_racks(e.workers());
+        expected[0] = to;
+        let mut state = OracleState::new();
+        // a faithful handoff is green across several intervals, paranoid
+        // twins included (the audit's permanent details are re-derived
+        // from the whole log each time)
+        for _ in 0..3 {
+            let report = e.step_interval();
+            let mut ctx = OracleCtx {
+                engine: &e,
+                report: &report,
+                admitted: 1,
+                mab_decisions: None,
+                state: &mut state,
+                expected_offline: None,
+                expected_skew: None,
+                expected_racks: Some(&expected),
+                paranoid: true,
+            };
+            let v = check_interval(&mut ctx);
+            assert!(v.is_empty(), "faithful handoff must stay green: {v:?}");
+        }
+        // plan says the handoff never happened (a dropped-handoff bug in
+        // reverse): the rack mirror diverges
+        expected[0] = from;
+        let report = e.step_interval();
+        let mut ctx = OracleCtx {
+            engine: &e,
+            report: &report,
+            admitted: 1,
+            mab_decisions: None,
+            state: &mut state,
+            expected_offline: None,
+            expected_skew: None,
+            expected_racks: Some(&expected),
+            paranoid: true,
+        };
+        let v = check_interval(&mut ctx);
+        assert!(
+            v.iter().any(|v| v.oracle == "handoff-preserves-progress"
+                && v.detail.contains("worker 0")),
+            "rack divergence must be caught: {v:?}"
+        );
+        assert!(v.iter().all(|v| v.oracle != "paranoid-divergence"), "{v:?}");
+    }
+
+    #[test]
+    fn handoff_audit_defects_are_flagged_permanently() {
+        let e = engine();
+        let good = crate::sim::HandoffAudit {
+            interval: 0,
+            worker: 1,
+            from_rack: 0,
+            to_rack: 1,
+            residents: Vec::new(),
+        };
+        let mut seen = HashSet::new();
+        let mut out = Vec::new();
+        handoff_audit_details(&e, &good, &mut seen, &mut out);
+        assert!(out.is_empty(), "well-formed audit is quiet: {out:?}");
+        // the same audit absorbed twice = one handoff applied twice
+        handoff_audit_details(&e, &good, &mut seen, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("duplicate handoff audit"), "{out:?}");
+        // self-handoffs, out-of-range racks, unknown workers/containers
+        let bad = crate::sim::HandoffAudit {
+            interval: 0,
+            worker: e.workers() + 7,
+            from_rack: 2,
+            to_rack: 2,
+            residents: vec![(999, 0, 1.0), (3, 0, -1.0)],
+        };
+        let mut out = Vec::new();
+        handoff_audit_details(&e, &bad, &mut HashSet::new(), &mut out);
+        assert!(out.iter().any(|d| d.contains("unknown worker")), "{out:?}");
+        assert!(out.iter().any(|d| d.contains("bad rack pair")), "{out:?}");
+        assert!(out.iter().any(|d| d.contains("not ascending")), "{out:?}");
+        assert!(out.iter().any(|d| d.contains("unknown container 999")), "{out:?}");
+    }
+
+    #[test]
+    fn handoff_progress_loss_is_flagged_only_for_current_interval_audits() {
+        let mut e = engine();
+        e.admit(task(0), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 0)]);
+        e.step_interval();
+        let held = e.containers()[0].mi_done;
+        // an audit claiming the container held MORE than it does = the
+        // handoff lost progress
+        let lossy = crate::sim::HandoffAudit {
+            interval: 1,
+            worker: 0,
+            from_rack: 0,
+            to_rack: 1,
+            residents: vec![(0, 0, held + 5.0)],
+        };
+        let mut out = Vec::new();
+        handoff_progress_over(&e, std::iter::once(&lossy), 1, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("lost progress"), "{out:?}");
+        // a past-interval audit is not re-derivable: quiet
+        let mut out = Vec::new();
+        handoff_progress_over(&e, std::iter::once(&lossy), 2, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // a resident evicted off the audited worker is the crash's loss,
+        // not the handoff's: quiet
+        let moved = crate::sim::HandoffAudit {
+            interval: 1,
+            worker: 3,
+            from_rack: 0,
+            to_rack: 1,
+            residents: vec![(0, 0, held + 5.0)],
+        };
+        let mut out = Vec::new();
+        handoff_progress_over(&e, std::iter::once(&moved), 1, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
     fn every_oracle_has_a_description() {
         for o in ORACLES {
             assert_ne!(describe(o), "");
         }
         // the paranoid cross-check label is describable but is NOT one of
-        // the 13 invariants (it names a twin divergence, not an engine bug)
+        // the 14 invariants (it names a twin divergence, not an engine bug)
         assert!(!ORACLES.contains(&"paranoid-divergence"));
         assert_ne!(describe("paranoid-divergence"), "unknown invariant");
     }

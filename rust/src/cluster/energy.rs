@@ -35,12 +35,32 @@ pub fn fleet_energy_wh(specs: &[&NodeType], utils: &[f64], seconds: f64) -> f64 
 /// slice form (bit-identical for the same spec sequence), but callers can
 /// feed worker specs straight from their own storage without building a
 /// per-interval `Vec<&NodeType>`.
+///
+/// **Contract:** `specs` must yield exactly `utils.len()` items — one
+/// utilization per worker spec. The zip would silently truncate the sum
+/// to the shorter sequence on a mismatch, so the pairing is a checked
+/// invariant (debug builds assert it).
 pub fn fleet_energy_wh_over<'a>(
     specs: impl Iterator<Item = &'a NodeType>,
     utils: &[f64],
     seconds: f64,
 ) -> f64 {
-    specs.zip(utils).map(|(s, &u)| energy_wh(s, u, seconds)).sum()
+    let mut paired = 0usize;
+    let total = specs
+        .zip(utils)
+        .map(|(s, &u)| {
+            paired += 1;
+            energy_wh(s, u, seconds)
+        })
+        .sum();
+    debug_assert_eq!(
+        paired,
+        utils.len(),
+        "fleet_energy_wh_over: {paired} specs paired with {} utils — \
+         the spec iterator ran short and the sum was truncated",
+        utils.len()
+    );
+    total
 }
 
 /// Normalized average energy consumption (AEC ∈ [0,1]) for the reward in
@@ -51,13 +71,100 @@ pub fn normalized_aec(specs: &[&NodeType], utils: &[f64], seconds: f64) -> f64 {
 
 /// Iterator-generic AEC (see [`fleet_energy_wh_over`]): both the actual
 /// and the peak-power fold keep the slice form's exact order.
+///
+/// **Contract:** `specs` must yield exactly `utils.len()` items. The
+/// `actual` numerator pairs specs with utils while the peak-power
+/// denominator consumes *every* spec, so a longer spec iterator would
+/// silently deflate AEC (truncated numerator over a full denominator) —
+/// the length match is a checked invariant (debug builds assert it).
 pub fn normalized_aec_over<'a>(
     specs: impl Iterator<Item = &'a NodeType> + Clone,
     utils: &[f64],
     seconds: f64,
 ) -> f64 {
     let actual = fleet_energy_wh_over(specs.clone(), utils, seconds);
-    let max: f64 = specs.map(|s| s.peak_watts * seconds / 3600.0).sum();
+    let mut n_specs = 0usize;
+    let max: f64 = specs
+        .map(|s| {
+            n_specs += 1;
+            s.peak_watts * seconds / 3600.0
+        })
+        .sum();
+    debug_assert_eq!(
+        n_specs,
+        utils.len(),
+        "normalized_aec_over: {n_specs} specs vs {} utils — actual energy \
+         zips (truncates) while the peak denominator sums all specs, \
+         silently deflating AEC on any mismatch",
+        utils.len()
+    );
+    if max == 0.0 {
+        0.0
+    } else {
+        actual / max
+    }
+}
+
+/// AEC with offline gating: like [`normalized_aec_over`], but a worker
+/// whose `online` flag is down contributes **0 W** to the numerator — a
+/// crashed, parked, or battery-dead machine draws nothing, it does not
+/// idle. The denominator stays the full fleet at peak, so taking workers
+/// down *lowers* AEC rather than renormalizing it away.
+///
+/// Bit-compatibility: the numerator keeps the same left-to-right `sum()`
+/// fold as [`fleet_energy_wh_over`], emitting a literal `0.0` for offline
+/// workers. Adding `0.0` to a non-negative running sum is bit-identical
+/// to skipping the term, so on an all-online fleet this returns exactly
+/// the same bits as the ungated form.
+///
+/// **Contract:** `specs` must yield exactly `utils.len()` items and
+/// `online.len()` must match (debug builds assert both).
+pub fn normalized_aec_gated_over<'a>(
+    specs: impl Iterator<Item = &'a NodeType> + Clone,
+    utils: &[f64],
+    online: &[bool],
+    seconds: f64,
+) -> f64 {
+    debug_assert_eq!(
+        utils.len(),
+        online.len(),
+        "normalized_aec_gated_over: {} utils vs {} online flags",
+        utils.len(),
+        online.len()
+    );
+    let mut paired = 0usize;
+    let actual: f64 = specs
+        .clone()
+        .zip(utils.iter().zip(online))
+        .map(|(s, (&u, &up))| {
+            paired += 1;
+            if up {
+                energy_wh(s, u, seconds)
+            } else {
+                0.0
+            }
+        })
+        .sum();
+    let mut n_specs = 0usize;
+    let max: f64 = specs
+        .map(|s| {
+            n_specs += 1;
+            s.peak_watts * seconds / 3600.0
+        })
+        .sum();
+    debug_assert_eq!(
+        paired,
+        utils.len(),
+        "normalized_aec_gated_over: {paired} specs paired with {} utils — \
+         the spec iterator ran short and the numerator was truncated",
+        utils.len()
+    );
+    debug_assert_eq!(
+        n_specs,
+        utils.len(),
+        "normalized_aec_gated_over: {n_specs} specs vs {} utils",
+        utils.len()
+    );
     if max == 0.0 {
         0.0
     } else {
@@ -114,5 +221,55 @@ mod tests {
         let full = normalized_aec(&specs, &[1.0; 4], 300.0);
         assert!(idle > 0.0 && idle < full);
         assert!((full - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gated_aec_matches_ungated_bits_when_all_online() {
+        let specs: Vec<&NodeType> = NODE_TYPES.iter().collect();
+        let utils = [0.0, 0.3, 0.7, 1.0];
+        let gated = normalized_aec_gated_over(specs.iter().copied(), &utils, &[true; 4], 300.0);
+        let ungated = normalized_aec(&specs, &utils, 300.0);
+        assert_eq!(
+            gated.to_bits(),
+            ungated.to_bits(),
+            "all-online gated AEC must be bit-identical to the ungated fold"
+        );
+    }
+
+    #[test]
+    fn gated_aec_drops_offline_workers_from_the_numerator_only() {
+        let specs: Vec<&NodeType> = NODE_TYPES.iter().collect();
+        let utils = [1.0; 4];
+        let all_on = normalized_aec_gated_over(specs.iter().copied(), &utils, &[true; 4], 300.0);
+        let one_off =
+            normalized_aec_gated_over(specs.iter().copied(), &utils, &[true, true, true, false], 300.0);
+        assert!(one_off < all_on, "an offline worker must draw 0 W: {one_off} vs {all_on}");
+        // denominator unchanged: the missing share is exactly worker 3's peak
+        let peak_sum: f64 = NODE_TYPES.iter().map(|s| s.peak_watts).sum();
+        let expected = (peak_sum - NODE_TYPES[3].peak_watts) / peak_sum;
+        assert!((one_off - expected).abs() < 1e-12);
+        // all offline → zero energy, not NaN
+        let none = normalized_aec_gated_over(specs.iter().copied(), &utils, &[false; 4], 300.0);
+        assert_eq!(none, 0.0);
+    }
+
+    /// Regression: a spec iterator longer than `utils` used to zip-truncate
+    /// the actual-energy numerator while the peak denominator summed every
+    /// spec, silently deflating AEC (an all-peak fleet reported < 1.0).
+    /// The length mismatch is now a checked invariant.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "normalized_aec_over")]
+    fn aec_spec_util_length_mismatch_is_rejected() {
+        // 4 specs, 3 utils: the truncated fold would have returned ~3/4
+        normalized_aec_over(NODE_TYPES.iter(), &[1.0; 3], 300.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "fleet_energy_wh_over")]
+    fn fleet_energy_short_spec_iterator_is_rejected() {
+        // 4 specs, 5 utils: the spec side runs short and the sum truncates
+        fleet_energy_wh_over(NODE_TYPES.iter(), &[1.0; 5], 300.0);
     }
 }

@@ -14,6 +14,18 @@
 
 use crate::util::rng::Rng;
 
+/// Ceiling on the ping multiplier any channel state can carry — the single
+/// source both the OU walk's clamp ([`MobilityModel`]) and the blackout
+/// state ([`ChannelState::BLACKOUT`]) read, so "an outage is at least as
+/// bad as the worst reachable signal" holds by construction, not by two
+/// literals staying in sync.
+pub const PING_MAX: f64 = 6.0;
+
+/// Floor on the bandwidth factor the OU walk can reach. A blackout's
+/// bandwidth sits strictly below this, keeping the outage dominance claim
+/// structural on both axes.
+pub const BW_MIN: f64 = 0.25;
+
 /// Per-interval channel state of one worker.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ChannelState {
@@ -29,7 +41,7 @@ impl ChannelState {
     /// Worst-case channel during an injected network blackout: ping pinned
     /// at the mobility ceiling, bandwidth well below the OU floor (a real
     /// outage is worse than any bad-signal state the OU walk can reach).
-    pub const BLACKOUT: ChannelState = ChannelState { ping_mult: 6.0, bw_factor: 0.05 };
+    pub const BLACKOUT: ChannelState = ChannelState { ping_mult: PING_MAX, bw_factor: 0.05 };
 }
 
 /// Mobility trace generator for a fleet.
@@ -58,8 +70,8 @@ impl MobilityModel {
             theta: 0.25,
             sigma: 0.18,
             mu: 0.75,
-            ping_max: 6.0,
-            bw_min: 0.25,
+            ping_max: PING_MAX,
+            bw_min: BW_MIN,
         }
     }
 
@@ -124,6 +136,31 @@ mod tests {
         assert_eq!(t1, t2);
         let t3 = MobilityModel::new(&[true, true], 8).trace(20);
         assert_ne!(t1, t3);
+    }
+
+    /// The dominance claim behind [`ChannelState::BLACKOUT`]: an injected
+    /// outage must be at least as bad as ANY state the OU walk can reach —
+    /// ping at the shared ceiling, bandwidth strictly below the OU floor.
+    /// Both sides now read the same consts, so this pins the coupling.
+    #[test]
+    fn blackout_dominates_every_reachable_ou_state() {
+        assert_eq!(ChannelState::BLACKOUT.ping_mult, PING_MAX);
+        assert!(ChannelState::BLACKOUT.bw_factor < BW_MIN);
+        let mut m = MobilityModel::new(&[true, true, true], 11);
+        for states in m.trace(500) {
+            for s in states {
+                assert!(
+                    s.ping_mult <= ChannelState::BLACKOUT.ping_mult,
+                    "OU ping {} exceeds the blackout ceiling",
+                    s.ping_mult
+                );
+                assert!(
+                    s.bw_factor >= BW_MIN && s.bw_factor > ChannelState::BLACKOUT.bw_factor,
+                    "OU bandwidth {} at or below the blackout floor",
+                    s.bw_factor
+                );
+            }
+        }
     }
 
     #[test]

@@ -110,6 +110,10 @@ pub struct Cluster {
     pub workers: Vec<Worker>,
     pub tier: Tier,
     pub constraint: EnvConstraint,
+    /// Per-worker battery capacity (Wh); `None` = grid-powered. Carried
+    /// from [`ClusterConfig::battery_wh`] so the engine can seed its
+    /// battery plane without re-reading the config.
+    pub battery_wh: Option<f64>,
 }
 
 impl Cluster {
@@ -163,7 +167,7 @@ pub fn build_fleet(cfg: &ClusterConfig) -> Cluster {
             });
         }
     }
-    Cluster { workers, tier: cfg.tier, constraint: cfg.constraint }
+    Cluster { workers, tier: cfg.tier, constraint: cfg.constraint, battery_wh: cfg.battery_wh }
 }
 
 #[cfg(test)]
@@ -221,7 +225,11 @@ mod tests {
     fn compute_constraint_halves_mips() {
         let cfg = ClusterConfig { constraint: EnvConstraint::Compute, ..Default::default() };
         let c = build_fleet(&cfg);
-        let b2 = c.workers.iter().find(|w| w.spec.name == "B2ms").unwrap();
+        let b2 = c
+            .workers
+            .iter()
+            .find(|w| w.spec.name == "B2ms")
+            .expect("constrained default fleet must still contain a B2ms worker");
         assert_eq!(b2.spec.mips, 4029.0 / 2.0);
         assert_eq!(b2.spec.cores, 1);
         // other resources untouched

@@ -33,12 +33,18 @@ pub enum PolicyKind {
     /// (arXiv:2105.13618): online threshold policy over a per-strategy
     /// deadline-violation EMA with a learned switching cutoff.
     OnlineSplit,
+    /// Energy-aware placement (latency-vs-resource co-design,
+    /// arXiv:2107.09123): ModelCompression's splitter paired with the
+    /// `energy-fit` placer, which trades the best-fit score against the
+    /// marginal watts each worker would draw for the extra load.
+    EnergyFit,
 }
 
 impl PolicyKind {
-    pub fn all() -> [PolicyKind; 9] {
+    pub fn all() -> [PolicyKind; 10] {
         [
             PolicyKind::ModelCompression,
+            PolicyKind::EnergyFit,
             PolicyKind::Gillis,
             PolicyKind::LatMem,
             PolicyKind::OnlineSplit,
@@ -61,6 +67,7 @@ impl PolicyKind {
             PolicyKind::ModelCompression => "ModelCompression",
             PolicyKind::LatMem => "LatMem",
             PolicyKind::OnlineSplit => "OnlineSplit",
+            PolicyKind::EnergyFit => "EnergyFit",
         }
     }
 
@@ -77,6 +84,7 @@ impl PolicyKind {
             "mc" | "modelcompression" | "model-compression" => PolicyKind::ModelCompression,
             "latmem" | "lat-mem" | "latency-memory" => PolicyKind::LatMem,
             "onlinesplit" | "online-split" | "online" => PolicyKind::OnlineSplit,
+            "energyfit" | "energy-fit" => PolicyKind::EnergyFit,
             _ => return None,
         })
     }
@@ -127,6 +135,12 @@ pub struct ClusterConfig {
     /// toggles offline/online. Containers on a failing worker are
     /// checkpointed and requeued.
     pub churn_rate: f64,
+    /// Per-worker battery capacity in watt-hours; `None` = grid-powered
+    /// (the inert default — no battery state exists in the engine). When
+    /// set, every worker starts with this charge, drains it at the SPEC
+    /// power curve while online, and crashes for good on exhaustion
+    /// (`CmdOrigin::Battery`, never rejoined by the autoscaler).
+    pub battery_wh: Option<f64>,
     pub seed: u64,
 }
 
@@ -138,6 +152,7 @@ impl Default for ClusterConfig {
             tier: Tier::Edge,
             mobile_fraction: 0.5,
             churn_rate: 0.0,
+            battery_wh: None,
             seed: 42,
         }
     }
@@ -398,9 +413,8 @@ impl ExperimentConfig {
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("policy", Value::Str(self.policy.name().into())),
-            (
-                "cluster",
-                Value::obj(vec![
+            ("cluster", {
+                let mut fields = vec![
                     ("counts", Value::num_arr(&self.cluster.counts.map(|c| c as f64))),
                     ("constraint", Value::Str(self.cluster.constraint.name().into())),
                     (
@@ -415,8 +429,14 @@ impl ExperimentConfig {
                     ),
                     ("mobile_fraction", Value::Num(self.cluster.mobile_fraction)),
                     ("seed", Value::Num(self.cluster.seed as f64)),
-                ]),
-            ),
+                ];
+                // emitted only when set so grid-powered configs serialize
+                // byte-identically to the pre-battery schema
+                if let Some(b) = self.cluster.battery_wh {
+                    fields.push(("battery_wh", Value::Num(b)));
+                }
+                Value::obj(fields)
+            }),
             (
                 "workload",
                 Value::obj(vec![
@@ -534,6 +554,11 @@ impl ExperimentConfig {
             }
             if let Some(x) = c.get("seed") {
                 cfg.cluster.seed = x.as_f64()? as u64;
+            }
+            // absent → None: configs recorded before the battery plane
+            // existed parse unchanged
+            if let Some(x) = c.get("battery_wh") {
+                cfg.cluster.battery_wh = Some(x.as_f64()?);
             }
         }
         if let Some(w) = v.get("workload") {
@@ -734,6 +759,22 @@ mod tests {
         let s = c2.traffic.autoscale.unwrap();
         assert_eq!(s.min_online, 2);
         assert!((s.queue_hi - 3.0).abs() < 1e-12 && (s.queue_lo - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn battery_roundtrips_and_stays_out_of_default_json() {
+        let d = ExperimentConfig::default();
+        assert!(d.cluster.battery_wh.is_none(), "grid-powered by default");
+        // grid-powered configs serialize byte-identically to the
+        // pre-battery schema: no battery_wh key at all
+        let cluster = d.to_json();
+        let cluster = cluster.get("cluster").unwrap();
+        assert!(cluster.get("battery_wh").is_none());
+        assert!(ExperimentConfig::from_json(&d.to_json()).unwrap().cluster.battery_wh.is_none());
+        let mut c = ExperimentConfig::default();
+        c.cluster.battery_wh = Some(25.0);
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.cluster.battery_wh, Some(25.0));
     }
 
     #[test]

@@ -22,7 +22,9 @@ use crate::baselines::{GillisPolicy, McPolicy};
 use crate::cluster::build_fleet;
 use crate::config::{ExperimentConfig, MabConfig, PolicyKind};
 use crate::mab::{MabPolicy, Mode};
-use crate::placement::{Assignment, BestFitPlacer, GradientPlacer, Placer, PlacementInput};
+use crate::placement::{
+    Assignment, BestFitPlacer, EnergyAwarePlacer, GradientPlacer, Placer, PlacementInput,
+};
 use crate::runtime::{Runtime, Surrogate};
 use crate::sim::{CompletedTask, FailedTask, WorkerSnapshot, RAM_OVERCOMMIT};
 use crate::splits::{App, Precedence, Registry, SplitDecision, APPS};
@@ -557,6 +559,10 @@ impl PolicyKind {
                 policy: GillisPolicy::new(cfg.mab.seed ^ 0x61),
             }),
             PolicyKind::ModelCompression => Box::new(McSplitter::default()),
+            // energy-fit is a placement-side policy: it reuses the MC
+            // splitter so the energyfit~mc differential isolates the
+            // placer's contribution to AEC
+            PolicyKind::EnergyFit => Box::new(McSplitter::default()),
             PolicyKind::LatMem => Box::new(LatMemSplitter::new(cfg)),
             PolicyKind::OnlineSplit => Box::new(OnlineSplitSplitter::new(&cfg.mab)),
         };
@@ -590,6 +596,16 @@ impl PolicyKind {
                 }
                 None => anyhow::bail!("policy {:?} needs the PJRT runtime (artifacts)", self),
             }
+        } else if matches!(self, PolicyKind::EnergyFit) {
+            // marginal watts per worker (peak − idle of its node type),
+            // fixed at stack build — the placement input carries no specs
+            let fleet = build_fleet(&cfg.cluster);
+            let watts: Vec<f64> = fleet
+                .workers
+                .iter()
+                .map(|w| w.spec.peak_watts - w.spec.idle_watts)
+                .collect();
+            Box::new(EnergyAwarePlacer::new(&watts))
         } else {
             Box::new(BestFitPlacer::new())
         };
@@ -608,7 +624,12 @@ mod tests {
         for policy in PolicyKind::all() {
             let stack = policy.stack(&cfg, None, Mode::Test, true).unwrap();
             assert!(!stack.splitter_name().is_empty());
-            assert_eq!(stack.placer_name(), "best-fit", "{policy:?} fallback placer");
+            let placer = if matches!(policy, PolicyKind::EnergyFit) {
+                "energy-fit"
+            } else {
+                "best-fit"
+            };
+            assert_eq!(stack.placer_name(), placer, "{policy:?} fallback placer");
             assert!(!stack.learned_placer());
             assert!(stack.placer_stats().is_none());
         }
@@ -629,6 +650,7 @@ mod tests {
         for policy in [
             PolicyKind::Gillis,
             PolicyKind::ModelCompression,
+            PolicyKind::EnergyFit,
             PolicyKind::LatMem,
             PolicyKind::OnlineSplit,
         ] {

@@ -54,6 +54,10 @@ impl CellSummary {
         metrics.insert("accuracy".into(), s.accuracy);
         metrics.insert("avg_reward".into(), s.avg_reward);
         metrics.insert("energy_mwh".into(), s.energy_mwh);
+        // energy plane (ISSUE-10): total watt-hours and mean normalized
+        // AEC, golden-gated in every cell — offline workers draw 0 W
+        metrics.insert("energy_wh".into(), out.energy_wh);
+        metrics.insert("aec_mean".into(), out.mean_aec);
         CellSummary {
             cell: cell.id(),
             policy: super::scenario::policy_slug(cell.policy).to_string(),
@@ -91,6 +95,8 @@ impl CellSummary {
             metrics.insert(format!("{tag}_sla_violation_rate"), s.sla_violations);
             metrics.insert(format!("{tag}_accuracy"), s.accuracy);
             metrics.insert(format!("{tag}_avg_reward"), s.avg_reward);
+            metrics.insert(format!("{tag}_energy_wh"), out.energy_wh);
+            metrics.insert(format!("{tag}_aec_mean"), out.mean_aec);
         };
         side("a", a);
         side("b", b);
@@ -106,6 +112,10 @@ impl CellSummary {
         );
         metrics.insert("delta_accuracy".into(), a.summary.accuracy - b.summary.accuracy);
         metrics.insert("delta_completed".into(), a.completed as f64 - b.completed as f64);
+        // the energyfit~mc pair gates on these: the energy-aware placer
+        // should push both deltas negative without the reward delta caving
+        metrics.insert("delta_energy_wh".into(), a.energy_wh - b.energy_wh);
+        metrics.insert("delta_aec_mean".into(), a.mean_aec - b.mean_aec);
         metrics.insert(
             "oracle_violations".into(),
             (a.violations.len() + b.violations.len()) as f64,

@@ -43,6 +43,15 @@ pub enum Scenario {
     /// Every worker mobile: channels swing across the full OU range, plus
     /// seeded blackout episodes on top.
     MobilityHeavy,
+    /// Every worker mobile, with seeded rack handoffs chained off the
+    /// generator's own rack mirror (each `from_rack` is the rack the
+    /// engine actually holds when the event lands, so every handoff is
+    /// effectual and the plan-ledger oracle stays armed).
+    MobilityHandoff,
+    /// Finite per-worker batteries on an otherwise fault-free run: the
+    /// SPEC power curve drains them until workers die Battery-owned,
+    /// mid-horizon — the energy-fit placer's headline regime.
+    BatteryConstrained,
     /// Fault-free run on the ≈200-worker tier.
     MediumClean,
     /// Light chaos on the ≈200-worker tier.
@@ -79,12 +88,14 @@ pub enum Scenario {
 
 impl Scenario {
     /// The paper-scale regimes (10-worker fleet).
-    pub const BASE: [Scenario; 5] = [
+    pub const BASE: [Scenario; 7] = [
         Scenario::Clean,
         Scenario::ChaosLight,
         Scenario::ChaosHeavy,
         Scenario::FlashCrowd,
         Scenario::MobilityHeavy,
+        Scenario::MobilityHandoff,
+        Scenario::BatteryConstrained,
     ];
 
     /// The fleet-tier regimes (200/1000/5000/25 000-worker fleets).
@@ -109,12 +120,14 @@ impl Scenario {
         Scenario::CloudTier,
     ];
 
-    pub const ALL: [Scenario; 18] = [
+    pub const ALL: [Scenario; 20] = [
         Scenario::Clean,
         Scenario::ChaosLight,
         Scenario::ChaosHeavy,
         Scenario::FlashCrowd,
         Scenario::MobilityHeavy,
+        Scenario::MobilityHandoff,
+        Scenario::BatteryConstrained,
         Scenario::MediumClean,
         Scenario::MediumChaosLight,
         Scenario::LargeClean,
@@ -137,6 +150,8 @@ impl Scenario {
             Scenario::ChaosHeavy => "chaos-heavy",
             Scenario::FlashCrowd => "flash-crowd",
             Scenario::MobilityHeavy => "mobility-heavy",
+            Scenario::MobilityHandoff => "mobility-handoff",
+            Scenario::BatteryConstrained => "battery-constrained",
             Scenario::MediumClean => "medium-clean",
             Scenario::MediumChaosLight => "medium-chaos-light",
             Scenario::LargeClean => "large-clean",
@@ -306,6 +321,46 @@ impl Scenario {
                 cfg.traffic.shape = crate::traffic::TrafficShape::HeavyTail;
                 FaultPlan::empty(seed, intervals)
             }
+            Scenario::MobilityHandoff => {
+                cfg.cluster.mobile_fraction = 1.0;
+                // the generator mirrors the engine's rack state, so every
+                // emitted `from_rack` is the rack the worker actually
+                // occupies when the event fires — no handoff compiles to a
+                // Noop, and replaying the plan reproduces the same chain
+                let mut rng = Rng::new(mix(seed, 0xD0FF));
+                let mut racks = crate::chaos::events::initial_racks(n);
+                let mut events = Vec::new();
+                for t in 1..intervals {
+                    // at least one handoff per run (t=1 is forced), then a
+                    // seeded ~35% chance each later interval
+                    if t == 1 || rng.chance(0.35) {
+                        let w = rng.below(n as u64) as usize;
+                        let hop =
+                            1 + rng.below((crate::chaos::events::RACKS - 1) as u64) as usize;
+                        let from = racks[w];
+                        let to = (from + hop) % crate::chaos::events::RACKS;
+                        events.push(TimedEvent {
+                            t,
+                            event: ChaosEvent::Handoff { worker: w, from_rack: from, to_rack: to },
+                        });
+                        racks[w] = to;
+                    }
+                }
+                FaultPlan {
+                    seed,
+                    intervals,
+                    profile: "mobility-handoff".into(),
+                    events,
+                }
+            }
+            Scenario::BatteryConstrained => {
+                // ~45 Wh at 5–6.5 Wh/interval idle draw: the hungriest
+                // node types die around interval 7, the frugal ones later —
+                // staggered Battery-owned evictions inside a 10–12-interval
+                // matrix horizon, no chaos plan needed
+                cfg.cluster.battery_wh = Some(45.0);
+                FaultPlan::empty(seed, intervals)
+            }
             Scenario::MobilityHeavy => {
                 cfg.cluster.mobile_fraction = 1.0;
                 let mut rng = Rng::new(mix(seed, 0xB1AC));
@@ -350,6 +405,7 @@ pub fn policy_slug(p: PolicyKind) -> &'static str {
         PolicyKind::SemanticGobi => "semantic-gobi",
         PolicyKind::Gillis => "gillis",
         PolicyKind::ModelCompression => "mc",
+        PolicyKind::EnergyFit => "energyfit",
         PolicyKind::LatMem => "latmem",
         PolicyKind::OnlineSplit => "onlinesplit",
     }
@@ -506,6 +562,28 @@ pub const SMOKE_POLICIES: [PolicyKind; 5] = [
     PolicyKind::MabDaso,
 ];
 
+/// Energy differential pairs: energy-fit against its model-compression
+/// twin (`energyfit~mc/…`) — the SAME splitter on both sides, so the
+/// per-metric deltas isolate the placer's contribution — on the
+/// battery-constrained regime it targets and on a clean control. No
+/// ordering assertion is armed; the AEC/reward deltas are golden-gated at
+/// full precision instead.
+fn energy_diff_cells(seeds: &[u64]) -> Vec<MatrixCell> {
+    let mut cells = Vec::new();
+    for scenario in [Scenario::BatteryConstrained, Scenario::Clean] {
+        for &seed in seeds {
+            cells.push(MatrixCell::Diff(DiffCell {
+                a: PolicyKind::EnergyFit,
+                b: PolicyKind::ModelCompression,
+                scenario,
+                seed,
+                expect_a_reward_ge_b: false,
+            }));
+        }
+    }
+    cells
+}
+
 /// Challenger differential pairs: each related-work splitter stack leads a
 /// pair against the MAB+DASO champion (ids `latmem~mab-daso/…`,
 /// `onlinesplit~mab-daso/…`) on a clean run and under light chaos. No
@@ -539,13 +617,15 @@ fn challenger_diff_cells(seeds: &[u64]) -> Vec<MatrixCell> {
 ///   golden-gated without tripling 1000-worker cells in CI), the
 ///   traffic-plane scenarios under MC plus the headline
 ///   `mab-daso/diurnal-flash-crowd` cell (autoscaler × MAB champion), the
-///   MAB+DASO-vs-{MC, Gillis} differential pairs, and the challenger
-///   pairs `latmem~mab-daso` / `onlinesplit~mab-daso`.
-/// * `"full"` / `""` — all 9 policies × every scenario (base AND tier) ×
+///   MAB+DASO-vs-{MC, Gillis} differential pairs, the challenger pairs
+///   `latmem~mab-daso` / `onlinesplit~mab-daso`, and the energy pairs
+///   `energyfit~mc` on battery-constrained + clean.
+/// * `"full"` / `""` — all 10 policies × every scenario (base AND tier) ×
 ///   all seeds, plus MAB+DASO-vs-baseline differential pairs (the two
-///   related-work stacks excluded: they meet the champion challenger-side
-///   only, so no pair is simulated twice with swapped sides) and the
-///   challenger pairs.
+///   related-work stacks and energy-fit excluded: they meet their
+///   counterparts in the challenger/energy pairs only, so no pair is
+///   simulated twice with swapped sides), the challenger pairs, and the
+///   energy pairs.
 /// * anything else — substring match against [`MatrixCell::id`] over the
 ///   full cross product (e.g. `"chaos-heavy"`, `"mab-daso/"`, `"/s2"`,
 ///   `"~"` for all differential cells).
@@ -558,16 +638,21 @@ pub fn matrix_cells(filter: &str, seeds: &[u64]) -> Vec<MatrixCell> {
         // the related-work stacks pair with the champion via the
         // challenger cells below — a champion-led twin of the same clean
         // coordinates would re-run the identical pair of simulations and
-        // gate the same data with the sign flipped
+        // gate the same data with the sign flipped. Energy-fit likewise
+        // meets only its MC twin, in the dedicated energy pairs.
         let baselines: Vec<PolicyKind> = PolicyKind::all()
             .into_iter()
             .filter(|&p| {
                 p != PolicyKind::MabDaso
-                    && !matches!(p, PolicyKind::LatMem | PolicyKind::OnlineSplit)
+                    && !matches!(
+                        p,
+                        PolicyKind::LatMem | PolicyKind::OnlineSplit | PolicyKind::EnergyFit
+                    )
             })
             .collect();
         cells.extend(diff_cells(&baselines, seeds));
         cells.extend(challenger_diff_cells(seeds));
+        cells.extend(energy_diff_cells(seeds));
         cells
     };
     match filter {
@@ -602,6 +687,7 @@ pub fn matrix_cells(filter: &str, seeds: &[u64]) -> Vec<MatrixCell> {
                 first,
             ));
             cells.extend(challenger_diff_cells(first));
+            cells.extend(energy_diff_cells(first));
             cells
         }
         "full" | "" => full(seeds),
@@ -678,6 +764,37 @@ mod tests {
         let (cfg, _) = Scenario::MobilityHeavy.build(PolicyKind::ModelCompression, 1, 12);
         assert_eq!(cfg.cluster.mobile_fraction, 1.0);
         assert_eq!(cfg.cluster.churn_rate, 0.0, "plan-ledger oracles need churn off");
+    }
+
+    #[test]
+    fn mobility_handoff_chains_rack_moves() {
+        let (cfg, plan) = Scenario::MobilityHandoff.build(PolicyKind::ModelCompression, 1, 12);
+        assert_eq!(cfg.cluster.mobile_fraction, 1.0);
+        assert_eq!(cfg.cluster.churn_rate, 0.0, "plan-ledger oracles need churn off");
+        assert!(cfg.cluster.battery_wh.is_none(), "plan-state tracking needs batteries off");
+        let n = cfg.cluster.total_workers();
+        let mut racks = crate::chaos::events::initial_racks(n);
+        let mut handoffs = 0usize;
+        for e in &plan.events {
+            let ChaosEvent::Handoff { worker, from_rack, to_rack } = e.event else {
+                panic!("mobility-handoff plans carry only handoffs: {:?}", e.event);
+            };
+            handoffs += 1;
+            // the generator's mirror must match the chain the engine will
+            // walk — a stale from_rack would compile to a Noop
+            assert_eq!(racks[worker], from_rack, "handoff must chain from the live rack");
+            assert_ne!(from_rack, to_rack);
+            assert!(to_rack < crate::chaos::events::RACKS);
+            racks[worker] = to_rack;
+        }
+        assert!(handoffs >= 1, "the t=1 handoff is forced");
+    }
+
+    #[test]
+    fn battery_constrained_carries_finite_batteries_and_no_plan() {
+        let (cfg, plan) = Scenario::BatteryConstrained.build(PolicyKind::ModelCompression, 1, 12);
+        assert_eq!(cfg.cluster.battery_wh, Some(45.0));
+        assert!(plan.events.is_empty(), "pressure comes from the drain, not the plan");
     }
 
     #[test]
@@ -776,7 +893,8 @@ mod tests {
         let smoke = matrix_cells("smoke", &seeds);
         // 5 policies × base scenarios × 1 seed, + MC × tier scenarios,
         // + MC × traffic scenarios + the mab-daso headline traffic cell,
-        // + 2 baselines × 2 scenarios diff, + 2 challengers × 2 scenarios
+        // + 2 baselines × 2 scenarios diff, + 2 challengers × 2 scenarios,
+        // + energyfit~mc × 2 scenarios
         assert_eq!(
             smoke.len(),
             5 * Scenario::BASE.len()
@@ -785,6 +903,7 @@ mod tests {
                 + 1
                 + 4
                 + 4
+                + 2
         );
         // the headline autoscaler × champion cell is present
         assert!(smoke.iter().any(|c| c.id() == "mab-daso/diurnal-flash-crowd/s1"));
@@ -801,9 +920,13 @@ mod tests {
         // singles + MAB+DASO-vs-6-baselines × {clean, chaos-heavy} × seeds
         // + 2 challengers × {clean, chaos-light} × seeds (the new stacks
         // pair with the champion ONLY challenger-side — no swapped twins)
+        // + energyfit~mc × {battery-constrained, clean} × seeds
         assert_eq!(
             full.len(),
-            9 * Scenario::ALL.len() * seeds.len() + 6 * 2 * seeds.len() + 2 * 2 * seeds.len()
+            10 * Scenario::ALL.len() * seeds.len()
+                + 6 * 2 * seeds.len()
+                + 2 * 2 * seeds.len()
+                + 2 * seeds.len()
         );
         assert!(
             !full.iter().any(|c| c.id().starts_with("mab-daso~latmem")
@@ -854,20 +977,27 @@ mod tests {
             let MatrixCell::Diff(d) = cell else {
                 panic!("~ filter matched a non-diff cell: {}", cell.id());
             };
-            // every pair has the full MAB+DASO stack on exactly one side:
-            // champion pairs lead with it, challenger pairs chase it
-            assert!(
-                (d.a == PolicyKind::MabDaso) != (d.b == PolicyKind::MabDaso),
-                "{}: exactly one side must be the champion",
-                cell.id()
-            );
-            if d.a != PolicyKind::MabDaso {
+            if d.a == PolicyKind::EnergyFit {
+                // the energy pair: MC splitter on both sides, so the
+                // deltas isolate the placer — never ordering-armed
+                assert_eq!(d.b, PolicyKind::ModelCompression, "{}", cell.id());
+                assert!(!d.expect_a_reward_ge_b, "energy pairs are never armed");
+            } else {
+                // every other pair has the full MAB+DASO stack on exactly
+                // one side: champion pairs lead with it, challengers chase
                 assert!(
-                    matches!(d.a, PolicyKind::LatMem | PolicyKind::OnlineSplit),
-                    "{}: only the new stacks lead challenger pairs",
+                    (d.a == PolicyKind::MabDaso) != (d.b == PolicyKind::MabDaso),
+                    "{}: exactly one side must be the champion",
                     cell.id()
                 );
-                assert!(!d.expect_a_reward_ge_b, "challenger pairs are never armed");
+                if d.a != PolicyKind::MabDaso {
+                    assert!(
+                        matches!(d.a, PolicyKind::LatMem | PolicyKind::OnlineSplit),
+                        "{}: only the new stacks lead challenger pairs",
+                        cell.id()
+                    );
+                    assert!(!d.expect_a_reward_ge_b, "challenger pairs are never armed");
+                }
             }
             assert!(cell.id().contains('~'));
             assert!(!cell.file_stem().contains('/'));

@@ -5,7 +5,7 @@
 //!       [--alpha A] [--constraint c] [--accuracy measured|manifest]
 //!       [--shards N]               shard the CPU phase across N threads
 //!                                  (byte-identical results at any N)
-//!   compare [--intervals N]        all 9 policies, Table-4 style
+//!   compare [--intervals N]        all 10 policies, Table-4 style
 //!   chaos [--seed S] [--intervals N] [--profile light|heavy] [--policy P]
 //!         [--differential P2] [--plan FILE] [--inject-bug KIND]
 //!         [--task-timeout K] [--paranoid]

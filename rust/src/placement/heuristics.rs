@@ -122,10 +122,19 @@ impl BestFitTree {
     /// predicate can accept. A pruned subtree thus never hides a feasible
     /// worker; an unpruned infeasible leaf fails the exact check at the
     /// leaf, exactly like the serial scan.
-    fn key(input: &PlacementInput, w: usize, extra_w: f64) -> (f64, f64) {
+    ///
+    /// `bias` is the energy-fit hook: a per-worker score penalty
+    /// (marginal watts, see [`EnergyAwarePlacer`]) subtracted AFTER the
+    /// unbiased expression. An empty slice skips the subtraction
+    /// entirely, so the unbiased placers' floats are untouched — not
+    /// merely equal, the same operations.
+    fn key(input: &PlacementInput, w: usize, extra_w: f64, bias: &[f64]) -> (f64, f64) {
         let free_ram = (input.ram_capacity[w] - input.resident_ram[w] - extra_w)
             / input.ram_capacity[w].max(1.0);
-        let score = free_ram - 0.5 * input.snapshots[w].cpu;
+        let mut score = free_ram - 0.5 * input.snapshots[w].cpu;
+        if let Some(b) = bias.get(w) {
+            score -= *b;
+        }
         let cap = input.ram_capacity[w] * input.overcommit;
         let used = input.resident_ram[w] + extra_w;
         let head = (cap - used) + 1e-9 * (cap.abs() + used.abs()) + 1e-9;
@@ -133,7 +142,7 @@ impl BestFitTree {
     }
 
     /// O(W) rebuild from scratch — once per `place()` call.
-    fn rebuild(&mut self, input: &PlacementInput, extra: &[f64]) {
+    fn rebuild(&mut self, input: &PlacementInput, extra: &[f64], bias: &[f64]) {
         let n = input.workers();
         self.workers = n;
         self.base = n.next_power_of_two().max(1);
@@ -142,7 +151,7 @@ impl BestFitTree {
         self.score.clear();
         self.score.resize(2 * self.base, f64::NEG_INFINITY);
         for w in 0..n {
-            let (h, s) = Self::key(input, w, extra[w]);
+            let (h, s) = Self::key(input, w, extra[w], bias);
             self.head[self.base + w] = h;
             self.score[self.base + w] = s;
         }
@@ -157,8 +166,8 @@ impl BestFitTree {
     }
 
     /// O(log W) re-key of one worker after its `extra` commitment grows.
-    fn update(&mut self, input: &PlacementInput, w: usize, extra_w: f64) {
-        let (h, s) = Self::key(input, w, extra_w);
+    fn update(&mut self, input: &PlacementInput, w: usize, extra_w: f64, bias: &[f64]) {
+        let (h, s) = Self::key(input, w, extra_w, bias);
         let mut i = self.base + w;
         self.head[i] = h;
         self.score[i] = s;
@@ -214,13 +223,117 @@ impl BestFitTree {
     }
 }
 
+/// One slot of the retired serial derivation: left-to-right scan over all
+/// workers, exact `fits`, strict-`>` score update, minus the same
+/// per-worker `bias` the tree's [`BestFitTree::key`] subtracts (empty
+/// slice → the unbiased expression, operation for operation). Shared by
+/// the paranoid twins and [`reference_place_with_bias`]; never on the hot
+/// path.
+fn scan_best(
+    input: &PlacementInput,
+    slot: &SlotInfo,
+    extra: &[f64],
+    bias: &[f64],
+) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    for w in 0..input.workers() {
+        if !input.fits(slot, w, extra[w]) {
+            continue;
+        }
+        let free_ram = (input.ram_capacity[w] - input.resident_ram[w] - extra[w])
+            / input.ram_capacity[w].max(1.0);
+        let mut score = free_ram - 0.5 * input.snapshots[w].cpu;
+        if let Some(b) = bias.get(w) {
+            score -= *b;
+        }
+        if best.map(|(_, s)| score > s).unwrap_or(true) {
+            best = Some((w, score));
+        }
+    }
+    best
+}
+
+/// The whole retired derivation (decreasing sort + per-slot full scan),
+/// kept as the reference the assignment-identity properties pin the tree
+/// against — for [`BestFitPlacer`] with an empty `bias`, for
+/// [`EnergyAwarePlacer`] with its watt bias.
+pub fn reference_place_with_bias(input: &PlacementInput, bias: &[f64]) -> Assignment {
+    let mut extra = vec![0.0f64; input.workers()];
+    let mut order: Vec<usize> = (0..input.slots.len()).collect();
+    order.sort_by(|&a, &b| input.slots[b].ram_mb.total_cmp(&input.slots[a].ram_mb));
+    let mut out = Vec::new();
+    for i in order {
+        let slot = &input.slots[i];
+        if slot.prev_worker.is_some() {
+            continue;
+        }
+        if let Some((w, _)) = scan_best(input, slot, &extra, bias) {
+            extra[w] += slot.ram_mb;
+            out.push((slot.cid, w));
+        }
+    }
+    out
+}
+
+/// Shared best-fit-decreasing engine behind [`BestFitPlacer`] (empty
+/// `bias`) and [`EnergyAwarePlacer`] (per-worker watt bias): decreasing
+/// RAM sort, per-slot tree query, paranoid full-scan cross-check. The
+/// bias enters *only* through the score expression in
+/// [`BestFitTree::key`] / [`scan_best`], and an empty slice skips the
+/// subtraction entirely, so the unbiased placer's floats and winners are
+/// byte-identical to the pre-bias code.
+#[allow(clippy::too_many_arguments)]
+fn place_decreasing(
+    tree: &mut BestFitTree,
+    extra: &mut Vec<f64>,
+    order: &mut Vec<usize>,
+    input: &PlacementInput,
+    bias: &[f64],
+    paranoid: bool,
+    divergences: &mut Vec<String>,
+) -> Assignment {
+    let n = input.workers();
+    extra.clear();
+    extra.resize(n, 0.0);
+    order.clear();
+    order.extend(0..input.slots.len());
+    // decreasing by RAM; total_cmp orders every non-NaN float exactly
+    // like the old partial_cmp().unwrap() did, without the panic path
+    order.sort_by(|&a, &b| input.slots[b].ram_mb.total_cmp(&input.slots[a].ram_mb));
+    tree.rebuild(input, extra, bias);
+    let mut out = Vec::new();
+    for &i in order.iter() {
+        let slot = &input.slots[i];
+        if slot.prev_worker.is_some() {
+            continue;
+        }
+        let best = tree.query(input, slot, extra);
+        if paranoid {
+            let full = scan_best(input, slot, extra, bias);
+            let bits = |r: Option<(usize, f64)>| r.map(|(w, s)| (w, s.to_bits()));
+            if bits(full) != bits(best) {
+                divergences.push(format!(
+                    "slot cid={} ram={}MB: full scan chose {:?}, tree chose {:?}",
+                    slot.cid, slot.ram_mb, full, best
+                ));
+            }
+        }
+        if let Some((w, _)) = best {
+            extra[w] += slot.ram_mb;
+            tree.update(input, w, extra[w], bias);
+            out.push((slot.cid, w));
+        }
+    }
+    out
+}
+
 /// Best-fit-decreasing: biggest containers first, each to the feasible
 /// worker with the most free RAM and lowest CPU (weighted score). This is
 /// the scheduler the Gillis/MC baselines use. Since the index migration
 /// the per-slot winner comes from a [`BestFitTree`] query (O(log W)
 /// amortized) instead of a full-fleet scan; the retired scan survives as
-/// [`BestFitPlacer::scan_best`], re-run per slot under paranoid mode and
-/// compared bit-for-bit.
+/// [`scan_best`], re-run per slot under paranoid mode and compared
+/// bit-for-bit.
 pub struct BestFitPlacer {
     tree: BestFitTree,
     extra: Vec<f64>,
@@ -240,50 +353,9 @@ impl BestFitPlacer {
         }
     }
 
-    /// One slot of the retired serial derivation: left-to-right scan over
-    /// all workers, exact `fits`, strict-`>` score update. Shared by the
-    /// paranoid twin and [`BestFitPlacer::reference_place`]; never on the
-    /// hot path.
-    fn scan_best(
-        input: &PlacementInput,
-        slot: &SlotInfo,
-        extra: &[f64],
-    ) -> Option<(usize, f64)> {
-        let mut best: Option<(usize, f64)> = None;
-        for w in 0..input.workers() {
-            if !input.fits(slot, w, extra[w]) {
-                continue;
-            }
-            let free_ram = (input.ram_capacity[w] - input.resident_ram[w] - extra[w])
-                / input.ram_capacity[w].max(1.0);
-            let score = free_ram - 0.5 * input.snapshots[w].cpu;
-            if best.map(|(_, s)| score > s).unwrap_or(true) {
-                best = Some((w, score));
-            }
-        }
-        best
-    }
-
-    /// The whole retired derivation (decreasing sort + per-slot full
-    /// scan), kept as the reference the assignment-identity property pins
-    /// the tree against. Produces exactly what the pre-index
-    /// `BestFitPlacer::place` produced.
+    /// Unbiased reference derivation — see [`reference_place_with_bias`].
     pub fn reference_place(input: &PlacementInput) -> Assignment {
-        let mut extra = vec![0.0f64; input.workers()];
-        let mut order: Vec<usize> = (0..input.slots.len()).collect();
-        order.sort_by(|&a, &b| input.slots[b].ram_mb.total_cmp(&input.slots[a].ram_mb));
-        let mut out = Vec::new();
-        for i in order {
-            let slot = &input.slots[i];
-            if slot.prev_worker.is_some() {
-                continue;
-            }
-            if let Some((w, _)) = Self::scan_best(input, slot, &extra) {
-                extra[w] += slot.ram_mb;
-                out.push((slot.cid, w));
-            }
-        }
-        out
+        reference_place_with_bias(input, &[])
     }
 }
 
@@ -295,40 +367,17 @@ impl Default for BestFitPlacer {
 
 impl Placer for BestFitPlacer {
     fn place(&mut self, input: &PlacementInput) -> Vec<(ContainerId, usize)> {
-        let n = input.workers();
         let mut extra = std::mem::take(&mut self.extra);
-        extra.clear();
-        extra.resize(n, 0.0);
         let mut order = std::mem::take(&mut self.order);
-        order.clear();
-        order.extend(0..input.slots.len());
-        // decreasing by RAM; total_cmp orders every non-NaN float exactly
-        // like the old partial_cmp().unwrap() did, without the panic path
-        order.sort_by(|&a, &b| input.slots[b].ram_mb.total_cmp(&input.slots[a].ram_mb));
-        self.tree.rebuild(input, &extra);
-        let mut out = Vec::new();
-        for &i in &order {
-            let slot = &input.slots[i];
-            if slot.prev_worker.is_some() {
-                continue;
-            }
-            let best = self.tree.query(input, slot, &extra);
-            if self.paranoid {
-                let full = Self::scan_best(input, slot, &extra);
-                let bits = |r: Option<(usize, f64)>| r.map(|(w, s)| (w, s.to_bits()));
-                if bits(full) != bits(best) {
-                    self.divergences.push(format!(
-                        "slot cid={} ram={}MB: full scan chose {:?}, tree chose {:?}",
-                        slot.cid, slot.ram_mb, full, best
-                    ));
-                }
-            }
-            if let Some((w, _)) = best {
-                extra[w] += slot.ram_mb;
-                self.tree.update(input, w, extra[w]);
-                out.push((slot.cid, w));
-            }
-        }
+        let out = place_decreasing(
+            &mut self.tree,
+            &mut extra,
+            &mut order,
+            input,
+            &[],
+            self.paranoid,
+            &mut self.divergences,
+        );
         self.extra = extra;
         self.order = order;
         out
@@ -336,6 +385,94 @@ impl Placer for BestFitPlacer {
 
     fn name(&self) -> &'static str {
         "best-fit"
+    }
+
+    fn set_paranoid(&mut self, on: bool) {
+        self.paranoid = on;
+    }
+
+    fn take_paranoid_divergences(&mut self) -> Vec<String> {
+        std::mem::take(&mut self.divergences)
+    }
+}
+
+/// How hard energy-fit leans against watts. The unbiased score lives in
+/// roughly [−0.5, 1] (normalized free RAM minus half the CPU load), and
+/// the bias is the worker's marginal watts normalized to [0, 1], so 0.35
+/// lets a clearly-emptier worker still win while breaking near-ties
+/// toward the cheaper machine — paper §6.3's energy term weighting.
+const ENERGY_WEIGHT: f64 = 0.35;
+
+/// Energy-aware best-fit ("energy-fit"): the [`BestFitPlacer`] derivation
+/// with each worker's score docked by its normalized marginal power draw
+/// (peak − idle watts), so among comparably-loaded feasible workers the
+/// one whose next unit of utilization costs the fewest watts wins.
+/// Feasibility is untouched — the bias only reorders winners, it never
+/// admits a worker `fits` rejects. Runs on the same [`BestFitTree`] index
+/// with the same paranoid full-scan twin (both sides biased identically).
+pub struct EnergyAwarePlacer {
+    tree: BestFitTree,
+    extra: Vec<f64>,
+    order: Vec<usize>,
+    /// `ENERGY_WEIGHT · marginal_watts[w] / max(marginal_watts)` — fixed
+    /// at construction from the fleet's specs; empty fleet → empty bias.
+    watt_bias: Vec<f64>,
+    paranoid: bool,
+    divergences: Vec<String>,
+}
+
+impl EnergyAwarePlacer {
+    /// `marginal_watts[w]` = peak − idle draw of worker `w`'s node type.
+    pub fn new(marginal_watts: &[f64]) -> Self {
+        let max = marginal_watts.iter().copied().fold(0.0f64, f64::max);
+        let watt_bias = if max > 0.0 {
+            marginal_watts.iter().map(|&m| ENERGY_WEIGHT * m / max).collect()
+        } else {
+            vec![0.0; marginal_watts.len()]
+        };
+        EnergyAwarePlacer {
+            tree: BestFitTree::default(),
+            extra: Vec::new(),
+            order: Vec::new(),
+            watt_bias,
+            paranoid: false,
+            divergences: Vec::new(),
+        }
+    }
+
+    /// The biased reference derivation this placer's tree is pinned
+    /// against — see [`reference_place_with_bias`].
+    pub fn reference_place(&self, input: &PlacementInput) -> Assignment {
+        reference_place_with_bias(input, &self.watt_bias)
+    }
+}
+
+impl Placer for EnergyAwarePlacer {
+    fn place(&mut self, input: &PlacementInput) -> Vec<(ContainerId, usize)> {
+        debug_assert!(
+            self.watt_bias.len() >= input.workers(),
+            "EnergyAwarePlacer built for {} workers, placing over {}",
+            self.watt_bias.len(),
+            input.workers()
+        );
+        let mut extra = std::mem::take(&mut self.extra);
+        let mut order = std::mem::take(&mut self.order);
+        let out = place_decreasing(
+            &mut self.tree,
+            &mut extra,
+            &mut order,
+            input,
+            &self.watt_bias,
+            self.paranoid,
+            &mut self.divergences,
+        );
+        self.extra = extra;
+        self.order = order;
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "energy-fit"
     }
 
     fn set_paranoid(&mut self, on: bool) {
@@ -510,5 +647,64 @@ mod tests {
         assert_eq!(a, BestFitPlacer::reference_place(&inp));
         assert!(p.take_paranoid_divergences().is_empty());
         assert!(p.take_paranoid_divergences().is_empty(), "drain is one-shot");
+    }
+
+    #[test]
+    fn energy_fit_with_zero_marginal_watts_matches_best_fit() {
+        // all-zero marginal watts → all-zero bias → `score -= 0.0`, which
+        // is bit-identical to the unbiased expression: every winner must
+        // match BestFitPlacer exactly
+        let inp = input(
+            (0..8).map(|i| slot(i, 500.0 * (1 + i % 4) as f64)).collect(),
+            vec![4000.0, 2000.0, 6000.0, 1000.0],
+            vec![500.0, 0.0, 3000.0, 900.0],
+        );
+        let mut e = EnergyAwarePlacer::new(&[0.0; 4]);
+        assert_eq!(e.place(&inp), BestFitPlacer::new().place(&inp));
+    }
+
+    #[test]
+    fn energy_fit_breaks_ties_toward_the_cheaper_worker() {
+        // two identical workers: unbiased best-fit ties and keeps the
+        // leftmost; energy-fit docks worker 0's hungrier marginal draw and
+        // sends the slot to worker 1
+        let inp = input(vec![slot(0, 1000.0)], vec![8000.0; 2], vec![0.0; 2]);
+        assert_eq!(BestFitPlacer::new().place(&inp), vec![(0, 0)]);
+        let mut e = EnergyAwarePlacer::new(&[80.0, 30.0]);
+        assert_eq!(e.place(&inp), vec![(0, 1)], "watt bias must break the tie");
+    }
+
+    #[test]
+    fn energy_fit_never_overrides_feasibility() {
+        // the cheap worker (w1) can't hold the slot — bias must not admit
+        // it, the expensive-but-feasible worker wins
+        let inp = input(vec![slot(0, 5000.0)], vec![8000.0, 1000.0], vec![0.0, 0.0]);
+        let mut e = EnergyAwarePlacer::new(&[100.0, 1.0]);
+        assert_eq!(e.place(&inp), vec![(0, 0)]);
+        // nothing fits anywhere → empty, same as best-fit
+        let none = input(vec![slot(0, 50_000.0)], vec![8000.0; 2], vec![0.0; 2]);
+        let mut e = EnergyAwarePlacer::new(&[100.0, 1.0]);
+        assert!(e.place(&none).is_empty());
+    }
+
+    #[test]
+    fn paranoid_energy_fit_tree_matches_biased_reference() {
+        // multi-slot pack over a mixed fleet: the biased tree must agree
+        // with the biased serial scan bit-for-bit, and with the biased
+        // reference derivation assignment-for-assignment
+        let inp = input(
+            (0..10).map(|i| slot(i, 400.0 * (1 + i % 5) as f64)).collect(),
+            vec![4000.0, 4000.0, 6000.0, 2000.0, 4000.0],
+            vec![200.0, 0.0, 1500.0, 100.0, 0.0],
+        );
+        let watts = [46.0, 44.0, 68.0, 66.0, 46.0];
+        let mut e = EnergyAwarePlacer::new(&watts);
+        e.set_paranoid(true);
+        let a = e.place(&inp);
+        assert_eq!(a, e.reference_place(&inp));
+        assert!(e.take_paranoid_divergences().is_empty());
+        // and the bias genuinely changes *something* vs plain best-fit on
+        // this fleet, so the test isn't vacuous
+        assert_ne!(a, BestFitPlacer::reference_place(&inp));
     }
 }

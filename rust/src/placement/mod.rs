@@ -12,7 +12,9 @@ pub mod heuristics;
 
 pub use daso::GradientPlacer;
 pub use features::{FeatureLayout, SlotInfo};
-pub use heuristics::{BestFitPlacer, RandomPlacer, RoundRobinPlacer};
+pub use heuristics::{
+    reference_place_with_bias, BestFitPlacer, EnergyAwarePlacer, RandomPlacer, RoundRobinPlacer,
+};
 
 use crate::sim::{ContainerId, WorkerSnapshot};
 use crate::util::rng::Rng;

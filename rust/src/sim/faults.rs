@@ -58,6 +58,15 @@ pub enum EngineCmd {
     /// Starvation sweep: fail every active task older than `age_s`
     /// simulation seconds.
     FailTasksOlderThan { age_s: f64 },
+    /// Mobility handoff: re-home `worker` from `from_rack` to `to_rack`
+    /// (a vehicle crossing cell boundaries re-associates with a new edge
+    /// site). The worker stays online and keeps its containers, but every
+    /// in-flight transfer touching it stretches by one re-association
+    /// round-trip under its current channel state, and the move lands in
+    /// the handoff audit log the `handoff-preserves-progress` oracle
+    /// sweeps. A stale handoff — the worker is not currently in
+    /// `from_rack` — is a Noop: reordered plans must not teleport workers.
+    Handoff { worker: usize, from_rack: usize, to_rack: usize },
     /// Chaos-testing bug-injection hook: take a worker offline WITHOUT
     /// evicting its containers. Deliberately violates the
     /// `crashed-workers-idle` invariant so the chaos oracles can be
@@ -85,7 +94,8 @@ impl EngineCmd {
             | EngineCmd::SetClockSkew { worker, .. }
             | EngineCmd::CorruptPayload { worker }
             | EngineCmd::ForceOfflineNoEvict { worker }
-            | EngineCmd::CorruptPayloadSwallowed { worker } => Some(worker),
+            | EngineCmd::CorruptPayloadSwallowed { worker }
+            | EngineCmd::Handoff { worker, .. } => Some(worker),
             EngineCmd::SetChurn { .. } | EngineCmd::FailTasksOlderThan { .. } => None,
         }
     }
@@ -118,6 +128,12 @@ pub enum CmdOrigin {
     /// capacity changes that are *decisions*, distinguishable in the
     /// ledger from chaos-origin offline events.
     Autoscale,
+    /// The engine's battery plane: a worker whose battery hit empty
+    /// crashes under this origin. Nothing may resurrect a battery-dead
+    /// worker automatically — the autoscaler rejoins only
+    /// `Autoscale`-owned offline workers, so this origin keeps dead
+    /// batteries dead.
+    Battery,
 }
 
 /// One ledger entry: the command, when it landed, and what it did.
@@ -194,7 +210,8 @@ impl FaultSurface {
             EngineCmd::SetChannelOverride { .. }
             | EngineCmd::CorruptPayload { .. }
             | EngineCmd::CorruptPayloadSwallowed { .. }
-            | EngineCmd::FailTasksOlderThan { .. } => {}
+            | EngineCmd::FailTasksOlderThan { .. }
+            | EngineCmd::Handoff { .. } => {}
         }
     }
 
@@ -372,6 +389,57 @@ impl Engine {
                 // record the blast radius but skip the fail path — the
                 // missing-checksum bug the oracle must catch
                 Effect::Affected { tasks: self.in_flight_tasks(worker) }
+            }
+            EngineCmd::Handoff { worker, from_rack, to_rack } => {
+                let to = to_rack % crate::chaos::events::RACKS;
+                if worker >= n || self.rack_of[worker] != from_rack || to == from_rack {
+                    return Effect::Noop;
+                }
+                self.rack_of[worker] = to;
+                // One re-association round-trip under the worker's current
+                // channel state: every in-flight payload movement touching
+                // the worker re-negotiates its window through the new site.
+                let stretch = self.payload_transfer_s(None, worker, 0.0);
+                let resident = self.resident_idx[worker].clone();
+                let mut residents = Vec::with_capacity(resident.len());
+                let mut tasks: Vec<u64> = Vec::new();
+                for &cid in &resident {
+                    let (state, home, task_id, mi_done) = {
+                        let c = &self.containers[cid];
+                        (c.state, c.worker, c.task_id, c.mi_done)
+                    };
+                    residents.push((cid, task_id, mi_done));
+                    match state {
+                        ContainerState::Transferring { until_s } => {
+                            self.set_container(
+                                cid,
+                                ContainerState::Transferring { until_s: until_s + stretch },
+                                home,
+                            );
+                            tasks.push(task_id);
+                        }
+                        // migrations toward the worker are filed here too
+                        ContainerState::Migrating { until_s, to: dst } if dst == worker => {
+                            self.set_container(
+                                cid,
+                                ContainerState::Migrating { until_s: until_s + stretch, to: dst },
+                                home,
+                            );
+                            tasks.push(task_id);
+                        }
+                        _ => {}
+                    }
+                }
+                tasks.sort_unstable();
+                tasks.dedup();
+                self.handoff_audits.push(super::state::HandoffAudit {
+                    interval: self.interval,
+                    worker,
+                    from_rack,
+                    to_rack: to,
+                    residents,
+                });
+                Effect::Affected { tasks }
             }
         }
     }
@@ -865,5 +933,85 @@ mod tests {
             Effect::Affected { tasks: vec![] },
             "sweep is idempotent"
         );
+    }
+
+    #[test]
+    fn handoff_rehomes_the_worker_and_stretches_inflight_transfers() {
+        use crate::chaos::events::RACKS;
+        let mut e = engine();
+        e.admit(task(1, App::Cifar100, 64_000), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 0)]);
+        let before = match e.containers[0].state {
+            ContainerState::Transferring { until_s } => until_s,
+            other => panic!("expected staging transfer, got {other:?}"),
+        };
+        let from = e.rack_of()[0];
+        let to = (from + 1) % RACKS;
+        assert_eq!(
+            e.apply(EngineCmd::Handoff { worker: 0, from_rack: from, to_rack: to }),
+            Effect::Affected { tasks: vec![1] }
+        );
+        assert_eq!(e.rack_of()[0], to);
+        let after = match e.containers[0].state {
+            ContainerState::Transferring { until_s } => until_s,
+            other => panic!("transfer must stay in flight, got {other:?}"),
+        };
+        assert!(after > before, "handoff must stretch the transfer: {after} vs {before}");
+        // the audit log remembers the move and every resident's progress
+        let audit = e.handoff_audits().last().expect("executed handoff must be audited");
+        assert_eq!((audit.worker, audit.from_rack, audit.to_rack), (0, from, to));
+        assert_eq!(audit.residents, vec![(0, 1, 0.0)]);
+        // stale handoff (worker no longer in from_rack) is a Noop, no audit
+        assert_eq!(
+            e.apply(EngineCmd::Handoff { worker: 0, from_rack: from, to_rack: to }),
+            Effect::Noop
+        );
+        assert_eq!(e.handoff_audits().len(), 1);
+        // self-handoff and out-of-range targets are Noops too
+        assert_eq!(
+            e.apply(EngineCmd::Handoff { worker: 0, from_rack: to, to_rack: to }),
+            Effect::Noop
+        );
+        assert_eq!(
+            e.apply(EngineCmd::Handoff { worker: 99, from_rack: 0, to_rack: 1 }),
+            Effect::Noop
+        );
+        e.verify_indices().unwrap();
+        // progress survives the handoff end-to-end
+        let mut done = false;
+        for _ in 0..30 {
+            if !e.step_interval().completed.is_empty() {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "task must complete after the handoff");
+    }
+
+    #[test]
+    fn handoff_preserves_running_progress_and_keeps_the_worker() {
+        use crate::chaos::events::RACKS;
+        let mut e = engine();
+        e.admit(task(1, App::Mnist, 32_000), SplitDecision::Compressed);
+        e.apply_placement(&[(0, 2)]);
+        e.step_interval();
+        let progress = e.containers[0].mi_done;
+        assert!(progress > 0.0);
+        let from = e.rack_of()[2];
+        let eff = e.apply(EngineCmd::Handoff {
+            worker: 2,
+            from_rack: from,
+            to_rack: (from + 2) % RACKS,
+        });
+        // a running container is not an in-flight transfer: nothing stretches
+        assert_eq!(eff, Effect::Affected { tasks: vec![] });
+        let c = &e.containers[0];
+        assert_eq!(c.worker, Some(2), "handoff must not evict");
+        assert!((c.mi_done - progress).abs() < 1e-12, "handoff must not touch progress");
+        let audit = e.handoff_audits().last().unwrap();
+        assert_eq!(audit.residents, vec![(0, 1, progress)]);
+        // the handoff lands in the command ledger like any other mutation
+        let rec = e.ledger().last().unwrap();
+        assert!(matches!(rec.cmd, EngineCmd::Handoff { worker: 2, .. }));
     }
 }

@@ -25,6 +25,7 @@ use crate::util::accum::Accum;
 use crate::workload::Task;
 
 use super::container::{Container, ContainerId, ContainerState};
+use super::faults::{CmdOrigin, EngineCmd};
 use super::state::{
     CompletedTask, Engine, FailedTask, IntervalReport, TaskEntry, WorkerSnapshot, THRASH_FLOOR,
 };
@@ -220,7 +221,10 @@ impl Engine {
 
         // energy over the interval from busy time per worker — summed
         // order-free so the total is independent of worker visit order.
-        // The utilization and container-count buffers are engine-owned
+        // An offline worker draws 0 W: a crashed, parked, or battery-dead
+        // machine is powered off, not idling (it used to be billed at
+        // idle watts, inflating fleet energy and AEC under faults). The
+        // utilization and container-count buffers are engine-owned
         // scratch (taken, refilled, restored) so steady-state intervals
         // allocate nothing here.
         let mut energy = Accum::ZERO;
@@ -230,14 +234,46 @@ impl Engine {
         for (w, worker) in self.cluster.workers.iter().enumerate() {
             let util = (self.busy_s[w] / self.cfg.interval_seconds).clamp(0.0, 1.0);
             utils.push(util);
-            energy.add(energy::energy_wh(&worker.spec, util, self.cfg.interval_seconds));
+            if self.online[w] {
+                energy.add(energy::energy_wh(&worker.spec, util, self.cfg.interval_seconds));
+            }
         }
         let energy_wh = energy.value();
-        let aec = energy::normalized_aec_over(
+        let aec = energy::normalized_aec_gated_over(
             self.cluster.workers.iter().map(|w| &w.spec),
             &utils,
+            &self.online,
             self.cfg.interval_seconds,
         );
+
+        // Battery plane (inert on a grid-powered fleet): each online
+        // worker drains its interval draw from its battery; exhausted
+        // workers crash through the command bus under
+        // [`CmdOrigin::Battery`], in worker-id order, and stay down — the
+        // autoscaler rejoins only `Autoscale`-owned offline workers, so a
+        // dead battery is never resurrected. A chaos `Recover` of a
+        // battery-dead worker lasts one interval: the empty battery kills
+        // it again at the next drain.
+        if self.battery_wh.is_some() {
+            let isec = self.cfg.interval_seconds;
+            let mut dead: Vec<usize> = Vec::new();
+            {
+                let levels = self.battery_wh.as_mut().expect("gated on is_some");
+                for (w, worker) in self.cluster.workers.iter().enumerate() {
+                    if !self.online[w] {
+                        continue;
+                    }
+                    levels[w] -= energy::energy_wh(&worker.spec, utils[w], isec);
+                    if levels[w] <= 0.0 {
+                        levels[w] = 0.0;
+                        dead.push(w);
+                    }
+                }
+            }
+            for w in dead {
+                self.apply_with_origin(EngineCmd::Crash { worker: w }, CmdOrigin::Battery);
+            }
+        }
 
         // snapshots — derived from the active index, O(workers + active)
         let resident = self.resident_ram();
@@ -733,6 +769,70 @@ mod tests {
         e.apply_placement(&assigns);
         let busy = e.step_interval().energy_wh;
         assert!(busy > idle, "busy={busy} idle={idle}");
+    }
+
+    #[test]
+    fn offline_workers_draw_no_power() {
+        use super::super::faults::EngineCmd;
+        let mut e = engine();
+        let full = e.step_interval();
+        // idle fleet: every online worker bills exactly its idle draw
+        let idle0 =
+            e.cluster.workers[0].spec.idle_watts * e.cfg.interval_seconds / 3600.0;
+        e.apply(EngineCmd::SetOnline { worker: 0, up: false });
+        let less = e.step_interval();
+        assert!(
+            (full.energy_wh - less.energy_wh - idle0).abs() < 1e-9,
+            "taking worker 0 down must remove exactly its idle draw: \
+             full={} less={} idle0={idle0}",
+            full.energy_wh,
+            less.energy_wh
+        );
+        assert!(less.aec < full.aec, "AEC numerator must drop with the worker");
+        assert_eq!(less.offline, 1);
+    }
+
+    #[test]
+    fn battery_exhaustion_crashes_workers_for_good() {
+        use super::super::faults::{CmdOrigin, EngineCmd};
+        // idle draw over a 300 s interval is 5.0–6.5 Wh depending on node
+        // type, so a 7 Wh battery survives interval 1 (max draw 6.5) and
+        // every worker is dead by the end of interval 2
+        let cfg = ClusterConfig { battery_wh: Some(7.0), ..ClusterConfig::small() };
+        let cluster = build_fleet(&cfg);
+        let mut e = Engine::new(cluster, SimConfig { intervals: 10, ..Default::default() }, 1);
+        let n = e.workers();
+        let r1 = e.step_interval();
+        assert_eq!(r1.offline, 0, "one idle interval must not exhaust a 7 Wh battery");
+        let r2 = e.step_interval();
+        assert_eq!(r2.offline, n, "every battery is empty after two idle intervals");
+        let levels = e.battery_levels().expect("battery fleet exposes levels");
+        for w in 0..n {
+            assert!(!e.online()[w]);
+            assert_eq!(levels[w], 0.0, "exhausted batteries clamp at zero");
+            assert_eq!(
+                e.offline_origins()[w],
+                Some(CmdOrigin::Battery),
+                "battery deaths must be Battery-owned, worker {w}"
+            );
+        }
+        // the deaths went through the command bus
+        assert_eq!(
+            e.ledger().iter().filter(|rec| rec.origin == CmdOrigin::Battery).count(),
+            n
+        );
+        // a dead fleet draws nothing
+        let r3 = e.step_interval();
+        assert_eq!(r3.energy_wh, 0.0);
+        assert_eq!(r3.aec, 0.0);
+        // a chaos revival lasts exactly one interval: the empty battery
+        // kills the worker again at the next drain, Battery-owned
+        e.apply(EngineCmd::Recover { worker: 0 });
+        assert!(e.online()[0]);
+        let r4 = e.step_interval();
+        assert!(r4.energy_wh > 0.0, "revived worker billed for its zombie interval");
+        assert!(!e.online()[0], "empty battery must re-kill the revived worker");
+        assert_eq!(e.offline_origins()[0], Some(CmdOrigin::Battery));
     }
 
     #[test]

@@ -33,5 +33,6 @@ pub mod state;
 pub use container::{Container, ContainerId, ContainerState};
 pub use faults::{CmdOrigin, CmdRecord, Effect, EngineCmd, FaultSurface};
 pub use state::{
-    CompletedTask, Engine, FailedTask, IntervalReport, WorkerSnapshot, RAM_OVERCOMMIT,
+    CompletedTask, Engine, FailedTask, HandoffAudit, IntervalReport, WorkerSnapshot,
+    RAM_OVERCOMMIT,
 };

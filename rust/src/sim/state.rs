@@ -82,6 +82,24 @@ pub struct WorkerSnapshot {
     pub containers: usize,
 }
 
+/// One executed mobility handoff, recorded at execution time so the
+/// `handoff-preserves-progress` oracle audits what the handoff actually
+/// touched instead of re-deriving it. On a correct engine a handoff never
+/// changes `mi_done` of any resident — the record pins that.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HandoffAudit {
+    /// Interval the handoff landed in.
+    pub interval: usize,
+    pub worker: usize,
+    pub from_rack: usize,
+    /// Destination rack, normalized into `0..RACKS`.
+    pub to_rack: usize,
+    /// `(container, owning task, MI completed at handoff time)` for every
+    /// container resident on the worker when it re-homed, ascending by
+    /// container id.
+    pub residents: Vec<(ContainerId, u64, f64)>,
+}
+
 /// What happened during one simulated interval.
 #[derive(Clone, Debug)]
 pub struct IntervalReport {
@@ -205,6 +223,18 @@ pub struct Engine {
     /// the first sharded sub-step, reused for the rest of the run. `None`
     /// until then and forever on single-shard runs.
     pub(super) pool: Option<super::pool::ShardPool>,
+    /// Current topology rack of each worker. Starts at the
+    /// contiguous-quarter assignment of
+    /// [`crate::chaos::events::rack_members`]; mobility handoffs
+    /// ([`super::faults::EngineCmd::Handoff`]) re-home entries.
+    pub(super) rack_of: Vec<usize>,
+    /// Append-only audit log of executed handoffs (see [`HandoffAudit`]).
+    pub(super) handoff_audits: Vec<HandoffAudit>,
+    /// Remaining battery (Wh) per worker; `None` = grid-powered fleet
+    /// (the inert default — no state, no draws, no crashes). Drained by
+    /// the interval energy integration; exhaustion crashes the worker
+    /// under [`super::faults::CmdOrigin::Battery`].
+    pub(super) battery_wh: Option<Vec<f64>>,
 }
 
 #[derive(Clone, Debug)]
@@ -241,6 +271,8 @@ impl Engine {
         let mut mobility = MobilityModel::new(&flags, seed);
         let channels = mobility.step();
         let profile_phases = cfg.profile_phases;
+        let rack_of = crate::chaos::events::initial_racks(n);
+        let battery_wh = cluster.battery_wh.map(|cap| vec![cap; n]);
         Engine {
             cluster,
             mobility,
@@ -276,6 +308,9 @@ impl Engine {
             chain_suspects: Vec::new(),
             phases: crate::util::phase_timer::PhaseTimer::new(profile_phases),
             pool: None,
+            rack_of,
+            handoff_audits: Vec::new(),
+            battery_wh,
         }
     }
 
@@ -677,6 +712,24 @@ impl Engine {
     /// Currently applied clock skew of worker `w`, in seconds.
     pub fn clock_skew(&self, w: usize) -> f64 {
         self.clock_skew_s.get(w).copied().unwrap_or(0.0)
+    }
+
+    /// Current topology rack of each worker (see the field doc): the
+    /// contiguous-quarter assignment until a mobility handoff re-homes a
+    /// worker.
+    pub fn rack_of(&self) -> &[usize] {
+        &self.rack_of
+    }
+
+    /// Append-only audit log of executed handoffs, in execution order.
+    /// The `handoff-preserves-progress` oracle sweeps this.
+    pub fn handoff_audits(&self) -> &[HandoffAudit] {
+        &self.handoff_audits
+    }
+
+    /// Remaining battery (Wh) per worker; `None` on grid-powered fleets.
+    pub fn battery_levels(&self) -> Option<&[f64]> {
+        self.battery_wh.as_deref()
     }
 
     /// Effective RAM capacity of worker `w` under any active squeeze.

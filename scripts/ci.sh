@@ -34,7 +34,11 @@ echo "== matrix smoke (parallel cells, golden gate, bug-base) =="
 # and the traffic-plane cells: trace-replay (committed
 # tests/traces/edge-burst.json), diurnal-flash-crowd (headline:
 # admission + autoscaler + MAB champion under light chaos),
-# constrained-edge, single-app and cloud-tier under MC.
+# constrained-edge, single-app and cloud-tier under MC. Since ISSUE-10 the
+# base scenarios also include mobility-handoff (mid-interval rack
+# handoffs) and battery-constrained (finite batteries, SPEC-curve drain,
+# battery-death evictions), and the differential set carries the
+# energyfit~mc pairs gating the energy-aware placer's AEC deltas.
 if ! ls tests/goldens/*.json >/dev/null 2>&1; then
     echo "no goldens recorded yet — bootstrapping (serial, --update-goldens)"
     ./target/release/splitplace matrix --filter smoke --jobs 1 --update-goldens
@@ -61,6 +65,16 @@ echo "== matrix smoke (paranoid: indexed oracles vs full-scan twins) =="
 # paranoia only audits, never perturbs.
 ./target/release/splitplace matrix --filter smoke --jobs 1 --paranoid
 
+echo "== matrix mobility leg (handoffs + battery deaths, paranoid) =="
+# The mobility/energy adversary plane (ISSUE-10): the substring filter
+# matches every mobility-heavy AND mobility-handoff cell in the smoke set,
+# so each policy rides out mid-interval rack handoffs (in-flight transfers
+# stretched, rack membership re-homed) with the full-scan oracle twins
+# armed — in particular handoff-preserves-progress, whose indexed check
+# and paranoid full-pool twin must agree that no completed work is lost
+# and no transfer double-charged across a handoff.
+./target/release/splitplace matrix --filter mobility --jobs 1 --paranoid
+
 echo "== chaos smoke (paranoid: placement + phase-index twins, heavy) =="
 # A best-fit-backed policy under a heavy fault plan with --paranoid: every
 # interval re-derives each placement decision with the retired full-fleet
@@ -71,10 +85,11 @@ echo "== chaos smoke (paranoid: placement + phase-index twins, heavy) =="
     --policy mc --paranoid
 
 # Nightly stanza (uncomment in a scheduled job, not in per-commit CI —
-# the full cross product runs all 9 policies × all 18 scenarios × seeds,
-# including the 1000/5000/25 000-worker tier cells and the traffic plane's Fig-13/16/18
-# regimes (constrained-edge, single-app, cloud-tier), plus every
-# differential pair):
+# the full cross product runs all 10 policies × all 20 scenarios × seeds,
+# including the 1000/5000/25 000-worker tier cells, the traffic plane's Fig-13/16/18
+# regimes (constrained-edge, single-app, cloud-tier), the mobility/energy
+# plane (mobility-handoff, battery-constrained) and every differential
+# pair — the energyfit~mc AEC pairs included):
 # ./target/release/splitplace matrix --filter full --jobs 4 --seeds 2
 
 echo "== engine throughput bench (smoke: all tiers, short horizon) =="

@@ -838,7 +838,7 @@ fn prop_ledger_replay_reproduces_the_fault_surface_under_churn() {
 
 /// ISSUE-5: both related-work splitter stacks replay byte-identically
 /// under the HEAVY chaos profile (the ROADMAP's bar for every new policy)
-/// and keep all 13 oracles green on a correct engine.
+/// and keep all 14 oracles green on a correct engine.
 #[test]
 fn prop_new_splitter_stacks_deterministic_and_green_under_heavy_chaos() {
     check(
@@ -906,6 +906,81 @@ fn prop_sharded_cells_summarize_byte_identically_to_serial() {
                 if sigs != serial_sigs {
                     return Err(format!(
                         "seed {seed}: {shards}-shard signatures diverged from serial"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE-10: the mobility adversary plane is deterministic at the cell
+/// level. For both mobility scenarios — fail-stop churn (`mobility-heavy`)
+/// and rack handoffs (`mobility-handoff`) — rebuilding the fault plan from
+/// the same cell coordinates yields the identical event stream (handoffs
+/// included, and they survive the plan's JSON ledger round-trip verbatim),
+/// and the full `CellSummary` JSON plus replay signatures are
+/// byte-identical whether the CPU phase ran serially or across 4 shards —
+/// the same purity contract `--jobs 1 == --jobs N` rests on.
+#[test]
+fn prop_mobility_cells_byte_identical_across_shards_and_rebuilds() {
+    check(
+        "mobility-cell-determinism",
+        3,
+        |rng| rng.next_u64() % 10_000,
+        |&seed| {
+            for scenario in [Scenario::MobilityHeavy, Scenario::MobilityHandoff] {
+                let cell =
+                    Cell { policy: PolicyKind::ModelCompression, scenario, seed };
+                let (_, plan_a) = scenario.build(cell.policy, seed, 10);
+                let (_, plan_b) = scenario.build(cell.policy, seed, 10);
+                if plan_a.events != plan_b.events {
+                    return Err(format!(
+                        "{}: rebuilt plan events diverged (seed {seed})",
+                        scenario.name()
+                    ));
+                }
+                let text = plan_a.to_json().to_string();
+                let back = FaultPlan::from_json(
+                    &splitplace::util::json::parse(&text).map_err(|e| e.to_string())?,
+                )
+                .map_err(|e| e.to_string())?;
+                if back.events != plan_a.events {
+                    return Err(format!(
+                        "{}: plan JSON round-trip mutated the event stream",
+                        scenario.name()
+                    ));
+                }
+                if scenario == Scenario::MobilityHandoff
+                    && !plan_a
+                        .events
+                        .iter()
+                        .any(|e| matches!(e.event, ChaosEvent::Handoff { .. }))
+                {
+                    return Err("mobility-handoff plan generated no handoffs".into());
+                }
+                let opts = ChaosOptions::default();
+                let run = |shards: usize| -> Result<(String, Vec<chaos::IntervalSig>), String> {
+                    let (mut cfg, plan) = scenario.build(cell.policy, cell.seed, 10);
+                    cfg.sim.shards = shards;
+                    let out = chaos::run_chaos(&cfg, &plan, &opts, None)
+                        .map_err(|e| e.to_string())?;
+                    let summary = CellSummary::from_outcome(&cell, 10, &out);
+                    Ok((summary.to_json().to_string(), out.signatures))
+                };
+                let (serial_json, serial_sigs) = run(1)?;
+                let (sharded_json, sharded_sigs) = run(4)?;
+                if sharded_json != serial_json {
+                    return Err(format!(
+                        "{}: 4-shard summary drifted from serial:\n  \
+                         serial  {serial_json}\n  sharded {sharded_json}",
+                        scenario.name()
+                    ));
+                }
+                if sharded_sigs != serial_sigs {
+                    return Err(format!(
+                        "{}: 4-shard signatures diverged from serial",
+                        scenario.name()
                     ));
                 }
             }
